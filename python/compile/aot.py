@@ -1,0 +1,174 @@
+"""AOT lowering: every L2/L1 entry point -> artifacts/*.hlo.txt + manifest.
+
+Interchange is HLO *text*, not ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (what
+the published ``xla`` 0.1.6 Rust crate links) rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Run once at build time (``make artifacts``); Python never executes on the
+training path. The manifest records every artifact's I/O signature and the
+flat parameter ABI so the Rust runtime and the HLO agree by construction.
+
+Usage: python -m compile.aot --out-dir ../artifacts [--configs tiny,small]
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import (blockwise_dequant, blockwise_quant, fused_adamw,
+                      newton_schulz)
+from .kernels.fused_adamw import HYPER_LEN
+
+# Flat-shard optimizer chunk (elements). Rust pads shard tails to this.
+CHUNK = 65536
+# Quantization block for 8-bit Adam state (elements of the flat shard).
+QBLOCK = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _sig(avals):
+    return [{"shape": list(a.shape), "dtype": a.dtype.name} for a in avals]
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def adam8bit_chunk(h, p, g, m_q, m_s, v_q, v_s):
+    """8-bit Adam step on one flat CHUNK. Codes travel as f32 carriers
+    (integer values in [-127, 127]); Rust stores them as real int8 — the
+    memory accounting lives in L3, the math lives here."""
+    m = blockwise_dequant(m_q.astype(jnp.int8), m_s, QBLOCK)
+    v = blockwise_dequant(v_q.astype(jnp.int8), v_s, QBLOCK)
+    v = jnp.maximum(v, 0.0)
+    p2, m2, v2 = fused_adamw(h, p, g, m, v)
+    m_q2, m_s2 = blockwise_quant(m2, QBLOCK)
+    v_q2, v_s2 = blockwise_quant(v2, QBLOCK)
+    return (p2, m_q2.astype(jnp.float32), m_s2,
+            v_q2.astype(jnp.float32), v_s2)
+
+
+def quant_chunk(x):
+    q, s = blockwise_quant(x, QBLOCK)
+    return q.astype(jnp.float32), s
+
+
+def dequant_chunk(q, s):
+    return (blockwise_dequant(q.astype(jnp.int8), s, QBLOCK),)
+
+
+def adamw_entry(h, p, g, m, v):
+    return fused_adamw(h, p, g, m, v)
+
+
+def ns_entry(g):
+    return (newton_schulz(g),)
+
+
+def _lower(fn, example_args):
+    return jax.jit(fn).lower(*example_args)
+
+
+def build(out_dir: str, config_names):
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {
+        "version": 1,
+        "chunk": CHUNK,
+        "qblock": QBLOCK,
+        "hyper_len": HYPER_LEN,
+        "configs": {},
+        "artifacts": [],
+    }
+
+    def emit(name: str, fn, example_args):
+        t0 = time.time()
+        lowered = _lower(fn, example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *example_args)
+        manifest["artifacts"].append({
+            "name": name,
+            "file": fname,
+            "inputs": _sig(example_args),
+            "outputs": _sig(list(out_avals)),
+            "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+        })
+        print(f"  emitted {name}: {len(text)/1e6:.2f} MB HLO "
+              f"({time.time()-t0:.1f}s)")
+
+    # ---- optimizer / kernel chunk artifacts (config-independent) ----
+    hyper = _spec((HYPER_LEN,))
+    flat = _spec((CHUNK,))
+    nsc = _spec((CHUNK // QBLOCK,))
+    emit("adamw_chunk", adamw_entry, (hyper, flat, flat, flat, flat))
+    emit("adam8bit_chunk", adam8bit_chunk,
+         (hyper, flat, flat, flat, nsc, flat, nsc))
+    emit("quant_chunk", quant_chunk, (flat,))
+    emit("dequant_chunk", dequant_chunk, (flat, nsc))
+
+    # ---- per-config model + Muon artifacts ----
+    for cname in config_names:
+        cfg = model.CONFIGS[cname]
+        specs = model.param_specs(cfg)
+        manifest["configs"][cname] = {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers, "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff, "seq": cfg.seq, "batch": cfg.batch,
+            "params": [{"name": n, "shape": list(s)} for n, s in specs],
+        }
+        p_args = [_spec(s) for _, s in specs]
+        tok = _spec((cfg.batch, cfg.seq), jnp.int32)
+
+        def train_entry(*args, _cfg=cfg):
+            out = model.make_train_step(_cfg)(*args)
+            return (out[0].reshape(1), *out[1:])
+
+        def eval_entry(*args, _cfg=cfg):
+            (loss,) = model.make_eval_loss(_cfg)(*args)
+            return (loss.reshape(1),)
+
+        emit(f"train_step_{cname}", train_entry, (*p_args, tok, tok))
+        emit(f"eval_loss_{cname}", eval_entry, (*p_args, tok, tok))
+
+        # Newton-Schulz per distinct 2-D hidden-matrix shape (Muon operates
+        # on hidden layers only, not embeddings/head — Jordan et al.).
+        ns_shapes = sorted({s for n, s in specs
+                            if len(s) == 2 and "embed" not in n
+                            and "head" not in n})
+        for shape in ns_shapes:
+            emit(f"newton_schulz_{shape[0]}x{shape[1]}", ns_entry,
+                 (_spec(shape),))
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--configs", default="tiny,small")
+    args = ap.parse_args()
+    build(args.out_dir, [c for c in args.configs.split(",") if c])
+
+
+if __name__ == "__main__":
+    main()

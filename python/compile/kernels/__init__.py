@@ -1,0 +1,19 @@
+"""L1 Pallas kernels for the veScale-FSDP reproduction.
+
+All kernels run under ``interpret=True`` — real-TPU lowering emits a Mosaic
+custom-call that the CPU PJRT plugin cannot execute. Structure (BlockSpecs,
+grids, VMEM tiling) is written for the TPU MXU/VMEM model; see
+DESIGN.md §Hardware-Adaptation.
+"""
+from .blockwise_quant import blockwise_quant, blockwise_dequant
+from .fused_adamw import fused_adamw
+from .newton_schulz import newton_schulz
+from .matmul import matmul_tiled
+
+__all__ = [
+    "blockwise_quant",
+    "blockwise_dequant",
+    "fused_adamw",
+    "newton_schulz",
+    "matmul_tiled",
+]

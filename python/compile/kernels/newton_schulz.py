@@ -1,0 +1,32 @@
+"""Newton–Schulz orthogonalization (Muon) as MXU-tiled Pallas matmuls.
+
+Muon's matrix-sign preconditioner is matmul-dominated. The CUDA version
+tiles the GEMMs over threadblocks + shared memory; the TPU rethink tiles
+them for the 128x128 MXU systolic array with a K-loop expressed through the
+Pallas grid (HBM->VMEM schedule via BlockSpec index maps), accumulating in
+an f32 VMEM scratch tile.
+
+The 5-step quintic iteration X <- aX + (b*G + c*G^2)X with G = XX^T runs at
+the JAX level, each matmul dispatching into the tiled kernel, so the whole
+iteration lowers into one HLO module for the Rust runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul_tiled
+from .ref import NS_COEFFS, NS_STEPS
+
+
+def newton_schulz(g: jax.Array, steps: int = NS_STEPS) -> jax.Array:
+    """Orthogonalize 2-D f32 ``g`` via quintic Newton-Schulz (Muon)."""
+    a, b, c = NS_COEFFS
+    transposed = g.shape[0] > g.shape[1]
+    x = g.T if transposed else g
+    x = x / (jnp.linalg.norm(x) + 1e-7)
+    for _ in range(steps):
+        gram = matmul_tiled(x, x.T)                 # (m, m) on the MXU
+        gram2 = matmul_tiled(gram, gram)
+        x = a * x + matmul_tiled(b * gram + c * gram2, x)
+    return x.T if transposed else x

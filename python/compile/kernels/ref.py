@@ -1,0 +1,92 @@
+"""Pure-jnp reference oracles for every Pallas kernel (L1).
+
+These are the ground truth the pytest suite checks the Pallas kernels
+against (and the hypothesis property sweeps). They are also lowered into
+"reference" HLO artifacts so the Rust integration tests can compare the
+kernel artifact against the oracle artifact end-to-end through PJRT.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Symmetric linear absmax block quantization (paper §6.3 / Dettmers 8-bit
+# Adam). The *kernel-level* oracle uses the linear code (what the Pallas
+# quant kernel implements); the Rust optimizer layers Dettmers' dynamic
+# code on top for the second-moment state (linear codes zero out small v
+# and diverge — see rust/src/optim/adam8bit.rs). The system property under
+# study — quant blocks must not straddle shard boundaries — is independent
+# of the code.
+QMAX = 127.0
+
+
+def blockwise_quant_ref(x: jax.Array, block: int):
+    """Quantize 1-D f32 `x` (len divisible by `block`) to int8 + per-block scales.
+
+    Returns (q i8[len], scale f32[len/block]) with q = round(x / scale * 127).
+    """
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    absmax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(absmax > 0, absmax, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[:, None] * QMAX), -QMAX, QMAX)
+    return q.reshape(n).astype(jnp.int8), scale
+
+
+def blockwise_dequant_ref(q: jax.Array, scale: jax.Array, block: int):
+    """Inverse of blockwise_quant_ref: f32 reconstruction."""
+    n = q.shape[0]
+    qb = q.astype(jnp.float32).reshape(n // block, block)
+    return (qb * scale[:, None] / QMAX).reshape(n)
+
+
+def adamw_step_ref(p, g, m, v, t, *, lr, beta1, beta2, eps, wd):
+    """One fused AdamW step over flat f32 arrays. Returns (p', m', v')."""
+    m2 = beta1 * m + (1.0 - beta1) * g
+    v2 = beta2 * v + (1.0 - beta2) * g * g
+    mhat = m2 / (1.0 - beta1**t)
+    vhat = v2 / (1.0 - beta2**t)
+    p2 = p - lr * (mhat / (jnp.sqrt(vhat) + eps) + wd * p)
+    return p2, m2, v2
+
+
+# Newton–Schulz quintic coefficients used by Muon (Jordan et al. 2024).
+NS_COEFFS = (3.4445, -4.7750, 2.0315)
+NS_STEPS = 5
+
+
+def newton_schulz_ref(g: jax.Array, steps: int = NS_STEPS):
+    """Muon's matrix-sign iteration: orthogonalize 2-D matrix `g`.
+
+    Quintic Newton–Schulz: X <- a X + b (XX^T) X + c (XX^T)^2 X on the
+    Frobenius-normalized matrix. f32 throughout (CPU substrate).
+    """
+    a, b, c = NS_COEFFS
+    transposed = g.shape[0] > g.shape[1]
+    x = g.T if transposed else g
+    x = x / (jnp.linalg.norm(x) + 1e-7)
+    for _ in range(steps):
+        gram = x @ x.T
+        x = a * x + (b * gram + c * (gram @ gram)) @ x
+    return x.T if transposed else x
+
+
+def matmul_ref(x: jax.Array, w: jax.Array):
+    """Plain f32 matmul oracle for the tiled Pallas matmul."""
+    return x @ w
+
+
+def adam8bit_step_ref(p, g, m_q, m_scale, v_q, v_scale, t, *, lr, beta1,
+                      beta2, eps, wd, block):
+    """8-bit Adam step: dequantize states, AdamW update, requantize.
+
+    All quant blocks live entirely in this shard — RaggedShard guarantees it.
+    """
+    m = blockwise_dequant_ref(m_q, m_scale, block)
+    v = blockwise_dequant_ref(v_q, v_scale, block)
+    v = jnp.maximum(v, 0.0)  # v is nonnegative; quant noise may break that
+    p2, m2, v2 = adamw_step_ref(p, g, m, v, t, lr=lr, beta1=beta1,
+                                beta2=beta2, eps=eps, wd=wd)
+    m_q2, m_s2 = blockwise_quant_ref(m2, block)
+    v_q2, v_s2 = blockwise_quant_ref(v2, block)
+    return p2, m_q2, m_s2, v_q2, v_s2

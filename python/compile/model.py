@@ -1,0 +1,166 @@
+"""L2: decoder-only transformer (fwd/bwd) in JAX, calling the L1 kernels.
+
+This is the compute graph that the Rust coordinator executes per simulated
+device through PJRT. The FFN matmuls go through the Pallas
+``matmul_tiled`` kernel (custom-VJP), so the L1 kernel sits on the training
+hot path and lowers into the same HLO module.
+
+Parameters travel between Rust and HLO as a *flat ordered list* of f32
+tensors; ``param_specs`` defines the canonical order, which aot.py writes
+into the artifact manifest so both sides agree.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_tiled
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer hyper-parameters."""
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq: int
+    batch: int  # per-device micro-batch
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+# Presets. Sizes are scaled for the single-core CPU substrate (DESIGN.md §1);
+# `tiny` is the test config, `small` the e2e training config, `mid100m` the
+# ~100M-parameter config the e2e driver can optionally run.
+CONFIGS: Dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", vocab=512, d_model=128, n_layers=2,
+                        n_heads=4, d_ff=512, seq=64, batch=4),
+    "small": ModelConfig("small", vocab=2048, d_model=256, n_layers=4,
+                         n_heads=4, d_ff=1024, seq=128, batch=4),
+    "mid100m": ModelConfig("mid100m", vocab=32768, d_model=768, n_layers=12,
+                           n_heads=12, d_ff=3072, seq=256, batch=2),
+}
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Canonical (name, shape) list — the Rust<->HLO parameter ABI."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed.weight", (cfg.vocab, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}"
+        specs += [
+            (f"{p}.ln1.scale", (cfg.d_model,)),
+            (f"{p}.attn.wq", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wk", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wv", (cfg.d_model, cfg.d_model)),
+            (f"{p}.attn.wo", (cfg.d_model, cfg.d_model)),
+            (f"{p}.ln2.scale", (cfg.d_model,)),
+            (f"{p}.mlp.w1", (cfg.d_model, cfg.d_ff)),
+            (f"{p}.mlp.w2", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs += [
+        ("final_ln.scale", (cfg.d_model,)),
+        ("head.weight", (cfg.d_model, cfg.vocab)),
+    ]
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Initialize the flat parameter list (scaled-normal / ones for LN)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("scale"):
+            params.append(jnp.ones(shape, jnp.float32))
+        elif name == "embed.weight":
+            params.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+        else:
+            fan_in = shape[0]
+            params.append(jax.random.normal(sub, shape, jnp.float32)
+                          * (fan_in ** -0.5))
+    return params
+
+
+def _rmsnorm(x: jax.Array, scale: jax.Array) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + 1e-6) * scale
+
+
+def _attention(x: jax.Array, wq, wk, wv, wo, cfg: ModelConfig) -> jax.Array:
+    b, t, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ wq).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, h, hd).transpose(0, 2, 1, 3)
+    scores = q @ k.transpose(0, 1, 3, 2) * (hd ** -0.5)
+    mask = jnp.tril(jnp.ones((t, t), jnp.bool_))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = (probs @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return out @ wo
+
+
+def _mlp(x: jax.Array, w1, w2) -> jax.Array:
+    """FFN through the Pallas MXU-tiled matmul (L1 on the hot path)."""
+    b, t, d = x.shape
+    flat = x.reshape(b * t, d)
+    h = matmul_tiled(flat, w1)
+    h = jax.nn.gelu(h)
+    return matmul_tiled(h, w2).reshape(b, t, d)
+
+
+def forward(cfg: ModelConfig, params: List[jax.Array],
+            tokens: jax.Array) -> jax.Array:
+    """Logits for int32 tokens of shape (batch, seq)."""
+    it = iter(params)
+    embed = next(it)
+    x = embed[tokens]
+    for _ in range(cfg.n_layers):
+        ln1, wq, wk, wv, wo, ln2, w1, w2 = (next(it) for _ in range(8))
+        x = x + _attention(_rmsnorm(x, ln1), wq, wk, wv, wo, cfg)
+        x = x + _mlp(_rmsnorm(x, ln2), w1, w2)
+    final_ln = next(it)
+    head = next(it)
+    return _rmsnorm(x, final_ln) @ head
+
+
+def loss_fn(cfg: ModelConfig, params: List[jax.Array], tokens: jax.Array,
+            targets: jax.Array) -> jax.Array:
+    """Mean next-token cross-entropy."""
+    logits = forward(cfg, params, tokens)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def make_train_step(cfg: ModelConfig):
+    """(params..., tokens, targets) -> (loss, grads...) — the per-device step.
+
+    Gradients are returned unscaled; the coordinator averages them across
+    devices via ReduceScatter (the FSDP data path under study).
+    """
+    def train_step(*args):
+        params = list(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        loss, grads = jax.value_and_grad(
+            lambda ps: loss_fn(cfg, ps, tokens, targets))(params)
+        return (loss, *grads)
+    return train_step
+
+
+def make_eval_loss(cfg: ModelConfig):
+    def eval_loss(*args):
+        params = list(args[:-2])
+        tokens, targets = args[-2], args[-1]
+        return (loss_fn(cfg, params, tokens, targets),)
+    return eval_loss

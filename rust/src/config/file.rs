@@ -1,0 +1,158 @@
+//! TOML-subset config-file parser for the launcher (no `toml` crate
+//! offline). Supports `[sections]`, `key = value` with string / integer /
+//! float / bool values, `#` comments, and flat key lookup as
+//! `section.key`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::{OptimKind, ParallelConfig, System, TrainConfig};
+
+#[derive(Debug, Default, Clone)]
+pub struct ConfigFile {
+    values: BTreeMap<String, String>,
+}
+
+impl ConfigFile {
+    pub fn parse(text: &str) -> Result<ConfigFile> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(s) = line.strip_prefix('[') {
+                let Some(name) = s.strip_suffix(']') else {
+                    bail!("line {}: bad section header", ln + 1);
+                };
+                section = name.trim().to_string();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = if section.is_empty() {
+                    k.trim().to_string()
+                } else {
+                    format!("{section}.{}", k.trim())
+                };
+                let val = v.trim().trim_matches('"').to_string();
+                values.insert(key, val);
+            } else {
+                bail!("line {}: expected key = value", ln + 1);
+            }
+        }
+        Ok(ConfigFile { values })
+    }
+
+    pub fn load(path: &str) -> Result<ConfigFile> {
+        ConfigFile::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Materialize a TrainConfig (missing keys fall back to defaults).
+    pub fn train_config(&self) -> Result<TrainConfig> {
+        let d = TrainConfig::default();
+        let system = match self.get("run.system") {
+            Some(s) => System::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown system '{s}'"))?,
+            None => d.system,
+        };
+        let optimizer = match self.get("run.optimizer") {
+            Some(s) => OptimKind::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{s}'"))?,
+            None => d.optimizer,
+        };
+        Ok(TrainConfig {
+            model: self.str_or("model.preset", &d.model),
+            parallel: ParallelConfig {
+                fsdp: self.usize_or("parallel.fsdp", d.parallel.fsdp),
+                replicas: self.usize_or("parallel.replicas", 1),
+                ep: self.usize_or("parallel.ep", 1),
+            },
+            optimizer,
+            system,
+            steps: self.usize_or("run.steps", d.steps),
+            seq_len: self.usize_or("model.seq_len", d.seq_len),
+            micro_batch: self.usize_or("model.micro_batch", d.micro_batch),
+            lr: self.f64_or("run.lr", d.lr),
+            seed: self.usize_or("run.seed", 0) as u64,
+            granularity: self.usize_or("run.granularity", 1) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample launcher config
+[model]
+preset = "small"
+seq_len = 128
+
+[parallel]
+fsdp = 8
+replicas = 2
+
+[run]
+system = "vescale"
+optimizer = "adam8bit"
+steps = 100
+lr = 0.0003
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        assert_eq!(c.get("model.preset"), Some("small"));
+        assert_eq!(c.usize_or("parallel.fsdp", 0), 8);
+        assert_eq!(c.f64_or("run.lr", 0.0), 0.0003);
+    }
+
+    #[test]
+    fn train_config_materializes() {
+        let c = ConfigFile::parse(SAMPLE).unwrap();
+        let tc = c.train_config().unwrap();
+        assert_eq!(tc.model, "small");
+        assert_eq!(tc.parallel.total_devices(), 16);
+        assert_eq!(tc.optimizer, OptimKind::Adam8bit);
+        assert_eq!(tc.system, System::VeScale);
+        assert_eq!(tc.steps, 100);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let tc = ConfigFile::parse("").unwrap().train_config().unwrap();
+        assert_eq!(tc.model, "tiny");
+        assert_eq!(tc.parallel.fsdp, 4);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ConfigFile::parse("[unclosed").is_err());
+        assert!(ConfigFile::parse("no equals here").is_err());
+        let bad = ConfigFile::parse("[run]\nsystem = \"bogus\"").unwrap();
+        assert!(bad.train_config().is_err());
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let c = ConfigFile::parse("a = 1 # trailing\n# full line\n").unwrap();
+        assert_eq!(c.usize_or("a", 0), 1);
+    }
+}

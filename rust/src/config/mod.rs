@@ -1,0 +1,195 @@
+//! Config system: model presets (the paper's workloads, with exact public
+//! parameter shapes), parallelism / training configs, and a TOML-subset
+//! config-file parser for the launcher.
+//!
+//! The presets matter because the paper's planner/memory/communication
+//! results depend only on tensor *shapes*: GPT-OSS-120B fuses all 128
+//! experts into one parameter tensor per layer (which is why its 128-row
+//! granularity padding spikes in Fig 11 and why FSDP2 OOMs at 256 devices),
+//! while DeepSeek-V3 materializes each expert separately (per-expert
+//! padding relaxes the constraint). LLaMA-3-70B is the dense baseline.
+
+pub mod file;
+pub mod presets;
+
+pub use presets::{ModelPreset, MoeInfo, ParamDecl, ParamGroup};
+
+/// Which FSDP implementation to run (paper §6 baselines).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum System {
+    VeScale,
+    DeepSpeed,
+    Fsdp1,
+    Fsdp2,
+    MegatronFsdp,
+    /// Plain data parallel (Fig 10 convergence baseline).
+    Ddp,
+}
+
+impl System {
+    pub fn name(&self) -> &'static str {
+        match self {
+            System::VeScale => "veScale-FSDP",
+            System::DeepSpeed => "DeepSpeed",
+            System::Fsdp1 => "FSDP1",
+            System::Fsdp2 => "FSDP2",
+            System::MegatronFsdp => "Megatron-FSDP",
+            System::Ddp => "DDP",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<System> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "vescale" | "vescale-fsdp" => System::VeScale,
+            "deepspeed" | "zero" => System::DeepSpeed,
+            "fsdp1" => System::Fsdp1,
+            "fsdp2" => System::Fsdp2,
+            "megatron" | "megatron-fsdp" => System::MegatronFsdp,
+            "ddp" => System::Ddp,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [System; 5] {
+        [
+            System::DeepSpeed,
+            System::Fsdp1,
+            System::Fsdp2,
+            System::MegatronFsdp,
+            System::VeScale,
+        ]
+    }
+}
+
+/// Optimizer selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    Sgd,
+    AdamW,
+    Adam8bit,
+    Muon,
+}
+
+impl OptimKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimKind::Sgd => "sgd",
+            OptimKind::AdamW => "adamw",
+            OptimKind::Adam8bit => "adam8bit",
+            OptimKind::Muon => "muon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptimKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sgd" => OptimKind::Sgd,
+            "adamw" | "adam" => OptimKind::AdamW,
+            "adam8bit" | "8bit" | "adam8" => OptimKind::Adam8bit,
+            "muon" => OptimKind::Muon,
+            _ => return None,
+        })
+    }
+
+    /// Optimizer state bytes per (fp32-master) parameter element, on top
+    /// of the master weight itself.
+    pub fn state_bytes_per_param(&self) -> f64 {
+        match self {
+            OptimKind::Sgd => 0.0,
+            OptimKind::AdamW => 8.0,             // m + v fp32
+            OptimKind::Adam8bit => 2.0 + 8.0 / 1024.0, // int8 m+v + scales
+            OptimKind::Muon => 4.0,              // momentum fp32
+        }
+    }
+}
+
+/// Parallelism layout for a run (paper Fig 8/9 sweeps).
+#[derive(Debug, Clone)]
+pub struct ParallelConfig {
+    /// FSDP shard-group size.
+    pub fsdp: usize,
+    /// HSDP replication factor (1 = plain FSDP).
+    pub replicas: usize,
+    /// Expert-parallel group size (1 = no EP).
+    pub ep: usize,
+}
+
+impl ParallelConfig {
+    pub fn fsdp_only(m: usize) -> ParallelConfig {
+        ParallelConfig { fsdp: m, replicas: 1, ep: 1 }
+    }
+
+    pub fn total_devices(&self) -> usize {
+        self.fsdp * self.replicas
+    }
+
+    pub fn label(&self) -> String {
+        if self.replicas > 1 {
+            format!("HSDP {}x{}", self.replicas, self.fsdp)
+        } else if self.ep > 1 {
+            format!("FSDP {} xEP {}", self.fsdp, self.ep)
+        } else {
+            format!("FSDP {}", self.fsdp)
+        }
+    }
+}
+
+/// Full training-run config consumed by the launcher.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub model: String,
+    pub parallel: ParallelConfig,
+    pub optimizer: OptimKind,
+    pub system: System,
+    pub steps: usize,
+    pub seq_len: usize,
+    pub micro_batch: usize,
+    pub lr: f64,
+    pub seed: u64,
+    /// Sharding granularity override (elements; 0 = element-wise).
+    pub granularity: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            model: "tiny".into(),
+            parallel: ParallelConfig::fsdp_only(4),
+            optimizer: OptimKind::AdamW,
+            system: System::VeScale,
+            steps: 50,
+            seq_len: 64,
+            micro_batch: 4,
+            lr: 3e-4,
+            seed: 0,
+            granularity: 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn system_parse_roundtrip() {
+        for s in System::all() {
+            assert_eq!(System::parse(s.name()), Some(s));
+        }
+        assert_eq!(System::parse("nonsense"), None);
+    }
+
+    #[test]
+    fn optim_state_bytes() {
+        assert_eq!(OptimKind::AdamW.state_bytes_per_param(), 8.0);
+        assert!(OptimKind::Adam8bit.state_bytes_per_param() < 2.1);
+        assert_eq!(OptimKind::Sgd.state_bytes_per_param(), 0.0);
+    }
+
+    #[test]
+    fn parallel_labels() {
+        assert_eq!(ParallelConfig::fsdp_only(128).label(), "FSDP 128");
+        let h = ParallelConfig { fsdp: 256, replicas: 4, ep: 1 };
+        assert_eq!(h.label(), "HSDP 4x256");
+        assert_eq!(h.total_devices(), 1024);
+    }
+}

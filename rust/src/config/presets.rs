@@ -1,0 +1,430 @@
+//! Model-shape presets: the paper's evaluation workloads.
+//!
+//! Shapes are taken from the public architectures (LLaMA-3-70B,
+//! GPT-OSS-120B, DeepSeek-V3-671B); the "internal" MoE models of §6.2 are
+//! reconstructed from the stated totals (800B weak/strong scaling,
+//! 400B–2.4T model scaling) with constant sparsity. Only *shapes* are
+//! consumed by the planner / memory / comm layers, so these presets are
+//! exact where the paper's effects live (expert fusion vs per-expert
+//! tensors, row sizes, layer structure).
+
+use crate::tensor::DType;
+
+/// One named parameter tensor (symbolic — no data).
+#[derive(Debug, Clone)]
+pub struct ParamDecl {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl ParamDecl {
+    pub fn new(name: String, shape: &[usize]) -> ParamDecl {
+        ParamDecl { name, shape: shape.to_vec(), dtype: DType::F32 }
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().map(|&s| s as u64).product()
+    }
+
+    /// Row size (elements) — the natural RaggedShard granularity unit.
+    pub fn row_size(&self) -> u64 {
+        if self.shape.len() >= 2 {
+            self.shape[1..].iter().map(|&s| s as u64).product()
+        } else {
+            1
+        }
+    }
+}
+
+/// FSDP wrapping unit: one communication bucket (a transformer layer, or
+/// the embedding/head). Mirrors user-defined `fully_shard` wrapping.
+#[derive(Debug, Clone)]
+pub struct ParamGroup {
+    pub name: String,
+    pub params: Vec<ParamDecl>,
+}
+
+impl ParamGroup {
+    pub fn numel(&self) -> u64 {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeInfo {
+    pub experts: usize,
+    pub top_k: usize,
+    /// GPT-OSS fuses all experts into one tensor; DSv3 keeps them separate.
+    pub fused_experts: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelPreset {
+    pub name: String,
+    pub groups: Vec<ParamGroup>,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub seq_default: usize,
+    pub moe: Option<MoeInfo>,
+}
+
+impl ModelPreset {
+    pub fn total_params(&self) -> u64 {
+        self.groups.iter().map(|g| g.numel()).sum()
+    }
+
+    pub fn all_params(&self) -> Vec<&ParamDecl> {
+        self.groups.iter().flat_map(|g| g.params.iter()).collect()
+    }
+
+    /// Active parameters per token (MoE activates top_k of experts).
+    pub fn active_params(&self) -> f64 {
+        match &self.moe {
+            None => self.total_params() as f64,
+            Some(moe) => {
+                let expert: u64 = self
+                    .all_params()
+                    .iter()
+                    .filter(|p| p.name.contains("expert"))
+                    .map(|p| p.numel())
+                    .sum();
+                let dense = self.total_params() - expert;
+                dense as f64
+                    + expert as f64 * moe.top_k as f64 / moe.experts as f64
+            }
+        }
+    }
+
+    /// FLOPs per token (fwd+bwd ~ 6 * active params).
+    pub fn flops_per_token(&self) -> f64 {
+        6.0 * self.active_params()
+    }
+}
+
+fn p(name: String, shape: &[usize]) -> ParamDecl {
+    ParamDecl::new(name, shape)
+}
+
+/// LLaMA-3-70B (dense): 80 layers, d=8192, ffn=28672, GQA 64/8 heads,
+/// vocab 128256. ~70.6B params.
+pub fn llama70b() -> ModelPreset {
+    let (d, ff, vocab, layers) = (8192usize, 28672usize, 128256usize, 80usize);
+    let kv = d / 8; // 8 KV heads of 128
+    let mut groups = vec![ParamGroup {
+        name: "embed".into(),
+        params: vec![p("embed.weight".into(), &[vocab, d])],
+    }];
+    for i in 0..layers {
+        let n = |s: &str| format!("layers.{i}.{s}");
+        groups.push(ParamGroup {
+            name: format!("layers.{i}"),
+            params: vec![
+                p(n("input_norm"), &[d]),
+                p(n("attn.wq"), &[d, d]),
+                p(n("attn.wk"), &[kv, d]),
+                p(n("attn.wv"), &[kv, d]),
+                p(n("attn.wo"), &[d, d]),
+                p(n("post_norm"), &[d]),
+                p(n("mlp.gate"), &[ff, d]),
+                p(n("mlp.up"), &[ff, d]),
+                p(n("mlp.down"), &[d, ff]),
+            ],
+        });
+    }
+    groups.push(ParamGroup {
+        name: "head".into(),
+        params: vec![p("final_norm".into(), &[d]), p("head.weight".into(), &[vocab, d])],
+    });
+    ModelPreset {
+        name: "llama70b".into(),
+        groups,
+        n_layers: layers,
+        d_model: d,
+        seq_default: 4096,
+        moe: None,
+    }
+}
+
+/// GPT-OSS-120B (sparse): 36 layers, d=2880, 128 experts fused into one
+/// tensor per projection per layer, top-4. ~117B params.
+pub fn gptoss120b() -> ModelPreset {
+    let (d, layers, experts, vocab) = (2880usize, 36usize, 128usize, 201088usize);
+    let eff = 2880usize; // expert ffn width
+    let mut groups = vec![ParamGroup {
+        name: "embed".into(),
+        params: vec![p("embed.weight".into(), &[vocab, d])],
+    }];
+    for i in 0..layers {
+        let n = |s: &str| format!("layers.{i}.{s}");
+        groups.push(ParamGroup {
+            name: format!("layers.{i}"),
+            params: vec![
+                p(n("norm1"), &[d]),
+                p(n("attn.wqkv"), &[d + 2 * (d / 8), d]),
+                p(n("attn.wo"), &[d, d]),
+                p(n("norm2"), &[d]),
+                p(n("router"), &[experts, d]),
+                // all experts fused into single tensors (the Fig-11 culprit)
+                p(n("experts.mlp1"), &[experts, 2 * eff, d]),
+                p(n("experts.mlp2"), &[experts, d, eff]),
+            ],
+        });
+    }
+    groups.push(ParamGroup {
+        name: "head".into(),
+        params: vec![p("final_norm".into(), &[d]), p("head.weight".into(), &[vocab, d])],
+    });
+    ModelPreset {
+        name: "gptoss120b".into(),
+        groups,
+        n_layers: layers,
+        d_model: d,
+        seq_default: 8192,
+        moe: Some(MoeInfo { experts, top_k: 4, fused_experts: true }),
+    }
+}
+
+/// DeepSeek-V3-671B: 61 layers (3 dense + 58 MoE), d=7168, 256 routed
+/// experts + 1 shared, expert ffn=2048, **per-expert separate tensors**.
+pub fn dsv3_671b() -> ModelPreset {
+    let (d, layers, experts, eff, vocab) = (7168usize, 61usize, 256usize, 2048usize, 129280usize);
+    let dense_ff = 18432usize;
+    let mut groups = vec![ParamGroup {
+        name: "embed".into(),
+        params: vec![p("embed.weight".into(), &[vocab, d])],
+    }];
+    for i in 0..layers {
+        let n = |s: &str| format!("layers.{i}.{s}");
+        let mut params = vec![
+            p(n("norm1"), &[d]),
+            // MLA attention (compressed projections, approximated shapes)
+            p(n("attn.q_a"), &[1536, d]),
+            p(n("attn.q_b"), &[24576, 1536]),
+            p(n("attn.kv_a"), &[576, d]),
+            p(n("attn.kv_b"), &[32768, 512]),
+            p(n("attn.wo"), &[d, 16384]),
+            p(n("norm2"), &[d]),
+        ];
+        if i < 3 {
+            params.push(p(n("mlp.gate"), &[dense_ff, d]));
+            params.push(p(n("mlp.up"), &[dense_ff, d]));
+            params.push(p(n("mlp.down"), &[d, dense_ff]));
+        } else {
+            params.push(p(n("router"), &[experts, d]));
+            // shared expert
+            params.push(p(n("shared_expert.gate"), &[eff, d]));
+            params.push(p(n("shared_expert.up"), &[eff, d]));
+            params.push(p(n("shared_expert.down"), &[d, eff]));
+            // each routed expert is its own parameter (per-expert padding
+            // is legal between them — the Fig-11 contrast with GPT-OSS)
+            for e in 0..experts {
+                params.push(p(n(&format!("experts.{e}.gate")), &[eff, d]));
+                params.push(p(n(&format!("experts.{e}.up")), &[eff, d]));
+                params.push(p(n(&format!("experts.{e}.down")), &[d, eff]));
+            }
+        }
+        groups.push(ParamGroup { name: format!("layers.{i}"), params });
+    }
+    groups.push(ParamGroup {
+        name: "head".into(),
+        params: vec![p("final_norm".into(), &[d]), p("head.weight".into(), &[vocab, d])],
+    });
+    ModelPreset {
+        name: "dsv3_671b".into(),
+        groups,
+        n_layers: layers,
+        d_model: d,
+        seq_default: 4096,
+        moe: Some(MoeInfo { experts, top_k: 8, fused_experts: false }),
+    }
+}
+
+/// Reconstructed "internal MoE" family (§6.2): constant sparsity, scaled
+/// depth x width. `total_b` is the target total parameters in billions
+/// (800 for weak/strong scaling; 400..2400 for model scaling).
+pub fn moe_internal(total_b: f64) -> ModelPreset {
+    // base point: 800B <- 64 layers, d=6144, 128 experts, eff=5120, top-8
+    // (128 * 3 * 5120 * 6144 ≈ 12.1B expert params/layer x 64 ≈ 774B).
+    // scale depth and width with total^(1/3) each (proportional scaling,
+    // paper §6.2 "we scale both depth and width proportionally").
+    let scale = (total_b / 800.0).powf(1.0 / 3.0);
+    let layers = ((64.0 * scale).round() as usize).max(8);
+    let d = (((6144.0 * scale) / 128.0).round() as usize * 128).max(512);
+    let experts = 128usize;
+    let eff = (((5120.0 * scale) / 128.0).round() as usize * 128).max(256);
+    let vocab = 131072usize;
+    let mut groups = vec![ParamGroup {
+        name: "embed".into(),
+        params: vec![p("embed.weight".into(), &[vocab, d])],
+    }];
+    for i in 0..layers {
+        let n = |s: &str| format!("layers.{i}.{s}");
+        let mut params = vec![
+            p(n("norm1"), &[d]),
+            p(n("attn.wqkv"), &[d + 2 * (d / 8), d]),
+            p(n("attn.wo"), &[d, d]),
+            p(n("norm2"), &[d]),
+            p(n("router"), &[experts, d]),
+        ];
+        for e in 0..experts {
+            params.push(p(n(&format!("experts.{e}.w1")), &[2 * eff, d]));
+            params.push(p(n(&format!("experts.{e}.w2")), &[d, eff]));
+        }
+        groups.push(ParamGroup { name: format!("layers.{i}"), params });
+    }
+    groups.push(ParamGroup {
+        name: "head".into(),
+        params: vec![p("final_norm".into(), &[d]), p("head.weight".into(), &[vocab, d])],
+    });
+    ModelPreset {
+        name: format!("moe{}b", total_b as u64),
+        groups,
+        n_layers: layers,
+        d_model: d,
+        seq_default: 8192,
+        moe: Some(MoeInfo { experts, top_k: 8, fused_experts: false }),
+    }
+}
+
+/// Tiny dense preset matching `python/compile/model.py` `tiny`/`small`
+/// (the numeric-path configs); shapes must agree with the manifest ABI.
+pub fn tiny_like(name: &str, vocab: usize, d: usize, layers: usize, ff: usize) -> ModelPreset {
+    let mut groups = vec![ParamGroup {
+        name: "embed".into(),
+        params: vec![p("embed.weight".into(), &[vocab, d])],
+    }];
+    for i in 0..layers {
+        let n = |s: &str| format!("layers.{i}.{s}");
+        groups.push(ParamGroup {
+            name: format!("layers.{i}"),
+            params: vec![
+                p(n("ln1.scale"), &[d]),
+                p(n("attn.wq"), &[d, d]),
+                p(n("attn.wk"), &[d, d]),
+                p(n("attn.wv"), &[d, d]),
+                p(n("attn.wo"), &[d, d]),
+                p(n("ln2.scale"), &[d]),
+                p(n("mlp.w1"), &[d, ff]),
+                p(n("mlp.w2"), &[ff, d]),
+            ],
+        });
+    }
+    groups.push(ParamGroup {
+        name: "head".into(),
+        params: vec![p("final_ln.scale".into(), &[d]), p("head.weight".into(), &[d, vocab])],
+    });
+    ModelPreset {
+        name: name.into(),
+        groups,
+        n_layers: layers,
+        d_model: d,
+        seq_default: 64,
+        moe: None,
+    }
+}
+
+/// Look up a preset by name.
+pub fn by_name(name: &str) -> Option<ModelPreset> {
+    Some(match name {
+        "llama70b" => llama70b(),
+        "gptoss120b" => gptoss120b(),
+        "dsv3_671b" | "dsv3" => dsv3_671b(),
+        "moe800b" => moe_internal(800.0),
+        "moe400b" => moe_internal(400.0),
+        "moe1200b" => moe_internal(1200.0),
+        "moe2400b" => moe_internal(2400.0),
+        "tiny" => tiny_like("tiny", 512, 128, 2, 512),
+        "small" => tiny_like("small", 2048, 256, 4, 1024),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn llama70b_param_count() {
+        let m = llama70b();
+        let b = m.total_params() as f64 / 1e9;
+        assert!((69.0..73.0).contains(&b), "llama70b = {b}B");
+        assert!(m.moe.is_none());
+        assert_eq!(m.groups.len(), 82); // embed + 80 layers + head
+    }
+
+    #[test]
+    fn gptoss120b_param_count_and_fusion() {
+        let m = gptoss120b();
+        let b = m.total_params() as f64 / 1e9;
+        assert!((110.0..125.0).contains(&b), "gptoss = {b}B");
+        let moe = m.moe.as_ref().unwrap();
+        assert!(moe.fused_experts);
+        // fused expert tensor has the expert dim leading
+        let fused = m
+            .all_params()
+            .into_iter()
+            .find(|p| p.name.contains("experts.mlp1"))
+            .unwrap();
+        assert_eq!(fused.shape[0], 128);
+    }
+
+    #[test]
+    fn gptoss_active_params_sparse() {
+        let m = gptoss120b();
+        let active = m.active_params() / 1e9;
+        // paper-card: ~5.1B active
+        assert!((3.0..9.0).contains(&active), "active = {active}B");
+    }
+
+    #[test]
+    fn dsv3_param_count_and_per_expert() {
+        let m = dsv3_671b();
+        let b = m.total_params() as f64 / 1e9;
+        assert!((620.0..700.0).contains(&b), "dsv3 = {b}B");
+        assert!(!m.moe.as_ref().unwrap().fused_experts);
+        // experts are separate tensors
+        let n_expert_tensors = m
+            .all_params()
+            .iter()
+            .filter(|p| p.name.contains("experts."))
+            .count();
+        assert_eq!(n_expert_tensors, 58 * 256 * 3);
+    }
+
+    #[test]
+    fn moe_internal_scales() {
+        let m800 = moe_internal(800.0);
+        let b800 = m800.total_params() as f64 / 1e9;
+        assert!((600.0..1000.0).contains(&b800), "moe800 = {b800}B");
+        let m2400 = moe_internal(2400.0);
+        assert!(m2400.total_params() > 2 * m800.total_params());
+        let m400 = moe_internal(400.0);
+        assert!(m400.total_params() < m800.total_params());
+    }
+
+    #[test]
+    fn tiny_matches_python_abi_count() {
+        // must agree with python/compile/model.py param_specs('tiny')
+        let m = by_name("tiny").unwrap();
+        let expected = 2 * 512 * 128
+            + 2 * (4 * 128 * 128 + 2 * 128 * 512 + 2 * 128)
+            + 128;
+        assert_eq!(m.total_params(), expected as u64);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        assert!(by_name("llama70b").is_some());
+        assert!(by_name("unknown").is_none());
+    }
+
+    #[test]
+    fn row_sizes() {
+        let m = llama70b();
+        let wq = m.all_params().into_iter().find(|p| p.name.contains("wq")).unwrap();
+        assert_eq!(wq.row_size(), 8192);
+        let norm = m.all_params().into_iter().find(|p| p.name.contains("norm")).unwrap();
+        assert_eq!(norm.row_size(), 1);
+    }
+}

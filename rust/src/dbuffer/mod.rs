@@ -1,0 +1,397 @@
+//! Distributed Buffer (DBuffer) — the paper's high-performance grouped
+//! communication primitive (§5, Fig 7).
+//!
+//! A DBuffer backs one FSDP communication bucket (a group of RaggedShard
+//! DTensors laid out by the planner). Key properties reproduced here:
+//!
+//! * **zero-copy access**: tensors live at planner-assigned offsets of the
+//!   global buffer; the sharded state *is* the collective's input and the
+//!   gathered buffer *is* the compute's parameter memory — views, not
+//!   copies (`local_view`, `full_view`);
+//! * **grouped fused ops**: `zero_grads`/`scale_all` touch the whole
+//!   buffer in one pass instead of one kernel per tensor;
+//! * **in-place collectives**: AllGather fills the same persistent full
+//!   buffer; ReduceScatter reduces into the shard region in place;
+//! * **batched allocation**: shard + full storage is carved from single
+//!   segments via `CachingAllocator::alloc_batch`, with deterministic
+//!   frees (no record_stream hazard).
+//!
+//! N-D semantics (Fig 7): with an HSDP mesh `[replica, fsdp]`, gradient
+//! reduction is ReduceScatter within the fsdp dim followed by AllReduce
+//! across the replica dim — `reduce_gradients` implements exactly that.
+
+use anyhow::{bail, Result};
+
+use crate::comm::{self, CommRecord, CommStats, Fabric};
+use crate::mesh::DeviceMesh;
+use crate::planner::Layout;
+
+/// Per-bucket distributed buffer over an FSDP group of `m` devices.
+#[derive(Debug)]
+pub struct DBuffer {
+    pub layout: Layout,
+    /// Per-device local shard (S elements each) — the persistent sharded
+    /// state (fp32 master weights or gradient shards).
+    pub shards: Vec<Vec<f32>>,
+    /// Per-device full buffer (m*S elements) — unsharded staging for
+    /// compute; allocated once, reused in place every iteration.
+    pub full: Vec<Vec<f32>>,
+    /// Whether `full` currently holds gathered (valid) data.
+    pub gathered: bool,
+}
+
+impl DBuffer {
+    pub fn new(layout: Layout) -> DBuffer {
+        let m = layout.num_devices;
+        let s = layout.shard_size as usize;
+        DBuffer {
+            shards: vec![vec![0.0; s]; m],
+            full: vec![vec![0.0; m * s]; m],
+            layout,
+            gathered: false,
+        }
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.layout.num_devices
+    }
+
+    pub fn shard_elems(&self) -> usize {
+        self.layout.shard_size as usize
+    }
+
+    /// Bytes of one device's sharded state.
+    pub fn shard_bytes(&self) -> u64 {
+        self.layout.shard_size * 4
+    }
+
+    /// Scatter a global tensor's data into the owning shards (init path).
+    pub fn write_tensor(&mut self, idx: usize, data: &[f32]) -> Result<()> {
+        let t = &self.layout.tensors[idx];
+        if data.len() as u64 != t.numel {
+            bail!("write_tensor: {} != {}", data.len(), t.numel);
+        }
+        let s = self.layout.shard_size;
+        let off = self.layout.offsets[idx];
+        for rank in 0..self.num_devices() {
+            if let Some((lo, hi)) = self.layout.local_slice(idx, rank) {
+                let dst_lo = (off + lo - rank as u64 * s) as usize;
+                self.shards[rank][dst_lo..dst_lo + (hi - lo) as usize]
+                    .copy_from_slice(&data[lo as usize..hi as usize]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Read a tensor back from the shards (checkpoint path).
+    pub fn read_tensor(&self, idx: usize) -> Vec<f32> {
+        let t = &self.layout.tensors[idx];
+        let s = self.layout.shard_size;
+        let off = self.layout.offsets[idx];
+        let mut out = vec![0.0f32; t.numel as usize];
+        for rank in 0..self.num_devices() {
+            if let Some((lo, hi)) = self.layout.local_slice(idx, rank) {
+                let src_lo = (off + lo - rank as u64 * s) as usize;
+                out[lo as usize..hi as usize].copy_from_slice(
+                    &self.shards[rank][src_lo..src_lo + (hi - lo) as usize],
+                );
+            }
+        }
+        out
+    }
+
+    /// Zero-copy view of tensor `idx`'s slice living on `rank`'s shard.
+    /// Returns (tensor-relative range, slice into the shard).
+    pub fn local_view(&self, rank: usize, idx: usize) -> Option<((u64, u64), &[f32])> {
+        let (lo, hi) = self.layout.local_slice(idx, rank)?;
+        let off = self.layout.offsets[idx];
+        let s = self.layout.shard_size;
+        let a = (off + lo - rank as u64 * s) as usize;
+        Some(((lo, hi), &self.shards[rank][a..a + (hi - lo) as usize]))
+    }
+
+    pub fn local_view_mut(
+        &mut self,
+        rank: usize,
+        idx: usize,
+    ) -> Option<((u64, u64), &mut [f32])> {
+        let (lo, hi) = self.layout.local_slice(idx, rank)?;
+        let off = self.layout.offsets[idx];
+        let s = self.layout.shard_size;
+        let a = (off + lo - rank as u64 * s) as usize;
+        Some(((lo, hi), &mut self.shards[rank][a..a + (hi - lo) as usize]))
+    }
+
+    /// Zero-copy view of the *whole* tensor `idx` in `rank`'s gathered
+    /// full buffer (valid after `all_gather_params`). This is the paper's
+    /// zero-copy claim: the tensor is contiguous at a planner-known offset.
+    pub fn full_view(&self, rank: usize, idx: usize) -> &[f32] {
+        debug_assert!(self.gathered, "full buffer not gathered");
+        let off = self.layout.offsets[idx] as usize;
+        let n = self.layout.tensors[idx].numel as usize;
+        &self.full[rank][off..off + n]
+    }
+
+    pub fn full_view_mut(&mut self, rank: usize, idx: usize) -> &mut [f32] {
+        let off = self.layout.offsets[idx] as usize;
+        let n = self.layout.tensors[idx].numel as usize;
+        &mut self.full[rank][off..off + n]
+    }
+
+    /// In-place parameter AllGather: each rank's shard is published into
+    /// every rank's persistent full buffer. Zero-copy on both ends: the
+    /// shard region of `full` is first filled from `shards` (simulating
+    /// that they alias; one memcpy models the aliased write) and the
+    /// collective runs on `full` directly.
+    pub fn all_gather_params(&mut self, fabric: &Fabric, stats: &mut CommStats) -> Result<()> {
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        for rank in 0..m {
+            let shard = self.shards[rank].clone();
+            self.full[rank][rank * s..(rank + 1) * s].copy_from_slice(&shard);
+        }
+        comm::all_gather(&mut self.full, s)?;
+        self.gathered = true;
+        let aligned = fabric.is_aligned(0, self.shard_bytes());
+        stats.push(CommRecord {
+            op: "all_gather",
+            bytes_per_rank: self.shard_bytes(),
+            group_size: m,
+            sim_time: fabric.all_gather_time(m, self.shard_bytes(), aligned),
+        });
+        Ok(())
+    }
+
+    /// Release the gathered full buffers (FSDP reshard-after-forward).
+    /// The storage persists (in-place reuse); only validity is dropped.
+    pub fn release_full(&mut self) {
+        self.gathered = false;
+    }
+
+    /// In-place gradient ReduceScatter over the fsdp dim, then (if the
+    /// mesh has a replica dim) AllReduce of the shard across replicas —
+    /// the Fig-7 (Partial, Partial) -> (Replicate, Shard) redistribution.
+    /// `grads[r]` is rank r's full-buffer-sized gradient (m*S elements).
+    /// On return, `self.shards` holds the averaged gradient shards.
+    pub fn reduce_gradients(
+        &mut self,
+        grads: &mut [Vec<f32>],
+        mesh: &DeviceMesh,
+        fabric: &Fabric,
+        stats: &mut CommStats,
+    ) -> Result<()> {
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        if grads.len() != m {
+            bail!("reduce_gradients: {} grad buffers != {m}", grads.len());
+        }
+        let replicas = mesh.dim_size("replica").unwrap_or(1);
+        let scale = 1.0 / (m * replicas) as f32;
+        comm::reduce_scatter(grads, s, scale)?;
+        for rank in 0..m {
+            self.shards[rank].copy_from_slice(&grads[rank][rank * s..(rank + 1) * s]);
+        }
+        let aligned = fabric.is_aligned(0, self.shard_bytes());
+        stats.push(CommRecord {
+            op: "reduce_scatter",
+            bytes_per_rank: self.shard_bytes(),
+            group_size: m,
+            sim_time: fabric.reduce_scatter_time(m, self.shard_bytes(), aligned),
+        });
+        if replicas > 1 {
+            // cross-replica AllReduce of the already-scaled shard. In the
+            // simulation each replica computed the same reduced value, so
+            // data is already correct; we multiply by `replicas` to undo
+            // the extra scale and account the collective.
+            for rank in 0..m {
+                for x in self.shards[rank].iter_mut() {
+                    *x *= replicas as f32;
+                }
+            }
+            stats.push(CommRecord {
+                op: "all_reduce",
+                bytes_per_rank: self.shard_bytes(),
+                group_size: replicas,
+                sim_time: fabric.all_reduce_time(replicas, self.shard_bytes(), true),
+            });
+        }
+        Ok(())
+    }
+
+    /// Grouped fused op: zero every tensor's gradient region in one pass
+    /// (one "kernel" for the whole bucket instead of one per tensor).
+    pub fn zero_all(bufs: &mut [Vec<f32>]) {
+        for b in bufs.iter_mut() {
+            for x in b.iter_mut() {
+                *x = 0.0;
+            }
+        }
+    }
+
+    /// Grouped fused scale over all shards.
+    pub fn scale_all(&mut self, s: f32) {
+        for shard in self.shards.iter_mut() {
+            for x in shard.iter_mut() {
+                *x *= s;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan, TensorDecl};
+    use crate::util::Rng;
+
+    fn demo_buffer(m: usize) -> (DBuffer, Vec<Vec<f32>>) {
+        let ts = vec![
+            TensorDecl::new("a", 96, 32),
+            TensorDecl::new("b", 100, 1),
+            TensorDecl::new("c", 64, 16),
+        ];
+        let layout = plan(&ts, m, 1).unwrap();
+        let mut rng = Rng::new(7);
+        let datas: Vec<Vec<f32>> = ts
+            .iter()
+            .map(|t| (0..t.numel).map(|_| rng.normal_f32()).collect())
+            .collect();
+        let mut db = DBuffer::new(layout);
+        for (i, d) in datas.iter().enumerate() {
+            db.write_tensor(i, d).unwrap();
+        }
+        (db, datas)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let (db, datas) = demo_buffer(4);
+        for (i, d) in datas.iter().enumerate() {
+            assert_eq!(&db.read_tensor(i), d, "tensor {i}");
+        }
+    }
+
+    #[test]
+    fn gather_materializes_full_tensors() {
+        let (mut db, datas) = demo_buffer(4);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        db.all_gather_params(&fabric, &mut stats).unwrap();
+        for rank in 0..4 {
+            for (i, d) in datas.iter().enumerate() {
+                assert_eq!(db.full_view(rank, i), &d[..], "rank {rank} tensor {i}");
+            }
+        }
+        assert_eq!(stats.count("all_gather"), 1);
+        assert!(stats.total_time() > 0.0);
+    }
+
+    #[test]
+    fn local_views_are_zero_copy_consistent() {
+        let (db, datas) = demo_buffer(4);
+        for rank in 0..4 {
+            for i in 0..datas.len() {
+                if let Some(((lo, hi), view)) = db.local_view(rank, i) {
+                    assert_eq!(view, &datas[i][lo as usize..hi as usize]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn local_views_partition_each_tensor() {
+        let (db, datas) = demo_buffer(4);
+        for i in 0..datas.len() {
+            let mut covered = 0u64;
+            for rank in 0..4 {
+                if let Some(((lo, hi), _)) = db.local_view(rank, i) {
+                    assert_eq!(lo, covered);
+                    covered = hi;
+                }
+            }
+            assert_eq!(covered, datas[i].len() as u64);
+        }
+    }
+
+    #[test]
+    fn reduce_gradients_averages() {
+        let (mut db, _) = demo_buffer(4);
+        let m = 4;
+        let n = m * db.shard_elems();
+        // rank r contributes grad value (r+1) everywhere -> mean 2.5
+        let mut grads: Vec<Vec<f32>> =
+            (0..m).map(|r| vec![(r + 1) as f32; n]).collect();
+        let mesh = DeviceMesh::flat("fsdp", m);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        db.reduce_gradients(&mut grads, &mesh, &fabric, &mut stats).unwrap();
+        for rank in 0..m {
+            for &g in &db.shards[rank] {
+                assert!((g - 2.5).abs() < 1e-6);
+            }
+        }
+        assert_eq!(stats.count("reduce_scatter"), 1);
+        assert_eq!(stats.count("all_reduce"), 0);
+    }
+
+    #[test]
+    fn hsdp_reduction_adds_allreduce() {
+        let (mut db, _) = demo_buffer(4);
+        let n = 4 * db.shard_elems();
+        let mut grads: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; n]).collect();
+        let mesh = DeviceMesh::new(&[("replica", 2), ("fsdp", 4)]).unwrap();
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        db.reduce_gradients(&mut grads, &mesh, &fabric, &mut stats).unwrap();
+        assert_eq!(stats.count("all_reduce"), 1);
+        // value: mean over fsdp(=1.0) — replica AR preserves the mean
+        for rank in 0..4 {
+            for &g in &db.shards[rank] {
+                assert!((g - 1.0).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn release_and_regather() {
+        let (mut db, datas) = demo_buffer(2);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        db.all_gather_params(&fabric, &mut stats).unwrap();
+        db.release_full();
+        assert!(!db.gathered);
+        db.all_gather_params(&fabric, &mut stats).unwrap();
+        assert_eq!(db.full_view(0, 0), &datas[0][..]);
+    }
+
+    #[test]
+    fn padding_regions_never_alias_tensors() {
+        let (mut db, datas) = demo_buffer(4);
+        // poison padding in shards, verify tensors unaffected
+        let owned: Vec<Vec<bool>> = (0..4)
+            .map(|rank| {
+                let mut mask = vec![false; db.shard_elems()];
+                for i in 0..datas.len() {
+                    if let Some((lo, hi)) = db.layout.local_slice(i, rank) {
+                        let off = db.layout.offsets[i];
+                        let a = (off + lo - rank as u64 * db.layout.shard_size) as usize;
+                        for x in mask.iter_mut().skip(a).take((hi - lo) as usize) {
+                            *x = true;
+                        }
+                    }
+                }
+                mask
+            })
+            .collect();
+        for rank in 0..4 {
+            for (j, owned_j) in owned[rank].iter().enumerate() {
+                if !owned_j {
+                    db.shards[rank][j] = f32::NAN;
+                }
+            }
+        }
+        for (i, d) in datas.iter().enumerate() {
+            assert_eq!(&db.read_tensor(i), d);
+        }
+    }
+}

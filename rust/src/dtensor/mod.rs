@@ -1,0 +1,324 @@
+//! DTensor: a logical global tensor distributed over a mesh dim, with
+//! `redistribute` between placements (the PyTorch primitive the paper
+//! builds RaggedShard into; §2.2 Fig 1, §4).
+//!
+//! The simulation keeps every rank's local tensor in host memory;
+//! `redistribute` moves real data and accounts the implied collective on
+//! the fabric model. Supported conversions cover everything the paper's
+//! algorithms use:
+//!
+//! * `RaggedShard -> RaggedShard(root)` — Muon's unshard (Alg 2 line 8);
+//! * `RaggedShard -> Replicate` — AllGather materialization;
+//! * `Replicate -> RaggedShard` — shard (communication-free slicing);
+//! * `Partial -> RaggedShard` — ReduceScatter;
+//! * `Partial -> Replicate` — AllReduce;
+//! * `RaggedShard -> RaggedShard` (arbitrary respec) — All2All-style.
+
+use anyhow::{bail, Result};
+
+use crate::comm::{CommRecord, CommStats, Fabric};
+use crate::placement::{Placement, RaggedSpec};
+
+#[derive(Debug, Clone)]
+pub struct DTensor {
+    pub global_shape: Vec<usize>,
+    pub placement: Placement,
+    /// Per-rank local tensor (flat). For Replicate every rank holds the
+    /// full tensor; for Partial every rank holds an unreduced term.
+    pub locals: Vec<Vec<f32>>,
+}
+
+impl DTensor {
+    pub fn numel(&self) -> u64 {
+        self.global_shape.iter().map(|&s| s as u64).product()
+    }
+
+    pub fn num_ranks(&self) -> usize {
+        self.locals.len()
+    }
+
+    /// Build a replicated DTensor from full data.
+    pub fn replicate(global_shape: &[usize], data: &[f32], m: usize) -> DTensor {
+        assert_eq!(data.len(), global_shape.iter().product::<usize>());
+        DTensor {
+            global_shape: global_shape.to_vec(),
+            placement: Placement::Replicate,
+            locals: vec![data.to_vec(); m],
+        }
+    }
+
+    /// Build a RaggedShard DTensor from full data (communication-free).
+    pub fn ragged_from_full(
+        global_shape: &[usize],
+        data: &[f32],
+        spec: RaggedSpec,
+    ) -> Result<DTensor> {
+        let numel = data.len() as u64;
+        spec.validate(numel)?;
+        let locals = (0..spec.num_devices())
+            .map(|k| {
+                let (lo, hi) = spec.local_range(k, numel);
+                data[lo as usize..hi as usize].to_vec()
+            })
+            .collect();
+        Ok(DTensor {
+            global_shape: global_shape.to_vec(),
+            placement: Placement::RaggedShard(spec),
+            locals,
+        })
+    }
+
+    /// Build a Partial DTensor (each rank holds one term of a pending sum).
+    pub fn partial(global_shape: &[usize], terms: Vec<Vec<f32>>) -> DTensor {
+        DTensor {
+            global_shape: global_shape.to_vec(),
+            placement: Placement::Partial,
+            locals: terms,
+        }
+    }
+
+    /// Materialize the full tensor (uses rank data as placement dictates).
+    pub fn to_full(&self) -> Vec<f32> {
+        match &self.placement {
+            Placement::Replicate => self.locals[0].clone(),
+            Placement::RaggedShard(_) | Placement::StridedRaggedShard(_, _) => {
+                let mut out = Vec::with_capacity(self.numel() as usize);
+                for l in &self.locals {
+                    out.extend_from_slice(l);
+                }
+                out
+            }
+            Placement::Partial => {
+                let mut out = vec![0.0f32; self.numel() as usize];
+                for l in &self.locals {
+                    for (o, x) in out.iter_mut().zip(l) {
+                        *o += x;
+                    }
+                }
+                out
+            }
+            Placement::Shard(0) => {
+                let mut out = Vec::with_capacity(self.numel() as usize);
+                for l in &self.locals {
+                    out.extend_from_slice(l);
+                }
+                out
+            }
+            Placement::Shard(d) => panic!("to_full unsupported for Shard({d})"),
+        }
+    }
+
+    /// Redistribute to a new placement, moving real data and accounting
+    /// the implied collective.
+    pub fn redistribute(
+        &self,
+        to: Placement,
+        fabric: &Fabric,
+        stats: &mut CommStats,
+    ) -> Result<DTensor> {
+        let m = self.num_ranks();
+        let numel = self.numel();
+        let bytes = numel * 4;
+        match (&self.placement, &to) {
+            (a, b) if a == b => Ok(self.clone()),
+
+            // ---- RaggedShard -> RaggedShard' (incl. gather-to-root) ----
+            (Placement::RaggedShard(_), Placement::RaggedShard(spec2)) => {
+                spec2.validate(numel)?;
+                let full = self.to_full();
+                let out = DTensor::ragged_from_full(&self.global_shape, &full, spec2.clone())?;
+                // cost: each element moving ranks crosses the wire once;
+                // worst case (gather to root) ~ AllGather of others' shards
+                let moved = self.moved_bytes(spec2, numel);
+                stats.push(CommRecord {
+                    op: "redistribute",
+                    bytes_per_rank: moved / m as u64,
+                    group_size: m,
+                    sim_time: fabric.all_gather_time(m, moved / m as u64, true),
+                });
+                Ok(out)
+            }
+
+            // ---- RaggedShard -> Replicate (AllGather) ----
+            (Placement::RaggedShard(spec), Placement::Replicate) => {
+                let full = self.to_full();
+                stats.push(CommRecord {
+                    op: "all_gather",
+                    bytes_per_rank: spec.max_local_numel(numel) * 4,
+                    group_size: m,
+                    sim_time: fabric.all_gather_time(m, spec.max_local_numel(numel) * 4, true),
+                });
+                Ok(DTensor::replicate(&self.global_shape, &full, m))
+            }
+
+            // ---- Replicate -> RaggedShard (free slicing) ----
+            (Placement::Replicate, Placement::RaggedShard(spec2)) => {
+                DTensor::ragged_from_full(&self.global_shape, &self.locals[0], spec2.clone())
+            }
+
+            // ---- Partial -> RaggedShard (ReduceScatter) ----
+            (Placement::Partial, Placement::RaggedShard(spec2)) => {
+                spec2.validate(numel)?;
+                let full = self.to_full();
+                let out = DTensor::ragged_from_full(&self.global_shape, &full, spec2.clone())?;
+                stats.push(CommRecord {
+                    op: "reduce_scatter",
+                    bytes_per_rank: bytes / m as u64,
+                    group_size: m,
+                    sim_time: fabric.reduce_scatter_time(m, bytes / m as u64, true),
+                });
+                Ok(out)
+            }
+
+            // ---- Partial -> Replicate (AllReduce) ----
+            (Placement::Partial, Placement::Replicate) => {
+                let full = self.to_full();
+                stats.push(CommRecord {
+                    op: "all_reduce",
+                    bytes_per_rank: bytes / m as u64,
+                    group_size: m,
+                    sim_time: fabric.all_reduce_time(m, bytes / m as u64, true),
+                });
+                Ok(DTensor::replicate(&self.global_shape, &full, m))
+            }
+
+            (from, to) => bail!("unsupported redistribute {from:?} -> {to:?}"),
+        }
+    }
+
+    /// Bytes that change owner going from the current ragged spec to
+    /// `spec2` (cost of an arbitrary respec).
+    fn moved_bytes(&self, spec2: &RaggedSpec, numel: u64) -> u64 {
+        let spec1 = match self.placement.ragged_spec() {
+            Some(s) => s,
+            None => return numel * 4,
+        };
+        let mut moved = 0u64;
+        for k in 0..self.num_ranks() {
+            let (a1, b1) = spec1.local_range(k, numel);
+            let (a2, b2) = spec2.local_range(k, numel);
+            let overlap = b1.min(b2).saturating_sub(a1.max(a2));
+            moved += (b2 - a2) - overlap; // elements k must receive
+        }
+        moved * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn randvec(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.normal_f32()).collect()
+    }
+
+    #[test]
+    fn ragged_from_full_roundtrip() {
+        let data = randvec(100, 1);
+        let spec = RaggedSpec::balanced(100, 10, 4);
+        let dt = DTensor::ragged_from_full(&[10, 10], &data, spec).unwrap();
+        assert_eq!(dt.to_full(), data);
+    }
+
+    #[test]
+    fn gather_to_root_muon_pattern() {
+        // Alg 2 lines 5-8: redistribute(u, RaggedShard(root))
+        let data = randvec(96, 2);
+        let spec = RaggedSpec::balanced(96, 8, 4);
+        let dt = DTensor::ragged_from_full(&[96], &data, spec).unwrap();
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let root_spec = RaggedSpec::on_root(96, 8, 4, 2);
+        let rooted = dt
+            .redistribute(Placement::RaggedShard(root_spec), &fabric, &mut stats)
+            .unwrap();
+        // only root holds data -> SPMD no-op on other ranks
+        assert_eq!(rooted.locals[2].len(), 96);
+        assert_eq!(rooted.locals[0].len(), 0);
+        assert_eq!(rooted.locals[2], data);
+        assert_eq!(stats.count("redistribute"), 1);
+    }
+
+    #[test]
+    fn roundtrip_root_and_back_preserves() {
+        let data = randvec(64, 3);
+        let spec = RaggedSpec::balanced(64, 4, 4);
+        let dt = DTensor::ragged_from_full(&[64], &data, spec.clone()).unwrap();
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let rooted = dt
+            .redistribute(
+                Placement::RaggedShard(RaggedSpec::on_root(64, 4, 4, 0)),
+                &fabric,
+                &mut stats,
+            )
+            .unwrap();
+        let back = rooted
+            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .unwrap();
+        assert_eq!(back.to_full(), data);
+    }
+
+    #[test]
+    fn partial_reduce_scatter() {
+        // 3 ranks each contribute ones -> reduced value 3.0 everywhere
+        let terms: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0f32; 30]).collect();
+        let dt = DTensor::partial(&[30], terms);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let spec = RaggedSpec::balanced(30, 5, 3);
+        let out = dt
+            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .unwrap();
+        assert!(out.to_full().iter().all(|&x| (x - 3.0).abs() < 1e-6));
+        assert_eq!(stats.count("reduce_scatter"), 1);
+    }
+
+    #[test]
+    fn partial_all_reduce() {
+        let terms: Vec<Vec<f32>> = (0..4).map(|k| vec![k as f32; 8]).collect();
+        let dt = DTensor::partial(&[8], terms);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let out = dt.redistribute(Placement::Replicate, &fabric, &mut stats).unwrap();
+        assert!(out.locals.iter().all(|l| l.iter().all(|&x| x == 6.0)));
+    }
+
+    #[test]
+    fn replicate_to_ragged_is_free() {
+        let data = randvec(48, 4);
+        let dt = DTensor::replicate(&[48], &data, 4);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let spec = RaggedSpec::balanced(48, 6, 4);
+        let out = dt
+            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .unwrap();
+        assert_eq!(out.to_full(), data);
+        assert_eq!(stats.records.len(), 0); // no comm
+    }
+
+    #[test]
+    fn unsupported_conversion_errors() {
+        let dt = DTensor::replicate(&[8], &randvec(8, 5), 2);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        assert!(dt.redistribute(Placement::Partial, &fabric, &mut stats).is_err());
+    }
+
+    #[test]
+    fn identity_redistribute_no_comm() {
+        let data = randvec(32, 6);
+        let spec = RaggedSpec::balanced(32, 4, 2);
+        let dt = DTensor::ragged_from_full(&[32], &data, spec.clone()).unwrap();
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let same = dt
+            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .unwrap();
+        assert_eq!(same.to_full(), data);
+        assert_eq!(stats.records.len(), 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! The FSDP engine layer.
+//!
+//! Two engines, one abstraction:
+//!
+//! * [`sim`] — the *symbolic* engine: replays one training iteration of a
+//!   model preset over the fabric + allocator models and returns the
+//!   step-time / memory / padding report. All Fig-8/9 and Table-1/2
+//!   numbers come from here; each baseline system is a
+//!   [`sim::SystemBehavior`] (see `baselines/`).
+//! * [`engine`] — the *numeric* engine: real parameter shards in DBuffers,
+//!   real collectives, real optimizer math, compute supplied by the PJRT
+//!   runtime (or any closure). The e2e example and Fig-10 convergence runs
+//!   use this.
+
+pub mod engine;
+pub mod sim;
+
+pub use engine::{FsdpEngine, ShardingPolicy};
+pub use sim::{simulate_step, GpuSpec, ShardingFormat, StepReport, SystemBehavior};

@@ -1,0 +1,34 @@
+//! # veScale-FSDP (reproduction)
+//!
+//! A three-layer reproduction of *veScale-FSDP: Flexible and
+//! High-Performance FSDP at Scale* (ByteDance Seed, 2026):
+//!
+//! * **L3 (this crate)** — the coordinator: RaggedShard placements, the
+//!   structure-aware planner (Algorithm 1), DBuffer, the FSDP engine, the
+//!   four baseline systems, optimizers (AdamW / SGD / 8-bit Adam / Muon),
+//!   a simulated multi-device cluster with real data movement plus an
+//!   analytic fabric cost model, and a PJRT runtime that executes the
+//!   AOT-compiled JAX/Pallas compute.
+//! * **L2** — `python/compile/model.py`: the transformer fwd/bwd.
+//! * **L1** — `python/compile/kernels/`: Pallas kernels (block-wise quant,
+//!   fused AdamW, Newton-Schulz, MXU-tiled matmul).
+//!
+//! Python runs once at build time (`make artifacts`); the request path is
+//! pure Rust + PJRT.
+
+pub mod checkpoint;
+pub mod comm;
+pub mod baselines;
+pub mod config;
+pub mod memory;
+pub mod dbuffer;
+pub mod dtensor;
+pub mod fsdp;
+pub mod mesh;
+pub mod optim;
+pub mod placement;
+pub mod planner;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,160 @@
+//! N-dimensional device mesh (the substrate under DTensor / DBuffer).
+//!
+//! A mesh names its dimensions, e.g. `[("replica", 4), ("fsdp", 256)]` for
+//! HSDP or `[("fsdp", 64), ("ep", 16)]` for FSDP x Expert Parallelism.
+//! Ranks are laid out row-major over the dims (last dim fastest), matching
+//! PyTorch's DeviceMesh convention.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceMesh {
+    dims: Vec<(String, usize)>,
+}
+
+impl DeviceMesh {
+    pub fn new(dims: &[(&str, usize)]) -> Result<DeviceMesh> {
+        if dims.is_empty() {
+            bail!("mesh needs at least one dim");
+        }
+        for (name, n) in dims {
+            if *n == 0 {
+                bail!("mesh dim '{name}' has size 0");
+            }
+        }
+        let mut names: Vec<&str> = dims.iter().map(|(n, _)| *n).collect();
+        names.sort();
+        names.dedup();
+        if names.len() != dims.len() {
+            bail!("duplicate mesh dim names");
+        }
+        Ok(DeviceMesh {
+            dims: dims.iter().map(|(n, s)| (n.to_string(), *s)).collect(),
+        })
+    }
+
+    /// 1-D mesh, the plain-FSDP case.
+    pub fn flat(name: &str, n: usize) -> DeviceMesh {
+        DeviceMesh::new(&[(name, n)]).unwrap()
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.dims.iter().map(|(_, s)| s).product()
+    }
+
+    pub fn dim_names(&self) -> Vec<&str> {
+        self.dims.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn dim_index(&self, name: &str) -> Option<usize> {
+        self.dims.iter().position(|(n, _)| n == name)
+    }
+
+    pub fn dim_size(&self, name: &str) -> Option<usize> {
+        self.dims.iter().find(|(n, _)| n == name).map(|(_, s)| *s)
+    }
+
+    pub fn sizes(&self) -> Vec<usize> {
+        self.dims.iter().map(|(_, s)| *s).collect()
+    }
+
+    /// Coordinates of a global rank (row-major, last dim fastest).
+    pub fn coords(&self, rank: usize) -> Vec<usize> {
+        assert!(rank < self.num_devices());
+        let mut rem = rank;
+        let mut out = vec![0; self.ndim()];
+        for i in (0..self.ndim()).rev() {
+            out[i] = rem % self.dims[i].1;
+            rem /= self.dims[i].1;
+        }
+        out
+    }
+
+    /// Global rank of a coordinate vector.
+    pub fn rank_of(&self, coords: &[usize]) -> usize {
+        assert_eq!(coords.len(), self.ndim());
+        let mut rank = 0;
+        for (i, &c) in coords.iter().enumerate() {
+            assert!(c < self.dims[i].1);
+            rank = rank * self.dims[i].1 + c;
+        }
+        rank
+    }
+
+    /// Process groups along one dim: all rank-lists that vary only in that
+    /// dim (each is a collective group, e.g. the FSDP shard group).
+    pub fn groups_along(&self, dim_name: &str) -> Vec<Vec<usize>> {
+        let d = self.dim_index(dim_name).expect("unknown mesh dim");
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        let n = self.num_devices();
+        let mut seen = vec![false; n];
+        for r in 0..n {
+            if seen[r] {
+                continue;
+            }
+            let mut coords = self.coords(r);
+            let mut g = Vec::with_capacity(self.dims[d].1);
+            for k in 0..self.dims[d].1 {
+                coords[d] = k;
+                let rr = self.rank_of(&coords);
+                seen[rr] = true;
+                g.push(rr);
+            }
+            groups.push(g);
+        }
+        groups
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_mesh() {
+        let m = DeviceMesh::flat("fsdp", 8);
+        assert_eq!(m.num_devices(), 8);
+        assert_eq!(m.coords(5), vec![5]);
+        assert_eq!(m.rank_of(&[5]), 5);
+    }
+
+    #[test]
+    fn coords_roundtrip_2d() {
+        let m = DeviceMesh::new(&[("replica", 2), ("fsdp", 3)]).unwrap();
+        for r in 0..6 {
+            assert_eq!(m.rank_of(&m.coords(r)), r);
+        }
+        // last dim fastest
+        assert_eq!(m.coords(1), vec![0, 1]);
+        assert_eq!(m.coords(3), vec![1, 0]);
+    }
+
+    #[test]
+    fn groups_along_dims() {
+        let m = DeviceMesh::new(&[("replica", 2), ("fsdp", 3)]).unwrap();
+        let fsdp = m.groups_along("fsdp");
+        assert_eq!(fsdp, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+        let rep = m.groups_along("replica");
+        assert_eq!(rep, vec![vec![0, 3], vec![1, 4], vec![2, 5]]);
+    }
+
+    #[test]
+    fn rejects_bad_meshes() {
+        assert!(DeviceMesh::new(&[]).is_err());
+        assert!(DeviceMesh::new(&[("a", 0)]).is_err());
+        assert!(DeviceMesh::new(&[("a", 2), ("a", 3)]).is_err());
+    }
+
+    #[test]
+    fn hsdp_mesh_shape() {
+        // paper Fig 8: HSDP with 4-way replication over 256-way FSDP
+        let m = DeviceMesh::new(&[("replica", 4), ("fsdp", 256)]).unwrap();
+        assert_eq!(m.num_devices(), 1024);
+        assert_eq!(m.groups_along("fsdp").len(), 4);
+        assert_eq!(m.groups_along("replica").len(), 256);
+    }
+}

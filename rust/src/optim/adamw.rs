@@ -1,0 +1,109 @@
+//! AdamW on flat shards — host mirror of the fused Pallas kernel
+//! (`python/compile/kernels/fused_adamw.py`); same update equations, so
+//! the PJRT `adamw_chunk` artifact and this implementation agree to f32
+//! rounding (checked by `rust/tests/runtime_artifacts.rs`).
+
+use super::{AdamHyper, ShardOptimizer};
+
+#[derive(Debug)]
+pub struct AdamW {
+    pub hyper: AdamHyper,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl AdamW {
+    pub fn new(hyper: AdamHyper, ranks: usize) -> AdamW {
+        AdamW { hyper, m: vec![Vec::new(); ranks], v: vec![Vec::new(); ranks] }
+    }
+
+    /// The update on raw slices (shared with tests / the Muon fallback).
+    pub fn apply(
+        h: &AdamHyper,
+        t: u64,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        let (b1, b2) = (h.beta1, h.beta2);
+        let bc1 = 1.0 - b1.powi(t as i32);
+        let bc2 = 1.0 - b2.powi(t as i32);
+        for i in 0..p.len() {
+            m[i] = b1 * m[i] + (1.0 - b1) * g[i];
+            v[i] = b2 * v[i] + (1.0 - b2) * g[i] * g[i];
+            let mhat = m[i] / bc1;
+            let vhat = v[i] / bc2;
+            p[i] -= h.lr * (mhat / (vhat.sqrt() + h.eps) + h.wd * p[i]);
+        }
+    }
+}
+
+impl ShardOptimizer for AdamW {
+    fn step(&mut self, rank: usize, t: u64, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), grad.len());
+        let m = &mut self.m[rank];
+        let v = &mut self.v[rank];
+        if m.len() != param.len() {
+            m.resize(param.len(), 0.0);
+            v.resize(param.len(), 0.0);
+        }
+        AdamW::apply(&self.hyper, t, param, grad, m, v);
+    }
+
+    fn state_bytes(&self, rank: usize) -> u64 {
+        (self.m[rank].len() + self.v[rank].len()) as u64 * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "adamw"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_step_matches_hand_calc() {
+        // t=1: m=0.1*g... with beta1=0.9: m=(1-0.9)*g=0.1g; mhat=m/(1-0.9)=g
+        // v=0.001*g^2; vhat=g^2; update = lr*(g/(|g|+eps) + wd*p)
+        let h = AdamHyper { lr: 0.01, beta1: 0.9, beta2: 0.999, eps: 0.0, wd: 0.0 };
+        let mut o = AdamW::new(h, 1);
+        let mut p = vec![1.0f32];
+        o.step(0, 1, &mut p, &[0.5]);
+        // sign-like first step: p -= lr * sign(g)
+        assert!((p[0] - (1.0 - 0.01)).abs() < 1e-5, "{}", p[0]);
+    }
+
+    #[test]
+    fn weight_decay_pure() {
+        let h = AdamHyper { lr: 0.1, wd: 0.1, ..Default::default() };
+        let mut o = AdamW::new(h, 1);
+        let mut p = vec![2.0f32];
+        o.step(0, 1, &mut p, &[0.0]);
+        assert!((p[0] - (2.0 - 0.1 * 0.1 * 2.0)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn converges_on_quadratic() {
+        // minimize (p-3)^2 -> p should approach 3
+        let h = AdamHyper { lr: 0.1, ..Default::default() };
+        let mut o = AdamW::new(AdamHyper { wd: 0.0, ..h }, 1);
+        let mut p = vec![0.0f32];
+        for t in 1..=200 {
+            let g = [2.0 * (p[0] - 3.0)];
+            o.step(0, t, &mut p, &g);
+        }
+        assert!((p[0] - 3.0).abs() < 0.1, "{}", p[0]);
+    }
+
+    #[test]
+    fn state_grows_with_shard() {
+        let mut o = AdamW::new(AdamHyper::default(), 2);
+        let mut p = vec![0.0f32; 100];
+        o.step(0, 1, &mut p, &vec![0.1; 100]);
+        assert_eq!(o.state_bytes(0), 800);
+        assert_eq!(o.state_bytes(1), 0);
+    }
+}

@@ -1,0 +1,47 @@
+//! Sharded optimizers. Each operates on a device's *local shard* of the
+//! flat parameter/gradient state — exactly what FSDP hands it — so
+//! structure-aware optimizers (8-bit Adam's quant blocks, Muon's 2-D
+//! matrices) only work when the sharding format preserves their structure,
+//! which is the paper's whole point (§6.3).
+//!
+//! Host implementations mirror the L1 Pallas kernels bit-for-bit in math
+//! (same update equations as `python/compile/kernels/`); the runtime can
+//! swap in the AOT `adamw_chunk` / `adam8bit_chunk` HLO artifacts and the
+//! integration tests check host-vs-artifact agreement.
+
+pub mod adam8bit;
+pub mod adamw;
+pub mod muon;
+pub mod sgd;
+
+pub use adam8bit::Adam8bit;
+pub use adamw::AdamW;
+pub use muon::Muon;
+pub use sgd::Sgd;
+
+/// Hyper-parameters shared by the Adam family.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHyper {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub wd: f32,
+}
+
+impl Default for AdamHyper {
+    fn default() -> Self {
+        AdamHyper { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01 }
+    }
+}
+
+/// Flat-shard optimizer interface (element-wise family).
+pub trait ShardOptimizer {
+    /// One step over the rank's local shard. `t` is the 1-based step.
+    fn step(&mut self, rank: usize, t: u64, param: &mut [f32], grad: &[f32]);
+
+    /// Optimizer-state bytes currently held for `rank`.
+    fn state_bytes(&self, rank: usize) -> u64;
+
+    fn name(&self) -> &'static str;
+}

@@ -1,0 +1,313 @@
+//! Distributed Muon (paper §6.3, Algorithm 2) over RaggedShard DTensors.
+//!
+//! Muon's Newton–Schulz preconditioner needs each 2-D parameter matrix
+//! *whole* on some device. RaggedShard makes the gather a plain
+//! `redistribute(u, RaggedShard(root))`: after redistribution only the
+//! root rank holds data, so Newton–Schulz is a no-op elsewhere — clean
+//! SPMD, no hand-written collectives. Root selection is load-balanced
+//! round-robin (SelectRoot of Alg 2).
+//!
+//! The Newton–Schulz math mirrors `python/compile/kernels/newton_schulz.py`
+//! (same quintic coefficients); the runtime can execute the AOT
+//! `newton_schulz_{r}x{c}` artifact instead of the host matmuls.
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+
+use crate::comm::{CommStats, Fabric};
+use crate::dtensor::DTensor;
+use crate::placement::{Placement, RaggedSpec};
+use crate::tensor::HostTensor;
+
+/// Quintic Newton–Schulz coefficients (Jordan et al. 2024) — must match
+/// `kernels/ref.py::NS_COEFFS`.
+pub const NS_COEFFS: (f32, f32, f32) = (3.4445, -4.7750, 2.0315);
+pub const NS_STEPS: usize = 5;
+
+/// Host Newton–Schulz: orthogonalize a (r x c) matrix.
+pub fn newton_schulz(g: &HostTensor, steps: usize) -> Result<HostTensor> {
+    let (r, c) = g.dims2()?;
+    let (a, b, cc) = NS_COEFFS;
+    let transposed = r > c;
+    let mut x = if transposed { g.transpose2()? } else { g.clone() };
+    let norm = x.frob_norm() + 1e-7;
+    x.scale_inplace(1.0 / norm);
+    for _ in 0..steps {
+        let xt = x.transpose2()?;
+        let gram = x.matmul(&xt)?; // (min, min)
+        let gram2 = gram.matmul(&gram)?;
+        // a*x + (b*gram + c*gram^2) @ x
+        let mut mix = gram;
+        mix.scale_inplace(b);
+        mix.add_scaled(&gram2, cc);
+        let mut out = mix.matmul(&x)?;
+        out.add_scaled(&x, a);
+        x = out;
+    }
+    if transposed {
+        x.transpose2()
+    } else {
+        Ok(x)
+    }
+}
+
+/// Distributed Muon state: per-parameter sharded momentum.
+#[derive(Debug)]
+pub struct Muon {
+    pub lr: f32,
+    pub momentum: f32,
+    pub wd: f32,
+    /// Nesterov-style update (u = g + mu*m after m update), as in Muon.
+    pub nesterov: bool,
+    /// name -> per-rank momentum shard.
+    momenta: HashMap<String, Vec<Vec<f32>>>,
+    /// Round-robin root cursor (SelectRoot load balancing).
+    next_root: usize,
+}
+
+impl Muon {
+    pub fn new(lr: f32, momentum: f32, wd: f32) -> Muon {
+        Muon {
+            lr,
+            momentum,
+            wd,
+            nesterov: true,
+            momenta: HashMap::new(),
+            next_root: 0,
+        }
+    }
+
+    /// Alg 2 SelectRoot: balance Newton-Schulz work across ranks.
+    pub fn select_root(&mut self, m: usize) -> usize {
+        let r = self.next_root % m;
+        self.next_root += 1;
+        r
+    }
+
+    /// One Muon step for a 2-D parameter held as a RaggedShard DTensor.
+    /// `param` and `grad` share the same spec; returns updated param.
+    pub fn step_matrix(
+        &mut self,
+        name: &str,
+        shape2: (usize, usize),
+        param: &DTensor,
+        grad: &DTensor,
+        fabric: &Fabric,
+        stats: &mut CommStats,
+    ) -> Result<DTensor> {
+        let spec = param
+            .placement
+            .ragged_spec()
+            .ok_or_else(|| anyhow::anyhow!("muon needs RaggedShard params"))?
+            .clone();
+        let m = param.num_ranks();
+        let numel = param.numel();
+
+        // ---- momentum update on the sharded state (element-wise) ----
+        let mom = self
+            .momenta
+            .entry(name.to_string())
+            .or_insert_with(|| (0..m).map(|k| vec![0.0; grad.locals[k].len()]).collect());
+        let mut u_locals = Vec::with_capacity(m);
+        for k in 0..m {
+            let g = &grad.locals[k];
+            let mk = &mut mom[k];
+            let mut u = vec![0.0f32; g.len()];
+            for i in 0..g.len() {
+                mk[i] = self.momentum * mk[i] + g[i];
+                u[i] = if self.nesterov {
+                    g[i] + self.momentum * mk[i]
+                } else {
+                    mk[i]
+                };
+            }
+            u_locals.push(u);
+        }
+        let u = DTensor {
+            global_shape: param.global_shape.clone(),
+            placement: Placement::RaggedShard(spec.clone()),
+            locals: u_locals,
+        };
+
+        // ---- unshard to root via redistribute (Alg 2 lines 5-8) ----
+        let root = self.select_root(m);
+        let root_spec = RaggedSpec::on_root(numel, spec.granularity, m, root);
+        let gathered = u.redistribute(Placement::RaggedShard(root_spec), fabric, stats)?;
+
+        // ---- Newton-Schulz on the root's full tensor (lines 9-10) ----
+        let (r, c) = shape2;
+        let full = HostTensor::from_f32(&[r, c], gathered.locals[root].clone());
+        let mut orth = newton_schulz(&full, NS_STEPS)?;
+        // Muon RMS-matching scale: sqrt(max(r, c) / min(r, c)) ~ Jordan's
+        // 0.2 * sqrt(max(1, r/c)) variants; use max/min^0.5 normalization.
+        let scale = ((r.max(c)) as f32 / (r.min(c)) as f32).sqrt();
+        orth.scale_inplace(scale);
+
+        // ---- redistribute back (lines 11-12) ----
+        let o_root = DTensor {
+            global_shape: param.global_shape.clone(),
+            placement: Placement::RaggedShard(RaggedSpec::on_root(
+                numel,
+                spec.granularity,
+                m,
+                root,
+            )),
+            locals: (0..m)
+                .map(|k| if k == root { orth.as_f32().to_vec() } else { Vec::new() })
+                .collect(),
+        };
+        let o = o_root.redistribute(Placement::RaggedShard(spec.clone()), fabric, stats)?;
+
+        // ---- apply: w <- w - lr * (o + wd * w), sharded (line 13) ----
+        let mut new_locals = Vec::with_capacity(m);
+        for k in 0..m {
+            let mut p = param.locals[k].clone();
+            for i in 0..p.len() {
+                p[i] -= self.lr * (o.locals[k][i] + self.wd * p[i]);
+            }
+            new_locals.push(p);
+        }
+        Ok(DTensor {
+            global_shape: param.global_shape.clone(),
+            placement: Placement::RaggedShard(spec),
+            locals: new_locals,
+        })
+    }
+
+    pub fn state_bytes(&self) -> u64 {
+        self.momenta
+            .values()
+            .map(|per_rank| per_rank.iter().map(|v| v.len() as u64 * 4).sum::<u64>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn rand_mat(r: usize, c: usize, seed: u64) -> HostTensor {
+        let mut rng = Rng::new(seed);
+        HostTensor::randn(&[r, c], &mut rng, 1.0)
+    }
+
+    #[test]
+    fn newton_schulz_orthogonalizes() {
+        let g = rand_mat(32, 64, 0);
+        let o = newton_schulz(&g, NS_STEPS).unwrap();
+        // rows should be near-orthonormal: O @ O^T ~ I (32x32)
+        let gram = o.matmul(&o.transpose2().unwrap()).unwrap();
+        let mut max_off = 0.0f32;
+        let mut diag_err = 0.0f32;
+        for i in 0..32 {
+            for j in 0..32 {
+                let v = gram.as_f32()[i * 32 + j];
+                if i == j {
+                    diag_err = diag_err.max((v - 1.0).abs());
+                } else {
+                    max_off = max_off.max(v.abs());
+                }
+            }
+        }
+        assert!(diag_err < 0.6, "diag err {diag_err}");
+        assert!(max_off < 0.3, "off-diag {max_off}");
+    }
+
+    #[test]
+    fn newton_schulz_tall_matrix() {
+        let g = rand_mat(64, 16, 1);
+        let o = newton_schulz(&g, NS_STEPS).unwrap();
+        assert_eq!(o.shape, vec![64, 16]);
+        // columns near-orthonormal: O^T O ~ I
+        let gram = o.transpose2().unwrap().matmul(&o).unwrap();
+        for i in 0..16 {
+            let v = gram.as_f32()[i * 16 + i];
+            assert!((v - 1.0).abs() < 0.7, "diag {v}");
+        }
+    }
+
+    #[test]
+    fn distributed_step_matches_single_device() {
+        // Muon over 4 ranks must produce the same update as on 1 rank
+        let (r, c) = (16, 32);
+        let numel = (r * c) as u64;
+        let pdata = rand_mat(r, c, 2);
+        let gdata = rand_mat(r, c, 3);
+        let fabric = Fabric::h800();
+
+        let run = |m: usize| {
+            let spec = RaggedSpec::balanced(numel, c as u64, m);
+            let p = DTensor::ragged_from_full(&[r, c], pdata.as_f32(), spec.clone()).unwrap();
+            let g = DTensor::ragged_from_full(&[r, c], gdata.as_f32(), spec).unwrap();
+            let mut muon = Muon::new(0.02, 0.95, 0.0);
+            let mut stats = CommStats::default();
+            let out = muon
+                .step_matrix("w", (r, c), &p, &g, &fabric, &mut stats)
+                .unwrap();
+            out.to_full()
+        };
+        let single = run(1);
+        let multi = run(4);
+        for (a, b) in single.iter().zip(&multi) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn momentum_state_persists_across_steps() {
+        let (r, c) = (8, 8);
+        let numel = 64u64;
+        let spec = RaggedSpec::balanced(numel, 8, 2);
+        let fabric = Fabric::h800();
+        let mut muon = Muon::new(0.1, 0.9, 0.0);
+        let mut stats = CommStats::default();
+        let mut p = DTensor::ragged_from_full(
+            &[r, c],
+            rand_mat(r, c, 4).as_f32(),
+            spec.clone(),
+        )
+        .unwrap();
+        let g = DTensor::ragged_from_full(&[r, c], rand_mat(r, c, 5).as_f32(), spec).unwrap();
+        let p1 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        let before = muon.state_bytes();
+        p = p1;
+        let _p2 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        assert_eq!(muon.state_bytes(), before);
+        assert!(before > 0);
+    }
+
+    #[test]
+    fn root_rotates_for_load_balance() {
+        let mut muon = Muon::new(0.1, 0.9, 0.0);
+        let roots: Vec<usize> = (0..6).map(|_| muon.select_root(4)).collect();
+        assert_eq!(roots, vec![0, 1, 2, 3, 0, 1]);
+    }
+
+    #[test]
+    fn update_is_orthogonalized_not_raw_grad() {
+        // Muon's update direction differs from the raw gradient
+        let (r, c) = (16, 16);
+        let spec = RaggedSpec::balanced(256, 16, 2);
+        let fabric = Fabric::h800();
+        let mut stats = CommStats::default();
+        let p0 = rand_mat(r, c, 6);
+        let p = DTensor::ragged_from_full(&[r, c], p0.as_f32(), spec.clone()).unwrap();
+        let g = DTensor::ragged_from_full(&[r, c], rand_mat(r, c, 7).as_f32(), spec).unwrap();
+        let mut muon = Muon::new(1.0, 0.0, 0.0);
+        let out = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        let delta: Vec<f32> = out
+            .to_full()
+            .iter()
+            .zip(p0.as_f32())
+            .map(|(a, b)| b - a)
+            .collect();
+        // delta should be ~orthogonal matrix (singular values ~1), very
+        // different from the raw gradient's norm profile
+        let d = HostTensor::from_f32(&[r, c], delta);
+        let gram = d.matmul(&d.transpose2().unwrap()).unwrap();
+        let trace: f32 = (0..r).map(|i| gram.as_f32()[i * r + i]).sum();
+        assert!((trace / r as f32 - 1.0).abs() < 0.5, "trace/n {}", trace / r as f32);
+    }
+}

@@ -1,0 +1,80 @@
+//! Plain SGD (the paper's OOM-fallback baseline for GPT-OSS, §6 workloads).
+
+use super::ShardOptimizer;
+
+#[derive(Debug)]
+pub struct Sgd {
+    pub lr: f32,
+    pub momentum: f32,
+    /// Per-rank momentum buffers (allocated lazily; empty when momentum=0).
+    vel: Vec<Vec<f32>>,
+}
+
+impl Sgd {
+    pub fn new(lr: f32, momentum: f32, ranks: usize) -> Sgd {
+        Sgd { lr, momentum, vel: vec![Vec::new(); ranks] }
+    }
+}
+
+impl ShardOptimizer for Sgd {
+    fn step(&mut self, rank: usize, _t: u64, param: &mut [f32], grad: &[f32]) {
+        assert_eq!(param.len(), grad.len());
+        if self.momentum == 0.0 {
+            for (p, g) in param.iter_mut().zip(grad) {
+                *p -= self.lr * g;
+            }
+            return;
+        }
+        let vel = &mut self.vel[rank];
+        if vel.len() != param.len() {
+            vel.resize(param.len(), 0.0);
+        }
+        for ((p, g), v) in param.iter_mut().zip(grad).zip(vel.iter_mut()) {
+            *v = self.momentum * *v + g;
+            *p -= self.lr * *v;
+        }
+    }
+
+    fn state_bytes(&self, rank: usize) -> u64 {
+        self.vel[rank].len() as u64 * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vanilla_sgd_step() {
+        let mut o = Sgd::new(0.1, 0.0, 1);
+        let mut p = vec![1.0f32, 2.0];
+        o.step(0, 1, &mut p, &[1.0, -1.0]);
+        assert_eq!(p, vec![0.9, 2.1]);
+        assert_eq!(o.state_bytes(0), 0);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut o = Sgd::new(0.1, 0.9, 1);
+        let mut p = vec![0.0f32];
+        o.step(0, 1, &mut p, &[1.0]); // v=1, p=-0.1
+        o.step(0, 2, &mut p, &[1.0]); // v=1.9, p=-0.29
+        assert!((p[0] + 0.29).abs() < 1e-6);
+        assert_eq!(o.state_bytes(0), 4);
+    }
+
+    #[test]
+    fn independent_ranks() {
+        let mut o = Sgd::new(0.1, 0.9, 2);
+        let mut p0 = vec![0.0f32];
+        let mut p1 = vec![0.0f32];
+        o.step(0, 1, &mut p0, &[1.0]);
+        o.step(1, 1, &mut p1, &[2.0]);
+        assert!((p0[0] + 0.1).abs() < 1e-7);
+        assert!((p1[0] + 0.2).abs() < 1e-7);
+    }
+}

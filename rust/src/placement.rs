@@ -1,0 +1,260 @@
+//! DTensor placements, including the paper's contribution: **RaggedShard**
+//! (paper §4) and its Shard(0)-composition variant **StridedRaggedShard**.
+//!
+//! A `RaggedSpec` describes arbitrary sharding granularity (the atomic
+//! non-shardable block, in contiguous elements) and arbitrary distribution
+//! (number of such blocks per device). `Placement::Shard` / `Replicate` /
+//! `Partial` mirror PyTorch DTensor; RaggedShard generalizes them all
+//! (Fig 4): element-wise shard = granularity 1, row-wise even shard =
+//! granularity row-stride with equal distribution.
+
+use anyhow::{bail, Result};
+
+use crate::util::{ceil_div, lcm};
+
+/// Ragged sharding spec over a flat (contiguous) view of a tensor.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RaggedSpec {
+    /// Elements per atomic block (never split across devices).
+    pub granularity: u64,
+    /// Number of blocks owned by each device, in rank order. May be 0 for
+    /// some devices — that is the flexibility matrix optimizers need.
+    pub blocks_per_device: Vec<u64>,
+}
+
+impl RaggedSpec {
+    /// Validate against a tensor of `numel` elements. The final block may
+    /// be a tail block (shorter than `granularity`) — everything before it
+    /// must be full blocks.
+    pub fn validate(&self, numel: u64) -> Result<()> {
+        if self.granularity == 0 {
+            bail!("granularity must be > 0");
+        }
+        let total_blocks: u64 = self.blocks_per_device.iter().sum();
+        let need = ceil_div(numel, self.granularity);
+        if total_blocks != need {
+            bail!(
+                "RaggedSpec covers {total_blocks} blocks but tensor of \
+                 {numel} elements needs {need} (granularity {})",
+                self.granularity
+            );
+        }
+        Ok(())
+    }
+
+    pub fn num_devices(&self) -> usize {
+        self.blocks_per_device.len()
+    }
+
+    /// Balanced distribution of ceil(numel/g) blocks over m devices — the
+    /// layout the planner starts from.
+    pub fn balanced(numel: u64, granularity: u64, m: usize) -> RaggedSpec {
+        let blocks = ceil_div(numel, granularity);
+        let base = blocks / m as u64;
+        let extra = (blocks % m as u64) as usize;
+        let blocks_per_device = (0..m)
+            .map(|k| base + if k < extra { 1 } else { 0 })
+            .collect();
+        RaggedSpec { granularity, blocks_per_device }
+    }
+
+    /// Everything on one root device (Muon's unshard target, Alg 2 line 8).
+    pub fn on_root(numel: u64, granularity: u64, m: usize, root: usize) -> RaggedSpec {
+        let blocks = ceil_div(numel, granularity);
+        let mut blocks_per_device = vec![0u64; m];
+        blocks_per_device[root] = blocks;
+        RaggedSpec { granularity, blocks_per_device }
+    }
+
+    /// Element range `[lo, hi)` of the global flat tensor owned by `rank`.
+    pub fn local_range(&self, rank: usize, numel: u64) -> (u64, u64) {
+        let mut block_start = 0u64;
+        for k in 0..rank {
+            block_start += self.blocks_per_device[k];
+        }
+        let block_end = block_start + self.blocks_per_device[rank];
+        let lo = (block_start * self.granularity).min(numel);
+        let hi = (block_end * self.granularity).min(numel);
+        (lo, hi)
+    }
+
+    pub fn local_numel(&self, rank: usize, numel: u64) -> u64 {
+        let (lo, hi) = self.local_range(rank, numel);
+        hi - lo
+    }
+
+    /// Max elements any device owns (drives buffer sizing).
+    pub fn max_local_numel(&self, numel: u64) -> u64 {
+        (0..self.num_devices())
+            .map(|k| self.local_numel(k, numel))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// DTensor placements. The list order follows the PyTorch convention the
+/// paper discusses (§4 Fig 5): placements apply mesh-dim by mesh-dim, and
+/// the *written* order is the reverse of conceptual application (EP/TP is
+/// applied before FSDP but appears after RaggedShard in the list).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Placement {
+    /// Full copy on every device of the mesh dim.
+    Replicate,
+    /// Even shard along tensor dim `d` (PyTorch Shard(d)).
+    Shard(usize),
+    /// Unreduced partial values (pending sum).
+    Partial,
+    /// The paper's format: arbitrary granularity + distribution.
+    RaggedShard(RaggedSpec),
+    /// RaggedShard composed under an inner Shard(0): carries the reorder
+    /// stride needed to reshuffle when materializing the full tensor
+    /// (paper §4, composition rule (i)).
+    StridedRaggedShard(RaggedSpec, u64),
+}
+
+impl Placement {
+    pub fn is_ragged(&self) -> bool {
+        matches!(self, Placement::RaggedShard(_) | Placement::StridedRaggedShard(_, _))
+    }
+
+    pub fn ragged_spec(&self) -> Option<&RaggedSpec> {
+        match self {
+            Placement::RaggedShard(s) | Placement::StridedRaggedShard(s, _) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// The paper's composition rule (§4): when a tensor is already Shard(d)
+/// along an inner mesh dim, the ragged granularity must never cut into
+/// dim `d`.
+///
+/// * `Shard(0)` (rule i): the local tensor is a contiguous row-slab, so any
+///   granularity is legal, but materialization needs a reshuffle — we
+///   return a `StridedRaggedShard` carrying the original dim-0 stride.
+/// * `Shard(d>0)` (rule ii): adapt granularity to
+///   `LCM(stride(d-1 of local tensor), user granularity)` so blocks always
+///   cover whole slices of the sharded dim.
+pub fn compose_with_shard(
+    user_granularity: u64,
+    local_shape: &[usize],
+    inner_shard_dim: usize,
+) -> Result<(u64, bool)> {
+    if local_shape.is_empty() {
+        bail!("scalar tensors cannot compose with Shard");
+    }
+    if inner_shard_dim >= local_shape.len() {
+        bail!(
+            "Shard({inner_shard_dim}) out of range for {:?}",
+            local_shape
+        );
+    }
+    if inner_shard_dim == 0 {
+        // rule (i): StridedRaggedShard with the row stride for reshuffle.
+        Ok((user_granularity, true))
+    } else {
+        // rule (ii): a ragged block must never cut *into* the sharded dim,
+        // so it has to cover whole slices of dim (inner_shard_dim - 1);
+        // one such slice is `prod(local_shape[inner_shard_dim..])` elements
+        // of the local tensor. Granularity = LCM(slice, user granularity).
+        let slice: u64 = local_shape[inner_shard_dim..]
+            .iter()
+            .map(|&s| s as u64)
+            .product();
+        Ok((lcm(slice, user_granularity), false))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn balanced_distribution() {
+        let s = RaggedSpec::balanced(100, 10, 4);
+        assert_eq!(s.blocks_per_device, vec![3, 3, 2, 2]);
+        s.validate(100).unwrap();
+    }
+
+    #[test]
+    fn balanced_with_tail_block() {
+        // 105 elements, granularity 10 -> 11 blocks, last is a 5-elem tail
+        let s = RaggedSpec::balanced(105, 10, 4);
+        assert_eq!(s.blocks_per_device.iter().sum::<u64>(), 11);
+        s.validate(105).unwrap();
+        let total: u64 = (0..4).map(|k| s.local_numel(k, 105)).sum();
+        assert_eq!(total, 105);
+    }
+
+    #[test]
+    fn local_ranges_partition_tensor() {
+        let s = RaggedSpec {
+            granularity: 16,
+            blocks_per_device: vec![1, 0, 3, 2],
+        };
+        s.validate(96).unwrap();
+        let mut covered = 0;
+        for k in 0..4 {
+            let (lo, hi) = s.local_range(k, 96);
+            assert_eq!(lo, covered);
+            covered = hi;
+        }
+        assert_eq!(covered, 96);
+        assert_eq!(s.local_numel(1, 96), 0); // zero-block device is legal
+    }
+
+    #[test]
+    fn on_root_concentrates() {
+        let s = RaggedSpec::on_root(64, 8, 4, 2);
+        assert_eq!(s.local_numel(2, 64), 64);
+        assert_eq!(s.local_numel(0, 64), 0);
+        s.validate(64).unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_wrong_counts() {
+        let s = RaggedSpec { granularity: 10, blocks_per_device: vec![5, 5] };
+        assert!(s.validate(100).is_ok());
+        assert!(s.validate(110).is_err());
+        let z = RaggedSpec { granularity: 0, blocks_per_device: vec![1] };
+        assert!(z.validate(1).is_err());
+    }
+
+    #[test]
+    fn compose_shard0_gives_strided() {
+        let (g, strided) = compose_with_shard(32, &[128, 512], 0).unwrap();
+        assert_eq!(g, 32);
+        assert!(strided);
+    }
+
+    #[test]
+    fn compose_shard1_lcm_granularity() {
+        // local tensor (64, 256) sharded along dim 1: ragged blocks must
+        // cover whole rows -> granularity = LCM(256, user)
+        let (g, strided) = compose_with_shard(96, &[64, 256], 1).unwrap();
+        assert_eq!(g, lcm(256, 96));
+        assert!(!strided);
+    }
+
+    #[test]
+    fn compose_shard1_already_aligned() {
+        let (g, _) = compose_with_shard(512, &[64, 256], 1).unwrap();
+        assert_eq!(g, 512); // LCM(256, 512) = 512
+    }
+
+    #[test]
+    fn generalizes_existing_formats() {
+        // element-wise shard == granularity 1 (Fig 4)
+        let elem = RaggedSpec::balanced(10, 1, 3);
+        assert_eq!(elem.blocks_per_device, vec![4, 3, 3]);
+        // row-wise even shard == granularity = row stride, equal blocks
+        let row = RaggedSpec::balanced(8 * 4, 4, 4);
+        assert_eq!(row.blocks_per_device, vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn ragged_max_local() {
+        let s = RaggedSpec { granularity: 8, blocks_per_device: vec![1, 4, 0] };
+        assert_eq!(s.max_local_numel(40), 32);
+    }
+}

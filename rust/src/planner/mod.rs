@@ -1,0 +1,624 @@
+//! Structure-aware planning for grouped RaggedShard DTensors (paper §5,
+//! Algorithm 1).
+//!
+//! Given an ordered list of tensors, each with a sharding granularity
+//! (atomic block size) `g_t` and element count `e_t`, find the minimal
+//! uniform per-device buffer size `S` and contiguous intervals
+//! `[l_t, l_t + e_t)` in the global buffer of size `m*S` such that:
+//!
+//! 1. **Non-sharded block** — every device boundary `k*S` that falls inside
+//!    a tensor lands on a multiple of `g_t` from the tensor start;
+//! 2. **Contiguous tensor memory** — tensors are contiguous; padding goes
+//!    *between* tensors, never inside them;
+//! 3. **Balanced load** — all devices own exactly `S` elements.
+//!
+//! The general problem is NP-hard (reduction from Partition); Algorithm 1
+//! is the paper's polynomial heuristic: a feasibility check per candidate
+//! `S`, swept over multiples of a growing LCM of granularities (prefixes of
+//! the sorted granularity list cover the case-(3) sets, a 2-approximation),
+//! with binary search over the multiple.
+//!
+//! **Feasibility check.** The paper formulates `dp(t, i; S)` = min shards
+//! to place all tensors before `t` plus the first `i` blocks of `t`, and
+//! skips runs of equal dp values. Because padding is only legal *between*
+//! tensors, a tensor's placement is fully determined by its start offset,
+//! and an exchange argument shows the earliest valid start is always
+//! optimal (any layout can be left-shifted tensor by tensor). Our
+//! `check_valid_shard` therefore computes each tensor's earliest valid
+//! start in O(1) via the paper's three-case modular analysis — the exact
+//! closed form of the dp recurrence (the "segments" of Alg 1 lines 10-13
+//! collapse to one arithmetic step per case). The dp values themselves are
+//! still exposed (`dp_trace`) and property-tested for the paper's
+//! monotonicity claim.
+
+pub mod exact;
+
+use anyhow::{bail, Result};
+
+use crate::util::{ceil_div, gcd, lcm};
+
+/// Planner input: one tensor to be placed in the grouped buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorDecl {
+    pub name: String,
+    /// Total elements e_t.
+    pub numel: u64,
+    /// Sharding granularity g_t (elements per atomic block).
+    pub granularity: u64,
+}
+
+impl TensorDecl {
+    pub fn new(name: &str, numel: u64, granularity: u64) -> TensorDecl {
+        TensorDecl { name: name.to_string(), numel, granularity }
+    }
+
+    /// u_t = number of sharding blocks (last may be a tail).
+    pub fn num_blocks(&self) -> u64 {
+        ceil_div(self.numel, self.granularity)
+    }
+}
+
+/// Tensor permutation heuristics (paper §5: transformer regularity makes
+/// all three near-optimal; default order is used in production for
+/// debuggability).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ordering {
+    /// Model definition order.
+    Default,
+    /// Sort by sharding block size (granularity), descending.
+    ByGranularity,
+    /// Sort by tensor size (elements), descending.
+    BySize,
+}
+
+/// A planned layout of the grouped communication buffer.
+#[derive(Debug, Clone)]
+pub struct Layout {
+    /// Uniform per-device buffer size S (elements).
+    pub shard_size: u64,
+    /// Devices m.
+    pub num_devices: usize,
+    /// Tensor start offsets in the global buffer, in *input* order.
+    pub offsets: Vec<u64>,
+    /// Input tensors (in input order).
+    pub tensors: Vec<TensorDecl>,
+    /// Permutation applied (position p in placement order -> input index).
+    pub perm: Vec<usize>,
+    pub ordering: Ordering,
+}
+
+impl Layout {
+    /// Total buffer size m*S.
+    pub fn total(&self) -> u64 {
+        self.shard_size * self.num_devices as u64
+    }
+
+    /// Padding overhead: extra elements over total parameter size.
+    pub fn padding(&self) -> u64 {
+        self.total() - self.tensors.iter().map(|t| t.numel).sum::<u64>()
+    }
+
+    pub fn padding_ratio(&self) -> f64 {
+        let total_param: u64 = self.tensors.iter().map(|t| t.numel).sum();
+        if total_param == 0 {
+            0.0
+        } else {
+            self.padding() as f64 / total_param as f64
+        }
+    }
+
+    /// Element range of tensor `idx` (input order) on device `rank`:
+    /// intersection of [offset, offset+numel) with [rank*S, (rank+1)*S),
+    /// returned tensor-relative.
+    pub fn local_slice(&self, idx: usize, rank: usize) -> Option<(u64, u64)> {
+        let t = &self.tensors[idx];
+        let (lo, hi) = (self.offsets[idx], self.offsets[idx] + t.numel);
+        let (slo, shi) = (
+            rank as u64 * self.shard_size,
+            (rank as u64 + 1) * self.shard_size,
+        );
+        let a = lo.max(slo);
+        let b = hi.min(shi);
+        if a < b {
+            Some((a - lo, b - lo))
+        } else {
+            None
+        }
+    }
+
+    /// The RaggedSpec this layout induces for tensor `idx`: how many whole
+    /// blocks of it each device owns.
+    pub fn ragged_spec(&self, idx: usize) -> crate::placement::RaggedSpec {
+        let t = &self.tensors[idx];
+        let mut blocks = vec![0u64; self.num_devices];
+        for (rank, b) in blocks.iter_mut().enumerate() {
+            if let Some((lo, hi)) = self.local_slice(idx, rank) {
+                let first = ceil_div(lo, t.granularity);
+                let last = ceil_div(hi, t.granularity);
+                *b = last - first;
+            }
+        }
+        crate::placement::RaggedSpec {
+            granularity: t.granularity,
+            blocks_per_device: blocks,
+        }
+    }
+
+    /// Check the three constraints hold (used by tests and debug builds).
+    pub fn verify(&self) -> Result<()> {
+        let m = self.num_devices as u64;
+        let s = self.shard_size;
+        // non-overlap + in-buffer + contiguity
+        let mut iv: Vec<(u64, u64, usize)> = self
+            .offsets
+            .iter()
+            .enumerate()
+            .map(|(i, &o)| (o, o + self.tensors[i].numel, i))
+            .collect();
+        iv.sort();
+        for w in iv.windows(2) {
+            if w[0].1 > w[1].0 {
+                bail!("tensors {} and {} overlap", w[0].2, w[1].2);
+            }
+        }
+        if let Some(last) = iv.last() {
+            if last.1 > m * s {
+                bail!("layout exceeds buffer: {} > {}", last.1, m * s);
+            }
+        }
+        // block-boundary constraint
+        for (i, t) in self.tensors.iter().enumerate() {
+            let (lo, hi) = (self.offsets[i], self.offsets[i] + t.numel);
+            let k0 = ceil_div(lo + 1, s); // first boundary strictly inside
+            let mut k = k0 * s;
+            while k < hi {
+                if (k - lo) % t.granularity != 0 {
+                    bail!(
+                        "boundary {k} splits a block of '{}' (lo={lo}, g={})",
+                        t.name,
+                        t.granularity
+                    );
+                }
+                k += s;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Earliest valid start >= `p` for a tensor (e elements, granularity g)
+/// under shard size `s`. Returns None if no valid start exists in any
+/// shard (only possible for case-3 tensors when s % g != 0).
+///
+/// This is the closed form of the paper's case analysis:
+///   case 1 — fits in one shard: no alignment constraint;
+///   case 2 — straddles exactly one boundary: start offset o must satisfy
+///            (s - o) % g == 0;
+///   case 3 — contains >= 1 full shard: s % g == 0 and o % g == 0.
+fn min_start(p: u64, s: u64, e: u64, g: u64) -> Option<u64> {
+    debug_assert!(e > 0 && g > 0 && s > 0);
+    let mut best: Option<u64> = None;
+    let mut consider = |q: u64| {
+        if best.map(|b| q < b).unwrap_or(true) {
+            best = Some(q);
+        }
+    };
+
+    let o = p % s;
+    let shard_base = p - o;
+
+    if e <= s {
+        // case 1: first position q >= p with (q % s) + e <= s
+        if o + e <= s {
+            consider(p);
+        } else {
+            consider(shard_base + s); // start of next shard (offset 0)
+        }
+    }
+
+    // case 2: straddle exactly one boundary. offset o2 must satisfy
+    // o2 > s - e (crosses), o2 + e <= 2s (only one), (s - o2) % g == 0.
+    if e <= 2 * s {
+        // smallest o2 >= max(o_min_exclusive+1, given) with o2 ≡ s (mod g)
+        let lo_off = (s + 1).saturating_sub(e); // o2 >= lo_off, o2 <= s-1... o2 in [lo_off, s-1]; also o2+e<=2s -> o2 <= 2s-e
+        let hi_off = (2 * s).saturating_sub(e).min(s - 1);
+        if lo_off <= hi_off {
+            // candidates in this shard (q >= p) and in the next shard
+            for base in [shard_base, shard_base + s] {
+                // smallest o2 in [lo_off, hi_off] with o2 ≡ s mod g and
+                // base + o2 >= p
+                let min_o = if base >= p { lo_off } else { lo_off.max(o) };
+                // align min_o up to ≡ s (mod g)
+                let r = s % g;
+                let cur = min_o % g;
+                let o2 = if cur <= r {
+                    min_o + (r - cur)
+                } else {
+                    min_o + (g - cur + r)
+                };
+                if o2 <= hi_off && base + o2 >= p {
+                    consider(base + o2);
+                }
+            }
+        }
+    }
+
+    // case 3: contains a full shard — needs s % g == 0, o % g == 0.
+    if s % g == 0 {
+        let q = p.next_multiple_of(g);
+        consider(q);
+    }
+
+    best
+}
+
+/// Feasibility check for shard size `s` over `m` devices. Returns the
+/// start offsets (placement order) if feasible. This is CheckValidShard
+/// of Algorithm 1 in closed form; `dp_trace`, if provided, receives the
+/// dp(t, u_t) values (shards consumed after each tensor).
+pub fn check_valid_shard(
+    tensors: &[&TensorDecl],
+    m: usize,
+    s: u64,
+    mut dp_trace: Option<&mut Vec<u64>>,
+) -> Option<Vec<u64>> {
+    let mut p = 0u64; // earliest free position
+    let mut offsets = Vec::with_capacity(tensors.len());
+    for t in tensors {
+        let q = min_start(p, s, t.numel, t.granularity)?;
+        offsets.push(q);
+        p = q + t.numel;
+        if let Some(tr) = dp_trace.as_deref_mut() {
+            tr.push(ceil_div(p, s));
+        }
+        if p > m as u64 * s {
+            return None;
+        }
+    }
+    Some(offsets)
+}
+
+/// Algorithm 1: minimal uniform per-device shard size via the LCM sweep +
+/// binary search. `g_coll` is the collective's preferred unit (NCCL-style
+/// alignment; elements).
+pub fn solve_min_shard(
+    tensors: &[&TensorDecl],
+    m: usize,
+    g_coll: u64,
+) -> Option<(u64, Vec<u64>)> {
+    if tensors.is_empty() {
+        return Some((0, vec![]));
+    }
+    let sum_e: u64 = tensors.iter().map(|t| t.numel).sum();
+    let mut grans: Vec<u64> = tensors.iter().map(|t| t.granularity).collect();
+    grans.sort_unstable();
+    grans.dedup();
+
+    let mut best: Option<(u64, Vec<u64>)> = None;
+    let mut g = g_coll.max(1);
+    let try_g = |g: u64, best: &mut Option<(u64, Vec<u64>)>| {
+        // binary search minimal feasible k*g (feasibility monotone in k —
+        // the extra Δ=g is absorbed as inter-tensor padding, paper §5)
+        let lo_k = ceil_div(sum_e, m as u64 * g).max(1);
+        let mut hi_k = ceil_div(sum_e, g).max(lo_k);
+        // ensure hi feasible (everything in shard 0); widen if not
+        while check_valid_shard(tensors, m, hi_k * g, None).is_none() {
+            hi_k *= 2;
+            if hi_k > ceil_div(sum_e, g).saturating_mul(64) {
+                return; // no feasible S for this g
+            }
+        }
+        let (mut lo, mut hi) = (lo_k, hi_k);
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if check_valid_shard(tensors, m, mid * g, None).is_some() {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        let s = lo * g;
+        if best.as_ref().map(|(bs, _)| s < *bs).unwrap_or(true) {
+            let offsets = check_valid_shard(tensors, m, s, None).unwrap();
+            *best = Some((s, offsets));
+        }
+    };
+
+    try_g(g, &mut best); // pure collective alignment (no case-3 tensors)
+    let mut last_tried = g;
+    for &gp in &grans {
+        g = lcm(g, gp);
+        if g == 0 || g > sum_e.saturating_mul(2).max(g_coll) {
+            break; // LCM blew up past any useful shard size
+        }
+        if g == last_tried {
+            continue; // absorbing this granularity changed nothing
+        }
+        try_g(g, &mut best);
+        last_tried = g;
+    }
+    best
+}
+
+/// Apply an ordering heuristic; returns permutation (placement pos ->
+/// input index). Sorts are stable so the default order breaks ties.
+pub fn permutation(tensors: &[TensorDecl], ord: Ordering) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..tensors.len()).collect();
+    match ord {
+        Ordering::Default => {}
+        Ordering::ByGranularity => {
+            idx.sort_by_key(|&i| std::cmp::Reverse(tensors[i].granularity));
+        }
+        Ordering::BySize => {
+            idx.sort_by_key(|&i| std::cmp::Reverse(tensors[i].numel));
+        }
+    }
+    idx
+}
+
+/// Plan one ordering.
+pub fn plan_with_ordering(
+    tensors: &[TensorDecl],
+    m: usize,
+    g_coll: u64,
+    ord: Ordering,
+) -> Result<Layout> {
+    let perm = permutation(tensors, ord);
+    let ordered: Vec<&TensorDecl> = perm.iter().map(|&i| &tensors[i]).collect();
+    let (s, offs) = solve_min_shard(&ordered, m, g_coll)
+        .ok_or_else(|| anyhow::anyhow!("no feasible layout"))?;
+    let mut offsets = vec![0u64; tensors.len()];
+    for (pos, &i) in perm.iter().enumerate() {
+        offsets[i] = offs[pos];
+    }
+    let layout = Layout {
+        shard_size: s,
+        num_devices: m,
+        offsets,
+        tensors: tensors.to_vec(),
+        perm,
+        ordering: ord,
+    };
+    debug_assert!(layout.verify().is_ok(), "{:?}", layout.verify());
+    Ok(layout)
+}
+
+/// Full planner: try the three heuristic orders, keep the best (paper
+/// adopts Default in production for debuggability; we report the best and
+/// record which ordering won). Stops early once an ordering reaches the
+/// pigeonhole lower bound — on transformer workloads the Default order
+/// almost always does, which is what keeps planning under the paper's
+/// 0.3 s budget (§6.4).
+pub fn plan(tensors: &[TensorDecl], m: usize, g_coll: u64) -> Result<Layout> {
+    let sum_e: u64 = tensors.iter().map(|t| t.numel).sum();
+    let lower_bound = ceil_div(sum_e, m as u64 * g_coll.max(1)) * g_coll.max(1);
+    let mut best: Option<Layout> = None;
+    for ord in [Ordering::Default, Ordering::ByGranularity, Ordering::BySize] {
+        if let Ok(l) = plan_with_ordering(tensors, m, g_coll, ord) {
+            let optimal = l.shard_size <= lower_bound;
+            if best
+                .as_ref()
+                .map(|b| l.shard_size < b.shard_size)
+                .unwrap_or(true)
+            {
+                best = Some(l);
+            }
+            if optimal {
+                break; // cannot do better than the pigeonhole bound
+            }
+        }
+    }
+    best.ok_or_else(|| anyhow::anyhow!("no feasible layout in any ordering"))
+}
+
+/// Naive grouping baseline (Fig 6a): concatenate in order, pad the total
+/// to m*ceil(sum/m/g_coll)*g_coll; blocks may straddle boundaries. Used by
+/// the ablation bench ("disable planning").
+pub fn naive_concat_shard(tensors: &[TensorDecl], m: usize, g_coll: u64) -> Layout {
+    let mut offsets = Vec::with_capacity(tensors.len());
+    let mut p = 0u64;
+    for t in tensors {
+        offsets.push(p);
+        p += t.numel;
+    }
+    let s = ceil_div(p, m as u64).next_multiple_of(g_coll.max(1));
+    Layout {
+        shard_size: s,
+        num_devices: m,
+        offsets,
+        tensors: tensors.to_vec(),
+        perm: (0..tensors.len()).collect(),
+        ordering: Ordering::Default,
+    }
+}
+
+/// Count quant blocks split across device boundaries in a layout (the
+/// inefficiency the planner eliminates; drives the ablation cost model).
+pub fn split_blocks(layout: &Layout) -> u64 {
+    let s = layout.shard_size;
+    let mut split = 0;
+    for (i, t) in layout.tensors.iter().enumerate() {
+        let (lo, hi) = (layout.offsets[i], layout.offsets[i] + t.numel);
+        let mut k = ceil_div(lo + 1, s) * s;
+        while k < hi {
+            if (k - lo) % t.granularity != 0 {
+                split += 1;
+            }
+            k += s;
+        }
+    }
+    split
+}
+
+pub use exact::solve_exact;
+
+/// Helper: gcd over all granularities (alignment unit of a tensor set).
+pub fn granularity_gcd(tensors: &[TensorDecl]) -> u64 {
+    tensors.iter().fold(0, |acc, t| gcd(acc, t.granularity))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(name: &str, e: u64, g: u64) -> TensorDecl {
+        TensorDecl::new(name, e, g)
+    }
+
+    #[test]
+    fn min_start_case1_fits() {
+        // e=4 fits in shard of 10 at p=3
+        assert_eq!(min_start(3, 10, 4, 3), Some(3));
+        // e=4 at offset 8 would cross; case-2 offset must satisfy
+        // (10 - o) % 3 == 0 -> o in {7}: but 7 < 8... next: o=7+... within
+        // next shard base 10: case1 offset0 -> q=10. case2 o=7 base10 -> 17.
+        assert_eq!(min_start(8, 10, 4, 3), Some(10));
+    }
+
+    #[test]
+    fn min_start_case2_straddle() {
+        // e=8, s=10, g=4: case2 needs o ≡ 10 (mod 4) ≡ 2, o in (2, 9]:
+        // o=6 -> boundary at 4 elements into tensor (multiple of 4) ✓
+        // from p=5: o=6 gives q=6
+        assert_eq!(min_start(5, 10, 8, 4), Some(6));
+        let q = min_start(5, 10, 8, 4).unwrap();
+        let boundary = 10u64;
+        assert_eq!((boundary - q) % 4, 0);
+    }
+
+    #[test]
+    fn min_start_case3_contains_shard() {
+        // e=25 > 2*s=20: must contain a shard; s=10 % g=5 == 0, o%5==0
+        assert_eq!(min_start(3, 10, 25, 5), Some(5));
+        // g does not divide s -> infeasible in every shard
+        assert_eq!(min_start(0, 10, 25, 4), None);
+    }
+
+    #[test]
+    fn check_valid_simple() {
+        // S=8 is infeasible for these two tensors (a is pinned to offset 3
+        // by the straddle constraint, leaving no contiguous room for b);
+        // the solver must find the true minimum and produce a valid layout.
+        let a = t("a", 10, 5);
+        let b = t("b", 6, 3);
+        assert!(check_valid_shard(&[&a, &b], 2, 8, None).is_none());
+        let (s, offs) = solve_min_shard(&[&a, &b], 2, 1).unwrap();
+        let l = Layout {
+            shard_size: s,
+            num_devices: 2,
+            offsets: offs,
+            tensors: vec![a.clone(), b.clone()],
+            perm: vec![0, 1],
+            ordering: Ordering::Default,
+        };
+        l.verify().unwrap();
+        // exact oracle agrees on this ordering-insensitive instance
+        let exact = solve_exact(&[a, b], 2, 1).unwrap();
+        assert!(s <= 2 * exact, "heuristic {s} vs exact {exact}");
+    }
+
+    #[test]
+    fn dp_trace_monotone() {
+        let ts: Vec<TensorDecl> = (0..8usize)
+            .map(|i| t(&format!("t{i}"), 50 + i as u64 * 7, [1, 4, 8][i % 3]))
+            .collect();
+        let refs: Vec<&TensorDecl> = ts.iter().collect();
+        let mut trace = Vec::new();
+        if check_valid_shard(&refs, 4, 128, Some(&mut trace)).is_some() {
+            for w in trace.windows(2) {
+                assert!(w[0] <= w[1], "dp not monotone: {trace:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn solve_even_case() {
+        // 4 tensors of 64, g=1, 4 devices: S = 64 exactly, zero padding
+        let ts: Vec<TensorDecl> = (0..4).map(|i| t(&format!("t{i}"), 64, 1)).collect();
+        let l = plan(&ts, 4, 1).unwrap();
+        assert_eq!(l.shard_size, 64);
+        assert_eq!(l.padding(), 0);
+        l.verify().unwrap();
+    }
+
+    #[test]
+    fn solve_respects_blocks() {
+        // one tensor of 100 elements with g=32 over 2 devices: boundary
+        // must land on a multiple of 32 -> S in {64,...}: S=64 puts
+        // boundary at 64 (2 blocks on dev0), tensor end 100 <= 128 ✓
+        let ts = vec![t("w", 100, 32)];
+        let l = plan(&ts, 2, 1).unwrap();
+        l.verify().unwrap();
+        assert!(l.shard_size >= 50);
+        assert_eq!(split_blocks(&l), 0);
+    }
+
+    #[test]
+    fn solve_with_coll_alignment() {
+        let ts = vec![t("a", 100, 1), t("b", 60, 1)];
+        let l = plan(&ts, 2, 16).unwrap();
+        assert_eq!(l.shard_size % 16, 0);
+        l.verify().unwrap();
+    }
+
+    #[test]
+    fn naive_splits_blocks_planner_does_not() {
+        // crafted so naive concat splits quant blocks
+        let ts = vec![t("a", 96, 32), t("b", 96, 32), t("c", 64, 32)];
+        let m = 4;
+        let _naive = naive_concat_shard(&ts, m, 1);
+        let planned = plan(&ts, m, 1).unwrap();
+        assert_eq!(split_blocks(&planned), 0);
+        assert!(planned.verify().is_ok());
+        // naive S=64: boundary at 64 hits 64 into 'a'? 64%32==0 fine;
+        // boundary 128 is 32 into 'b' fine; 192 is 0 into 'c'... make it
+        // actually split by odd sizes:
+        let ts2 = vec![t("a", 100, 32), t("b", 100, 32)];
+        let naive2 = naive_concat_shard(&ts2, 4, 1);
+        assert!(split_blocks(&naive2) > 0);
+        let planned2 = plan(&ts2, 4, 1).unwrap();
+        assert_eq!(split_blocks(&planned2), 0);
+    }
+
+    #[test]
+    fn ragged_spec_from_layout() {
+        let ts = vec![t("w", 100, 32)];
+        let l = plan(&ts, 2, 1).unwrap();
+        let spec = l.ragged_spec(0);
+        assert_eq!(spec.granularity, 32);
+        assert_eq!(spec.blocks_per_device.iter().sum::<u64>(), 4);
+        spec.validate(100).unwrap();
+    }
+
+    #[test]
+    fn transformer_like_padding_small() {
+        // 16 "layers" x (attn 4096x4096-ish scaled down + mlp) with row
+        // granularity — padding should be far under 3% (paper Fig 11)
+        let mut ts = Vec::new();
+        for i in 0..16 {
+            ts.push(t(&format!("l{i}.attn"), 256 * 256, 256));
+            ts.push(t(&format!("l{i}.w1"), 256 * 1024, 256));
+            ts.push(t(&format!("l{i}.w2"), 1024 * 256, 1024));
+        }
+        let l = plan(&ts, 8, 1).unwrap();
+        l.verify().unwrap();
+        assert!(l.padding_ratio() < 0.03, "ratio {}", l.padding_ratio());
+    }
+
+    #[test]
+    fn empty_input() {
+        let l = plan(&[], 4, 1);
+        assert!(l.is_ok());
+        assert_eq!(l.unwrap().shard_size, 0);
+    }
+
+    #[test]
+    fn orderings_are_permutations() {
+        let ts = vec![t("a", 10, 2), t("b", 99, 3), t("c", 5, 5)];
+        for ord in [Ordering::Default, Ordering::ByGranularity, Ordering::BySize] {
+            let mut p = permutation(&ts, ord);
+            p.sort();
+            assert_eq!(p, vec![0, 1, 2]);
+        }
+    }
+}

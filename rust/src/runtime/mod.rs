@@ -1,0 +1,387 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them from the Rust hot path. Python never runs here.
+//!
+//! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `python/compile/aot.py` and DESIGN.md).
+//!
+//! The runtime compiles each artifact once (`Engine::exec` caches the
+//! loaded executable) and exposes typed wrappers for the model train
+//! step, the fused optimizer chunks, and Newton-Schulz.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub chunk: usize,
+    pub qblock: usize,
+    pub hyper_len: usize,
+    pub configs: BTreeMap<String, ModelCfg>,
+    pub artifacts: Vec<ArtifactSig>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq: usize,
+    pub batch: usize,
+    /// Parameter ABI: (name, shape) in canonical order.
+    pub params: Vec<(String, Vec<usize>)>,
+}
+
+impl ModelCfg {
+    pub fn total_params(&self) -> u64 {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().map(|&d| d as u64).product::<u64>())
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSig {
+    pub name: String,
+    pub file: String,
+    pub n_inputs: usize,
+    pub n_outputs: usize,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let usize_of = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(|v| v.as_usize())
+                .ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mut configs = BTreeMap::new();
+        if let Some(cfgs) = j.get("configs").and_then(|c| c.as_obj()) {
+            for (name, c) in cfgs {
+                let f = |k: &str| c.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+                let params = c
+                    .get("params")
+                    .and_then(|p| p.as_arr())
+                    .ok_or_else(|| anyhow!("config {name} missing params"))?
+                    .iter()
+                    .map(|p| {
+                        let pname = p.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string();
+                        let shape = p
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                            .unwrap_or_default();
+                        (pname, shape)
+                    })
+                    .collect();
+                configs.insert(
+                    name.clone(),
+                    ModelCfg {
+                        vocab: f("vocab"),
+                        d_model: f("d_model"),
+                        n_layers: f("n_layers"),
+                        n_heads: f("n_heads"),
+                        d_ff: f("d_ff"),
+                        seq: f("seq"),
+                        batch: f("batch"),
+                        params,
+                    },
+                );
+            }
+        }
+        let artifacts = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| ArtifactSig {
+                name: a.get("name").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                file: a.get("file").and_then(|n| n.as_str()).unwrap_or("").to_string(),
+                n_inputs: a.get("inputs").and_then(|i| i.as_arr()).map(|v| v.len()).unwrap_or(0),
+                n_outputs: a.get("outputs").and_then(|o| o.as_arr()).map(|v| v.len()).unwrap_or(0),
+            })
+            .collect();
+        Ok(Manifest {
+            chunk: usize_of("chunk")?,
+            qblock: usize_of("qblock")?,
+            hyper_len: usize_of("hyper_len")?,
+            configs,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Option<&ArtifactSig> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+}
+
+/// Typed input for `Engine::exec`.
+pub enum In<'a> {
+    F32(&'a [f32], Vec<i64>),
+    I32(&'a [i32], Vec<i64>),
+}
+
+impl<'a> In<'a> {
+    fn literal(&self) -> Result<xla::Literal> {
+        Ok(match self {
+            In::F32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+            In::I32(v, shape) => xla::Literal::vec1(v).reshape(shape)?,
+        })
+    }
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions per artifact (perf accounting).
+    pub exec_counts: HashMap<String, u64>,
+}
+
+impl Engine {
+    /// Load the artifact directory (default `artifacts/` at the repo root).
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
+        let manifest = Manifest::parse(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        Ok(Engine {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: HashMap::new(),
+            exec_counts: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory relative to the crate root.
+    pub fn default_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    pub fn load_default() -> Result<Engine> {
+        Engine::load(&Engine::default_dir())
+    }
+
+    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let sig = self
+                .manifest
+                .artifact(name)
+                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+                .clone();
+            let path = self.dir.join(&sig.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Execute an artifact; outputs are the flattened f32 tuple members.
+    pub fn exec(&mut self, name: &str, inputs: &[In]) -> Result<Vec<Vec<f32>>> {
+        let sig = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        if inputs.len() != sig.n_inputs {
+            bail!("{name}: {} inputs given, {} expected", inputs.len(), sig.n_inputs);
+        }
+        let n_outputs = sig.n_outputs;
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.literal()).collect::<Result<_>>()?;
+        let exe = self.compile(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        let items = result.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        if items.len() != n_outputs {
+            bail!("{name}: {} outputs, expected {}", items.len(), n_outputs);
+        }
+        items
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+            .collect()
+    }
+
+    /// Run the model train step: returns (loss, grads in ABI order).
+    pub fn train_step(
+        &mut self,
+        config: &str,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        let cfg = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("unknown config '{config}'"))?
+            .clone();
+        if params.len() != cfg.params.len() {
+            bail!("param count {} != ABI {}", params.len(), cfg.params.len());
+        }
+        let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
+        for (p, (_, shape)) in params.iter().zip(&cfg.params) {
+            inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+        }
+        let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
+        inputs.push(In::I32(tokens, tok_shape.clone()));
+        inputs.push(In::I32(targets, tok_shape));
+        let mut out = self.exec(&format!("train_step_{config}"), &inputs)?;
+        let grads = out.split_off(1);
+        Ok((out[0][0], grads))
+    }
+
+    /// Evaluation loss only.
+    pub fn eval_loss(
+        &mut self,
+        config: &str,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<f32> {
+        let cfg = self
+            .manifest
+            .configs
+            .get(config)
+            .ok_or_else(|| anyhow!("unknown config '{config}'"))?
+            .clone();
+        let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
+        for (p, (_, shape)) in params.iter().zip(&cfg.params) {
+            inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+        }
+        let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
+        inputs.push(In::I32(tokens, tok_shape.clone()));
+        inputs.push(In::I32(targets, tok_shape));
+        let out = self.exec(&format!("eval_loss_{config}"), &inputs)?;
+        Ok(out[0][0])
+    }
+
+    /// Fused AdamW over one padded chunk. `h = [t, lr, b1, b2, eps, wd]`.
+    /// Slices shorter than the chunk are zero-padded (zero grad = pure
+    /// decay on padding, which is discarded).
+    pub fn adamw_chunk(
+        &mut self,
+        h: &[f32; 6],
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) -> Result<()> {
+        let chunk = self.manifest.chunk;
+        let n = p.len();
+        let mut pp = pad(p, chunk);
+        let gp = pad(g, chunk);
+        let mut mp = pad(m, chunk);
+        let mut vp = pad(v, chunk);
+        for c in 0..pp.len() / chunk {
+            let r = c * chunk..(c + 1) * chunk;
+            let out = self.exec(
+                "adamw_chunk",
+                &[
+                    In::F32(h, vec![6]),
+                    In::F32(&pp[r.clone()], vec![chunk as i64]),
+                    In::F32(&gp[r.clone()], vec![chunk as i64]),
+                    In::F32(&mp[r.clone()], vec![chunk as i64]),
+                    In::F32(&vp[r.clone()], vec![chunk as i64]),
+                ],
+            )?;
+            pp[r.clone()].copy_from_slice(&out[0]);
+            mp[r.clone()].copy_from_slice(&out[1]);
+            vp[r].copy_from_slice(&out[2]);
+        }
+        p.copy_from_slice(&pp[..n]);
+        m.copy_from_slice(&mp[..n]);
+        v.copy_from_slice(&vp[..n]);
+        Ok(())
+    }
+
+    /// Newton-Schulz on a (r x c) matrix via the per-shape artifact.
+    pub fn newton_schulz(&mut self, r: usize, c: usize, g: &[f32]) -> Result<Vec<f32>> {
+        let name = format!("newton_schulz_{r}x{c}");
+        let out = self.exec(&name, &[In::F32(g, vec![r as i64, c as i64])])?;
+        Ok(out.into_iter().next().unwrap())
+    }
+
+    /// Block-wise quantization via the L1 kernel artifact (codes as f32
+    /// carriers; storage stays int8 on the Rust side).
+    pub fn quant_chunk(&mut self, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
+        let chunk = self.manifest.chunk;
+        if x.len() != chunk {
+            bail!("quant_chunk wants exactly {chunk} elements");
+        }
+        let mut out = self.exec("quant_chunk", &[In::F32(x, vec![chunk as i64])])?;
+        let scales = out.pop().unwrap();
+        let codes = out.pop().unwrap();
+        Ok((codes, scales))
+    }
+}
+
+fn pad(x: &[f32], chunk: usize) -> Vec<f32> {
+    let n = x.len().div_ceil(chunk).max(1) * chunk;
+    let mut out = x.to_vec();
+    out.resize(n, 0.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "chunk": 65536, "qblock": 1024, "hyper_len": 6,
+      "configs": {"tiny": {"vocab": 512, "d_model": 128, "n_layers": 2,
+        "n_heads": 4, "d_ff": 512, "seq": 64, "batch": 4,
+        "params": [{"name": "embed.weight", "shape": [512, 128]}]}},
+      "artifacts": [{"name": "adamw_chunk", "file": "adamw_chunk.hlo.txt",
+        "inputs": [{"shape": [6], "dtype": "float32"}],
+        "outputs": [{"shape": [65536], "dtype": "float32"}]}]
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.chunk, 65536);
+        assert_eq!(m.configs["tiny"].vocab, 512);
+        assert_eq!(m.configs["tiny"].params[0].0, "embed.weight");
+        assert_eq!(m.artifact("adamw_chunk").unwrap().n_inputs, 1);
+        assert!(m.artifact("nope").is_none());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn pad_helper() {
+        assert_eq!(pad(&[1.0; 10], 8).len(), 16);
+        assert_eq!(pad(&[1.0; 8], 8).len(), 8);
+        assert_eq!(pad(&[], 8).len(), 8);
+    }
+
+    // PJRT-backed tests live in rust/tests/runtime_artifacts.rs (they need
+    // `make artifacts` to have run).
+}

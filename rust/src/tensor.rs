@@ -1,0 +1,307 @@
+//! Host tensor: the numeric storage behind simulated devices.
+//!
+//! Real FSDP state (parameter shards, gradients, quantized optimizer
+//! state) lives in these. Only what the coordinator needs is implemented:
+//! typed flat storage, shapes, flat-range views, and a few host-side ops
+//! used by optimizers and tests. Heavy compute goes through PJRT (L2).
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    Bf16, // stored as u16 bit patterns; used for comm-volume realism
+    I8,
+    I32,
+}
+
+impl DType {
+    pub fn size(&self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+            DType::I8 => 1,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::Bf16 => "bf16",
+            DType::I8 => "i8",
+            DType::I32 => "i32",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    Bf16(Vec<u16>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::Bf16(v) => v.len(),
+            Data::I8(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::Bf16(_) => DType::Bf16,
+            Data::I8(_) => DType::I8,
+            Data::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// bf16 conversion (round-to-nearest-even on truncate is enough here).
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let rounding = 0x7FFF + ((bits >> 16) & 1);
+    ((bits + rounding) >> 16) as u16
+}
+
+pub fn bf16_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl HostTensor {
+    pub fn zeros(shape: &[usize], dtype: DType) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let data = match dtype {
+            DType::F32 => Data::F32(vec![0.0; n]),
+            DType::Bf16 => Data::Bf16(vec![0; n]),
+            DType::I8 => Data::I8(vec![0; n]),
+            DType::I32 => Data::I32(vec![0; n]),
+        };
+        HostTensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn from_f32(shape: &[usize], v: Vec<f32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        HostTensor { shape: shape.to_vec(), data: Data::F32(v) }
+    }
+
+    pub fn from_i32(shape: &[usize], v: Vec<i32>) -> HostTensor {
+        assert_eq!(shape.iter().product::<usize>(), v.len());
+        HostTensor { shape: shape.to_vec(), data: Data::I32(v) }
+    }
+
+    pub fn randn(shape: &[usize], rng: &mut crate::util::Rng, scale: f32) -> HostTensor {
+        let n: usize = shape.iter().product();
+        let v = (0..n).map(|_| rng.normal_f32() * scale).collect();
+        HostTensor::from_f32(shape, v)
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype().size()
+    }
+
+    pub fn as_f32(&self) -> &[f32] {
+        match &self.data {
+            Data::F32(v) => v,
+            _ => panic!("tensor is {:?}, not f32", self.dtype()),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.data {
+            Data::F32(v) => v,
+            other => panic!("tensor is {:?}, not f32", other.dtype()),
+        }
+    }
+
+    pub fn as_i8(&self) -> &[i8] {
+        match &self.data {
+            Data::I8(v) => v,
+            _ => panic!("tensor is {:?}, not i8", self.dtype()),
+        }
+    }
+
+    pub fn as_i8_mut(&mut self) -> &mut [i8] {
+        match &mut self.data {
+            Data::I8(v) => v,
+            other => panic!("tensor is {:?}, not i8", other.dtype()),
+        }
+    }
+
+    pub fn as_i32(&self) -> &[i32] {
+        match &self.data {
+            Data::I32(v) => v,
+            _ => panic!("tensor is {:?}, not i32", self.dtype()),
+        }
+    }
+
+    /// Reinterpret as 2-D (rows, cols). Errors unless shape is 2-D.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        if self.shape.len() != 2 {
+            bail!("expected 2-D tensor, got {:?}", self.shape);
+        }
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    /// Host matmul (f32, naive) — used by optimizer fallbacks and tests.
+    pub fn matmul(&self, rhs: &HostTensor) -> Result<HostTensor> {
+        let (m, k) = self.dims2()?;
+        let (k2, n) = rhs.dims2()?;
+        if k != k2 {
+            bail!("matmul shape mismatch {:?} @ {:?}", self.shape, rhs.shape);
+        }
+        let a = self.as_f32();
+        let b = rhs.as_f32();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                let aik = a[i * k + kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b[kk * n..(kk + 1) * n];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for j in 0..n {
+                    orow[j] += aik * brow[j];
+                }
+            }
+        }
+        Ok(HostTensor::from_f32(&[m, n], out))
+    }
+
+    pub fn transpose2(&self) -> Result<HostTensor> {
+        let (m, n) = self.dims2()?;
+        let a = self.as_f32();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                out[j * m + i] = a[i * n + j];
+            }
+        }
+        Ok(HostTensor::from_f32(&[n, m], out))
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.as_f32().iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for x in self.as_f32_mut() {
+            *x *= s;
+        }
+    }
+
+    pub fn add_scaled(&mut self, other: &HostTensor, s: f32) {
+        let o = other.as_f32().to_vec();
+        let a = self.as_f32_mut();
+        assert_eq!(a.len(), o.len());
+        for (x, y) in a.iter_mut().zip(o) {
+            *x += s * y;
+        }
+    }
+
+    pub fn max_abs_diff(&self, other: &HostTensor) -> f32 {
+        self.as_f32()
+            .iter()
+            .zip(other.as_f32())
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn zeros_and_bytes() {
+        let t = HostTensor::zeros(&[4, 8], DType::F32);
+        assert_eq!(t.numel(), 32);
+        assert_eq!(t.bytes(), 128);
+        let q = HostTensor::zeros(&[32], DType::I8);
+        assert_eq!(q.bytes(), 32); // 8-bit state really is 1 byte/elem
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut eye = HostTensor::zeros(&[3, 3], DType::F32);
+        for i in 0..3 {
+            eye.as_f32_mut()[i * 3 + i] = 1.0;
+        }
+        let x = HostTensor::from_f32(&[3, 3], (0..9).map(|i| i as f32).collect());
+        let y = eye.matmul(&x).unwrap();
+        assert_eq!(y.as_f32(), x.as_f32());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = HostTensor::from_f32(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = HostTensor::from_f32(&[2, 2], vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b).unwrap();
+        assert_eq!(c.as_f32(), &[3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_shape_mismatch_errors() {
+        let a = HostTensor::zeros(&[2, 3], DType::F32);
+        let b = HostTensor::zeros(&[2, 3], DType::F32);
+        assert!(a.matmul(&b).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(0);
+        let a = HostTensor::randn(&[5, 7], &mut rng, 1.0);
+        let t2 = a.transpose2().unwrap().transpose2().unwrap();
+        assert_eq!(a.as_f32(), t2.as_f32());
+    }
+
+    #[test]
+    fn bf16_roundtrip_error_bounded() {
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            let x = rng.normal_f32() * 10.0;
+            let y = bf16_to_f32(f32_to_bf16(x));
+            assert!((x - y).abs() <= x.abs() * 0.01 + 1e-30, "{x} -> {y}");
+        }
+    }
+
+    #[test]
+    fn bf16_exact_values() {
+        for x in [0.0f32, 1.0, -2.0, 0.5] {
+            assert_eq!(bf16_to_f32(f32_to_bf16(x)), x);
+        }
+    }
+
+    #[test]
+    fn add_scaled() {
+        let mut a = HostTensor::from_f32(&[3], vec![1.0, 2.0, 3.0]);
+        let b = HostTensor::from_f32(&[3], vec![10.0, 20.0, 30.0]);
+        a.add_scaled(&b, 0.1);
+        assert_eq!(a.as_f32(), &[2.0, 4.0, 6.0]);
+    }
+}

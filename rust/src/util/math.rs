@@ -1,0 +1,78 @@
+//! Integer math used by the planner and placement layers: GCD/LCM (the
+//! paper's granularity-composition rule, §4), alignment rounding (NCCL
+//! even-input alignment, §5).
+
+/// Greatest common divisor (Euclid). gcd(0, n) == n.
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
+}
+
+/// Least common multiple; saturates on overflow (planner treats saturation
+/// as "infeasible granularity", which is the correct semantics).
+pub fn lcm(a: u64, b: u64) -> u64 {
+    if a == 0 || b == 0 {
+        return 0;
+    }
+    (a / gcd(a, b)).saturating_mul(b)
+}
+
+/// Round `x` up to the next multiple of `unit` (unit > 0).
+pub fn round_up(x: u64, unit: u64) -> u64 {
+    debug_assert!(unit > 0);
+    x.div_ceil(unit) * unit
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gcd_basic() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(gcd(17, 5), 1);
+        assert_eq!(gcd(0, 7), 7);
+        assert_eq!(gcd(7, 0), 7);
+    }
+
+    #[test]
+    fn lcm_basic() {
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(1, 9), 9);
+        assert_eq!(lcm(0, 9), 0);
+        // the paper's example: granularity = LCM(stride, user granularity)
+        assert_eq!(lcm(128, 96), 384);
+    }
+
+    #[test]
+    fn lcm_saturates() {
+        assert_eq!(lcm(u64::MAX - 1, u64::MAX), u64::MAX);
+    }
+
+    #[test]
+    fn round_up_basic() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(0, 4), 0);
+        assert_eq!(ceil_div(1, 4), 1);
+        assert_eq!(ceil_div(8, 4), 2);
+        assert_eq!(ceil_div(9, 4), 3);
+    }
+}

@@ -1,0 +1,17 @@
+//! Self-built substrate utilities.
+//!
+//! The offline crate universe has no `rand`, `serde`, `clap`, `criterion`
+//! or `proptest`, so this module provides from-scratch replacements used
+//! throughout the coordinator: a PRNG, a JSON value + parser/serializer,
+//! integer math (LCM/alignment), a CLI argument parser, a table printer
+//! for the paper-figure benches, and a miniature property-testing harness.
+
+pub mod args;
+pub mod json;
+pub mod math;
+pub mod prng;
+pub mod prop;
+pub mod table;
+
+pub use math::{ceil_div, gcd, lcm, round_up};
+pub use prng::Rng;

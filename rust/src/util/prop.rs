@@ -1,0 +1,96 @@
+//! Miniature property-based testing harness (no `proptest` offline).
+//!
+//! `check(name, iters, f)` runs `f` against `iters` seeded RNGs; on the
+//! first failure it retries with a binary-shrunk "size hint" so failures
+//! reproduce from the printed seed. Used by the planner / placement /
+//! dbuffer invariant tests.
+
+use super::prng::Rng;
+
+/// Per-case context handed to the property closure.
+pub struct Case {
+    pub rng: Rng,
+    /// Size hint in [1, 100]; generators should scale instance size by it
+    /// so shrinking produces smaller counterexamples.
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Case {
+    /// Scale `max` by the case size (at least 1).
+    pub fn scaled(&self, max: usize) -> usize {
+        (max * self.size / 100).max(1)
+    }
+}
+
+/// Run a property. `f` returns Err(description) on violation.
+/// Panics with seed + shrink info on failure.
+pub fn check<F>(name: &str, iters: u64, mut f: F)
+where
+    F: FnMut(&mut Case) -> Result<(), String>,
+{
+    let base = 0xC0FFEE_u64;
+    for i in 0..iters {
+        let seed = base.wrapping_add(i.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut case = Case { rng: Rng::new(seed), size: 100, seed };
+        if let Err(msg) = f(&mut case) {
+            // shrink: halve the size hint while the property still fails
+            let mut best = (100, msg.clone());
+            let mut size = 50;
+            while size >= 1 {
+                let mut c = Case { rng: Rng::new(seed), size, seed };
+                match f(&mut c) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (seed={seed:#x}, iter={i}, \
+                 shrunk size={}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut n = 0;
+        check("always-true", 25, |_| {
+            n += 1;
+            Ok(())
+        });
+        assert_eq!(n, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |c| {
+            if c.rng.below(4) == 0 {
+                Err("hit zero".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reduces_size() {
+        let result = std::panic::catch_unwind(|| {
+            check("size-sensitive", 5, |c| {
+                // fails for any size >= 1 -> shrinks to 1
+                Err(format!("n={}", c.scaled(1000)))
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("shrunk size=1"), "{msg}");
+    }
+}

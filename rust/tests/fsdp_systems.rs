@@ -1,0 +1,234 @@
+//! Cross-system integration tests over the symbolic engine: the paper's
+//! qualitative claims must hold across presets and scales (who wins, by
+//! roughly what factor, where the pathologies appear).
+
+use vescale_fsdp::baselines;
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
+use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec, StepReport, SystemBehavior};
+
+fn run(
+    preset: &presets::ModelPreset,
+    sys: &SystemBehavior,
+    parallel: ParallelConfig,
+    tokens: u64,
+) -> StepReport {
+    simulate_step(
+        preset,
+        &parallel,
+        OptimKind::AdamW,
+        tokens,
+        &Fabric::h800(),
+        &GpuSpec::h800(),
+        sys,
+    )
+    .unwrap()
+}
+
+#[test]
+fn vescale_wins_throughput_on_all_models_at_128() {
+    // 800B needs >= ~200 GPUs just for fp32 master + Adam states; the
+    // paper runs it at 1K+ (§6.2), so that preset is tested at 1024.
+    let cases = [
+        (presets::llama70b(), 128usize),
+        (presets::gptoss120b(), 128),
+        (presets::moe_internal(800.0), 1024),
+    ];
+    for (preset, m) in cases {
+        let tokens = preset.seq_default as u64;
+        let ve = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(m), tokens);
+        assert!(!ve.oom, "{} OOM at {m}", preset.name);
+        for b in baselines::all_baselines() {
+            let r = run(&preset, &b, ParallelConfig::fsdp_only(m), tokens);
+            assert!(
+                ve.tokens_per_sec >= r.tokens_per_sec * 0.999,
+                "{}: veScale {} < {} {}",
+                preset.name,
+                ve.tokens_per_sec,
+                b.name,
+                r.tokens_per_sec
+            );
+        }
+    }
+}
+
+#[test]
+fn vescale_memory_lowest_on_all_models() {
+    for preset in [presets::llama70b(), presets::gptoss120b()] {
+        let tokens = preset.seq_default as u64;
+        let ve = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(128), tokens);
+        for b in baselines::all_baselines() {
+            let r = run(&preset, &b, ParallelConfig::fsdp_only(128), tokens);
+            assert!(
+                ve.peak_reserved <= r.peak_reserved,
+                "{}: veScale {} > {} {}",
+                preset.name,
+                ve.peak_reserved,
+                b.name,
+                r.peak_reserved
+            );
+        }
+    }
+}
+
+#[test]
+fn memory_saving_in_paper_band() {
+    // paper: 16-30% lower peak memory than existing systems (vs the
+    // worst-of-baselines on each model, the headline comparison)
+    let preset = presets::gptoss120b();
+    let tokens = preset.seq_default as u64;
+    let ve = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(128), tokens);
+    let worst = baselines::all_baselines()
+        .iter()
+        .map(|b| run(&preset, b, ParallelConfig::fsdp_only(128), tokens).peak_reserved)
+        .max()
+        .unwrap();
+    let saving = 1.0 - ve.peak_reserved as f64 / worst as f64;
+    assert!(saving > 0.10, "saving only {saving:.2}");
+}
+
+#[test]
+fn throughput_margin_in_paper_band_moe() {
+    // paper: 11-66% faster on MoE models
+    let preset = presets::gptoss120b();
+    let tokens = preset.seq_default as u64;
+    let ve = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(128), tokens);
+    let worst_base = baselines::all_baselines()
+        .iter()
+        .map(|b| run(&preset, b, ParallelConfig::fsdp_only(128), tokens).tokens_per_sec)
+        .fold(f64::MAX, f64::min);
+    let margin = ve.tokens_per_sec / worst_base;
+    assert!(margin > 1.10, "MoE margin only {margin:.3}");
+}
+
+#[test]
+fn hsdp_memory_grows_marginally_with_replication() {
+    // paper §6.1: memory decreases with FSDP size, grows only marginally
+    // with replication factor
+    let preset = presets::llama70b();
+    let f256 = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(256), 4096);
+    let h2 = run(
+        &preset,
+        &baselines::vescale(1),
+        ParallelConfig { fsdp: 256, replicas: 2, ep: 1 },
+        4096,
+    );
+    let f128 = run(&preset, &baselines::vescale(1), ParallelConfig::fsdp_only(128), 4096);
+    assert!(f256.peak_reserved < f128.peak_reserved);
+    let growth = h2.peak_reserved as f64 / f256.peak_reserved as f64;
+    assert!(growth < 1.1, "replication inflated memory {growth:.2}x");
+}
+
+#[test]
+fn weak_scaling_near_linear_to_8k() {
+    let preset = presets::moe_internal(800.0);
+    let ve = baselines::vescale(1);
+    let base = run(&preset, &ve, ParallelConfig::fsdp_only(1024), 8192);
+    for m in [2048, 4096, 8192] {
+        let r = run(&preset, &ve, ParallelConfig::fsdp_only(m), 8192);
+        let eff = (r.tokens_per_sec / base.tokens_per_sec)
+            / (m as f64 / 1024.0);
+        assert!(eff > 0.85, "weak-scaling efficiency {eff:.2} at m={m}");
+    }
+}
+
+#[test]
+fn strong_scaling_sublinear_when_tokens_shrink() {
+    // fixed global batch; the paper tunes EP per setting ("we adopt
+    // cross-node Expert Parallelism, which further reduces FSDP
+    // communication time"). With EP=8, 1K GPUs are compute-bound; at 8K
+    // the shrunken per-device batch exposes comm — a 3-4x gain, not 8x
+    // (paper: 3.4x from 1K to 8K at a 16M-token batch).
+    let preset = presets::moe_internal(800.0);
+    let ve = baselines::vescale(1);
+    let global_tokens = 16_000_000u64;
+    let t1k = run(
+        &preset,
+        &ve,
+        ParallelConfig { fsdp: 1024, replicas: 1, ep: 8 },
+        global_tokens / 1024,
+    );
+    let t8k = run(
+        &preset,
+        &ve,
+        ParallelConfig { fsdp: 8192, replicas: 1, ep: 8 },
+        global_tokens / 8192,
+    );
+    let speedup = t8k.tokens_per_sec / t1k.tokens_per_sec;
+    assert!(speedup > 1.5, "some strong scaling expected: {speedup:.2}");
+    assert!(speedup < 7.9, "perfect scaling is implausible: {speedup:.2}");
+}
+
+#[test]
+fn planner_quality_padding_bands() {
+    // Fig 11: 1x/16x row granularity keep padding < 3% across FSDP sizes
+    use vescale_fsdp::planner::{plan, TensorDecl};
+    for preset in [presets::dsv3_671b(), presets::gptoss120b()] {
+        for m in [8usize, 32, 128] {
+            for rows in [1u64, 16] {
+                // quantize only FFN/expert weights (the paper's scheme)
+                let decls: Vec<TensorDecl> = preset
+                    .all_params()
+                    .iter()
+                    .map(|p| {
+                        // "row" = one row of the innermost expert matrix
+                        // (last dim), not a whole dim-0 slice of a fused
+                        // expert tensor
+                        let row = *p.shape.last().unwrap() as u64;
+                        let g = if p.name.contains("expert") || p.name.contains("mlp") {
+                            (rows * row).min(p.numel())
+                        } else {
+                            1
+                        };
+                        TensorDecl::new(&p.name, p.numel(), g.max(1))
+                    })
+                    .collect();
+                let layout = plan(&decls, m, 4).unwrap();
+                assert!(
+                    layout.padding_ratio() < 0.03,
+                    "{} m={m} rows={rows}: padding {:.4}",
+                    preset.name,
+                    layout.padding_ratio()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sgd_fallback_fits_where_adamw_tight() {
+    // paper: SGD used to avoid OOM on GPT-OSS for the baselines
+    let preset = presets::gptoss120b();
+    let b = baselines::fsdp1();
+    let adamw = simulate_step(
+        &preset,
+        &ParallelConfig::fsdp_only(128),
+        OptimKind::AdamW,
+        8192,
+        &Fabric::h800(),
+        &GpuSpec::h800(),
+        &b,
+    )
+    .unwrap();
+    let sgd = simulate_step(
+        &preset,
+        &ParallelConfig::fsdp_only(128),
+        OptimKind::Sgd,
+        8192,
+        &Fabric::h800(),
+        &GpuSpec::h800(),
+        &b,
+    )
+    .unwrap();
+    assert!(sgd.peak_reserved < adamw.peak_reserved);
+}
+
+#[test]
+fn mfu_improves_with_model_size_at_1k() {
+    // Fig 9d: MFU slightly improves as models grow on 1K GPUs
+    let ve = baselines::vescale(1);
+    let small = run(&presets::moe_internal(400.0), &ve, ParallelConfig::fsdp_only(1024), 8192);
+    let big = run(&presets::moe_internal(2400.0), &ve, ParallelConfig { fsdp: 1024, replicas: 1, ep: 8 }, 8192);
+    assert!(!big.oom, "2.4T must train on 1K GPUs (the paper's claim)");
+    assert!(big.mfu >= small.mfu * 0.9, "MFU collapsed: {} vs {}", big.mfu, small.mfu);
+}

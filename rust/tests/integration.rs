@@ -1,0 +1,162 @@
+//! End-to-end integration: the numeric FSDP engine + PJRT runtime train a
+//! real (tiny) transformer and match the DDP reference trajectory.
+//! Requires `make artifacts` (skipped otherwise).
+
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::ShardingPolicy;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::runtime::Engine;
+use vescale_fsdp::train::{DdpTrainer, Trainer};
+
+fn artifacts_ready() -> bool {
+    Engine::default_dir().join("manifest.json").exists()
+}
+
+fn hyper() -> AdamHyper {
+    AdamHyper { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01 }
+}
+
+#[test]
+fn fsdp_training_reduces_loss() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut t = Trainer::new(
+        "tiny",
+        2,
+        OptimKind::AdamW,
+        &ShardingPolicy::element_wise(),
+        hyper(),
+        42,
+    )
+    .unwrap();
+    let log = t.run(12).unwrap();
+    let first = log[0].loss;
+    let last = log.last().unwrap().loss;
+    assert!(
+        last < first - 0.3,
+        "loss did not decrease: {first} -> {last}"
+    );
+}
+
+#[test]
+fn fsdp_matches_ddp_trajectory_adamw() {
+    // same seeds, same data, same optimizer: FSDP (layer-wise RS) and DDP
+    // (bucketed AR) must track each other closely for fp32 AdamW
+    if !artifacts_ready() {
+        return;
+    }
+    let m = 2;
+    let mut fsdp = Trainer::new(
+        "tiny",
+        m,
+        OptimKind::AdamW,
+        &ShardingPolicy::element_wise(),
+        hyper(),
+        7,
+    )
+    .unwrap();
+    let mut ddp = DdpTrainer::new("tiny", m, OptimKind::AdamW, hyper(), 7).unwrap();
+    let fl = fsdp.run(6).unwrap();
+    let dl = ddp.run(6).unwrap();
+    for (a, b) in fl.iter().zip(&dl) {
+        assert!(
+            (a.loss - b.loss).abs() < 5e-3,
+            "step {}: fsdp {} vs ddp {}",
+            a.step,
+            a.loss,
+            b.loss
+        );
+    }
+}
+
+#[test]
+fn adam8bit_with_ragged_blocks_trains() {
+    if !artifacts_ready() {
+        return;
+    }
+    // 32-row granularity so every quant block stays on one device
+    let mut t = Trainer::new(
+        "tiny",
+        2,
+        OptimKind::Adam8bit,
+        &ShardingPolicy::uniform_rows(32),
+        hyper(),
+        11,
+    )
+    .unwrap();
+    let log = t.run(10).unwrap();
+    assert!(log.last().unwrap().loss < log[0].loss - 0.2);
+}
+
+#[test]
+fn muon_trains_and_beats_nothing_blows_up() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut t = Trainer::new(
+        "tiny",
+        2,
+        OptimKind::Muon,
+        &ShardingPolicy::element_wise(),
+        AdamHyper { lr: 0.02, wd: 0.0, ..hyper() },
+        13,
+    )
+    .unwrap();
+    let log = t.run(10).unwrap();
+    assert!(log.iter().all(|l| l.loss.is_finite()));
+    assert!(log.last().unwrap().loss < log[0].loss - 0.2);
+}
+
+#[test]
+fn mesh_size_does_not_change_numerics() {
+    if !artifacts_ready() {
+        return;
+    }
+    let run_with = |m: usize| {
+        let mut t = Trainer::new(
+            "tiny",
+            m,
+            OptimKind::AdamW,
+            &ShardingPolicy::element_wise(),
+            hyper(),
+            21,
+        )
+        .unwrap();
+        // identical data across runs: corpus streams per device; use 1
+        // device worth by comparing only the sharding math — instead we
+        // check params after init + one gather round-trip
+        t.engine.gather_params().unwrap();
+        let p0 = t.engine.device_params(0);
+        t.engine.release_params();
+        (t, p0)
+    };
+    let (t2, p2) = run_with(2);
+    let (t4, p4) = run_with(4);
+    assert_eq!(p2.len(), p4.len());
+    for (a, b) in p2.iter().zip(&p4) {
+        assert_eq!(a, b, "init params differ across mesh sizes");
+    }
+    drop((t2, t4));
+}
+
+#[test]
+fn comm_stats_recorded_per_step() {
+    if !artifacts_ready() {
+        return;
+    }
+    let mut t = Trainer::new(
+        "tiny",
+        2,
+        OptimKind::AdamW,
+        &ShardingPolicy::element_wise(),
+        hyper(),
+        31,
+    )
+    .unwrap();
+    t.train_step().unwrap();
+    let buckets = t.engine.buckets.len();
+    assert_eq!(t.engine.stats.count("all_gather"), buckets);
+    assert_eq!(t.engine.stats.count("reduce_scatter"), buckets);
+    assert!(t.engine.stats.total_time() > 0.0);
+}
