@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
             println!("step {step:>3}  loss {loss:.4}");
         }
     }
-    let s = &trainer.engine.stats;
+    let s = trainer.engine.stats();
     println!(
         "collectives: {} AllGather + {} ReduceScatter, {:.1} MB moved, {:.1} ms simulated",
         s.count("all_gather"),

@@ -1,13 +1,16 @@
 //! End-to-end validation driver: train a real transformer with the full
 //! three-layer stack — Rust coordinator (RaggedShard + planner + DBuffer
-//! collectives + sharded optimizer) executing the AOT JAX/Pallas fwd/bwd
-//! through PJRT on every simulated device — and log the loss curve.
+//! collectives + sharded optimizer) executing the L2 fwd/bwd on every
+//! simulated device (PJRT artifacts when built with `--features pjrt`,
+//! the native Rust compute path otherwise) — and log the loss curve.
 //!
 //!     cargo run --release --example train_e2e -- \
-//!         [--config tiny|small] [--mesh 4] [--steps 300] [--opt adamw]
+//!         [--config tiny|small] [--mesh 4] [--steps 300] [--opt adamw] \
+//!         [--backend serial|threaded]
 //!
 //! The loss log lands in runs/<name>.csv and is summarized on stdout.
 
+use vescale_fsdp::cluster::CommBackend;
 use vescale_fsdp::config::OptimKind;
 use vescale_fsdp::fsdp::ShardingPolicy;
 use vescale_fsdp::optim::AdamHyper;
@@ -21,6 +24,8 @@ fn main() -> anyhow::Result<()> {
     let steps = args.usize_or("steps", 300);
     let opt = OptimKind::parse(&args.str_or("opt", "adamw"))
         .ok_or_else(|| anyhow::anyhow!("unknown --opt"))?;
+    let backend = CommBackend::parse(&args.str_or("backend", "threaded"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend"))?;
     let lr = args.f64_or("lr", 1e-3) as f32;
     let granularity_rows = args.usize_or("rows", 0) as u64;
 
@@ -33,9 +38,14 @@ fn main() -> anyhow::Result<()> {
     let hyper = AdamHyper { lr, ..AdamHyper::default() };
 
     println!("== veScale-FSDP end-to-end training ==");
-    println!("config={config} mesh={mesh} steps={steps} opt={}", opt.name());
+    println!(
+        "config={config} mesh={mesh} steps={steps} opt={} backend={}",
+        opt.name(),
+        backend.name()
+    );
     let t0 = std::time::Instant::now();
-    let mut trainer = Trainer::new(&config, mesh, opt, &policy, hyper, 42)?;
+    let mut trainer = Trainer::with_backend(&config, mesh, opt, &policy, hyper, 42, backend)?;
+    println!("compute runtime: {}", trainer.runtime.backend_name());
     println!(
         "params: {} | shard/device: {} elems | padding {:.4}% | buckets {}",
         trainer.runtime.manifest.configs[&config].total_params(),
@@ -59,7 +69,7 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
-    let name = format!("e2e_{config}_{}_{}dev", opt.name(), mesh);
+    let name = format!("e2e_{config}_{}_{}dev_{}", opt.name(), mesh, backend.name());
     let path = save_log(&name, &trainer.log)?;
     let first = trainer.log[0].loss;
     let tail = trainer.log.iter().rev().take(20).map(|l| l.loss).collect::<Vec<_>>();
@@ -67,7 +77,7 @@ fn main() -> anyhow::Result<()> {
     println!("\nloss: {first:.4} -> {last20:.4} (avg of last 20)");
     println!(
         "simulated comm: {:.1} ms/step | tokens/step: {} | wall: {:.1}s total",
-        trainer.engine.stats.total_time() * 1e3 / steps as f64,
+        trainer.engine.stats().total_time() * 1e3 / steps as f64,
         trainer.runtime.manifest.configs[&config].batch
             * trainer.runtime.manifest.configs[&config].seq
             * mesh,

@@ -1,34 +1,34 @@
 //! Figure 10: training convergence with veScale-FSDP — (a) 8-bit Adam,
 //! DDP vs FSDP (curves track closely); (b) Muon vs AdamW (Muon converges
-//! faster). Real training through the PJRT artifacts on the tiny model;
-//! pass --steps to lengthen the runs.
-//!
-//! Requires `make artifacts`.
+//! faster). Real training on the tiny model — through the PJRT artifacts
+//! when available, the native Rust compute path otherwise. Pass --steps
+//! to lengthen the runs and --backend serial|threaded to pick the
+//! cluster backend (the trajectory is bit-identical either way).
 
+use vescale_fsdp::cluster::CommBackend;
 use vescale_fsdp::config::OptimKind;
 use vescale_fsdp::fsdp::ShardingPolicy;
 use vescale_fsdp::optim::AdamHyper;
-use vescale_fsdp::runtime::Engine;
 use vescale_fsdp::train::{save_log, DdpTrainer, Trainer};
 use vescale_fsdp::util::args::Args;
 use vescale_fsdp::util::table::Table;
 
 fn main() -> anyhow::Result<()> {
-    if !Engine::default_dir().join("manifest.json").exists() {
-        println!("fig10: skipped (run `make artifacts` first)");
-        return Ok(());
-    }
     let args = Args::from_env();
     let steps = args.usize_or("steps", 60);
+    let backend = CommBackend::parse(&args.str_or("backend", "threaded"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --backend"))?;
     let mesh = 4usize;
 
     // ---- (a) 8-bit Adam: FSDP vs DDP ----
     let h8 = AdamHyper { lr: 5e-4, ..AdamHyper::default() };
-    let mut fsdp8 = Trainer::new("tiny", mesh, OptimKind::Adam8bit,
-                                 &ShardingPolicy::uniform_rows(32), h8, 42)?;
+    let mut fsdp8 = Trainer::with_backend("tiny", mesh, OptimKind::Adam8bit,
+                                          &ShardingPolicy::uniform_rows(32), h8, 42, backend)?;
+    println!("fig10: compute={} cluster-backend={}",
+             fsdp8.runtime.backend_name(), backend.name());
     let flog = fsdp8.run(steps)?;
     save_log("fig10a_fsdp_adam8bit", &flog)?;
-    let mut ddp8 = DdpTrainer::new("tiny", mesh, OptimKind::Adam8bit, h8, 42)?;
+    let mut ddp8 = DdpTrainer::with_backend("tiny", mesh, OptimKind::Adam8bit, h8, 42, backend)?;
     let dlog = ddp8.run(steps)?;
     save_log("fig10a_ddp_adam8bit", &dlog)?;
 
@@ -47,14 +47,16 @@ fn main() -> anyhow::Result<()> {
     ta.print();
 
     // ---- (b) Muon vs AdamW ----
-    let mut adamw = Trainer::new("tiny", mesh, OptimKind::AdamW,
-                                 &ShardingPolicy::element_wise(),
-                                 AdamHyper { lr: 1e-3, wd: 0.0, ..AdamHyper::default() }, 42)?;
+    let mut adamw = Trainer::with_backend("tiny", mesh, OptimKind::AdamW,
+                                          &ShardingPolicy::element_wise(),
+                                          AdamHyper { lr: 1e-3, wd: 0.0, ..AdamHyper::default() },
+                                          42, backend)?;
     let alog = adamw.run(steps)?;
     save_log("fig10b_adamw", &alog)?;
-    let mut muon = Trainer::new("tiny", mesh, OptimKind::Muon,
-                                &ShardingPolicy::element_wise(),
-                                AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() }, 42)?;
+    let mut muon = Trainer::with_backend("tiny", mesh, OptimKind::Muon,
+                                         &ShardingPolicy::element_wise(),
+                                         AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+                                         42, backend)?;
     let mlog = muon.run(steps)?;
     save_log("fig10b_muon", &mlog)?;
 

@@ -1,0 +1,92 @@
+//! Table 3 (repo-specific): threaded vs serial SPMD backend — real step
+//! wall-clock on this host at mesh sizes 2/4/8, plus a bit-identity check
+//! of the two loss trajectories. Unlike the fig-8/9 harnesses (which
+//! report the *modeled* H800 fabric), this one measures actual elapsed
+//! time of the cluster runtime: per-rank fwd/bwd fans out across OS
+//! threads and collectives run as rendezvous operations.
+//!
+//!     cargo bench --bench table3_backend_speedup [-- --steps 8 --warmup 2]
+//!
+//! Emits `BENCH_backend.json` at the crate root.
+
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::ShardingPolicy;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::train::Trainer;
+use vescale_fsdp::util::args::Args;
+use vescale_fsdp::util::json::Json;
+use vescale_fsdp::util::table::Table;
+
+fn run(m: usize, backend: CommBackend, warmup: usize, steps: usize) -> anyhow::Result<(f64, Vec<f32>)> {
+    let mut t = Trainer::with_backend(
+        "tiny",
+        m,
+        OptimKind::AdamW,
+        &ShardingPolicy::element_wise(),
+        AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+        42,
+        backend,
+    )?;
+    let mut losses = Vec::with_capacity(warmup + steps);
+    for _ in 0..warmup {
+        losses.push(t.train_step()?);
+    }
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        losses.push(t.train_step()?);
+    }
+    Ok((t0.elapsed().as_secs_f64() / steps as f64, losses))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let steps = args.usize_or("steps", 8);
+    let warmup = args.usize_or("warmup", 2);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("host cores: {cores}; steps/point: {steps} (+{warmup} warmup)\n");
+
+    let mut table = Table::new(
+        "Table 3 — threaded vs serial backend, real step wall-clock (tiny model)",
+        &["mesh", "serial s/step", "threaded s/step", "speedup", "bit-identical"],
+    );
+    let mut rows = Vec::new();
+    for &m in &[2usize, 4, 8] {
+        let (serial_s, serial_l) = run(m, CommBackend::Serial, warmup, steps)?;
+        let (thr_s, thr_l) = run(m, CommBackend::Threaded, warmup, steps)?;
+        let identical = serial_l
+            .iter()
+            .zip(&thr_l)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        let speedup = serial_s / thr_s;
+        table.rowv(vec![
+            format!("{m}"),
+            format!("{serial_s:.4}"),
+            format!("{thr_s:.4}"),
+            format!("{speedup:.2}x"),
+            format!("{identical}"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("m", Json::num(m as f64)),
+            ("serial_s_per_step", Json::num(serial_s)),
+            ("threaded_s_per_step", Json::num(thr_s)),
+            ("speedup", Json::num(speedup)),
+            ("bit_identical", Json::Bool(identical)),
+        ]));
+    }
+    table.print();
+    println!("expected shape: speedup approaches min(m, cores) as compute dominates;");
+    println!("tiny buffers keep collectives cheap, so fwd/bwd fan-out is the win.");
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("backend_speedup")),
+        ("model", Json::str("tiny")),
+        ("steps", Json::num(steps as f64)),
+        ("host_cores", Json::num(cores as f64)),
+        ("rows", Json::Arr(rows)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_backend.json");
+    std::fs::write(path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
+}

@@ -1,0 +1,92 @@
+//! SerialComm: the reference backend — wraps the original single-thread
+//! loop collectives from [`crate::comm`]. Defines the semantics (and the
+//! exact floating-point reduction order) every other backend must match.
+
+use anyhow::Result;
+
+use crate::comm::{self, CommRecord, CommStats, SharedStats};
+
+use super::{CommBackend, Communicator};
+
+#[derive(Debug, Default)]
+pub struct SerialComm {
+    stats: SharedStats,
+}
+
+impl SerialComm {
+    pub fn new() -> SerialComm {
+        SerialComm::default()
+    }
+}
+
+impl Communicator for SerialComm {
+    fn backend(&self) -> CommBackend {
+        CommBackend::Serial
+    }
+
+    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        comm::all_gather(bufs, s)
+    }
+
+    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+        comm::reduce_scatter(bufs, s, scale)
+    }
+
+    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
+        comm::all_reduce(bufs, scale)
+    }
+
+    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
+        comm::broadcast(bufs, root)
+    }
+
+    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        comm::all_to_all(bufs, s)
+    }
+
+    fn record(&self, rec: CommRecord) {
+        self.stats.record(rec);
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.snapshot()
+    }
+
+    fn sim_time(&self) -> f64 {
+        self.stats.total_time()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn delegates_to_loop_collectives() {
+        let c = SerialComm::new();
+        let mut bufs = vec![vec![1.0f32; 8], vec![3.0f32; 8]];
+        c.all_reduce(&mut bufs, 0.5).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|&x| x == 2.0));
+        }
+        assert_eq!(c.backend(), CommBackend::Serial);
+    }
+
+    #[test]
+    fn records_are_thread_safe() {
+        let c = SerialComm::new();
+        c.record(CommRecord {
+            op: "all_gather",
+            bytes_per_rank: 4,
+            group_size: 2,
+            sim_time: 0.1,
+        });
+        assert_eq!(c.stats().count("all_gather"), 1);
+        c.reset_stats();
+        assert_eq!(c.stats().records.len(), 0);
+    }
+}

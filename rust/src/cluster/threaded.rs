@@ -1,0 +1,417 @@
+//! ThreadedComm: every rank participates in a collective from its own OS
+//! thread; the exchange happens over shared host buffers in barrier-phased
+//! rendezvous steps.
+//!
+//! Algorithms (all over the same per-rank buffers the serial backend
+//! uses, so call sites are backend-agnostic):
+//!
+//! * **AllGather** — chunked ring: at step `t` rank `k` pulls chunk
+//!   `(k-1-t) mod m` from its left neighbor, the chunk the neighbor
+//!   itself received one step earlier. A barrier separates steps; within
+//!   a step every rank writes one chunk of its own buffer and reads a
+//!   *different* chunk of its neighbor's, so regions never alias.
+//! * **ReduceScatter** — each rank reduces *its own* chunk across all
+//!   ranks' buffers **in rank order 0..m** (the serial backend's exact
+//!   summation order, so results are bit-identical), then writes it back.
+//!   Work parallelizes across chunks; regions are disjoint by chunk index.
+//! * **AllReduce** — ReduceScatter over balanced element ranges followed
+//!   by an AllGather-style publish phase, again reducing in rank order.
+//! * **Broadcast / All2All** — parallel region copies with a snapshot
+//!   phase where in-place overwrite would race.
+//!
+//! Safety model: raw per-rank buffer pointers are shared for the duration
+//! of one collective; every access goes through `region`/`region_mut`,
+//! which materialize *disjoint* slices, and phases that would otherwise
+//! conflict are separated by `std::sync::Barrier`. Each algorithm's
+//! disjointness argument is spelled out inline.
+
+use std::sync::Barrier;
+
+use anyhow::{bail, Result};
+
+use crate::comm::{self, CommRecord, CommStats, SharedStats};
+
+use super::{CommBackend, Communicator};
+
+/// Below this many total elements a collective is cheaper single-threaded
+/// than the ~tens-of-microseconds per OS thread spawn; the serial path is
+/// bit-identical, so falling back never changes results.
+const DEFAULT_MIN_PARALLEL_ELEMS: usize = 16 * 1024;
+
+#[derive(Debug)]
+pub struct ThreadedComm {
+    stats: SharedStats,
+    /// Total-element threshold under which collectives run serially.
+    min_parallel_elems: usize,
+}
+
+impl Default for ThreadedComm {
+    fn default() -> Self {
+        ThreadedComm::new()
+    }
+}
+
+impl ThreadedComm {
+    pub fn new() -> ThreadedComm {
+        ThreadedComm {
+            stats: SharedStats::default(),
+            min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
+        }
+    }
+
+    /// Override the serial-fallback threshold (0 forces the rendezvous
+    /// algorithms even for tiny buffers — used by the equivalence tests).
+    pub fn with_min_parallel_elems(min_parallel_elems: usize) -> ThreadedComm {
+        ThreadedComm { stats: SharedStats::default(), min_parallel_elems }
+    }
+
+    fn serial_faster(&self, total_elems: usize) -> bool {
+        total_elems < self.min_parallel_elems
+    }
+}
+
+/// Raw shared view of every rank's buffer for one rendezvous collective.
+/// The pointers stay valid for the whole call: the caller's `&mut [Vec]`
+/// is borrowed across the scoped threads, which all join before return.
+struct SharedBufs {
+    ptrs: Vec<*mut f32>,
+    lens: Vec<usize>,
+}
+
+unsafe impl Send for SharedBufs {}
+unsafe impl Sync for SharedBufs {}
+
+impl SharedBufs {
+    fn new(bufs: &mut [Vec<f32>]) -> SharedBufs {
+        SharedBufs {
+            ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(),
+            lens: bufs.iter().map(|b| b.len()).collect(),
+        }
+    }
+
+    /// Element range `[lo, hi)` of rank `k`'s buffer as a shared slice.
+    ///
+    /// Safety: the range must be in bounds, and the protocol must
+    /// guarantee no concurrent `region_mut` overlaps it in this phase.
+    unsafe fn region(&self, k: usize, lo: usize, hi: usize) -> &[f32] {
+        debug_assert!(hi <= self.lens[k]);
+        std::slice::from_raw_parts(self.ptrs[k].add(lo), hi - lo)
+    }
+
+    /// Mutable element range `[lo, hi)` of rank `k`'s buffer.
+    ///
+    /// Safety: in bounds, and this phase's unique writer for the range.
+    #[allow(clippy::mut_from_ref)]
+    unsafe fn region_mut(&self, k: usize, lo: usize, hi: usize) -> &mut [f32] {
+        debug_assert!(hi <= self.lens[k]);
+        std::slice::from_raw_parts_mut(self.ptrs[k].add(lo), hi - lo)
+    }
+}
+
+/// Run `f(rank)` on `m` concurrent ranks; rank 0 runs on the caller's
+/// thread. Returns after every rank finished (scoped join).
+fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
+    std::thread::scope(|s| {
+        for rank in 1..m {
+            let f = &f;
+            s.spawn(move || f(rank));
+        }
+        f(0);
+    });
+}
+
+impl Communicator for ThreadedComm {
+    fn backend(&self) -> CommBackend {
+        CommBackend::Threaded
+    }
+
+    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        let m = bufs.len();
+        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
+            return comm::all_gather(bufs, s);
+        }
+        for b in bufs.iter() {
+            if b.len() < m * s {
+                bail!("all_gather buffer too small: {} < {}", b.len(), m * s);
+            }
+        }
+        let shared = SharedBufs::new(bufs);
+        let barrier = Barrier::new(m);
+        fan_out(m, |rank| {
+            // Chunked ring: after step t, rank k holds chunks k..=k-t-1
+            // (mod m). Step t: rank k writes its own chunk (k-1-t) while
+            // its right neighbor reads chunk (k-t) — disjoint; the
+            // barrier orders step t's writes before step t+1's reads.
+            let left = (rank + m - 1) % m;
+            for step in 0..m - 1 {
+                let c = (rank + m - 1 - step) % m;
+                unsafe {
+                    let src = shared.region(left, c * s, (c + 1) * s);
+                    shared.region_mut(rank, c * s, (c + 1) * s).copy_from_slice(src);
+                }
+                barrier.wait();
+            }
+        });
+        Ok(())
+    }
+
+    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+        let m = bufs.len();
+        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
+            return comm::reduce_scatter(bufs, s, scale);
+        }
+        for b in bufs.iter() {
+            if b.len() < m * s {
+                bail!("reduce_scatter buffer too small: {} < {}", b.len(), m * s);
+            }
+        }
+        let shared = SharedBufs::new(bufs);
+        fan_out(m, |rank| {
+            // Rank k reduces chunk k across all ranks in rank order (the
+            // serial summation order — bit-identical results), then
+            // overwrites only its own chunk-k region. Rank j only ever
+            // reads chunk j, so the single write per buffer is disjoint
+            // from every concurrent read (j != k ⇒ different chunk).
+            let mut acc = vec![0.0f32; s];
+            unsafe {
+                for r in 0..m {
+                    let src = shared.region(r, rank * s, (rank + 1) * s);
+                    for (a, &x) in acc.iter_mut().zip(src) {
+                        *a += x;
+                    }
+                }
+            }
+            for a in acc.iter_mut() {
+                *a *= scale;
+            }
+            unsafe {
+                shared.region_mut(rank, rank * s, (rank + 1) * s).copy_from_slice(&acc);
+            }
+        });
+        Ok(())
+    }
+
+    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
+        let m = bufs.len();
+        if m <= 1 || self.serial_faster(m * bufs[0].len()) {
+            return comm::all_reduce(bufs, scale);
+        }
+        let n = bufs[0].len();
+        for b in bufs.iter() {
+            if b.len() != n {
+                bail!("all_reduce length mismatch");
+            }
+        }
+        if n == 0 {
+            return Ok(());
+        }
+        let shared = SharedBufs::new(bufs);
+        let barrier = Barrier::new(m);
+        // balanced contiguous element ranges, one per rank (may be empty
+        // when n < m); per element the reduction order is rank 0..m, so
+        // any partition gives bit-identical results
+        let range = |k: usize| -> (usize, usize) {
+            let base = n / m;
+            let extra = n % m;
+            let lo = k * base + k.min(extra);
+            (lo, lo + base + usize::from(k < extra))
+        };
+        fan_out(m, |rank| {
+            // phase 1: reduce own range across all ranks (reads only)
+            let (lo, hi) = range(rank);
+            let mut acc = vec![0.0f32; hi - lo];
+            unsafe {
+                for r in 0..m {
+                    let src = shared.region(r, lo, hi);
+                    for (a, &x) in acc.iter_mut().zip(src) {
+                        *a += x;
+                    }
+                }
+            }
+            for a in acc.iter_mut() {
+                *a *= scale;
+            }
+            barrier.wait();
+            // phase 2: publish own range into every buffer (writes only;
+            // unique writer per (buffer, range) pair)
+            unsafe {
+                for r in 0..m {
+                    shared.region_mut(r, lo, hi).copy_from_slice(&acc);
+                }
+            }
+        });
+        Ok(())
+    }
+
+    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
+        let m = bufs.len();
+        if root >= m {
+            bail!("broadcast root {root} out of range");
+        }
+        if m <= 1 || self.serial_faster(m * bufs[root].len()) {
+            return comm::broadcast(bufs, root);
+        }
+        let n = bufs[root].len();
+        for (k, b) in bufs.iter().enumerate() {
+            if b.len() != n {
+                bail!("broadcast length mismatch at rank {k}");
+            }
+        }
+        let shared = SharedBufs::new(bufs);
+        fan_out(m, |rank| {
+            // concurrent reads of root's buffer; each non-root rank is
+            // the unique writer of its own buffer
+            if rank != root {
+                unsafe {
+                    let src = shared.region(root, 0, n);
+                    shared.region_mut(rank, 0, n).copy_from_slice(src);
+                }
+            }
+        });
+        Ok(())
+    }
+
+    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        let m = bufs.len();
+        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
+            return comm::all_to_all(bufs, s);
+        }
+        for b in bufs.iter() {
+            if b.len() < m * s {
+                bail!("all_to_all buffer too small");
+            }
+        }
+        let shared = SharedBufs::new(bufs);
+        let barrier = Barrier::new(m);
+        fan_out(m, |rank| {
+            // phase 1 (reads only): pull slot `rank` from every sender —
+            // the incoming column of the transpose
+            let mut incoming = vec![0.0f32; m * s];
+            unsafe {
+                for r in 0..m {
+                    incoming[r * s..(r + 1) * s]
+                        .copy_from_slice(shared.region(r, rank * s, (rank + 1) * s));
+                }
+            }
+            barrier.wait();
+            // phase 2 (writes only): overwrite own buffer in place
+            unsafe {
+                shared.region_mut(rank, 0, m * s).copy_from_slice(&incoming);
+            }
+        });
+        Ok(())
+    }
+
+    fn record(&self, rec: CommRecord) {
+        self.stats.record(rec);
+    }
+
+    fn stats(&self) -> CommStats {
+        self.stats.snapshot()
+    }
+
+    fn sim_time(&self) -> f64 {
+        self.stats.total_time()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev_bufs(m: usize, s: usize) -> Vec<Vec<f32>> {
+        (0..m)
+            .map(|k| {
+                let mut b = vec![0.0f32; m * s];
+                for (i, x) in b[k * s..(k + 1) * s].iter_mut().enumerate() {
+                    *x = (k * 100 + i) as f32;
+                }
+                b
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_all_gather_replicates_all_shards() {
+        for m in [1usize, 2, 3, 4, 8] {
+            let s = 5;
+            let mut bufs = dev_bufs(m, s);
+            ThreadedComm::with_min_parallel_elems(0).all_gather(&mut bufs, s).unwrap();
+            for buf in &bufs {
+                for k in 0..m {
+                    for i in 0..s {
+                        assert_eq!(buf[k * s + i], (k * 100 + i) as f32);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_matches_serial_bitwise() {
+        let (m, s) = (4, 7);
+        // magnitudes spread over many exponents so a different summation
+        // order would actually change the bits
+        let mk = |seed: u64| -> Vec<Vec<f32>> {
+            let mut rng = crate::util::Rng::new(seed);
+            (0..m)
+                .map(|_| {
+                    (0..m * s)
+                        .map(|_| rng.normal_f32() * 10f32.powi(rng.below(7) as i32 - 3))
+                        .collect()
+                })
+                .collect()
+        };
+        let mut a = mk(9);
+        let mut b = a.clone();
+        comm::reduce_scatter(&mut a, s, 1.0 / m as f32).unwrap();
+        ThreadedComm::with_min_parallel_elems(0).reduce_scatter(&mut b, s, 1.0 / m as f32).unwrap();
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn all_reduce_ragged_length() {
+        // n = 10 not divisible by m = 4: ranges 3/3/2/2
+        let mut bufs: Vec<Vec<f32>> = (0..4).map(|k| vec![(k + 1) as f32; 10]).collect();
+        ThreadedComm::with_min_parallel_elems(0).all_reduce(&mut bufs, 0.25).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|&x| (x - 2.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn broadcast_and_all_to_all() {
+        let c = ThreadedComm::with_min_parallel_elems(0);
+        let mut bufs = vec![vec![0.0f32; 4], vec![7.0f32; 4], vec![0.0f32; 4]];
+        c.broadcast(&mut bufs, 1).unwrap();
+        for b in &bufs {
+            assert!(b.iter().all(|&x| x == 7.0));
+        }
+        let (m, s) = (3, 2);
+        let mut bufs: Vec<Vec<f32>> = (0..m)
+            .map(|k| (0..m * s).map(|i| (k * 10 + i / s) as f32).collect())
+            .collect();
+        c.all_to_all(&mut bufs, s).unwrap();
+        for (j, buf) in bufs.iter().enumerate() {
+            for k in 0..m {
+                assert_eq!(buf[k * s], (k * 10 + j) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn validation_matches_serial() {
+        let c = ThreadedComm::with_min_parallel_elems(0);
+        let mut bufs = vec![vec![0.0f32; 4]; 2];
+        assert!(c.all_gather(&mut bufs, 4).is_err());
+        assert!(c.broadcast(&mut bufs, 5).is_err());
+        let mut uneven = vec![vec![0.0f32; 4], vec![0.0f32; 5]];
+        assert!(c.all_reduce(&mut uneven, 1.0).is_err());
+    }
+}

@@ -16,6 +16,8 @@
 
 pub mod cost;
 
+use std::sync::Mutex;
+
 use anyhow::{bail, Result};
 
 pub use cost::{CopyKind, Fabric};
@@ -42,6 +44,12 @@ impl CommStats {
         self.records.push(r);
     }
 
+    /// Append another stats block (rank-order merging of per-rank local
+    /// stats; see [`SharedStats`]).
+    pub fn merge(&mut self, other: CommStats) {
+        self.records.extend(other.records);
+    }
+
     pub fn total_time(&self) -> f64 {
         self.records.iter().map(|r| r.sim_time).sum()
     }
@@ -63,6 +71,42 @@ impl CommStats {
             .filter(|r| r.op == op)
             .map(|r| r.sim_time)
             .sum()
+    }
+}
+
+/// Thread-safe [`CommStats`] aggregation for the cluster runtime.
+///
+/// The serial engine used to thread `&mut CommStats` through every call
+/// site; the SPMD runtime records from many rank threads instead. Each
+/// rank accumulates into a local `CommStats` and merges it here at the
+/// join barrier (rank order, so the merged record stream is deterministic
+/// across runs and backends), while god-view callers record directly.
+#[derive(Debug, Default)]
+pub struct SharedStats {
+    inner: Mutex<CommStats>,
+}
+
+impl SharedStats {
+    pub fn record(&self, r: CommRecord) {
+        self.inner.lock().unwrap().push(r);
+    }
+
+    /// Merge a rank's local stats (called holding the join barrier).
+    pub fn merge(&self, other: CommStats) {
+        self.inner.lock().unwrap().merge(other);
+    }
+
+    pub fn snapshot(&self) -> CommStats {
+        self.inner.lock().unwrap().clone()
+    }
+
+    /// Total simulated time without cloning the record history.
+    pub fn total_time(&self) -> f64 {
+        self.inner.lock().unwrap().total_time()
+    }
+
+    pub fn reset(&self) {
+        self.inner.lock().unwrap().records.clear();
     }
 }
 
@@ -294,5 +338,30 @@ mod tests {
         assert_eq!(st.total_bytes(), 600);
         assert_eq!(st.total_time(), 0.75);
         assert_eq!(st.count("all_gather"), 1);
+    }
+
+    #[test]
+    fn shared_stats_merge_from_threads() {
+        let shared = SharedStats::default();
+        std::thread::scope(|s| {
+            for rank in 0..4u64 {
+                let shared = &shared;
+                s.spawn(move || {
+                    let mut local = CommStats::default();
+                    local.push(CommRecord {
+                        op: "all_gather",
+                        bytes_per_rank: 10 * (rank + 1),
+                        group_size: 4,
+                        sim_time: 0.1,
+                    });
+                    shared.merge(local);
+                });
+            }
+        });
+        let snap = shared.snapshot();
+        assert_eq!(snap.count("all_gather"), 4);
+        assert_eq!(snap.total_bytes(), (10 + 20 + 30 + 40) * 4);
+        shared.reset();
+        assert_eq!(shared.snapshot().records.len(), 0);
     }
 }

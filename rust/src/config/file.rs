@@ -7,7 +7,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::{OptimKind, ParallelConfig, System, TrainConfig};
+use super::{CommBackend, OptimKind, ParallelConfig, System, TrainConfig};
 
 #[derive(Debug, Default, Clone)]
 pub struct ConfigFile {
@@ -76,6 +76,11 @@ impl ConfigFile {
                 .ok_or_else(|| anyhow::anyhow!("unknown optimizer '{s}'"))?,
             None => d.optimizer,
         };
+        let backend = match self.get("run.backend") {
+            Some(s) => CommBackend::parse(s)
+                .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?,
+            None => d.backend,
+        };
         Ok(TrainConfig {
             model: self.str_or("model.preset", &d.model),
             parallel: ParallelConfig {
@@ -91,6 +96,7 @@ impl ConfigFile {
             lr: self.f64_or("run.lr", d.lr),
             seed: self.usize_or("run.seed", 0) as u64,
             granularity: self.usize_or("run.granularity", 1) as u64,
+            backend,
         })
     }
 }
@@ -112,6 +118,7 @@ replicas = 2
 [run]
 system = "vescale"
 optimizer = "adam8bit"
+backend = "threaded"
 steps = 100
 lr = 0.0003
 "#;
@@ -133,6 +140,7 @@ lr = 0.0003
         assert_eq!(tc.optimizer, OptimKind::Adam8bit);
         assert_eq!(tc.system, System::VeScale);
         assert_eq!(tc.steps, 100);
+        assert_eq!(tc.backend, CommBackend::Threaded);
     }
 
     #[test]

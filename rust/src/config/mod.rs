@@ -12,6 +12,7 @@
 pub mod file;
 pub mod presets;
 
+pub use crate::cluster::CommBackend;
 pub use presets::{ModelPreset, MoeInfo, ParamDecl, ParamGroup};
 
 /// Which FSDP implementation to run (paper §6 baselines).
@@ -147,6 +148,8 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Sharding granularity override (elements; 0 = element-wise).
     pub granularity: u64,
+    /// Cluster backend executing collectives + per-rank compute.
+    pub backend: CommBackend,
 }
 
 impl Default for TrainConfig {
@@ -162,6 +165,7 @@ impl Default for TrainConfig {
             lr: 3e-4,
             seed: 0,
             granularity: 1,
+            backend: CommBackend::Serial,
         }
     }
 }

@@ -22,7 +22,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::comm::{self, CommRecord, CommStats, Fabric};
+use crate::cluster::Communicator;
+use crate::comm::{CommRecord, Fabric};
 use crate::mesh::DeviceMesh;
 use crate::planner::Layout;
 
@@ -142,18 +143,19 @@ impl DBuffer {
     /// every rank's persistent full buffer. Zero-copy on both ends: the
     /// shard region of `full` is first filled from `shards` (simulating
     /// that they alias; one memcpy models the aliased write) and the
-    /// collective runs on `full` directly.
-    pub fn all_gather_params(&mut self, fabric: &Fabric, stats: &mut CommStats) -> Result<()> {
+    /// collective runs on `full` directly, through whichever cluster
+    /// backend `comm` selects.
+    pub fn all_gather_params(&mut self, comm: &dyn Communicator, fabric: &Fabric) -> Result<()> {
         let m = self.num_devices();
         let s = self.shard_elems();
         for rank in 0..m {
             let shard = self.shards[rank].clone();
             self.full[rank][rank * s..(rank + 1) * s].copy_from_slice(&shard);
         }
-        comm::all_gather(&mut self.full, s)?;
+        comm.all_gather(&mut self.full, s)?;
         self.gathered = true;
         let aligned = fabric.is_aligned(0, self.shard_bytes());
-        stats.push(CommRecord {
+        comm.record(CommRecord {
             op: "all_gather",
             bytes_per_rank: self.shard_bytes(),
             group_size: m,
@@ -177,8 +179,8 @@ impl DBuffer {
         &mut self,
         grads: &mut [Vec<f32>],
         mesh: &DeviceMesh,
+        comm: &dyn Communicator,
         fabric: &Fabric,
-        stats: &mut CommStats,
     ) -> Result<()> {
         let m = self.num_devices();
         let s = self.shard_elems();
@@ -187,12 +189,12 @@ impl DBuffer {
         }
         let replicas = mesh.dim_size("replica").unwrap_or(1);
         let scale = 1.0 / (m * replicas) as f32;
-        comm::reduce_scatter(grads, s, scale)?;
+        comm.reduce_scatter(grads, s, scale)?;
         for rank in 0..m {
             self.shards[rank].copy_from_slice(&grads[rank][rank * s..(rank + 1) * s]);
         }
         let aligned = fabric.is_aligned(0, self.shard_bytes());
-        stats.push(CommRecord {
+        comm.record(CommRecord {
             op: "reduce_scatter",
             bytes_per_rank: self.shard_bytes(),
             group_size: m,
@@ -208,7 +210,7 @@ impl DBuffer {
                     *x *= replicas as f32;
                 }
             }
-            stats.push(CommRecord {
+            comm.record(CommRecord {
                 op: "all_reduce",
                 bytes_per_rank: self.shard_bytes(),
                 group_size: replicas,
@@ -241,6 +243,7 @@ impl DBuffer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{SerialComm, ThreadedComm};
     use crate::planner::{plan, TensorDecl};
     use crate::util::Rng;
 
@@ -275,15 +278,33 @@ mod tests {
     fn gather_materializes_full_tensors() {
         let (mut db, datas) = demo_buffer(4);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        db.all_gather_params(&fabric, &mut stats).unwrap();
+        let comm = SerialComm::new();
+        db.all_gather_params(&comm, &fabric).unwrap();
         for rank in 0..4 {
             for (i, d) in datas.iter().enumerate() {
                 assert_eq!(db.full_view(rank, i), &d[..], "rank {rank} tensor {i}");
             }
         }
+        let stats = comm.stats();
         assert_eq!(stats.count("all_gather"), 1);
         assert!(stats.total_time() > 0.0);
+    }
+
+    #[test]
+    fn gather_identical_across_backends() {
+        let (mut serial_db, _) = demo_buffer(4);
+        let (mut thr_db, _) = demo_buffer(4);
+        let fabric = Fabric::h800();
+        serial_db.all_gather_params(&SerialComm::new(), &fabric).unwrap();
+        // threshold 0 forces the rendezvous ring even on this small buffer
+        thr_db
+            .all_gather_params(&ThreadedComm::with_min_parallel_elems(0), &fabric)
+            .unwrap();
+        for rank in 0..4 {
+            for (a, b) in serial_db.full[rank].iter().zip(&thr_db.full[rank]) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]
@@ -323,15 +344,15 @@ mod tests {
             (0..m).map(|r| vec![(r + 1) as f32; n]).collect();
         let mesh = DeviceMesh::flat("fsdp", m);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        db.reduce_gradients(&mut grads, &mesh, &fabric, &mut stats).unwrap();
+        let comm = SerialComm::new();
+        db.reduce_gradients(&mut grads, &mesh, &comm, &fabric).unwrap();
         for rank in 0..m {
             for &g in &db.shards[rank] {
                 assert!((g - 2.5).abs() < 1e-6);
             }
         }
-        assert_eq!(stats.count("reduce_scatter"), 1);
-        assert_eq!(stats.count("all_reduce"), 0);
+        assert_eq!(comm.stats().count("reduce_scatter"), 1);
+        assert_eq!(comm.stats().count("all_reduce"), 0);
     }
 
     #[test]
@@ -341,9 +362,9 @@ mod tests {
         let mut grads: Vec<Vec<f32>> = (0..4).map(|_| vec![1.0; n]).collect();
         let mesh = DeviceMesh::new(&[("replica", 2), ("fsdp", 4)]).unwrap();
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        db.reduce_gradients(&mut grads, &mesh, &fabric, &mut stats).unwrap();
-        assert_eq!(stats.count("all_reduce"), 1);
+        let comm = SerialComm::new();
+        db.reduce_gradients(&mut grads, &mesh, &comm, &fabric).unwrap();
+        assert_eq!(comm.stats().count("all_reduce"), 1);
         // value: mean over fsdp(=1.0) — replica AR preserves the mean
         for rank in 0..4 {
             for &g in &db.shards[rank] {
@@ -356,11 +377,11 @@ mod tests {
     fn release_and_regather() {
         let (mut db, datas) = demo_buffer(2);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        db.all_gather_params(&fabric, &mut stats).unwrap();
+        let comm = SerialComm::new();
+        db.all_gather_params(&comm, &fabric).unwrap();
         db.release_full();
         assert!(!db.gathered);
-        db.all_gather_params(&fabric, &mut stats).unwrap();
+        db.all_gather_params(&comm, &fabric).unwrap();
         assert_eq!(db.full_view(0, 0), &datas[0][..]);
     }
 

@@ -16,7 +16,8 @@
 
 use anyhow::{bail, Result};
 
-use crate::comm::{CommRecord, CommStats, Fabric};
+use crate::cluster::Communicator;
+use crate::comm::{CommRecord, Fabric};
 use crate::placement::{Placement, RaggedSpec};
 
 #[derive(Debug, Clone)]
@@ -108,13 +109,17 @@ impl DTensor {
         }
     }
 
-    /// Redistribute to a new placement, moving real data and accounting
-    /// the implied collective.
+    /// Redistribute to a new placement, moving real data through the
+    /// cluster backend and accounting the implied collective. Pending-sum
+    /// (`Partial`) conversions execute as genuine collectives on `comm`,
+    /// so the threaded backend reduces them with one thread per rank;
+    /// ragged respecs are owner-change copies (order-independent), so
+    /// every backend produces bit-identical locals.
     pub fn redistribute(
         &self,
         to: Placement,
+        comm: &dyn Communicator,
         fabric: &Fabric,
-        stats: &mut CommStats,
     ) -> Result<DTensor> {
         let m = self.num_ranks();
         let numel = self.numel();
@@ -130,7 +135,7 @@ impl DTensor {
                 // cost: each element moving ranks crosses the wire once;
                 // worst case (gather to root) ~ AllGather of others' shards
                 let moved = self.moved_bytes(spec2, numel);
-                stats.push(CommRecord {
+                comm.record(CommRecord {
                     op: "redistribute",
                     bytes_per_rank: moved / m as u64,
                     group_size: m,
@@ -142,7 +147,7 @@ impl DTensor {
             // ---- RaggedShard -> Replicate (AllGather) ----
             (Placement::RaggedShard(spec), Placement::Replicate) => {
                 let full = self.to_full();
-                stats.push(CommRecord {
+                comm.record(CommRecord {
                     op: "all_gather",
                     bytes_per_rank: spec.max_local_numel(numel) * 4,
                     group_size: m,
@@ -159,9 +164,11 @@ impl DTensor {
             // ---- Partial -> RaggedShard (ReduceScatter) ----
             (Placement::Partial, Placement::RaggedShard(spec2)) => {
                 spec2.validate(numel)?;
-                let full = self.to_full();
-                let out = DTensor::ragged_from_full(&self.global_shape, &full, spec2.clone())?;
-                stats.push(CommRecord {
+                let mut bufs = self.locals.clone();
+                comm.all_reduce(&mut bufs, 1.0)?;
+                let out =
+                    DTensor::ragged_from_full(&self.global_shape, &bufs[0], spec2.clone())?;
+                comm.record(CommRecord {
                     op: "reduce_scatter",
                     bytes_per_rank: bytes / m as u64,
                     group_size: m,
@@ -172,14 +179,19 @@ impl DTensor {
 
             // ---- Partial -> Replicate (AllReduce) ----
             (Placement::Partial, Placement::Replicate) => {
-                let full = self.to_full();
-                stats.push(CommRecord {
+                let mut bufs = self.locals.clone();
+                comm.all_reduce(&mut bufs, 1.0)?;
+                comm.record(CommRecord {
                     op: "all_reduce",
                     bytes_per_rank: bytes / m as u64,
                     group_size: m,
                     sim_time: fabric.all_reduce_time(m, bytes / m as u64, true),
                 });
-                Ok(DTensor::replicate(&self.global_shape, &full, m))
+                Ok(DTensor {
+                    global_shape: self.global_shape.clone(),
+                    placement: Placement::Replicate,
+                    locals: bufs,
+                })
             }
 
             (from, to) => bail!("unsupported redistribute {from:?} -> {to:?}"),
@@ -207,6 +219,7 @@ impl DTensor {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::{SerialComm, ThreadedComm};
     use crate::util::Rng;
 
     fn randvec(n: usize, seed: u64) -> Vec<f32> {
@@ -229,16 +242,16 @@ mod tests {
         let spec = RaggedSpec::balanced(96, 8, 4);
         let dt = DTensor::ragged_from_full(&[96], &data, spec).unwrap();
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let root_spec = RaggedSpec::on_root(96, 8, 4, 2);
         let rooted = dt
-            .redistribute(Placement::RaggedShard(root_spec), &fabric, &mut stats)
+            .redistribute(Placement::RaggedShard(root_spec), &comm, &fabric)
             .unwrap();
         // only root holds data -> SPMD no-op on other ranks
         assert_eq!(rooted.locals[2].len(), 96);
         assert_eq!(rooted.locals[0].len(), 0);
         assert_eq!(rooted.locals[2], data);
-        assert_eq!(stats.count("redistribute"), 1);
+        assert_eq!(comm.stats().count("redistribute"), 1);
     }
 
     #[test]
@@ -247,16 +260,16 @@ mod tests {
         let spec = RaggedSpec::balanced(64, 4, 4);
         let dt = DTensor::ragged_from_full(&[64], &data, spec.clone()).unwrap();
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let rooted = dt
             .redistribute(
                 Placement::RaggedShard(RaggedSpec::on_root(64, 4, 4, 0)),
+                &comm,
                 &fabric,
-                &mut stats,
             )
             .unwrap();
         let back = rooted
-            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .redistribute(Placement::RaggedShard(spec), &comm, &fabric)
             .unwrap();
         assert_eq!(back.to_full(), data);
     }
@@ -267,13 +280,13 @@ mod tests {
         let terms: Vec<Vec<f32>> = (0..3).map(|_| vec![1.0f32; 30]).collect();
         let dt = DTensor::partial(&[30], terms);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let spec = RaggedSpec::balanced(30, 5, 3);
         let out = dt
-            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .redistribute(Placement::RaggedShard(spec), &comm, &fabric)
             .unwrap();
         assert!(out.to_full().iter().all(|&x| (x - 3.0).abs() < 1e-6));
-        assert_eq!(stats.count("reduce_scatter"), 1);
+        assert_eq!(comm.stats().count("reduce_scatter"), 1);
     }
 
     #[test]
@@ -281,9 +294,21 @@ mod tests {
         let terms: Vec<Vec<f32>> = (0..4).map(|k| vec![k as f32; 8]).collect();
         let dt = DTensor::partial(&[8], terms);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        let out = dt.redistribute(Placement::Replicate, &fabric, &mut stats).unwrap();
+        let comm = SerialComm::new();
+        let out = dt.redistribute(Placement::Replicate, &comm, &fabric).unwrap();
         assert!(out.locals.iter().all(|l| l.iter().all(|&x| x == 6.0)));
+        // the threaded backend reduces to identical bits (threshold 0
+        // forces the rendezvous all_reduce on this small tensor)
+        let tout = dt
+            .redistribute(
+                Placement::Replicate,
+                &ThreadedComm::with_min_parallel_elems(0),
+                &fabric,
+            )
+            .unwrap();
+        for (a, b) in out.locals.iter().flatten().zip(tout.locals.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]
@@ -291,21 +316,21 @@ mod tests {
         let data = randvec(48, 4);
         let dt = DTensor::replicate(&[48], &data, 4);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let spec = RaggedSpec::balanced(48, 6, 4);
         let out = dt
-            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .redistribute(Placement::RaggedShard(spec), &comm, &fabric)
             .unwrap();
         assert_eq!(out.to_full(), data);
-        assert_eq!(stats.records.len(), 0); // no comm
+        assert_eq!(comm.stats().records.len(), 0); // no comm
     }
 
     #[test]
     fn unsupported_conversion_errors() {
         let dt = DTensor::replicate(&[8], &randvec(8, 5), 2);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
-        assert!(dt.redistribute(Placement::Partial, &fabric, &mut stats).is_err());
+        let comm = SerialComm::new();
+        assert!(dt.redistribute(Placement::Partial, &comm, &fabric).is_err());
     }
 
     #[test]
@@ -314,11 +339,11 @@ mod tests {
         let spec = RaggedSpec::balanced(32, 4, 2);
         let dt = DTensor::ragged_from_full(&[32], &data, spec.clone()).unwrap();
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let same = dt
-            .redistribute(Placement::RaggedShard(spec), &fabric, &mut stats)
+            .redistribute(Placement::RaggedShard(spec), &comm, &fabric)
             .unwrap();
         assert_eq!(same.to_full(), data);
-        assert_eq!(stats.records.len(), 0);
+        assert_eq!(comm.stats().records.len(), 0);
     }
 }

@@ -16,9 +16,11 @@
 //! tiles) consumed by the planner.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::{Communicator, SerialComm};
 use crate::comm::{CommStats, Fabric};
 use crate::dbuffer::DBuffer;
 use crate::dtensor::DTensor;
@@ -81,7 +83,8 @@ pub struct Bucket {
 pub struct FsdpEngine {
     pub mesh: DeviceMesh,
     pub fabric: Fabric,
-    pub stats: CommStats,
+    /// Cluster backend every collective (and its stats) goes through.
+    pub comm: Arc<dyn Communicator>,
     pub buckets: Vec<Bucket>,
     /// name + shape per global parameter index.
     pub params: Vec<(String, Vec<usize>)>,
@@ -91,12 +94,25 @@ pub struct FsdpEngine {
 
 impl FsdpEngine {
     /// `group_of[i]` assigns parameter i to a bucket (FSDP wrapping unit).
+    /// Collectives run on the serial backend; use [`FsdpEngine::new_with_comm`]
+    /// to select another.
     pub fn new(
         params: Vec<(String, Vec<usize>)>,
         group_of: &[usize],
         mesh: DeviceMesh,
         policy: &ShardingPolicy,
         fabric: Fabric,
+    ) -> Result<FsdpEngine> {
+        FsdpEngine::new_with_comm(params, group_of, mesh, policy, fabric, Arc::new(SerialComm::new()))
+    }
+
+    pub fn new_with_comm(
+        params: Vec<(String, Vec<usize>)>,
+        group_of: &[usize],
+        mesh: DeviceMesh,
+        policy: &ShardingPolicy,
+        fabric: Fabric,
+        comm: Arc<dyn Communicator>,
     ) -> Result<FsdpEngine> {
         if params.len() != group_of.len() {
             bail!("group_of length mismatch");
@@ -130,11 +146,17 @@ impl FsdpEngine {
                 param_ids: ids,
             });
         }
-        Ok(FsdpEngine { mesh, fabric, stats: CommStats::default(), buckets, params, locs, m })
+        Ok(FsdpEngine { mesh, fabric, comm, buckets, params, locs, m })
     }
 
     pub fn num_devices(&self) -> usize {
         self.m
+    }
+
+    /// Snapshot of the accumulated comm statistics (thread-safe; owned by
+    /// the cluster backend).
+    pub fn stats(&self) -> CommStats {
+        self.comm.stats()
     }
 
     /// Total padded elements per device (memory accounting).
@@ -167,7 +189,7 @@ impl FsdpEngine {
     /// AllGather every bucket (in-place, zero-copy views afterwards).
     pub fn gather_params(&mut self) -> Result<()> {
         for b in &mut self.buckets {
-            b.dbuffer.all_gather_params(&self.fabric, &mut self.stats)?;
+            b.dbuffer.all_gather_params(self.comm.as_ref(), &self.fabric)?;
         }
         Ok(())
     }
@@ -216,12 +238,12 @@ impl FsdpEngine {
                 }
             }
             let _ = b_idx;
-            crate::comm::reduce_scatter(&mut bufs, s, 1.0 / self.m as f32)?;
+            self.comm.reduce_scatter(&mut bufs, s, 1.0 / self.m as f32)?;
             for rank in 0..self.m {
                 bucket.grad_shards[rank].copy_from_slice(&bufs[rank][rank * s..(rank + 1) * s]);
             }
             let bytes = (s * 4) as u64;
-            self.stats.push(crate::comm::CommRecord {
+            self.comm.record(crate::comm::CommRecord {
                 op: "reduce_scatter",
                 bytes_per_rank: bytes,
                 group_size: self.m,
@@ -351,7 +373,7 @@ impl FsdpEngine {
                         &param,
                         &grad,
                         &self.fabric,
-                        &mut self.stats,
+                        self.comm.as_ref(),
                     )?;
                     // write updated shards back into the DBuffer
                     let bucket = &mut self.buckets[b_idx];

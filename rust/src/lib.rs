@@ -6,17 +6,36 @@
 //! * **L3 (this crate)** — the coordinator: RaggedShard placements, the
 //!   structure-aware planner (Algorithm 1), DBuffer, the FSDP engine, the
 //!   four baseline systems, optimizers (AdamW / SGD / 8-bit Adam / Muon),
-//!   a simulated multi-device cluster with real data movement plus an
-//!   analytic fabric cost model, and a PJRT runtime that executes the
-//!   AOT-compiled JAX/Pallas compute.
-//! * **L2** — `python/compile/model.py`: the transformer fwd/bwd.
+//!   and a simulated multi-device cluster with real data movement plus an
+//!   analytic fabric cost model.
+//! * **L2** — `python/compile/model.py`: the transformer fwd/bwd,
+//!   AOT-compiled to HLO artifacts; `runtime` executes them through PJRT
+//!   when built with `--features pjrt`, and otherwise runs the built-in
+//!   native Rust reference implementation of the same compute graph
+//!   (`runtime::native`), so the full train path works with no Python
+//!   and no artifacts.
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (block-wise quant,
 //!   fused AdamW, Newton-Schulz, MXU-tiled matmul).
 //!
-//! Python runs once at build time (`make artifacts`); the request path is
-//! pure Rust + PJRT.
+//! ## Execution model
+//!
+//! The `cluster` module is the SPMD execution layer: a [`cluster::Communicator`]
+//! trait with two backends — `SerialComm` (single-thread loop collectives,
+//! the reference semantics) and `ThreadedComm` (one OS thread per rank,
+//! barrier-phased rendezvous collectives over shared buffers). The FSDP
+//! engine, DBuffer, DTensor redistribution, and both trainers are wired
+//! through the trait; `--backend serial|threaded` selects at run time and
+//! the two produce bit-identical results (reductions preserve the serial
+//! rank-order summation). Under the threaded backend, per-rank fwd/bwd
+//! compute also fans out across threads via `cluster::Cluster::run_spmd`.
+//!
+//! Timing is split in two: wall-clock speedup comes from the threaded
+//! runtime (see `benches/table3_backend_speedup.rs`), while the paper's
+//! H800 fabric numbers come from the analytic `comm::cost::Fabric` model,
+//! accumulated thread-safely in `comm::SharedStats`.
 
 pub mod checkpoint;
+pub mod cluster;
 pub mod comm;
 pub mod baselines;
 pub mod config;

@@ -2,6 +2,7 @@
 //!
 //!     vescale-fsdp train  [--config-file cfg.toml] [--model tiny] [--mesh 4]
 //!                         [--opt adamw|adam8bit|muon|sgd] [--steps 50]
+//!                         [--backend serial|threaded]
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
 //!     vescale-fsdp sim    [--preset llama70b] [--system vescale] [--fsdp 128]
 //!     vescale-fsdp bench  (points at `cargo bench`)
@@ -9,6 +10,7 @@
 use anyhow::{anyhow, Result};
 
 use vescale_fsdp::baselines;
+use vescale_fsdp::cluster::CommBackend;
 use vescale_fsdp::comm::Fabric;
 use vescale_fsdp::config::file::ConfigFile;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig, System, TrainConfig};
@@ -51,6 +53,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => base.optimizer,
     };
     let lr = args.f64_or("lr", base.lr) as f32;
+    let backend = match args.get("backend") {
+        Some(s) => CommBackend::parse(s).ok_or_else(|| anyhow!("unknown --backend {s}"))?,
+        None => base.backend,
+    };
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -59,15 +65,23 @@ fn cmd_train(args: &Args) -> Result<()> {
         ShardingPolicy::element_wise()
     };
     let hyper = AdamHyper { lr, ..AdamHyper::default() };
-    println!("train: model={model} mesh={mesh} opt={} steps={steps}", opt.name());
-    let mut trainer = Trainer::new(&model, mesh, opt, &policy, hyper, base.seed)?;
+    println!(
+        "train: model={model} mesh={mesh} opt={} steps={steps} backend={}",
+        opt.name(),
+        backend.name()
+    );
+    let mut trainer = Trainer::with_backend(&model, mesh, opt, &policy, hyper, base.seed, backend)?;
+    println!("compute runtime: {}", trainer.runtime.backend_name());
     for step in 1..=steps {
         let loss = trainer.train_step()?;
         if step % 10 == 0 || step == 1 {
             println!("step {step:>4}  loss {loss:.4}");
         }
     }
-    let path = save_log(&format!("train_{model}_{}", opt.name()), &trainer.log)?;
+    let path = save_log(
+        &format!("train_{model}_{}_{}", opt.name(), backend.name()),
+        &trainer.log,
+    )?;
     println!("loss log: {}", path.display());
     Ok(())
 }

@@ -15,7 +15,8 @@ use std::collections::HashMap;
 
 use anyhow::Result;
 
-use crate::comm::{CommStats, Fabric};
+use crate::cluster::Communicator;
+use crate::comm::Fabric;
 use crate::dtensor::DTensor;
 use crate::placement::{Placement, RaggedSpec};
 use crate::tensor::HostTensor;
@@ -94,7 +95,7 @@ impl Muon {
         param: &DTensor,
         grad: &DTensor,
         fabric: &Fabric,
-        stats: &mut CommStats,
+        comm: &dyn Communicator,
     ) -> Result<DTensor> {
         let spec = param
             .placement
@@ -133,7 +134,7 @@ impl Muon {
         // ---- unshard to root via redistribute (Alg 2 lines 5-8) ----
         let root = self.select_root(m);
         let root_spec = RaggedSpec::on_root(numel, spec.granularity, m, root);
-        let gathered = u.redistribute(Placement::RaggedShard(root_spec), fabric, stats)?;
+        let gathered = u.redistribute(Placement::RaggedShard(root_spec), comm, fabric)?;
 
         // ---- Newton-Schulz on the root's full tensor (lines 9-10) ----
         let (r, c) = shape2;
@@ -157,7 +158,7 @@ impl Muon {
                 .map(|k| if k == root { orth.as_f32().to_vec() } else { Vec::new() })
                 .collect(),
         };
-        let o = o_root.redistribute(Placement::RaggedShard(spec.clone()), fabric, stats)?;
+        let o = o_root.redistribute(Placement::RaggedShard(spec.clone()), comm, fabric)?;
 
         // ---- apply: w <- w - lr * (o + wd * w), sharded (line 13) ----
         let mut new_locals = Vec::with_capacity(m);
@@ -186,6 +187,7 @@ impl Muon {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::SerialComm;
     use crate::util::Rng;
 
     fn rand_mat(r: usize, c: usize, seed: u64) -> HostTensor {
@@ -242,9 +244,9 @@ mod tests {
             let p = DTensor::ragged_from_full(&[r, c], pdata.as_f32(), spec.clone()).unwrap();
             let g = DTensor::ragged_from_full(&[r, c], gdata.as_f32(), spec).unwrap();
             let mut muon = Muon::new(0.02, 0.95, 0.0);
-            let mut stats = CommStats::default();
+            let comm = SerialComm::new();
             let out = muon
-                .step_matrix("w", (r, c), &p, &g, &fabric, &mut stats)
+                .step_matrix("w", (r, c), &p, &g, &fabric, &comm)
                 .unwrap();
             out.to_full()
         };
@@ -262,7 +264,7 @@ mod tests {
         let spec = RaggedSpec::balanced(numel, 8, 2);
         let fabric = Fabric::h800();
         let mut muon = Muon::new(0.1, 0.9, 0.0);
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let mut p = DTensor::ragged_from_full(
             &[r, c],
             rand_mat(r, c, 4).as_f32(),
@@ -270,10 +272,10 @@ mod tests {
         )
         .unwrap();
         let g = DTensor::ragged_from_full(&[r, c], rand_mat(r, c, 5).as_f32(), spec).unwrap();
-        let p1 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        let p1 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &comm).unwrap();
         let before = muon.state_bytes();
         p = p1;
-        let _p2 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        let _p2 = muon.step_matrix("w", (r, c), &p, &g, &fabric, &comm).unwrap();
         assert_eq!(muon.state_bytes(), before);
         assert!(before > 0);
     }
@@ -291,12 +293,12 @@ mod tests {
         let (r, c) = (16, 16);
         let spec = RaggedSpec::balanced(256, 16, 2);
         let fabric = Fabric::h800();
-        let mut stats = CommStats::default();
+        let comm = SerialComm::new();
         let p0 = rand_mat(r, c, 6);
         let p = DTensor::ragged_from_full(&[r, c], p0.as_f32(), spec.clone()).unwrap();
         let g = DTensor::ragged_from_full(&[r, c], rand_mat(r, c, 7).as_f32(), spec).unwrap();
         let mut muon = Muon::new(1.0, 0.0, 0.0);
-        let out = muon.step_matrix("w", (r, c), &p, &g, &fabric, &mut stats).unwrap();
+        let out = muon.step_matrix("w", (r, c), &p, &g, &fabric, &comm).unwrap();
         let delta: Vec<f32> = out
             .to_full()
             .iter()

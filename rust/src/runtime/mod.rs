@@ -1,13 +1,26 @@
-//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
-//! executes them from the Rust hot path. Python never runs here.
+//! Compute runtime: executes the L2 train step per simulated device.
 //!
-//! Interchange is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see `python/compile/aot.py` and DESIGN.md).
+//! Two interchangeable backends behind one [`Engine`]:
 //!
-//! The runtime compiles each artifact once (`Engine::exec` caches the
-//! loaded executable) and exposes typed wrappers for the model train
-//! step, the fused optimizer chunks, and Newton-Schulz.
+//! * **PJRT** (`--features pjrt` + `make artifacts`) — loads the AOT
+//!   artifacts (`artifacts/*.hlo.txt`) and executes them through
+//!   `xla_extension`; Python never runs on the request path. Interchange
+//!   is HLO *text* — jax >= 0.5 serialized protos carry 64-bit
+//!   instruction ids that xla_extension 0.5.1 rejects; the text parser
+//!   reassigns ids (see `python/compile/aot.py`). Executables compile
+//!   once and are cached.
+//! * **Native** (default) — the pure-Rust reference implementation of the
+//!   same compute graph ([`native`]), used when the `xla` bindings are
+//!   unavailable (they are not in the offline crate universe) or the
+//!   artifacts have not been built. Because every rank's step is a pure
+//!   function, the native path is what the threaded SPMD cluster runtime
+//!   parallelizes across rank threads.
+//!
+//! The manifest (model configs + parameter ABI) comes from
+//! `artifacts/manifest.json` when present, otherwise from the built-in
+//! mirror of `python/compile/model.py::CONFIGS`.
+
+pub mod native;
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::{Path, PathBuf};
@@ -16,7 +29,7 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
 
-/// Parsed `artifacts/manifest.json`.
+/// Parsed `artifacts/manifest.json` (or the built-in native manifest).
 #[derive(Debug, Clone)]
 pub struct Manifest {
     pub chunk: usize,
@@ -45,6 +58,34 @@ impl ModelCfg {
             .iter()
             .map(|(_, s)| s.iter().map(|&d| d as u64).product::<u64>())
             .sum()
+    }
+
+    /// Mirror of `python/compile/model.py::param_specs` — the canonical
+    /// (name, shape) ABI both layers agree on.
+    pub fn with_abi(
+        vocab: usize,
+        d_model: usize,
+        n_layers: usize,
+        n_heads: usize,
+        d_ff: usize,
+        seq: usize,
+        batch: usize,
+    ) -> ModelCfg {
+        let mut params = vec![("embed.weight".to_string(), vec![vocab, d_model])];
+        for i in 0..n_layers {
+            let p = format!("layers.{i}");
+            params.push((format!("{p}.ln1.scale"), vec![d_model]));
+            params.push((format!("{p}.attn.wq"), vec![d_model, d_model]));
+            params.push((format!("{p}.attn.wk"), vec![d_model, d_model]));
+            params.push((format!("{p}.attn.wv"), vec![d_model, d_model]));
+            params.push((format!("{p}.attn.wo"), vec![d_model, d_model]));
+            params.push((format!("{p}.ln2.scale"), vec![d_model]));
+            params.push((format!("{p}.mlp.w1"), vec![d_model, d_ff]));
+            params.push((format!("{p}.mlp.w2"), vec![d_ff, d_model]));
+        }
+        params.push(("final_ln.scale".to_string(), vec![d_model]));
+        params.push(("head.weight".to_string(), vec![d_model, vocab]));
+        ModelCfg { vocab, d_model, n_layers, n_heads, d_ff, seq, batch, params }
     }
 }
 
@@ -119,6 +160,25 @@ impl Manifest {
         })
     }
 
+    /// Built-in manifest for the native backend: same model configs as
+    /// `python/compile/model.py::CONFIGS`, no artifacts.
+    pub fn builtin() -> Manifest {
+        let mut configs = BTreeMap::new();
+        configs.insert("tiny".to_string(), ModelCfg::with_abi(512, 128, 2, 4, 512, 64, 4));
+        configs.insert("small".to_string(), ModelCfg::with_abi(2048, 256, 4, 4, 1024, 128, 4));
+        configs.insert(
+            "mid100m".to_string(),
+            ModelCfg::with_abi(32768, 768, 12, 12, 3072, 256, 2),
+        );
+        Manifest {
+            chunk: 65536,
+            qblock: 1024,
+            hyper_len: 6,
+            configs,
+            artifacts: Vec::new(),
+        }
+    }
+
     pub fn artifact(&self, name: &str) -> Option<&ArtifactSig> {
         self.artifacts.iter().find(|a| a.name == name)
     }
@@ -130,6 +190,11 @@ pub enum In<'a> {
     I32(&'a [i32], Vec<i64>),
 }
 
+// The `pjrt` feature requires the `xla` bindings, which are NOT declared
+// in Cargo.toml (absent from the offline crate universe). Unresolved
+// `xla` imports below mean: vendor the xla crate and add it under
+// [dependencies] before building with --features pjrt.
+#[cfg(feature = "pjrt")]
 impl<'a> In<'a> {
     fn literal(&self) -> Result<xla::Literal> {
         Ok(match self {
@@ -139,27 +204,66 @@ impl<'a> In<'a> {
     }
 }
 
-pub struct Engine {
+#[cfg(feature = "pjrt")]
+struct PjrtState {
     client: xla::PjRtClient,
-    pub manifest: Manifest,
-    dir: PathBuf,
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
-    /// Executions per artifact (perf accounting).
+}
+
+enum Inner {
+    /// Pure-Rust reference compute (src/runtime/native.rs).
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(PjrtState),
+}
+
+pub struct Engine {
+    pub manifest: Manifest,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    dir: PathBuf,
+    inner: Inner,
+    /// Executions per artifact / native kernel (perf accounting).
     pub exec_counts: HashMap<String, u64>,
 }
 
 impl Engine {
-    /// Load the artifact directory (default `artifacts/` at the repo root).
+    /// Whether this build can execute PJRT artifacts at all.
+    pub fn pjrt_enabled() -> bool {
+        cfg!(feature = "pjrt")
+    }
+
+    /// Load the artifact directory (default `artifacts/` at the crate
+    /// root). Falls back to the native backend — with the on-disk
+    /// manifest if present, the built-in one otherwise — whenever PJRT is
+    /// unavailable.
     pub fn load(dir: &Path) -> Result<Engine> {
-        let text = std::fs::read_to_string(dir.join("manifest.json"))
-            .with_context(|| format!("reading manifest in {dir:?} — run `make artifacts`"))?;
-        let manifest = Manifest::parse(&text)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        let manifest_path = dir.join("manifest.json");
+        #[cfg(feature = "pjrt")]
+        {
+            if manifest_path.exists() {
+                let text = std::fs::read_to_string(&manifest_path)
+                    .map_err(|e| anyhow!("reading manifest in {dir:?}: {e}"))?;
+                let manifest = Manifest::parse(&text)?;
+                let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+                return Ok(Engine {
+                    manifest,
+                    dir: dir.to_path_buf(),
+                    inner: Inner::Pjrt(PjrtState { client, cache: HashMap::new() }),
+                    exec_counts: HashMap::new(),
+                });
+            }
+        }
+        let manifest = if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading manifest in {dir:?}"))?;
+            Manifest::parse(&text)?
+        } else {
+            Manifest::builtin()
+        };
         Ok(Engine {
-            client,
             manifest,
             dir: dir.to_path_buf(),
-            cache: HashMap::new(),
+            inner: Inner::Native,
             exec_counts: HashMap::new(),
         })
     }
@@ -173,55 +277,93 @@ impl Engine {
         Engine::load(&Engine::default_dir())
     }
 
-    fn compile(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
-        if !self.cache.contains_key(name) {
-            let sig = self
-                .manifest
-                .artifact(name)
-                .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
-                .clone();
-            let path = self.dir.join(&sig.file);
+    /// True when compute runs through the native Rust implementation
+    /// (the path the threaded cluster backend parallelizes).
+    pub fn is_native(&self) -> bool {
+        matches!(self.inner, Inner::Native)
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self.inner {
+            Inner::Native => "native",
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => "pjrt",
+        }
+    }
+
+    fn count(&mut self, name: &str) {
+        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn exec_pjrt(&mut self, name: &str, inputs: &[In]) -> Result<Vec<Vec<f32>>> {
+        let sig = self
+            .manifest
+            .artifact(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let (n_inputs, n_outputs, file) = (sig.n_inputs, sig.n_outputs, sig.file.clone());
+        if inputs.len() != n_inputs {
+            bail!("{name}: {} inputs given, {n_inputs} expected", inputs.len());
+        }
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|i| i.literal()).collect::<Result<_>>()?;
+        let dir = self.dir.clone();
+        let Inner::Pjrt(st) = &mut self.inner else {
+            bail!("exec requires the PJRT backend");
+        };
+        if !st.cache.contains_key(name) {
+            let path = dir.join(&file);
             let proto = xla::HloModuleProto::from_text_file(
                 path.to_str().ok_or_else(|| anyhow!("bad path"))?,
             )
             .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
+            let exe = st
                 .client
                 .compile(&comp)
                 .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
-            self.cache.insert(name.to_string(), exe);
+            st.cache.insert(name.to_string(), exe);
         }
-        Ok(&self.cache[name])
-    }
-
-    /// Execute an artifact; outputs are the flattened f32 tuple members.
-    pub fn exec(&mut self, name: &str, inputs: &[In]) -> Result<Vec<Vec<f32>>> {
-        let sig = self
-            .manifest
-            .artifact(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        if inputs.len() != sig.n_inputs {
-            bail!("{name}: {} inputs given, {} expected", inputs.len(), sig.n_inputs);
-        }
-        let n_outputs = sig.n_outputs;
-        let lits: Vec<xla::Literal> =
-            inputs.iter().map(|i| i.literal()).collect::<Result<_>>()?;
-        let exe = self.compile(name)?;
+        let exe = &st.cache[name];
         let result = exe
             .execute::<xla::Literal>(&lits)
             .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
             .to_literal_sync()
             .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        *self.exec_counts.entry(name.to_string()).or_insert(0) += 1;
+        self.count(name);
         let items = result.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
         if items.len() != n_outputs {
-            bail!("{name}: {} outputs, expected {}", items.len(), n_outputs);
+            bail!("{name}: {} outputs, expected {n_outputs}", items.len());
         }
         items
             .into_iter()
             .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
             .collect()
+    }
+
+    /// Execute a raw artifact; outputs are the flattened f32 tuple
+    /// members. PJRT-only — the native backend has no generic HLO
+    /// interpreter, only the typed wrappers below.
+    pub fn exec(&mut self, name: &str, inputs: &[In]) -> Result<Vec<Vec<f32>>> {
+        match self.inner {
+            Inner::Native => {
+                let _ = (name, inputs);
+                bail!(
+                    "exec('{name}') requires the PJRT backend \
+                     (build with --features pjrt and run `make artifacts`)"
+                )
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => self.exec_pjrt(name, inputs),
+        }
+    }
+
+    fn config(&self, config: &str) -> Result<ModelCfg> {
+        self.manifest
+            .configs
+            .get(config)
+            .cloned()
+            .ok_or_else(|| anyhow!("unknown config '{config}'"))
     }
 
     /// Run the model train step: returns (loss, grads in ABI order).
@@ -232,25 +374,55 @@ impl Engine {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<(f32, Vec<Vec<f32>>)> {
-        let cfg = self
-            .manifest
-            .configs
-            .get(config)
-            .ok_or_else(|| anyhow!("unknown config '{config}'"))?
-            .clone();
-        if params.len() != cfg.params.len() {
-            bail!("param count {} != ABI {}", params.len(), cfg.params.len());
+        match self.inner {
+            Inner::Native => {
+                let cfg = self.config(config)?;
+                let out = native::train_step(&cfg, params, tokens, targets)?;
+                self.count(&format!("train_step_{config}"));
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => {
+                let cfg = self.config(config)?;
+                if params.len() != cfg.params.len() {
+                    bail!("param count {} != ABI {}", params.len(), cfg.params.len());
+                }
+                let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
+                for (p, (_, shape)) in params.iter().zip(&cfg.params) {
+                    inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+                }
+                let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
+                inputs.push(In::I32(tokens, tok_shape.clone()));
+                inputs.push(In::I32(targets, tok_shape));
+                let mut out = self.exec(&format!("train_step_{config}"), &inputs)?;
+                let grads = out.split_off(1);
+                Ok((out[0][0], grads))
+            }
         }
-        let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
-        for (p, (_, shape)) in params.iter().zip(&cfg.params) {
-            inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+    }
+
+    /// Shared-reference train step for concurrent per-rank execution
+    /// under `Cluster::run_spmd`. Native-only: the PJRT executable cache
+    /// needs `&mut self`, so threaded compute requires the native backend
+    /// (threaded *collectives* work with either).
+    pub fn train_step_shared(
+        &self,
+        config: &str,
+        params: &[Vec<f32>],
+        tokens: &[i32],
+        targets: &[i32],
+    ) -> Result<(f32, Vec<Vec<f32>>)> {
+        match self.inner {
+            Inner::Native => {
+                let cfg = self.config(config)?;
+                native::train_step(&cfg, params, tokens, targets)
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => bail!(
+                "train_step_shared requires the native backend; \
+                 PJRT compute runs serially via train_step"
+            ),
         }
-        let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
-        inputs.push(In::I32(tokens, tok_shape.clone()));
-        inputs.push(In::I32(targets, tok_shape));
-        let mut out = self.exec(&format!("train_step_{config}"), &inputs)?;
-        let grads = out.split_off(1);
-        Ok((out[0][0], grads))
     }
 
     /// Evaluation loss only.
@@ -261,21 +433,27 @@ impl Engine {
         tokens: &[i32],
         targets: &[i32],
     ) -> Result<f32> {
-        let cfg = self
-            .manifest
-            .configs
-            .get(config)
-            .ok_or_else(|| anyhow!("unknown config '{config}'"))?
-            .clone();
-        let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
-        for (p, (_, shape)) in params.iter().zip(&cfg.params) {
-            inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+        match self.inner {
+            Inner::Native => {
+                let cfg = self.config(config)?;
+                let out = native::eval_loss(&cfg, params, tokens, targets)?;
+                self.count(&format!("eval_loss_{config}"));
+                Ok(out)
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => {
+                let cfg = self.config(config)?;
+                let mut inputs: Vec<In> = Vec::with_capacity(params.len() + 2);
+                for (p, (_, shape)) in params.iter().zip(&cfg.params) {
+                    inputs.push(In::F32(p, shape.iter().map(|&s| s as i64).collect()));
+                }
+                let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
+                inputs.push(In::I32(tokens, tok_shape.clone()));
+                inputs.push(In::I32(targets, tok_shape));
+                let out = self.exec(&format!("eval_loss_{config}"), &inputs)?;
+                Ok(out[0][0])
+            }
         }
-        let tok_shape = vec![cfg.batch as i64, cfg.seq as i64];
-        inputs.push(In::I32(tokens, tok_shape.clone()));
-        inputs.push(In::I32(targets, tok_shape));
-        let out = self.exec(&format!("eval_loss_{config}"), &inputs)?;
-        Ok(out[0][0])
     }
 
     /// Fused AdamW over one padded chunk. `h = [t, lr, b1, b2, eps, wd]`.
@@ -289,55 +467,106 @@ impl Engine {
         m: &mut [f32],
         v: &mut [f32],
     ) -> Result<()> {
-        let chunk = self.manifest.chunk;
-        let n = p.len();
-        let mut pp = pad(p, chunk);
-        let gp = pad(g, chunk);
-        let mut mp = pad(m, chunk);
-        let mut vp = pad(v, chunk);
-        for c in 0..pp.len() / chunk {
-            let r = c * chunk..(c + 1) * chunk;
-            let out = self.exec(
-                "adamw_chunk",
-                &[
-                    In::F32(h, vec![6]),
-                    In::F32(&pp[r.clone()], vec![chunk as i64]),
-                    In::F32(&gp[r.clone()], vec![chunk as i64]),
-                    In::F32(&mp[r.clone()], vec![chunk as i64]),
-                    In::F32(&vp[r.clone()], vec![chunk as i64]),
-                ],
-            )?;
-            pp[r.clone()].copy_from_slice(&out[0]);
-            mp[r.clone()].copy_from_slice(&out[1]);
-            vp[r].copy_from_slice(&out[2]);
+        match self.inner {
+            Inner::Native => {
+                // padding is a no-op for the host implementation
+                let hyper = crate::optim::AdamHyper {
+                    lr: h[1],
+                    beta1: h[2],
+                    beta2: h[3],
+                    eps: h[4],
+                    wd: h[5],
+                };
+                crate::optim::AdamW::apply(&hyper, h[0] as u64, p, g, m, v);
+                self.count("adamw_chunk");
+                Ok(())
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => {
+                let chunk = self.manifest.chunk;
+                let n = p.len();
+                let mut pp = pad(p, chunk);
+                let gp = pad(g, chunk);
+                let mut mp = pad(m, chunk);
+                let mut vp = pad(v, chunk);
+                for c in 0..pp.len() / chunk {
+                    let r = c * chunk..(c + 1) * chunk;
+                    let out = self.exec(
+                        "adamw_chunk",
+                        &[
+                            In::F32(h, vec![6]),
+                            In::F32(&pp[r.clone()], vec![chunk as i64]),
+                            In::F32(&gp[r.clone()], vec![chunk as i64]),
+                            In::F32(&mp[r.clone()], vec![chunk as i64]),
+                            In::F32(&vp[r.clone()], vec![chunk as i64]),
+                        ],
+                    )?;
+                    pp[r.clone()].copy_from_slice(&out[0]);
+                    mp[r.clone()].copy_from_slice(&out[1]);
+                    vp[r].copy_from_slice(&out[2]);
+                }
+                p.copy_from_slice(&pp[..n]);
+                m.copy_from_slice(&mp[..n]);
+                v.copy_from_slice(&vp[..n]);
+                Ok(())
+            }
         }
-        p.copy_from_slice(&pp[..n]);
-        m.copy_from_slice(&mp[..n]);
-        v.copy_from_slice(&vp[..n]);
-        Ok(())
     }
 
-    /// Newton-Schulz on a (r x c) matrix via the per-shape artifact.
+    /// Newton-Schulz on a (r x c) matrix. Native: host implementation;
+    /// PJRT: the per-shape artifact.
     pub fn newton_schulz(&mut self, r: usize, c: usize, g: &[f32]) -> Result<Vec<f32>> {
-        let name = format!("newton_schulz_{r}x{c}");
-        let out = self.exec(&name, &[In::F32(g, vec![r as i64, c as i64])])?;
-        Ok(out.into_iter().next().unwrap())
+        match self.inner {
+            Inner::Native => {
+                let t = crate::tensor::HostTensor::from_f32(&[r, c], g.to_vec());
+                let o = crate::optim::muon::newton_schulz(&t, crate::optim::muon::NS_STEPS)?;
+                self.count(&format!("newton_schulz_{r}x{c}"));
+                Ok(o.as_f32().to_vec())
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => {
+                let name = format!("newton_schulz_{r}x{c}");
+                let out = self.exec(&name, &[In::F32(g, vec![r as i64, c as i64])])?;
+                Ok(out.into_iter().next().unwrap())
+            }
+        }
     }
 
-    /// Block-wise quantization via the L1 kernel artifact (codes as f32
-    /// carriers; storage stays int8 on the Rust side).
+    /// Block-wise quantization (codes as f32 carriers; storage stays int8
+    /// on the Rust side).
     pub fn quant_chunk(&mut self, x: &[f32]) -> Result<(Vec<f32>, Vec<f32>)> {
         let chunk = self.manifest.chunk;
         if x.len() != chunk {
             bail!("quant_chunk wants exactly {chunk} elements");
         }
-        let mut out = self.exec("quant_chunk", &[In::F32(x, vec![chunk as i64])])?;
-        let scales = out.pop().unwrap();
-        let codes = out.pop().unwrap();
-        Ok((codes, scales))
+        match self.inner {
+            Inner::Native => {
+                let block = self.manifest.qblock;
+                let mut codes = vec![0.0f32; chunk];
+                let mut scales = Vec::with_capacity(chunk / block);
+                let mut q = vec![0i8; block];
+                for b in 0..chunk / block {
+                    let s = crate::optim::adam8bit::quant_block(&x[b * block..(b + 1) * block], &mut q);
+                    scales.push(s);
+                    for (i, &code) in q.iter().enumerate() {
+                        codes[b * block + i] = code as f32;
+                    }
+                }
+                self.count("quant_chunk");
+                Ok((codes, scales))
+            }
+            #[cfg(feature = "pjrt")]
+            Inner::Pjrt(_) => {
+                let mut out = self.exec("quant_chunk", &[In::F32(x, vec![chunk as i64])])?;
+                let scales = out.pop().unwrap();
+                let codes = out.pop().unwrap();
+                Ok((codes, scales))
+            }
+        }
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn pad(x: &[f32], chunk: usize) -> Vec<f32> {
     let n = x.len().div_ceil(chunk).max(1) * chunk;
     let mut out = x.to_vec();
@@ -376,12 +605,73 @@ mod tests {
     }
 
     #[test]
-    fn pad_helper() {
-        assert_eq!(pad(&[1.0; 10], 8).len(), 16);
-        assert_eq!(pad(&[1.0; 8], 8).len(), 8);
-        assert_eq!(pad(&[], 8).len(), 8);
+    fn builtin_manifest_mirrors_python_configs() {
+        let m = Manifest::builtin();
+        for name in ["tiny", "small", "mid100m"] {
+            assert!(m.configs.contains_key(name), "missing {name}");
+        }
+        let tiny = &m.configs["tiny"];
+        assert_eq!((tiny.vocab, tiny.d_model, tiny.n_layers), (512, 128, 2));
+        // ABI: embed + 8/layer + final_ln + head
+        assert_eq!(tiny.params.len(), 3 + 8 * tiny.n_layers);
+        assert_eq!(tiny.params[0].0, "embed.weight");
+        assert_eq!(tiny.params.last().unwrap().0, "head.weight");
+        assert_eq!(tiny.params[1].0, "layers.0.ln1.scale");
+        // 32-row granularity blocks divide the qblock for every matrix
+        assert_eq!((32 * tiny.d_model) % m.qblock, 0);
     }
 
-    // PJRT-backed tests live in rust/tests/runtime_artifacts.rs (they need
-    // `make artifacts` to have run).
+    #[test]
+    fn native_engine_runs_tiny_train_step() {
+        // force the native path regardless of artifacts on disk
+        let mut e = Engine {
+            manifest: Manifest::builtin(),
+            dir: Engine::default_dir(),
+            inner: Inner::Native,
+            exec_counts: HashMap::new(),
+        };
+        assert!(e.is_native());
+        assert_eq!(e.backend_name(), "native");
+        let cfg = e.manifest.configs["tiny"].clone();
+        let params = crate::train::init_full_params(&cfg.params, 0);
+        let mut corpus = crate::train::Corpus::new(cfg.vocab, 1);
+        let (tokens, targets) = corpus.batch(cfg.batch, cfg.seq);
+        let (loss, grads) = e.train_step("tiny", &params, &tokens, &targets).unwrap();
+        assert!((loss - (cfg.vocab as f32).ln()).abs() < 1.0, "loss {loss}");
+        assert_eq!(grads.len(), params.len());
+        // shared-reference path gives the same result
+        let (loss2, _) = e.train_step_shared("tiny", &params, &tokens, &targets).unwrap();
+        assert_eq!(loss.to_bits(), loss2.to_bits());
+        // eval agrees with the train-step loss
+        let le = e.eval_loss("tiny", &params, &tokens, &targets).unwrap();
+        assert!((loss - le).abs() < 1e-6);
+        assert_eq!(e.exec_counts["train_step_tiny"], 1);
+        // raw HLO exec is PJRT-only
+        assert!(e.exec("train_step_tiny", &[]).is_err());
+    }
+
+    #[test]
+    fn native_adamw_chunk_matches_host_optimizer() {
+        let mut e = Engine {
+            manifest: Manifest::builtin(),
+            dir: Engine::default_dir(),
+            inner: Inner::Native,
+            exec_counts: HashMap::new(),
+        };
+        let h = [3.0f32, 1e-3, 0.9, 0.999, 1e-8, 0.01];
+        let hyper = crate::optim::AdamHyper {
+            lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01,
+        };
+        let mut rng = crate::util::Rng::new(0);
+        let n = 100;
+        let mut p: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let g: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+        let (mut m, mut v) = (vec![0.1f32; n], vec![0.01f32; n]);
+        let (mut ph, mut mh, mut vh) = (p.clone(), m.clone(), v.clone());
+        e.adamw_chunk(&h, &mut p, &g, &mut m, &mut v).unwrap();
+        crate::optim::AdamW::apply(&hyper, 3, &mut ph, &g, &mut mh, &mut vh);
+        for i in 0..n {
+            assert_eq!(p[i].to_bits(), ph[i].to_bits());
+        }
+    }
 }

@@ -1,0 +1,677 @@
+//! Native reference execution of the L2 compute graph: the decoder-only
+//! transformer fwd/bwd from `python/compile/model.py`, re-implemented in
+//! pure Rust with hand-written backprop.
+//!
+//! This is the artifact-free fallback behind [`super::Engine`]: when the
+//! PJRT feature is off (the offline crate universe has no `xla` bindings)
+//! or `make artifacts` has not run, the whole training path — train CLI,
+//! Fig-10 convergence, backend-equivalence tests, the table-3 speedup
+//! bench — executes through these functions. The math mirrors the JAX
+//! model exactly (RMSNorm eps 1e-6, tanh-approx GELU, causal softmax
+//! attention, mean token cross-entropy); numerics agree with the AOT
+//! artifacts to f32 rounding but are not bit-identical to XLA, which is
+//! fine: every cross-backend comparison in the repo runs both sides on
+//! the same engine.
+//!
+//! All functions take `&self`-free shared inputs, so ranks can execute
+//! concurrently under [`crate::cluster::Cluster::run_spmd`].
+
+use anyhow::{bail, Result};
+
+use super::ModelCfg;
+
+const RMS_EPS: f32 = 1e-6;
+const GELU_C: f32 = 0.044_715;
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+
+// ---- flat row-major matmul kernels ------------------------------------
+
+/// (m, k) @ (k, n) -> (m, n)
+fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (kk, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &b[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// a^T @ b where a is (k, m), b is (k, n) -> (m, n)
+fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = vec![0.0f32; m * n];
+    for kk in 0..k {
+        let arow = &a[kk * m..(kk + 1) * m];
+        let brow = &b[kk * n..(kk + 1) * n];
+        for (i, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += aik * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// a @ b^T where a is (m, k), b is (n, k) -> (m, n)
+fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (j, ov) in orow.iter_mut().enumerate() {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for kk in 0..k {
+                acc += arow[kk] * brow[kk];
+            }
+            *ov = acc;
+        }
+    }
+    out
+}
+
+fn add_into(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+// ---- layer primitives ---------------------------------------------------
+
+/// RMSNorm forward over `rows` rows of width `d`. Returns (y, 1/rms).
+fn rmsnorm_fwd(x: &[f32], scale: &[f32], rows: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut rinv = vec![0.0f32; rows];
+    for row in 0..rows {
+        let xr = &x[row * d..(row + 1) * d];
+        let ms = xr.iter().map(|v| v * v).sum::<f32>() / d as f32;
+        let r = 1.0 / (ms + RMS_EPS).sqrt();
+        rinv[row] = r;
+        let yr = &mut y[row * d..(row + 1) * d];
+        for i in 0..d {
+            yr[i] = xr[i] * r * scale[i];
+        }
+    }
+    (y, rinv)
+}
+
+/// RMSNorm backward: accumulates dL/dx into `dx` and dL/dscale into
+/// `dscale` (both `+=`, so residual-branch gradients compose).
+fn rmsnorm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    scale: &[f32],
+    rinv: &[f32],
+    rows: usize,
+    d: usize,
+    dx: &mut [f32],
+    dscale: &mut [f32],
+) {
+    for row in 0..rows {
+        let r = rinv[row];
+        let xr = &x[row * d..(row + 1) * d];
+        let dyr = &dy[row * d..(row + 1) * d];
+        let mut dot = 0.0f32;
+        for i in 0..d {
+            dot += dyr[i] * scale[i] * xr[i];
+        }
+        let c = r * r * r * dot / d as f32;
+        let dxr = &mut dx[row * d..(row + 1) * d];
+        for i in 0..d {
+            dxr[i] += r * scale[i] * dyr[i] - c * xr[i];
+            dscale[i] += dyr[i] * xr[i] * r;
+        }
+    }
+}
+
+fn gelu(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    0.5 * x * (1.0 + u.tanh())
+}
+
+fn gelu_grad(x: f32) -> f32 {
+    let u = SQRT_2_OVER_PI * (x + GELU_C * x * x * x);
+    let t = u.tanh();
+    0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * x * x)
+}
+
+struct AttnCache {
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// softmax probabilities, (b, h, t, t); strictly-upper entries are 0
+    probs: Vec<f32>,
+    /// merged head outputs before the output projection, (b*t, d)
+    o: Vec<f32>,
+}
+
+/// Multi-head causal self-attention forward on normed input (b*t, d).
+fn attn_fwd(
+    n1: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    b: usize,
+    t: usize,
+    d: usize,
+    h: usize,
+) -> (Vec<f32>, AttnCache) {
+    let n = b * t;
+    let hd = d / h;
+    let sc = (hd as f32).powf(-0.5);
+    let q = mm(n1, wq, n, d, d);
+    let k = mm(n1, wk, n, d, d);
+    let v = mm(n1, wv, n, d, d);
+    let mut probs = vec![0.0f32; b * h * t * t];
+    let mut o = vec![0.0f32; n * d];
+    let mut row = vec![0.0f32; t];
+    for bb in 0..b {
+        for hh in 0..h {
+            let pbase = (bb * h + hh) * t * t;
+            for ti in 0..t {
+                let qrow = &q[(bb * t + ti) * d + hh * hd..][..hd];
+                let mut mx = f32::NEG_INFINITY;
+                for tj in 0..=ti {
+                    let krow = &k[(bb * t + tj) * d + hh * hd..][..hd];
+                    let mut s = 0.0f32;
+                    for x in 0..hd {
+                        s += qrow[x] * krow[x];
+                    }
+                    s *= sc;
+                    row[tj] = s;
+                    if s > mx {
+                        mx = s;
+                    }
+                }
+                let mut sum = 0.0f32;
+                for cell in row.iter_mut().take(ti + 1) {
+                    *cell = (*cell - mx).exp();
+                    sum += *cell;
+                }
+                let inv = 1.0 / sum;
+                for tj in 0..=ti {
+                    let p = row[tj] * inv;
+                    probs[pbase + ti * t + tj] = p;
+                    let orow = &mut o[(bb * t + ti) * d + hh * hd..][..hd];
+                    let vrow = &v[(bb * t + tj) * d + hh * hd..][..hd];
+                    for x in 0..hd {
+                        orow[x] += p * vrow[x];
+                    }
+                }
+            }
+        }
+    }
+    let y = mm(&o, wo, n, d, d);
+    (y, AttnCache { q, k, v, probs, o })
+}
+
+/// Attention backward. Returns (dwq, dwk, dwv, dwo, dn1).
+#[allow(clippy::too_many_arguments)]
+fn attn_bwd(
+    dy: &[f32],
+    n1: &[f32],
+    wq: &[f32],
+    wk: &[f32],
+    wv: &[f32],
+    wo: &[f32],
+    cache: &AttnCache,
+    b: usize,
+    t: usize,
+    d: usize,
+    h: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = b * t;
+    let hd = d / h;
+    let sc = (hd as f32).powf(-0.5);
+    let dwo = mm_tn(&cache.o, dy, n, d, d);
+    let do_ = mm_nt(dy, wo, n, d, d);
+    let mut dq = vec![0.0f32; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+    let mut dprow = vec![0.0f32; t];
+    for bb in 0..b {
+        for hh in 0..h {
+            let pbase = (bb * h + hh) * t * t;
+            for ti in 0..t {
+                let dorow = &do_[(bb * t + ti) * d + hh * hd..][..hd];
+                let prow = &cache.probs[pbase + ti * t..][..t];
+                // dprobs = do @ v^T (per head row)
+                for tj in 0..=ti {
+                    let vrow = &cache.v[(bb * t + tj) * d + hh * hd..][..hd];
+                    let mut acc = 0.0f32;
+                    for x in 0..hd {
+                        acc += dorow[x] * vrow[x];
+                    }
+                    dprow[tj] = acc;
+                }
+                // softmax backward with the q/k scale folded in
+                let mut sdot = 0.0f32;
+                for tj in 0..=ti {
+                    sdot += dprow[tj] * prow[tj];
+                }
+                let qrow = &cache.q[(bb * t + ti) * d + hh * hd..][..hd];
+                for tj in 0..=ti {
+                    let ds = prow[tj] * (dprow[tj] - sdot) * sc;
+                    let krow = &cache.k[(bb * t + tj) * d + hh * hd..][..hd];
+                    {
+                        let dqrow = &mut dq[(bb * t + ti) * d + hh * hd..][..hd];
+                        for x in 0..hd {
+                            dqrow[x] += ds * krow[x];
+                        }
+                    }
+                    {
+                        let dkrow = &mut dk[(bb * t + tj) * d + hh * hd..][..hd];
+                        for x in 0..hd {
+                            dkrow[x] += ds * qrow[x];
+                        }
+                    }
+                    {
+                        let dvrow = &mut dv[(bb * t + tj) * d + hh * hd..][..hd];
+                        let p = prow[tj];
+                        for x in 0..hd {
+                            dvrow[x] += p * dorow[x];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let dwq = mm_tn(n1, &dq, n, d, d);
+    let dwk = mm_tn(n1, &dk, n, d, d);
+    let dwv = mm_tn(n1, &dv, n, d, d);
+    let mut dn1 = mm_nt(&dq, wq, n, d, d);
+    add_into(&mut dn1, &mm_nt(&dk, wk, n, d, d));
+    add_into(&mut dn1, &mm_nt(&dv, wv, n, d, d));
+    (dwq, dwk, dwv, dwo, dn1)
+}
+
+// ---- whole-model forward / backward ------------------------------------
+
+struct LayerCache {
+    x_in: Vec<f32>,
+    n1: Vec<f32>,
+    r1: Vec<f32>,
+    attn: AttnCache,
+    x_mid: Vec<f32>,
+    n2: Vec<f32>,
+    r2: Vec<f32>,
+    h1: Vec<f32>,
+    g: Vec<f32>,
+}
+
+fn validate(cfg: &ModelCfg, params: &[Vec<f32>], tokens: &[i32], targets: &[i32]) -> Result<()> {
+    // embed + 8 per layer + final_ln + head
+    let expect = 3 + 8 * cfg.n_layers;
+    if cfg.params.len() != expect {
+        bail!("config ABI has {} params, expected {expect}", cfg.params.len());
+    }
+    if params.len() != cfg.params.len() {
+        bail!("param count {} != ABI {}", params.len(), cfg.params.len());
+    }
+    for (p, (name, shape)) in params.iter().zip(&cfg.params) {
+        let numel: usize = shape.iter().product();
+        if p.len() != numel {
+            bail!("param '{name}': {} elements, shape {shape:?} wants {numel}", p.len());
+        }
+    }
+    let n = cfg.batch * cfg.seq;
+    if tokens.len() != n || targets.len() != n {
+        bail!("tokens/targets must be batch*seq = {n} elements");
+    }
+    if cfg.n_heads == 0 || cfg.d_model % cfg.n_heads != 0 {
+        bail!("n_heads {} must divide d_model {}", cfg.n_heads, cfg.d_model);
+    }
+    for &tok in tokens.iter().chain(targets) {
+        if tok < 0 || tok as usize >= cfg.vocab {
+            bail!("token {tok} out of vocab {}", cfg.vocab);
+        }
+    }
+    Ok(())
+}
+
+/// Forward pass with per-layer caches; returns (final x, caches, nf, rf,
+/// logits).
+#[allow(clippy::type_complexity)]
+fn forward(
+    cfg: &ModelCfg,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    keep_caches: bool,
+) -> (Vec<f32>, Vec<LayerCache>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (b, t, d, h, f, v) = (
+        cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab,
+    );
+    let n = b * t;
+    let nl = cfg.n_layers;
+    let embed = &params[0];
+    let mut x = vec![0.0f32; n * d];
+    for (row, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        x[row * d..(row + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    let mut caches = Vec::with_capacity(if keep_caches { nl } else { 0 });
+    for l in 0..nl {
+        let base = 1 + 8 * l;
+        let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
+            &params[base],
+            &params[base + 1],
+            &params[base + 2],
+            &params[base + 3],
+            &params[base + 4],
+            &params[base + 5],
+            &params[base + 6],
+            &params[base + 7],
+        );
+        let x_in = x.clone();
+        let (n1, r1) = rmsnorm_fwd(&x, ln1, n, d);
+        let (y, attn) = attn_fwd(&n1, wq, wk, wv, wo, b, t, d, h);
+        add_into(&mut x, &y);
+        let x_mid = x.clone();
+        let (n2, r2) = rmsnorm_fwd(&x, ln2, n, d);
+        let h1 = mm(&n2, w1, n, d, f);
+        let g: Vec<f32> = h1.iter().map(|&z| gelu(z)).collect();
+        let y2 = mm(&g, w2, n, f, d);
+        add_into(&mut x, &y2);
+        if keep_caches {
+            caches.push(LayerCache { x_in, n1, r1, attn, x_mid, n2, r2, h1, g });
+        }
+    }
+    let final_ln = &params[1 + 8 * nl];
+    let head = &params[2 + 8 * nl];
+    let (nf, rf) = rmsnorm_fwd(&x, final_ln, n, d);
+    let logits = mm(&nf, head, n, d, v);
+    (x, caches, nf, rf, logits)
+}
+
+/// Mean next-token cross-entropy and (optionally) dL/dlogits.
+fn ce_loss(logits: &[f32], targets: &[i32], n: usize, v: usize, want_grad: bool) -> (f32, Vec<f32>) {
+    let inv_n = 1.0 / n as f32;
+    let mut loss = 0.0f32;
+    let mut dlogits = vec![0.0f32; if want_grad { n * v } else { 0 }];
+    for row in 0..n {
+        let lrow = &logits[row * v..(row + 1) * v];
+        let tgt = targets[row] as usize;
+        let mx = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for &z in lrow {
+            sum += (z - mx).exp();
+        }
+        let lse = mx + sum.ln();
+        loss += (lse - lrow[tgt]) * inv_n;
+        if want_grad {
+            let drow = &mut dlogits[row * v..(row + 1) * v];
+            let inv_sum = 1.0 / sum;
+            for j in 0..v {
+                drow[j] = (lrow[j] - mx).exp() * inv_sum * inv_n;
+            }
+            drow[tgt] -= inv_n;
+        }
+    }
+    (loss, dlogits)
+}
+
+/// The per-device step: (loss, grads in ABI order). Gradients are
+/// unscaled, as with the PJRT artifact — the coordinator averages them
+/// across devices via ReduceScatter.
+pub fn train_step(
+    cfg: &ModelCfg,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    targets: &[i32],
+) -> Result<(f32, Vec<Vec<f32>>)> {
+    validate(cfg, params, tokens, targets)?;
+    let (b, t, d, h, f, v) = (
+        cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab,
+    );
+    let n = b * t;
+    let nl = cfg.n_layers;
+    let (x, caches, nf, rf, logits) = forward(cfg, params, tokens, true);
+    let (loss, dlogits) = ce_loss(&logits, targets, n, v, true);
+
+    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
+    let head_idx = 2 + 8 * nl;
+    let final_ln_idx = 1 + 8 * nl;
+    grads[head_idx] = mm_tn(&nf, &dlogits, n, d, v);
+    let dnf = mm_nt(&dlogits, &params[head_idx], n, v, d);
+    let mut dx = vec![0.0f32; n * d];
+    rmsnorm_bwd(
+        &dnf, &x, &params[final_ln_idx], &rf, n, d, &mut dx, &mut grads[final_ln_idx],
+    );
+    for l in (0..nl).rev() {
+        let base = 1 + 8 * l;
+        let c = &caches[l];
+        // ---- MLP branch: x_out = x_mid + w2·gelu(w1·rms(x_mid)) ----
+        let w1 = &params[base + 6];
+        let w2 = &params[base + 7];
+        let mut dh1 = mm_nt(&dx, w2, n, d, f);
+        grads[base + 7] = mm_tn(&c.g, &dx, n, f, d);
+        for (z, &pre) in dh1.iter_mut().zip(&c.h1) {
+            *z *= gelu_grad(pre);
+        }
+        grads[base + 6] = mm_tn(&c.n2, &dh1, n, d, f);
+        let dn2 = mm_nt(&dh1, w1, n, f, d);
+        // residual: dx becomes dL/dx_mid (pass-through + norm branch)
+        rmsnorm_bwd(
+            &dn2, &c.x_mid, &params[base + 5], &c.r2, n, d, &mut dx, &mut grads[base + 5],
+        );
+        // ---- attention branch: x_mid = x_in + attn(rms(x_in)) ----
+        let (dwq, dwk, dwv, dwo, dn1) = attn_bwd(
+            &dx,
+            &c.n1,
+            &params[base + 1],
+            &params[base + 2],
+            &params[base + 3],
+            &params[base + 4],
+            &c.attn,
+            b,
+            t,
+            d,
+            h,
+        );
+        grads[base + 1] = dwq;
+        grads[base + 2] = dwk;
+        grads[base + 3] = dwv;
+        grads[base + 4] = dwo;
+        rmsnorm_bwd(
+            &dn1, &c.x_in, &params[base], &c.r1, n, d, &mut dx, &mut grads[base],
+        );
+    }
+    // embedding scatter-add
+    for (row, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        let ge = &mut grads[0][tok * d..(tok + 1) * d];
+        for (g, &dxi) in ge.iter_mut().zip(&dx[row * d..(row + 1) * d]) {
+            *g += dxi;
+        }
+    }
+    Ok((loss, grads))
+}
+
+/// Forward-only evaluation loss.
+pub fn eval_loss(
+    cfg: &ModelCfg,
+    params: &[Vec<f32>],
+    tokens: &[i32],
+    targets: &[i32],
+) -> Result<f32> {
+    validate(cfg, params, tokens, targets)?;
+    let n = cfg.batch * cfg.seq;
+    let (_, _, _, _, logits) = forward(cfg, params, tokens, false);
+    Ok(ce_loss(&logits, targets, n, cfg.vocab, false).0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    /// Tiny config so finite differences stay cheap.
+    fn micro_cfg() -> ModelCfg {
+        ModelCfg::with_abi(16, 8, 1, 2, 16, 4, 1)
+    }
+
+    fn micro_params(cfg: &ModelCfg, seed: u64) -> Vec<Vec<f32>> {
+        crate::train::init_full_params(&cfg.params, seed)
+    }
+
+    fn micro_batch(cfg: &ModelCfg, seed: u64) -> (Vec<i32>, Vec<i32>) {
+        let mut rng = Rng::new(seed);
+        let n = cfg.batch * cfg.seq;
+        let toks = (0..n).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+        let tgts = (0..n).map(|_| rng.below(cfg.vocab as u64) as i32).collect();
+        (toks, tgts)
+    }
+
+    #[test]
+    fn matmul_kernels_agree() {
+        let mut rng = Rng::new(0);
+        let (m, k, n) = (3, 5, 4);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal_f32()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal_f32()).collect();
+        let c = mm(&a, &b, m, k, n);
+        // a^T laid out as (k, m), b^T as (n, k)
+        let mut at = vec![0.0f32; k * m];
+        for i in 0..m {
+            for kk in 0..k {
+                at[kk * m + i] = a[i * k + kk];
+            }
+        }
+        let mut bt = vec![0.0f32; n * k];
+        for kk in 0..k {
+            for j in 0..n {
+                bt[j * k + kk] = b[kk * n + j];
+            }
+        }
+        let c_tn = mm_tn(&at, &b, k, m, n);
+        let c_nt = mm_nt(&a, &bt, m, k, n);
+        for i in 0..m * n {
+            assert!((c[i] - c_tn[i]).abs() < 1e-5);
+            assert!((c[i] - c_nt[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn fresh_model_loss_near_ln_vocab() {
+        let cfg = micro_cfg();
+        let params = micro_params(&cfg, 0);
+        let (tokens, targets) = micro_batch(&cfg, 1);
+        let (loss, grads) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+        let lnv = (cfg.vocab as f32).ln();
+        assert!((loss - lnv).abs() < 1.0, "loss {loss} vs ln(V) {lnv}");
+        assert_eq!(grads.len(), params.len());
+        let norm: f32 = grads.iter().flat_map(|g| g.iter()).map(|x| x * x).sum();
+        assert!(norm > 0.0 && norm.is_finite());
+    }
+
+    #[test]
+    fn eval_matches_train_loss() {
+        let cfg = micro_cfg();
+        let params = micro_params(&cfg, 2);
+        let (tokens, targets) = micro_batch(&cfg, 3);
+        let (lt, _) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+        let le = eval_loss(&cfg, &params, &tokens, &targets).unwrap();
+        assert!((lt - le).abs() < 1e-6, "{lt} vs {le}");
+    }
+
+    #[test]
+    fn gradients_match_finite_differences() {
+        let cfg = micro_cfg();
+        let params = micro_params(&cfg, 4);
+        let (tokens, targets) = micro_batch(&cfg, 5);
+        let (_, grads) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+        // probe a few coordinates in every distinct tensor role
+        let probes: Vec<(usize, usize)> = vec![
+            (0, 3),  // embed (a token actually present would be better; 3 is)
+            (1, 2),  // ln1.scale
+            (2, 11), // wq
+            (4, 5),  // wv
+            (5, 17), // wo
+            (7, 31), // w1
+            (8, 40), // w2
+            (9, 1),  // final_ln.scale
+            (10, 25), // head
+        ];
+        let eps = 3e-3f32;
+        for (pi, ei) in probes {
+            let ei = ei % params[pi].len();
+            let mut plus = params.clone();
+            plus[pi][ei] += eps;
+            let mut minus = params.clone();
+            minus[pi][ei] -= eps;
+            let lp = eval_loss(&cfg, &plus, &tokens, &targets).unwrap();
+            let lm = eval_loss(&cfg, &minus, &tokens, &targets).unwrap();
+            let fd = (lp - lm) / (2.0 * eps);
+            let ana = grads[pi][ei];
+            assert!(
+                (ana - fd).abs() < 3e-3 + 0.08 * fd.abs().max(ana.abs()),
+                "param {pi}[{ei}]: analytic {ana} vs fd {fd}"
+            );
+        }
+    }
+
+    #[test]
+    fn embed_grad_zero_for_unused_tokens() {
+        let cfg = micro_cfg();
+        let params = micro_params(&cfg, 6);
+        let n = cfg.batch * cfg.seq;
+        let tokens = vec![1i32; n]; // only token 1 appears as input
+        let targets = vec![2i32; n];
+        let (_, grads) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+        let d = cfg.d_model;
+        // token 5 never embedded -> zero embedding gradient
+        assert!(grads[0][5 * d..6 * d].iter().all(|&g| g == 0.0));
+        // token 1 used -> nonzero gradient
+        assert!(grads[0][d..2 * d].iter().any(|&g| g != 0.0));
+    }
+
+    #[test]
+    fn training_reduces_loss_with_sgd() {
+        // a few plain gradient steps on a fixed batch must overfit it
+        let cfg = micro_cfg();
+        let mut params = micro_params(&cfg, 7);
+        let (tokens, targets) = micro_batch(&cfg, 8);
+        let (first, _) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+        let mut last = first;
+        for _ in 0..30 {
+            let (loss, grads) = train_step(&cfg, &params, &tokens, &targets).unwrap();
+            last = loss;
+            for (p, g) in params.iter_mut().zip(&grads) {
+                for (pv, &gv) in p.iter_mut().zip(g) {
+                    *pv -= 0.5 * gv;
+                }
+            }
+        }
+        assert!(last < first - 0.5, "loss did not drop: {first} -> {last}");
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let cfg = micro_cfg();
+        let params = micro_params(&cfg, 9);
+        let (tokens, targets) = micro_batch(&cfg, 10);
+        assert!(train_step(&cfg, &params[1..], &tokens, &targets).is_err());
+        assert!(train_step(&cfg, &params, &tokens[1..], &targets).is_err());
+        let bad = vec![cfg.vocab as i32; tokens.len()];
+        assert!(train_step(&cfg, &params, &bad, &targets).is_err());
+    }
+}

@@ -1,15 +1,28 @@
 //! Training loop: synthetic corpus + the FSDP trainer that wires the
-//! numeric engine (DBuffer shards + collectives) to the PJRT runtime
-//! (L2 fwd/bwd). Also a DDP reference trainer for the Fig-10 convergence
-//! comparisons (bucketed AllReduce instead of layer-wise ReduceScatter —
-//! the schedule difference the paper calls out).
+//! numeric engine (DBuffer shards + collectives) to the compute runtime
+//! (PJRT or native L2 fwd/bwd). Also a DDP reference trainer for the
+//! Fig-10 convergence comparisons (bucketed AllReduce instead of
+//! layer-wise ReduceScatter — the schedule difference the paper calls
+//! out).
+//!
+//! Both trainers run on either cluster backend (`--backend
+//! serial|threaded`). Under the threaded backend the per-rank compute
+//! fans out across OS threads via [`Cluster::run_spmd`] (native runtime
+//! only — PJRT's executable cache is single-threaded) and every
+//! collective runs as a rendezvous operation; batches are drawn from the
+//! corpus on the coordinator thread in rank order first, so the token
+//! stream — and therefore the whole loss trajectory — is bit-identical
+//! across backends.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::cluster::{make_comm, Cluster, CommBackend};
+use crate::comm::{CommRecord, Fabric};
 use crate::config::OptimKind;
 use crate::fsdp::{FsdpEngine, ShardingPolicy};
 use crate::mesh::DeviceMesh;
-use crate::comm::Fabric;
 use crate::optim::{Adam8bit, AdamHyper, AdamW, Muon, Sgd, ShardOptimizer};
 use crate::runtime::Engine;
 use crate::util::Rng;
@@ -117,7 +130,7 @@ pub struct StepLog {
     pub wall_s: f64,
 }
 
-/// FSDP trainer over the numeric engine + PJRT runtime.
+/// FSDP trainer over the numeric engine + compute runtime.
 pub struct Trainer {
     pub engine: FsdpEngine,
     pub runtime: Engine,
@@ -133,6 +146,7 @@ pub struct Trainer {
 }
 
 impl Trainer {
+    /// Serial-backend trainer (the seed behavior).
     pub fn new(
         config: &str,
         m: usize,
@@ -141,7 +155,19 @@ impl Trainer {
         hyper: AdamHyper,
         seed: u64,
     ) -> Result<Trainer> {
-        let runtime = Engine::load_default().context("loading artifacts")?;
+        Trainer::with_backend(config, m, optim, policy, hyper, seed, CommBackend::Serial)
+    }
+
+    pub fn with_backend(
+        config: &str,
+        m: usize,
+        optim: OptimKind,
+        policy: &ShardingPolicy,
+        hyper: AdamHyper,
+        seed: u64,
+        backend: CommBackend,
+    ) -> Result<Trainer> {
+        let runtime = Engine::load_default().context("loading compute runtime")?;
         let cfg = runtime
             .manifest
             .configs
@@ -162,12 +188,13 @@ impl Trainer {
                 }
             })
             .collect();
-        let mut engine = FsdpEngine::new(
+        let mut engine = FsdpEngine::new_with_comm(
             cfg.params.clone(),
             &group_of,
             DeviceMesh::flat("fsdp", m),
             policy,
             Fabric::h800(),
+            make_comm(backend),
         )?;
         let full = init_full_params(&cfg.params, seed);
         engine.init_params(&full)?;
@@ -204,17 +231,40 @@ impl Trainer {
         let cfg = self.runtime.manifest.configs[&self.config].clone();
         let m = self.engine.num_devices();
         self.engine.gather_params()?;
-        let comm_before = self.engine.stats.total_time();
+        let comm_before = self.engine.comm.sim_time();
 
+        // draw every rank's batch on the coordinator in rank order so the
+        // token stream is identical no matter how compute executes
+        let batches: Vec<(Vec<i32>, Vec<i32>)> =
+            (0..m).map(|_| self.corpus.batch(cfg.batch, cfg.seq)).collect();
         let mut losses = Vec::with_capacity(m);
         let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
-        for rank in 0..m {
-            let params = self.engine.device_params(rank);
-            let (tokens, targets) = self.corpus.batch(cfg.batch, cfg.seq);
-            let (loss, grads) =
-                self.runtime.train_step(&self.config, &params, &tokens, &targets)?;
-            losses.push(loss);
-            all_grads.push(grads);
+        if self.engine.comm.backend() == CommBackend::Threaded && self.runtime.is_native() {
+            // SPMD fan-out: each rank materializes its parameters and runs
+            // fwd/bwd on its own thread. native::train_step is called
+            // directly (not through Engine::train_step_shared) so the
+            // closure never captures &Engine — under the pjrt feature the
+            // xla handles inside Engine are not Sync.
+            let engine = &self.engine;
+            let (outs, _) = Cluster::run_spmd(m, |rank, _ctx| {
+                let params = engine.device_params(rank);
+                let (tokens, targets) = &batches[rank];
+                crate::runtime::native::train_step(&cfg, &params, tokens, targets)
+            });
+            for out in outs {
+                let (loss, grads) = out?;
+                losses.push(loss);
+                all_grads.push(grads);
+            }
+        } else {
+            for rank in 0..m {
+                let params = self.engine.device_params(rank);
+                let (tokens, targets) = &batches[rank];
+                let (loss, grads) =
+                    self.runtime.train_step(&self.config, &params, tokens, targets)?;
+                losses.push(loss);
+                all_grads.push(grads);
+            }
         }
         self.engine.release_params();
         self.engine.reduce_grads(&all_grads)?;
@@ -230,7 +280,7 @@ impl Trainer {
         self.log.push(StepLog {
             step: self.step,
             loss,
-            comm_time: self.engine.stats.total_time() - comm_before,
+            comm_time: self.engine.comm.sim_time() - comm_before,
             wall_s: t0.elapsed().as_secs_f64(),
         });
         Ok(loss)
@@ -245,10 +295,13 @@ impl Trainer {
 }
 
 /// DDP reference trainer (Fig 10): replicated parameters, bucketed
-/// AllReduce gradient averaging, full-parameter optimizer.
+/// AllReduce gradient averaging (through the cluster backend), and a
+/// full-parameter optimizer.
 pub struct DdpTrainer {
     pub runtime: Engine,
     pub config: String,
+    pub comm: Arc<dyn crate::cluster::Communicator>,
+    pub fabric: Fabric,
     pub params: Vec<Vec<f32>>,
     pub corpus: Corpus,
     pub optimizer: Box<dyn ShardOptimizer>,
@@ -264,6 +317,17 @@ impl DdpTrainer {
         optim: OptimKind,
         hyper: AdamHyper,
         seed: u64,
+    ) -> Result<DdpTrainer> {
+        DdpTrainer::with_backend(config, devices, optim, hyper, seed, CommBackend::Serial)
+    }
+
+    pub fn with_backend(
+        config: &str,
+        devices: usize,
+        optim: OptimKind,
+        hyper: AdamHyper,
+        seed: u64,
+        backend: CommBackend,
     ) -> Result<DdpTrainer> {
         let runtime = Engine::load_default()?;
         let cfg = runtime
@@ -289,6 +353,8 @@ impl DdpTrainer {
         Ok(DdpTrainer {
             runtime,
             config: config.to_string(),
+            comm: make_comm(backend),
+            fabric: Fabric::h800(),
             params,
             corpus: Corpus::new(cfg.vocab, seed + 1),
             optimizer,
@@ -301,20 +367,50 @@ impl DdpTrainer {
     pub fn train_step(&mut self) -> Result<f32> {
         let t0 = std::time::Instant::now();
         let cfg = self.runtime.manifest.configs[&self.config].clone();
-        // per-device microbatches; grads averaged (bucketed AllReduce)
-        let mut losses = Vec::new();
-        let mut mean_grads: Vec<Vec<f32>> =
-            self.params.iter().map(|p| vec![0.0; p.len()]).collect();
-        for _ in 0..self.devices {
-            let (tokens, targets) = self.corpus.batch(cfg.batch, cfg.seq);
-            let (loss, grads) =
-                self.runtime.train_step(&self.config, &self.params, &tokens, &targets)?;
-            losses.push(loss);
-            for (acc, g) in mean_grads.iter_mut().zip(&grads) {
-                for (a, x) in acc.iter_mut().zip(g) {
-                    *a += x / self.devices as f32;
-                }
+        let m = self.devices;
+        // per-device microbatches (drawn in rank order on the coordinator)
+        let batches: Vec<(Vec<i32>, Vec<i32>)> =
+            (0..m).map(|_| self.corpus.batch(cfg.batch, cfg.seq)).collect();
+        let mut losses = Vec::with_capacity(m);
+        let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
+        if self.comm.backend() == CommBackend::Threaded && self.runtime.is_native() {
+            // direct native call for the same &Engine-Sync reason as Trainer
+            let params = &self.params;
+            let (outs, _) = Cluster::run_spmd(m, |rank, _ctx| {
+                let (tokens, targets) = &batches[rank];
+                crate::runtime::native::train_step(&cfg, params, tokens, targets)
+            });
+            for out in outs {
+                let (loss, grads) = out?;
+                losses.push(loss);
+                all_grads.push(grads);
             }
+        } else {
+            for rank in 0..m {
+                let (tokens, targets) = &batches[rank];
+                let (loss, grads) =
+                    self.runtime.train_step(&self.config, &self.params, tokens, targets)?;
+                losses.push(loss);
+                all_grads.push(grads);
+            }
+        }
+        // bucketed AllReduce through the cluster backend (sum in rank
+        // order then scale by 1/m — identical on every backend)
+        let mut mean_grads: Vec<Vec<f32>> = Vec::with_capacity(self.params.len());
+        for ti in 0..self.params.len() {
+            let mut bufs: Vec<Vec<f32>> = all_grads
+                .iter_mut()
+                .map(|g| std::mem::take(&mut g[ti]))
+                .collect();
+            self.comm.all_reduce(&mut bufs, 1.0 / m as f32)?;
+            let bytes = (bufs[0].len() * 4) as u64;
+            self.comm.record(CommRecord {
+                op: "all_reduce",
+                bytes_per_rank: bytes,
+                group_size: m,
+                sim_time: self.fabric.all_reduce_time(m, bytes, true),
+            });
+            mean_grads.push(bufs.into_iter().next().unwrap());
         }
         self.step += 1;
         // 8-bit Adam quant blocks: DDP holds full params, every block is

@@ -1,0 +1,201 @@
+//! Backend equivalence: the threaded SPMD backend must be **bit-identical**
+//! to the serial reference — property tests over every collective at mesh
+//! sizes 1/2/4/8 with ragged (non-divisible) shard sizes, plus end-to-end
+//! training runs whose loss trajectories and final parameters must match
+//! to the bit.
+
+use vescale_fsdp::cluster::{CommBackend, Communicator, SerialComm, ThreadedComm};
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::ShardingPolicy;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::train::{DdpTrainer, Trainer};
+use vescale_fsdp::util::prop::{check, Case};
+use vescale_fsdp::util::Rng;
+
+const MESHES: [usize; 4] = [1, 2, 4, 8];
+
+/// Values spread over many exponents: any change in summation order
+/// would actually flip result bits.
+fn wild_bufs(rng: &mut Rng, m: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|_| {
+            (0..len)
+                .map(|_| rng.normal_f32() * 10f32.powi(rng.below(9) as i32 - 4))
+                .collect()
+        })
+        .collect()
+}
+
+fn assert_bits_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) -> Result<(), String> {
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        for (i, (u, v)) in x.iter().zip(y).enumerate() {
+            if u.to_bits() != v.to_bits() {
+                return Err(format!("{what}: rank {k} elem {i}: {u} vs {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn pick_mesh(case: &mut Case) -> usize {
+    MESHES[case.rng.below(MESHES.len() as u64) as usize]
+}
+
+#[test]
+fn all_gather_bit_identical_across_backends() {
+    check("ag-backend-equiv", 40, |case| {
+        let m = pick_mesh(case);
+        let s = case.rng.range(1, case.scaled(33)); // incl. odd/ragged sizes
+        let mut serial = wild_bufs(&mut case.rng, m, m * s);
+        let mut threaded = serial.clone();
+        SerialComm::new().all_gather(&mut serial, s).map_err(|e| e.to_string())?;
+        ThreadedComm::with_min_parallel_elems(0).all_gather(&mut threaded, s).map_err(|e| e.to_string())?;
+        assert_bits_equal(&serial, &threaded, &format!("all_gather m={m} s={s}"))
+    });
+}
+
+#[test]
+fn reduce_scatter_bit_identical_across_backends() {
+    check("rs-backend-equiv", 40, |case| {
+        let m = pick_mesh(case);
+        let s = case.rng.range(1, case.scaled(33));
+        let mut serial = wild_bufs(&mut case.rng, m, m * s);
+        let mut threaded = serial.clone();
+        let scale = 1.0 / m as f32;
+        SerialComm::new()
+            .reduce_scatter(&mut serial, s, scale)
+            .map_err(|e| e.to_string())?;
+        ThreadedComm::with_min_parallel_elems(0)
+            .reduce_scatter(&mut threaded, s, scale)
+            .map_err(|e| e.to_string())?;
+        assert_bits_equal(&serial, &threaded, &format!("reduce_scatter m={m} s={s}"))
+    });
+}
+
+#[test]
+fn all_reduce_bit_identical_across_backends() {
+    check("ar-backend-equiv", 40, |case| {
+        let m = pick_mesh(case);
+        // deliberately not a multiple of m (ragged range partition)
+        let n = case.rng.range(1, case.scaled(77));
+        let mut serial = wild_bufs(&mut case.rng, m, n);
+        let mut threaded = serial.clone();
+        SerialComm::new().all_reduce(&mut serial, 0.125).map_err(|e| e.to_string())?;
+        ThreadedComm::with_min_parallel_elems(0)
+            .all_reduce(&mut threaded, 0.125)
+            .map_err(|e| e.to_string())?;
+        assert_bits_equal(&serial, &threaded, &format!("all_reduce m={m} n={n}"))
+    });
+}
+
+#[test]
+fn broadcast_and_all_to_all_bit_identical_across_backends() {
+    check("bc-a2a-backend-equiv", 40, |case| {
+        let m = pick_mesh(case);
+        let s = case.rng.range(1, case.scaled(17));
+        let root = case.rng.below(m as u64) as usize;
+        let mut serial = wild_bufs(&mut case.rng, m, m * s);
+        let mut threaded = serial.clone();
+        SerialComm::new().broadcast(&mut serial, root).map_err(|e| e.to_string())?;
+        ThreadedComm::with_min_parallel_elems(0)
+            .broadcast(&mut threaded, root)
+            .map_err(|e| e.to_string())?;
+        assert_bits_equal(&serial, &threaded, &format!("broadcast m={m} root={root}"))?;
+        SerialComm::new().all_to_all(&mut serial, s).map_err(|e| e.to_string())?;
+        ThreadedComm::with_min_parallel_elems(0).all_to_all(&mut threaded, s).map_err(|e| e.to_string())?;
+        assert_bits_equal(&serial, &threaded, &format!("all_to_all m={m} s={s}"))
+    });
+}
+
+// ---- end-to-end trajectories -------------------------------------------
+
+fn run_fsdp(backend: CommBackend, m: usize, opt: OptimKind, steps: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let hyper = match opt {
+        OptimKind::Muon => AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+        _ => AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+    };
+    let policy = if opt == OptimKind::Adam8bit {
+        ShardingPolicy::uniform_rows(32)
+    } else {
+        ShardingPolicy::element_wise()
+    };
+    let mut t = Trainer::with_backend("tiny", m, opt, &policy, hyper, 42, backend).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let params = (0..t.engine.params.len()).map(|i| t.engine.read_param(i)).collect();
+    (losses, params)
+}
+
+#[test]
+fn fsdp_threaded_trajectory_bit_identical_to_serial() {
+    let (ls, ps) = run_fsdp(CommBackend::Serial, 4, OptimKind::AdamW, 3);
+    let (lt, pt) = run_fsdp(CommBackend::Threaded, 4, OptimKind::AdamW, 3);
+    for (step, (a, b)) in ls.iter().zip(&lt).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "step {step}: {a} vs {b}");
+    }
+    assert_bits_equal(&ps, &pt, "final params").unwrap();
+}
+
+#[test]
+fn muon_threaded_trajectory_bit_identical_to_serial() {
+    // Muon goes through DTensor::redistribute -> threaded collectives
+    let (ls, ps) = run_fsdp(CommBackend::Serial, 2, OptimKind::Muon, 2);
+    let (lt, pt) = run_fsdp(CommBackend::Threaded, 2, OptimKind::Muon, 2);
+    for (a, b) in ls.iter().zip(&lt) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+    assert_bits_equal(&ps, &pt, "final params").unwrap();
+}
+
+#[test]
+fn ddp_threaded_trajectory_bit_identical_to_serial() {
+    let run = |backend| {
+        let mut t = DdpTrainer::with_backend(
+            "tiny",
+            2,
+            OptimKind::AdamW,
+            AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+            42,
+            backend,
+        )
+        .unwrap();
+        let mut losses = Vec::new();
+        for _ in 0..2 {
+            losses.push(t.train_step().unwrap());
+        }
+        (losses, t.params)
+    };
+    let (ls, ps) = run(CommBackend::Serial);
+    let (lt, pt) = run(CommBackend::Threaded);
+    for (a, b) in ls.iter().zip(&lt) {
+        assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+    }
+    assert_bits_equal(&ps, &pt, "ddp params").unwrap();
+}
+
+#[test]
+fn threaded_stats_match_serial_stats() {
+    // same collectives recorded, same simulated bytes/time, either backend
+    let run = |backend| {
+        let mut t = Trainer::with_backend(
+            "tiny",
+            2,
+            OptimKind::AdamW,
+            &ShardingPolicy::element_wise(),
+            AdamHyper::default(),
+            7,
+            backend,
+        )
+        .unwrap();
+        t.train_step().unwrap();
+        t.engine.stats()
+    };
+    let s = run(CommBackend::Serial);
+    let t = run(CommBackend::Threaded);
+    assert_eq!(s.count("all_gather"), t.count("all_gather"));
+    assert_eq!(s.count("reduce_scatter"), t.count("reduce_scatter"));
+    assert_eq!(s.total_bytes(), t.total_bytes());
+    assert!((s.total_time() - t.total_time()).abs() < 1e-12);
+}

@@ -101,9 +101,9 @@ fn redistribute_rejects_invalid_spec() {
     // target spec covers the wrong number of blocks
     let bad = RaggedSpec { granularity: 8, blocks_per_device: vec![1, 1, 1, 1] };
     let fabric = Fabric::h800();
-    let mut stats = vescale_fsdp::comm::CommStats::default();
+    let comm = vescale_fsdp::cluster::SerialComm::new();
     assert!(dt
-        .redistribute(Placement::RaggedShard(bad), &fabric, &mut stats)
+        .redistribute(Placement::RaggedShard(bad), &comm, &fabric)
         .is_err());
 }
 

@@ -1,16 +1,13 @@
-//! End-to-end integration: the numeric FSDP engine + PJRT runtime train a
-//! real (tiny) transformer and match the DDP reference trajectory.
-//! Requires `make artifacts` (skipped otherwise).
+//! End-to-end integration: the numeric FSDP engine + compute runtime
+//! train a real (tiny) transformer and match the DDP reference
+//! trajectory. Runs on the native compute path out of the box; with
+//! `--features pjrt` + `make artifacts` the same tests exercise the AOT
+//! executables instead.
 
 use vescale_fsdp::config::OptimKind;
 use vescale_fsdp::fsdp::ShardingPolicy;
 use vescale_fsdp::optim::AdamHyper;
-use vescale_fsdp::runtime::Engine;
 use vescale_fsdp::train::{DdpTrainer, Trainer};
-
-fn artifacts_ready() -> bool {
-    Engine::default_dir().join("manifest.json").exists()
-}
 
 fn hyper() -> AdamHyper {
     AdamHyper { lr: 1e-3, beta1: 0.9, beta2: 0.999, eps: 1e-8, wd: 0.01 }
@@ -18,9 +15,6 @@ fn hyper() -> AdamHyper {
 
 #[test]
 fn fsdp_training_reduces_loss() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut t = Trainer::new(
         "tiny",
         2,
@@ -43,9 +37,6 @@ fn fsdp_training_reduces_loss() {
 fn fsdp_matches_ddp_trajectory_adamw() {
     // same seeds, same data, same optimizer: FSDP (layer-wise RS) and DDP
     // (bucketed AR) must track each other closely for fp32 AdamW
-    if !artifacts_ready() {
-        return;
-    }
     let m = 2;
     let mut fsdp = Trainer::new(
         "tiny",
@@ -72,9 +63,6 @@ fn fsdp_matches_ddp_trajectory_adamw() {
 
 #[test]
 fn adam8bit_with_ragged_blocks_trains() {
-    if !artifacts_ready() {
-        return;
-    }
     // 32-row granularity so every quant block stays on one device
     let mut t = Trainer::new(
         "tiny",
@@ -91,9 +79,6 @@ fn adam8bit_with_ragged_blocks_trains() {
 
 #[test]
 fn muon_trains_and_beats_nothing_blows_up() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut t = Trainer::new(
         "tiny",
         2,
@@ -110,9 +95,6 @@ fn muon_trains_and_beats_nothing_blows_up() {
 
 #[test]
 fn mesh_size_does_not_change_numerics() {
-    if !artifacts_ready() {
-        return;
-    }
     let run_with = |m: usize| {
         let mut t = Trainer::new(
             "tiny",
@@ -142,9 +124,6 @@ fn mesh_size_does_not_change_numerics() {
 
 #[test]
 fn comm_stats_recorded_per_step() {
-    if !artifacts_ready() {
-        return;
-    }
     let mut t = Trainer::new(
         "tiny",
         2,
@@ -156,7 +135,8 @@ fn comm_stats_recorded_per_step() {
     .unwrap();
     t.train_step().unwrap();
     let buckets = t.engine.buckets.len();
-    assert_eq!(t.engine.stats.count("all_gather"), buckets);
-    assert_eq!(t.engine.stats.count("reduce_scatter"), buckets);
-    assert!(t.engine.stats.total_time() > 0.0);
+    let stats = t.engine.stats();
+    assert_eq!(stats.count("all_gather"), buckets);
+    assert_eq!(stats.count("reduce_scatter"), buckets);
+    assert!(stats.total_time() > 0.0);
 }

@@ -1,7 +1,9 @@
 //! PJRT-backed integration tests: load the AOT artifacts and verify the
 //! L1/L2 numerics against the Rust host implementations.
 //!
-//! Requires `make artifacts` (skipped otherwise).
+//! Requires a `--features pjrt` build *and* `make artifacts` (skipped
+//! otherwise — the native runtime has its own coverage in
+//! `src/runtime/native.rs` and `tests/backend_equivalence.rs`).
 
 use vescale_fsdp::optim::{adam8bit, AdamHyper, AdamW};
 use vescale_fsdp::optim::muon::{newton_schulz, NS_STEPS};
@@ -10,6 +12,10 @@ use vescale_fsdp::tensor::HostTensor;
 use vescale_fsdp::util::Rng;
 
 fn engine() -> Option<Engine> {
+    if !Engine::pjrt_enabled() {
+        eprintln!("skipping: build with --features pjrt");
+        return None;
+    }
     if !Engine::default_dir().join("manifest.json").exists() {
         eprintln!("skipping: run `make artifacts` first");
         return None;
