@@ -37,6 +37,64 @@ use crate::comm::{CommRecord, CommStats};
 pub use serial::SerialComm;
 pub use threaded::ThreadedComm;
 
+/// A waitable in-flight collective. Returned by the nonblocking
+/// `*_async` methods of [`Communicator`]: the operation owns its buffers
+/// for the duration of the exchange and hands them back from
+/// [`PendingOp::wait`]. Two completion models, one handle:
+///
+/// * **eager** (serial backend) — the collective already ran inline;
+///   `wait` is free. Exposed-communication accounting therefore charges
+///   the *issue* site, which is exactly where the serial backend blocks.
+/// * **background** (threaded backend) — the collective runs on a
+///   dedicated comm thread; `wait` joins it. Compute issued between
+///   `*_async` and `wait` overlaps with the exchange.
+///
+/// Both paths execute the same algorithm on the same data, so results
+/// are bit-identical regardless of which side of the handle they ran on.
+pub struct PendingOp {
+    inner: PendingInner,
+}
+
+enum PendingInner {
+    /// Completed eagerly at issue time (serial backend).
+    Done(Result<Vec<Vec<f32>>>),
+    /// Running on a background comm thread (threaded backend).
+    Thread(std::thread::JoinHandle<Result<Vec<Vec<f32>>>>),
+}
+
+impl PendingOp {
+    /// Wrap an already-completed result (eager backends).
+    pub fn done(result: Result<Vec<Vec<f32>>>) -> PendingOp {
+        PendingOp { inner: PendingInner::Done(result) }
+    }
+
+    /// Run `f` on a background comm thread; `wait` joins it.
+    pub fn spawn<F>(f: F) -> PendingOp
+    where
+        F: FnOnce() -> Result<Vec<Vec<f32>>> + Send + 'static,
+    {
+        PendingOp { inner: PendingInner::Thread(std::thread::spawn(f)) }
+    }
+
+    /// Whether `wait` would return without blocking.
+    pub fn is_done(&self) -> bool {
+        match &self.inner {
+            PendingInner::Done(_) => true,
+            PendingInner::Thread(h) => h.is_finished(),
+        }
+    }
+
+    /// Block until the collective finishes and take back the buffers.
+    pub fn wait(self) -> Result<Vec<Vec<f32>>> {
+        match self.inner {
+            PendingInner::Done(r) => r,
+            PendingInner::Thread(h) => {
+                h.join().map_err(|_| anyhow::anyhow!("comm thread panicked"))?
+            }
+        }
+    }
+}
+
 /// Which cluster backend executes the collectives (`--backend` flag).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CommBackend {
@@ -95,6 +153,23 @@ pub trait Communicator: Send + Sync {
     /// All-to-all over equal splits: rank k's slot j goes to rank j's
     /// slot k.
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()>;
+
+    /// Nonblocking AllGather: takes ownership of the buffers, returns a
+    /// waitable handle that hands them back gathered. The default
+    /// implementation completes eagerly (correct for any backend; the
+    /// threaded backend overrides it to run on a background comm thread).
+    /// Must be bit-identical to [`Communicator::all_gather`].
+    fn all_gather_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
+        let r = self.all_gather(&mut bufs, s).map(|()| bufs);
+        PendingOp::done(r)
+    }
+
+    /// Nonblocking ReduceScatter (sum then `scale`); same contract as
+    /// [`Communicator::all_gather_async`].
+    fn reduce_scatter_async(&self, mut bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
+        let r = self.reduce_scatter(&mut bufs, s, scale).map(|()| bufs);
+        PendingOp::done(r)
+    }
 
     /// Record one collective in the backend's thread-safe stats.
     fn record(&self, rec: CommRecord);
@@ -244,6 +319,43 @@ mod tests {
         });
         let bytes: Vec<u64> = stats.records.iter().map(|r| r.bytes_per_rank).collect();
         assert_eq!(bytes, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn pending_op_eager_and_background_agree() {
+        let bufs = vec![vec![1.0f32, 2.0], vec![3.0f32, 4.0]];
+        let eager = PendingOp::done(Ok(bufs.clone()));
+        assert!(eager.is_done());
+        assert_eq!(eager.wait().unwrap(), bufs);
+        let moved = bufs.clone();
+        let bg = PendingOp::spawn(move || Ok(moved));
+        assert_eq!(bg.wait().unwrap(), bufs);
+    }
+
+    #[test]
+    fn async_default_matches_sync_collective() {
+        // the trait's default async methods are the eager sync algorithms
+        let comm = SerialComm::new();
+        let (m, s) = (4usize, 3usize);
+        let mk = || -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|k| {
+                    let mut b = vec![0.0f32; m * s];
+                    for (i, x) in b[k * s..(k + 1) * s].iter_mut().enumerate() {
+                        *x = (k * 10 + i) as f32;
+                    }
+                    b
+                })
+                .collect()
+        };
+        let mut sync_bufs = mk();
+        comm.all_gather(&mut sync_bufs, s).unwrap();
+        let async_bufs = comm.all_gather_async(mk(), s).wait().unwrap();
+        assert_eq!(sync_bufs, async_bufs);
+        let mut sync_rs = mk();
+        comm.reduce_scatter(&mut sync_rs, s, 0.25).unwrap();
+        let async_rs = comm.reduce_scatter_async(mk(), s, 0.25).wait().unwrap();
+        assert_eq!(sync_rs, async_rs);
     }
 
     #[test]

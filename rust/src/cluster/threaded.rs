@@ -31,7 +31,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::{self, CommRecord, CommStats, SharedStats};
 
-use super::{CommBackend, Communicator};
+use super::{CommBackend, Communicator, PendingOp};
 
 /// Below this many total elements a collective is cheaper single-threaded
 /// than the ~tens-of-microseconds per OS thread spawn; the serial path is
@@ -67,6 +67,14 @@ impl ThreadedComm {
 
     fn serial_faster(&self, total_elems: usize) -> bool {
         total_elems < self.min_parallel_elems
+    }
+}
+
+impl ThreadedComm {
+    /// Async collectives from the tests force the rendezvous path too.
+    #[cfg(test)]
+    fn forced() -> ThreadedComm {
+        ThreadedComm::with_min_parallel_elems(0)
     }
 }
 
@@ -120,75 +128,123 @@ fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
     });
 }
 
+/// The rendezvous ring AllGather, as a free function so the sync path and
+/// the background comm thread of `all_gather_async` run the exact same
+/// algorithm (bit-identical either way).
+fn ring_all_gather(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: usize) -> Result<()> {
+    let m = bufs.len();
+    if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
+        return comm::all_gather(bufs, s);
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("all_gather buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    let shared = SharedBufs::new(bufs);
+    let barrier = Barrier::new(m);
+    fan_out(m, |rank| {
+        // Chunked ring: after step t, rank k holds chunks k..=k-t-1
+        // (mod m). Step t: rank k writes its own chunk (k-1-t) while
+        // its right neighbor reads chunk (k-t) — disjoint; the
+        // barrier orders step t's writes before step t+1's reads.
+        let left = (rank + m - 1) % m;
+        for step in 0..m - 1 {
+            let c = (rank + m - 1 - step) % m;
+            unsafe {
+                let src = shared.region(left, c * s, (c + 1) * s);
+                shared.region_mut(rank, c * s, (c + 1) * s).copy_from_slice(src);
+            }
+            barrier.wait();
+        }
+    });
+    Ok(())
+}
+
+/// The rendezvous ReduceScatter (rank-order summation), shared by the
+/// sync path and the background comm thread of `reduce_scatter_async`.
+fn rendezvous_reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    scale: f32,
+    min_parallel_elems: usize,
+) -> Result<()> {
+    let m = bufs.len();
+    if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
+        return comm::reduce_scatter(bufs, s, scale);
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("reduce_scatter buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    let shared = SharedBufs::new(bufs);
+    fan_out(m, |rank| {
+        // Rank k reduces chunk k across all ranks in rank order (the
+        // serial summation order — bit-identical results), then
+        // overwrites only its own chunk-k region. Rank j only ever
+        // reads chunk j, so the single write per buffer is disjoint
+        // from every concurrent read (j != k ⇒ different chunk).
+        let mut acc = vec![0.0f32; s];
+        unsafe {
+            for r in 0..m {
+                let src = shared.region(r, rank * s, (rank + 1) * s);
+                for (a, &x) in acc.iter_mut().zip(src) {
+                    *a += x;
+                }
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= scale;
+        }
+        unsafe {
+            shared.region_mut(rank, rank * s, (rank + 1) * s).copy_from_slice(&acc);
+        }
+    });
+    Ok(())
+}
+
 impl Communicator for ThreadedComm {
     fn backend(&self) -> CommBackend {
         CommBackend::Threaded
     }
 
     fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let m = bufs.len();
-        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
-            return comm::all_gather(bufs, s);
-        }
-        for b in bufs.iter() {
-            if b.len() < m * s {
-                bail!("all_gather buffer too small: {} < {}", b.len(), m * s);
-            }
-        }
-        let shared = SharedBufs::new(bufs);
-        let barrier = Barrier::new(m);
-        fan_out(m, |rank| {
-            // Chunked ring: after step t, rank k holds chunks k..=k-t-1
-            // (mod m). Step t: rank k writes its own chunk (k-1-t) while
-            // its right neighbor reads chunk (k-t) — disjoint; the
-            // barrier orders step t's writes before step t+1's reads.
-            let left = (rank + m - 1) % m;
-            for step in 0..m - 1 {
-                let c = (rank + m - 1 - step) % m;
-                unsafe {
-                    let src = shared.region(left, c * s, (c + 1) * s);
-                    shared.region_mut(rank, c * s, (c + 1) * s).copy_from_slice(src);
-                }
-                barrier.wait();
-            }
-        });
-        Ok(())
+        ring_all_gather(bufs, s, self.min_parallel_elems)
     }
 
     fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+        rendezvous_reduce_scatter(bufs, s, scale, self.min_parallel_elems)
+    }
+
+    fn all_gather_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
+        // below the threading threshold a comm-thread spawn costs more
+        // than the exchange itself — complete eagerly, same as the sync
+        // path's serial fallback (bit-identical either way)
         let m = bufs.len();
-        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
-            return comm::reduce_scatter(bufs, s, scale);
+        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
+            let r = ring_all_gather(&mut bufs, s, self.min_parallel_elems).map(|()| bufs);
+            return PendingOp::done(r);
         }
-        for b in bufs.iter() {
-            if b.len() < m * s {
-                bail!("reduce_scatter buffer too small: {} < {}", b.len(), m * s);
-            }
+        let min = self.min_parallel_elems;
+        PendingOp::spawn(move || {
+            ring_all_gather(&mut bufs, s, min)?;
+            Ok(bufs)
+        })
+    }
+
+    fn reduce_scatter_async(&self, mut bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
+        let m = bufs.len();
+        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
+            let r = rendezvous_reduce_scatter(&mut bufs, s, scale, self.min_parallel_elems)
+                .map(|()| bufs);
+            return PendingOp::done(r);
         }
-        let shared = SharedBufs::new(bufs);
-        fan_out(m, |rank| {
-            // Rank k reduces chunk k across all ranks in rank order (the
-            // serial summation order — bit-identical results), then
-            // overwrites only its own chunk-k region. Rank j only ever
-            // reads chunk j, so the single write per buffer is disjoint
-            // from every concurrent read (j != k ⇒ different chunk).
-            let mut acc = vec![0.0f32; s];
-            unsafe {
-                for r in 0..m {
-                    let src = shared.region(r, rank * s, (rank + 1) * s);
-                    for (a, &x) in acc.iter_mut().zip(src) {
-                        *a += x;
-                    }
-                }
-            }
-            for a in acc.iter_mut() {
-                *a *= scale;
-            }
-            unsafe {
-                shared.region_mut(rank, rank * s, (rank + 1) * s).copy_from_slice(&acc);
-            }
-        });
-        Ok(())
+        let min = self.min_parallel_elems;
+        PendingOp::spawn(move || {
+            rendezvous_reduce_scatter(&mut bufs, s, scale, min)?;
+            Ok(bufs)
+        })
     }
 
     fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
@@ -403,6 +459,37 @@ mod tests {
                 assert_eq!(buf[k * s], (k * 10 + j) as f32);
             }
         }
+    }
+
+    #[test]
+    fn async_rendezvous_bit_identical_to_sync() {
+        let (m, s) = (4, 6);
+        let mk = |seed: u64| -> Vec<Vec<f32>> {
+            let mut rng = crate::util::Rng::new(seed);
+            (0..m)
+                .map(|_| {
+                    (0..m * s)
+                        .map(|_| rng.normal_f32() * 10f32.powi(rng.below(7) as i32 - 3))
+                        .collect()
+                })
+                .collect()
+        };
+        let comm = ThreadedComm::forced();
+        let mut sync_ag = mk(3);
+        comm.all_gather(&mut sync_ag, s).unwrap();
+        let async_ag = comm.all_gather_async(mk(3), s).wait().unwrap();
+        for (a, b) in sync_ag.iter().flatten().zip(async_ag.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut sync_rs = mk(4);
+        comm.reduce_scatter(&mut sync_rs, s, 0.25).unwrap();
+        let async_rs = comm.reduce_scatter_async(mk(4), s, 0.25).wait().unwrap();
+        for (a, b) in sync_rs.iter().flatten().zip(async_rs.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // errors surface at wait(), not at issue
+        let bad = vec![vec![0.0f32; 2]; 4];
+        assert!(comm.all_gather_async(bad, 6).wait().is_err());
     }
 
     #[test]

@@ -97,6 +97,7 @@ impl ConfigFile {
             seed: self.usize_or("run.seed", 0) as u64,
             granularity: self.usize_or("run.granularity", 1) as u64,
             backend,
+            prefetch: self.usize_or("run.prefetch", d.prefetch),
         })
     }
 }
@@ -121,6 +122,7 @@ optimizer = "adam8bit"
 backend = "threaded"
 steps = 100
 lr = 0.0003
+prefetch = 2
 "#;
 
     #[test]
@@ -141,6 +143,7 @@ lr = 0.0003
         assert_eq!(tc.system, System::VeScale);
         assert_eq!(tc.steps, 100);
         assert_eq!(tc.backend, CommBackend::Threaded);
+        assert_eq!(tc.prefetch, 2);
     }
 
     #[test]

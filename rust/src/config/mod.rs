@@ -150,6 +150,10 @@ pub struct TrainConfig {
     pub granularity: u64,
     /// Cluster backend executing collectives + per-rank compute.
     pub backend: CommBackend,
+    /// In-flight bucket-collective cap for the pipelined executor
+    /// (`--prefetch`): 0 = sequential step loop, N >= 1 = bucket-wise
+    /// schedule with up to N prefetched gathers.
+    pub prefetch: usize,
 }
 
 impl Default for TrainConfig {
@@ -166,6 +170,7 @@ impl Default for TrainConfig {
             seed: 0,
             granularity: 1,
             backend: CommBackend::Serial,
+            prefetch: 0,
         }
     }
 }

@@ -11,19 +11,31 @@
 //! * **grouped fused ops**: `zero_grads`/`scale_all` touch the whole
 //!   buffer in one pass instead of one kernel per tensor;
 //! * **in-place collectives**: AllGather fills the same persistent full
-//!   buffer; ReduceScatter reduces into the shard region in place;
-//! * **batched allocation**: shard + full storage is carved from single
-//!   segments via `CachingAllocator::alloc_batch`, with deterministic
-//!   frees (no record_stream hazard).
+//!   buffer; ReduceScatter reduces into the shard region in place — both
+//!   available as nonblocking `begin_gather`/`finish_gather` halves over
+//!   the cluster backend's [`PendingOp`] handles for the pipelined
+//!   executor (`fsdp::exec`);
+//! * **allocator-backed storage**: with [`DBuffer::with_allocator`], the
+//!   persistent shard storage is claimed through
+//!   `CachingAllocator::alloc_batch` and the transient full (gathered)
+//!   buffer is acquired at gather and deterministically freed at
+//!   reshard-after-forward — so the schedule's peak reserved bytes are
+//!   *measured* by the allocator rather than asserted (no record_stream
+//!   hazard; freed segments are immediately reusable by the next
+//!   bucket's gather).
 //!
 //! N-D semantics (Fig 7): with an HSDP mesh `[replica, fsdp]`, gradient
 //! reduction is ReduceScatter within the fsdp dim followed by AllReduce
-//! across the replica dim — `reduce_gradients` implements exactly that.
+//! across the replica dim — `reduce_gradients` implements exactly that,
+//! and `reduce_gradients_core`/`reduce_gradients_finish` expose the same
+//! path for caller-owned gradient shards (the FSDP engine) and for
+//! asynchronously-issued ReduceScatters.
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Communicator;
+use crate::cluster::{Communicator, PendingOp};
 use crate::comm::{CommRecord, Fabric};
+use crate::memory::{BlockId, SharedAllocator};
 use crate::mesh::DeviceMesh;
 use crate::planner::Layout;
 
@@ -39,6 +51,14 @@ pub struct DBuffer {
     pub full: Vec<Vec<f32>>,
     /// Whether `full` currently holds gathered (valid) data.
     pub gathered: bool,
+    /// Optional caching-allocator accounting (one simulated device's
+    /// memory view; see module docs).
+    alloc: Option<SharedAllocator>,
+    /// Persistent claim for the shard storage (alloc_batch; never freed).
+    _shard_block: Option<BlockId>,
+    /// Transient claim for the gathered full buffer (alive while
+    /// `gathered` or a gather is in flight).
+    full_block: Option<BlockId>,
 }
 
 impl DBuffer {
@@ -50,7 +70,41 @@ impl DBuffer {
             full: vec![vec![0.0; m * s]; m],
             layout,
             gathered: false,
+            alloc: None,
+            _shard_block: None,
+            full_block: None,
         }
+    }
+
+    /// Like [`DBuffer::new`], but every byte of storage is accounted
+    /// against `alloc`: the persistent per-device shard is claimed up
+    /// front via `alloc_batch`, and the full buffer is acquired/freed
+    /// around each gather/reshard cycle so the allocator's peak-reserved
+    /// counter measures the executor's real memory schedule.
+    pub fn with_allocator(layout: Layout, alloc: SharedAllocator) -> Result<DBuffer> {
+        let mut db = DBuffer::new(layout);
+        let bytes = db.shard_bytes().max(1);
+        let ids = alloc.lock().unwrap().alloc_batch(&[bytes])?;
+        db._shard_block = ids.into_iter().next();
+        db.alloc = Some(alloc);
+        Ok(db)
+    }
+
+    /// Bytes of one device's full (gathered) buffer.
+    pub fn full_bytes(&self) -> u64 {
+        self.layout.shard_size * self.layout.num_devices as u64 * 4
+    }
+
+    /// Claim the transient full-buffer storage (no-op when already held
+    /// or when no allocator is attached).
+    fn acquire_full(&mut self) -> Result<()> {
+        if let Some(alloc) = &self.alloc {
+            if self.full_block.is_none() {
+                self.full_block =
+                    Some(alloc.lock().unwrap().alloc(self.full_bytes().max(1))?);
+            }
+        }
+        Ok(())
     }
 
     pub fn num_devices(&self) -> usize {
@@ -146,28 +200,108 @@ impl DBuffer {
     /// collective runs on `full` directly, through whichever cluster
     /// backend `comm` selects.
     pub fn all_gather_params(&mut self, comm: &dyn Communicator, fabric: &Fabric) -> Result<()> {
-        let m = self.num_devices();
+        if self.full.len() != self.num_devices() {
+            bail!("all_gather_params: an async gather is in flight");
+        }
+        self.acquire_full()?;
         let s = self.shard_elems();
-        for rank in 0..m {
-            let shard = self.shards[rank].clone();
-            self.full[rank][rank * s..(rank + 1) * s].copy_from_slice(&shard);
+        // split borrow: full (mut) and shards (shared) are disjoint
+        // fields, so no defensive copy is needed
+        for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
+            full[rank * s..(rank + 1) * s].copy_from_slice(shard);
         }
         comm.all_gather(&mut self.full, s)?;
         self.gathered = true;
+        self.record_gather(comm, fabric);
+        Ok(())
+    }
+
+    /// Begin a nonblocking parameter AllGather: the full buffers move
+    /// into the returned [`PendingOp`] (their shard regions pre-filled
+    /// from the local shards) and come back via
+    /// [`DBuffer::finish_gather`]. Until then `full` is empty and
+    /// `gathered` is false.
+    pub fn begin_gather(&mut self, comm: &dyn Communicator) -> Result<PendingOp> {
+        if self.gathered {
+            bail!("begin_gather: buffer already gathered");
+        }
+        if self.full.len() != self.num_devices() {
+            bail!("begin_gather: a gather is already in flight");
+        }
+        self.acquire_full()?;
+        let s = self.shard_elems();
+        for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
+            full[rank * s..(rank + 1) * s].copy_from_slice(shard);
+        }
+        let bufs = std::mem::take(&mut self.full);
+        Ok(comm.all_gather_async(bufs, s))
+    }
+
+    /// Complete a gather started with [`DBuffer::begin_gather`]: blocks
+    /// until the collective finishes, takes the buffers back, and records
+    /// the op on the fabric model.
+    pub fn finish_gather(
+        &mut self,
+        op: PendingOp,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+    ) -> Result<()> {
+        match op.wait() {
+            Ok(bufs) => {
+                self.full = bufs;
+                self.gathered = true;
+                self.record_gather(comm, fabric);
+                Ok(())
+            }
+            Err(e) => {
+                // restore a usable (ungathered) state: fresh full storage
+                // and the transient allocator claim released
+                let m = self.num_devices();
+                let s = self.shard_elems();
+                self.full = vec![vec![0.0; m * s]; m];
+                self.release_full();
+                Err(e)
+            }
+        }
+    }
+
+    fn record_gather(&self, comm: &dyn Communicator, fabric: &Fabric) {
         let aligned = fabric.is_aligned(0, self.shard_bytes());
         comm.record(CommRecord {
             op: "all_gather",
             bytes_per_rank: self.shard_bytes(),
-            group_size: m,
-            sim_time: fabric.all_gather_time(m, self.shard_bytes(), aligned),
+            group_size: self.num_devices(),
+            sim_time: fabric.all_gather_time(self.num_devices(), self.shard_bytes(), aligned),
         });
-        Ok(())
     }
 
     /// Release the gathered full buffers (FSDP reshard-after-forward).
-    /// The storage persists (in-place reuse); only validity is dropped.
+    /// The host storage persists (in-place reuse), but the allocator —
+    /// when attached — sees a deterministic free, so the next bucket's
+    /// gather can reuse the segment immediately.
     pub fn release_full(&mut self) {
         self.gathered = false;
+        if self.full.len() != self.num_devices() {
+            // an async gather still owns the storage — keep the allocator
+            // claim; finish_gather (or its error path) releases it
+            debug_assert!(false, "release_full during in-flight gather");
+            return;
+        }
+        if let (Some(alloc), Some(id)) = (&self.alloc, self.full_block.take()) {
+            alloc
+                .lock()
+                .unwrap()
+                .free(id)
+                .expect("full-buffer block double-freed");
+        }
+    }
+
+    /// ReduceScatter scale for a reduction over `mesh`: mean over the
+    /// fsdp dim *and* the replica dim (the cross-replica AllReduce in
+    /// `reduce_gradients_finish` restores the replica factor).
+    pub fn reduce_scale(&self, mesh: &DeviceMesh) -> f32 {
+        let replicas = mesh.dim_size("replica").unwrap_or(1);
+        1.0 / (self.num_devices() * replicas) as f32
     }
 
     /// In-place gradient ReduceScatter over the fsdp dim, then (if the
@@ -182,16 +316,51 @@ impl DBuffer {
         comm: &dyn Communicator,
         fabric: &Fabric,
     ) -> Result<()> {
+        let mut dst = std::mem::take(&mut self.shards);
+        let r = self.reduce_gradients_core(grads, &mut dst, mesh, comm, fabric);
+        self.shards = dst;
+        r
+    }
+
+    /// The full reduction path into caller-owned shard buffers `dst`
+    /// (m x S) — the FSDP engine's gradient shards live outside the
+    /// DBuffer, but must go through the identical HSDP-aware reduction.
+    pub fn reduce_gradients_core(
+        &self,
+        grads: &mut [Vec<f32>],
+        dst: &mut [Vec<f32>],
+        mesh: &DeviceMesh,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+    ) -> Result<()> {
         let m = self.num_devices();
-        let s = self.shard_elems();
         if grads.len() != m {
             bail!("reduce_gradients: {} grad buffers != {m}", grads.len());
         }
-        let replicas = mesh.dim_size("replica").unwrap_or(1);
-        let scale = 1.0 / (m * replicas) as f32;
-        comm.reduce_scatter(grads, s, scale)?;
-        for rank in 0..m {
-            self.shards[rank].copy_from_slice(&grads[rank][rank * s..(rank + 1) * s]);
+        comm.reduce_scatter(grads, self.shard_elems(), self.reduce_scale(mesh))?;
+        self.reduce_gradients_finish(grads, dst, mesh, comm, fabric)
+    }
+
+    /// Completion half of a gradient reduction whose ReduceScatter
+    /// already ran (synchronously, or via `reduce_scatter_async` — the
+    /// pipelined executor's overlap path): copies the reduced shard
+    /// regions into `dst`, performs the cross-replica AllReduce under
+    /// HSDP, and records both collectives on the fabric model.
+    pub fn reduce_gradients_finish(
+        &self,
+        reduced: &[Vec<f32>],
+        dst: &mut [Vec<f32>],
+        mesh: &DeviceMesh,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+    ) -> Result<()> {
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        if reduced.len() != m || dst.len() != m {
+            bail!("reduce_gradients_finish: want {m} buffers");
+        }
+        for (rank, (dst_shard, buf)) in dst.iter_mut().zip(reduced).enumerate() {
+            dst_shard.copy_from_slice(&buf[rank * s..(rank + 1) * s]);
         }
         let aligned = fabric.is_aligned(0, self.shard_bytes());
         comm.record(CommRecord {
@@ -200,13 +369,14 @@ impl DBuffer {
             group_size: m,
             sim_time: fabric.reduce_scatter_time(m, self.shard_bytes(), aligned),
         });
+        let replicas = mesh.dim_size("replica").unwrap_or(1);
         if replicas > 1 {
             // cross-replica AllReduce of the already-scaled shard. In the
             // simulation each replica computed the same reduced value, so
             // data is already correct; we multiply by `replicas` to undo
             // the extra scale and account the collective.
-            for rank in 0..m {
-                for x in self.shards[rank].iter_mut() {
+            for shard in dst.iter_mut() {
+                for x in shard.iter_mut() {
                     *x *= replicas as f32;
                 }
             }
@@ -214,7 +384,7 @@ impl DBuffer {
                 op: "all_reduce",
                 bytes_per_rank: self.shard_bytes(),
                 group_size: replicas,
-                sim_time: fabric.all_reduce_time(replicas, self.shard_bytes(), true),
+                sim_time: fabric.all_reduce_time(replicas, self.shard_bytes(), aligned),
             });
         }
         Ok(())
@@ -383,6 +553,84 @@ mod tests {
         assert!(!db.gathered);
         db.all_gather_params(&comm, &fabric).unwrap();
         assert_eq!(db.full_view(0, 0), &datas[0][..]);
+    }
+
+    #[test]
+    fn split_gather_matches_sync_gather() {
+        // begin_gather/finish_gather must be bit-identical to
+        // all_gather_params on both backends
+        let fabric = Fabric::h800();
+        for forced_threaded in [false, true] {
+            let comm: Box<dyn Communicator> = if forced_threaded {
+                Box::new(ThreadedComm::with_min_parallel_elems(0))
+            } else {
+                Box::new(SerialComm::new())
+            };
+            let (mut sync_db, _) = demo_buffer(4);
+            let (mut async_db, _) = demo_buffer(4);
+            sync_db.all_gather_params(comm.as_ref(), &fabric).unwrap();
+            let op = async_db.begin_gather(comm.as_ref()).unwrap();
+            assert!(!async_db.gathered);
+            async_db.finish_gather(op, comm.as_ref(), &fabric).unwrap();
+            assert!(async_db.gathered);
+            for rank in 0..4 {
+                for (a, b) in sync_db.full[rank].iter().zip(&async_db.full[rank]) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            // double-begin is rejected
+            assert!(async_db.begin_gather(comm.as_ref()).is_err());
+        }
+    }
+
+    #[test]
+    fn allocator_measures_gather_lifecycle() {
+        use crate::memory::{shared_allocator, FreePolicy};
+        let ts = vec![TensorDecl::new("a", 96, 32), TensorDecl::new("b", 100, 1)];
+        let layout = plan(&ts, 4, 1).unwrap();
+        let alloc = shared_allocator(FreePolicy::Deterministic, 1 << 30);
+        let mut db = DBuffer::with_allocator(layout, alloc.clone()).unwrap();
+        let base = alloc.lock().unwrap().allocated;
+        assert!(base > 0, "persistent shard claim missing");
+        let comm = SerialComm::new();
+        let fabric = Fabric::h800();
+        db.all_gather_params(&comm, &fabric).unwrap();
+        let gathered = alloc.lock().unwrap().allocated;
+        assert!(gathered > base, "gather must claim the full buffer");
+        db.release_full();
+        assert_eq!(alloc.lock().unwrap().allocated, base, "reshard must free");
+        // regather reuses the freed segment: reserved stays flat
+        let reserved = alloc.lock().unwrap().reserved;
+        let op = db.begin_gather(&comm).unwrap();
+        db.finish_gather(op, &comm, &fabric).unwrap();
+        assert_eq!(alloc.lock().unwrap().reserved, reserved, "no segment growth");
+        db.release_full();
+    }
+
+    #[test]
+    fn reduce_core_into_external_shards_matches_inplace() {
+        let (mut db_a, _) = demo_buffer(4);
+        let (db_b, _) = demo_buffer(4);
+        let m = 4;
+        let n = m * db_a.shard_elems();
+        let mk = || -> Vec<Vec<f32>> {
+            let mut rng = Rng::new(11);
+            (0..m)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect()
+        };
+        let mesh = DeviceMesh::flat("fsdp", m);
+        let fabric = Fabric::h800();
+        let comm = SerialComm::new();
+        let mut g1 = mk();
+        db_a.reduce_gradients(&mut g1, &mesh, &comm, &fabric).unwrap();
+        let mut g2 = mk();
+        let mut dst = vec![vec![0.0f32; db_b.shard_elems()]; m];
+        db_b.reduce_gradients_core(&mut g2, &mut dst, &mesh, &comm, &fabric)
+            .unwrap();
+        for (a, b) in db_a.shards.iter().flatten().zip(dst.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]

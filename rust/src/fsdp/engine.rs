@@ -24,10 +24,16 @@ use crate::cluster::{Communicator, SerialComm};
 use crate::comm::{CommStats, Fabric};
 use crate::dbuffer::DBuffer;
 use crate::dtensor::DTensor;
+use crate::memory::{shared_allocator, BlockId, FreePolicy, SharedAllocator};
 use crate::mesh::DeviceMesh;
 use crate::optim::{Muon, ShardOptimizer};
 use crate::placement::Placement;
 use crate::planner::{self, TensorDecl};
+
+/// Simulated per-device memory limit for the engine's allocator account
+/// (generous: the numeric models are tiny; the limit only exists so the
+/// allocator's pressure path stays reachable in tests).
+const DEVICE_MEM_LIMIT: u64 = 1 << 40;
 
 /// Per-parameter sharding granularity policy (`orig_param_policy`).
 #[derive(Debug, Clone)]
@@ -80,6 +86,34 @@ pub struct Bucket {
     pub param_ids: Vec<usize>,
 }
 
+/// Stage one bucket's per-rank gradient slices into full-buffer-sized
+/// buffers at the bucket's layout offsets, charging the transient
+/// staging storage to `alloc` until the caller frees the returned block.
+/// `grad_of(rank, pos)` yields rank's gradient for the bucket's pos-th
+/// tensor. Shared by the sequential reduction (`FsdpEngine::reduce_grads`)
+/// and the pipelined executor's async reduction, so the staging
+/// convention — and its memory accounting — cannot diverge between
+/// schedules.
+pub(crate) fn stage_bucket_grads<'g>(
+    bucket: &Bucket,
+    m: usize,
+    alloc: &SharedAllocator,
+    grad_of: &dyn Fn(usize, usize) -> &'g [f32],
+) -> Result<(Vec<Vec<f32>>, BlockId)> {
+    let s = bucket.dbuffer.shard_elems();
+    let total = s * m;
+    let block = alloc.lock().unwrap().alloc(((total * 4) as u64).max(1))?;
+    let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; total]; m];
+    for pos in 0..bucket.param_ids.len() {
+        let off = bucket.dbuffer.layout.offsets[pos] as usize;
+        for (rank, buf) in bufs.iter_mut().enumerate() {
+            let g = grad_of(rank, pos);
+            buf[off..off + g.len()].copy_from_slice(g);
+        }
+    }
+    Ok((bufs, block))
+}
+
 pub struct FsdpEngine {
     pub mesh: DeviceMesh,
     pub fabric: Fabric,
@@ -88,6 +122,12 @@ pub struct FsdpEngine {
     pub buckets: Vec<Bucket>,
     /// name + shape per global parameter index.
     pub params: Vec<(String, Vec<usize>)>,
+    /// Caching allocator accounting one device's memory: persistent
+    /// shard/grad storage is claimed batched at construction; the
+    /// executor's gather/reshard cycles alloc and deterministically free
+    /// full buffers through it, so `memory_stats` reports a *measured*
+    /// peak.
+    pub alloc: SharedAllocator,
     locs: Vec<ParamLoc>,
     m: usize,
 }
@@ -123,6 +163,7 @@ impl FsdpEngine {
         let n_buckets = group_of.iter().max().map(|&g| g + 1).unwrap_or(0);
         let mut locs = vec![ParamLoc { bucket: 0, idx: 0 }; params.len()];
         let mut buckets = Vec::with_capacity(n_buckets);
+        let alloc = shared_allocator(FreePolicy::Deterministic, DEVICE_MEM_LIMIT);
         for b in 0..n_buckets {
             let ids: Vec<usize> = (0..params.len()).filter(|&i| group_of[i] == b).collect();
             let decls: Vec<TensorDecl> = ids
@@ -141,12 +182,22 @@ impl FsdpEngine {
             }
             let s = layout.shard_size as usize;
             buckets.push(Bucket {
-                dbuffer: DBuffer::new(layout),
+                dbuffer: DBuffer::with_allocator(layout, alloc.clone())
+                    .with_context(|| format!("allocating bucket {b}"))?,
                 grad_shards: vec![vec![0.0; s]; m],
                 param_ids: ids,
             });
         }
-        Ok(FsdpEngine { mesh, fabric, comm, buckets, params, locs, m })
+        // persistent gradient-shard storage, claimed in one batched call
+        // (a single segment, no inter-bucket fragmentation)
+        let grad_sizes: Vec<u64> = buckets
+            .iter()
+            .map(|b| b.dbuffer.shard_bytes().max(1))
+            .collect();
+        if !grad_sizes.is_empty() {
+            let _grad_blocks = alloc.lock().unwrap().alloc_batch(&grad_sizes)?;
+        }
+        Ok(FsdpEngine { mesh, fabric, comm, buckets, params, alloc, locs, m })
     }
 
     pub fn num_devices(&self) -> usize {
@@ -157,6 +208,26 @@ impl FsdpEngine {
     /// the cluster backend).
     pub fn stats(&self) -> CommStats {
         self.comm.stats()
+    }
+
+    /// Where parameter `i` lives (bucket + tensor index inside it).
+    pub fn param_loc(&self, i: usize) -> ParamLoc {
+        self.locs[i]
+    }
+
+    /// Zero-copy view of parameter `i`'s full tensor in `rank`'s gathered
+    /// buffer (bucket must be gathered). This is what the pipelined
+    /// executor feeds compute with — no `device_params` copies.
+    pub fn full_param_view(&self, rank: usize, i: usize) -> &[f32] {
+        let loc = self.locs[i];
+        self.buckets[loc.bucket].dbuffer.full_view(rank, loc.idx)
+    }
+
+    /// Measured allocator peaks: (peak reserved, peak allocated) bytes on
+    /// the simulated device.
+    pub fn memory_stats(&self) -> (u64, u64) {
+        let a = self.alloc.lock().unwrap();
+        (a.peak_reserved, a.peak_allocated)
     }
 
     /// Total padded elements per device (memory accounting).
@@ -219,36 +290,28 @@ impl FsdpEngine {
         }
     }
 
-    /// ReduceScatter per-device per-parameter gradients into shards.
-    /// `grads[rank][param]` (global order).
+    /// ReduceScatter per-device per-parameter gradients into shards,
+    /// through the DBuffer reduction path — so HSDP meshes (`replica`
+    /// dim > 1) get the cross-replica AllReduce and the alignment
+    /// accounting comes from the fabric check, same as every other
+    /// collective.
     pub fn reduce_grads(&mut self, grads: &[Vec<Vec<f32>>]) -> Result<()> {
         if grads.len() != self.m {
             bail!("need grads for all {} devices", self.m);
         }
-        for (b_idx, bucket) in self.buckets.iter_mut().enumerate() {
-            let s = bucket.dbuffer.shard_elems();
-            let total = s * self.m;
-            // stage per-device full gradient buffers at layout offsets
-            let mut bufs: Vec<Vec<f32>> = vec![vec![0.0; total]; self.m];
-            for (pos, &pid) in bucket.param_ids.iter().enumerate() {
-                let off = bucket.dbuffer.layout.offsets[pos] as usize;
-                for rank in 0..self.m {
-                    let g = &grads[rank][pid];
-                    bufs[rank][off..off + g.len()].copy_from_slice(g);
-                }
-            }
-            let _ = b_idx;
-            self.comm.reduce_scatter(&mut bufs, s, 1.0 / self.m as f32)?;
-            for rank in 0..self.m {
-                bucket.grad_shards[rank].copy_from_slice(&bufs[rank][rank * s..(rank + 1) * s]);
-            }
-            let bytes = (s * 4) as u64;
-            self.comm.record(crate::comm::CommRecord {
-                op: "reduce_scatter",
-                bytes_per_rank: bytes,
-                group_size: self.m,
-                sim_time: self.fabric.reduce_scatter_time(self.m, bytes, true),
-            });
+        for bucket in self.buckets.iter_mut() {
+            let (mut bufs, block) =
+                stage_bucket_grads(bucket, self.m, &self.alloc, &|rank, pos| {
+                    &grads[rank][bucket.param_ids[pos]][..]
+                })?;
+            bucket.dbuffer.reduce_gradients_core(
+                &mut bufs,
+                &mut bucket.grad_shards,
+                &self.mesh,
+                self.comm.as_ref(),
+                &self.fabric,
+            )?;
+            self.alloc.lock().unwrap().free(block)?;
         }
         Ok(())
     }
@@ -264,9 +327,11 @@ impl FsdpEngine {
             bail!("need one optimizer per bucket");
         }
         for (bucket, opt) in self.buckets.iter_mut().zip(opts.iter_mut()) {
+            // split borrow: param shards (mut) and grad shards (shared)
+            // are disjoint fields — no per-step gradient clone
+            let Bucket { dbuffer, grad_shards, .. } = bucket;
             for rank in 0..self.m {
-                let grad = bucket.grad_shards[rank].clone();
-                opt.step(rank, t, &mut bucket.dbuffer.shards[rank], &grad);
+                opt.step(rank, t, &mut dbuffer.shards[rank], &grad_shards[rank]);
             }
         }
         Ok(())
@@ -291,23 +356,24 @@ impl FsdpEngine {
             for pos in 0..self.buckets[b_idx].param_ids.len() {
                 let pid = self.buckets[b_idx].param_ids[pos];
                 let shape = self.params[pid].1.clone();
-                let bucket = &mut self.buckets[b_idx];
+                // split borrow: grads read-only alongside mutable params
+                let Bucket { dbuffer, grad_shards, .. } = &mut self.buckets[b_idx];
                 for rank in 0..m {
-                    let Some((lo, hi)) = bucket.dbuffer.layout.local_slice(pos, rank) else {
+                    let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) else {
                         continue;
                     };
-                    let off = bucket.dbuffer.layout.offsets[pos];
-                    let s = bucket.dbuffer.layout.shard_size;
+                    let off = dbuffer.layout.offsets[pos];
+                    let s = dbuffer.layout.shard_size;
                     let a = (off + lo - rank as u64 * s) as usize;
                     let len = (hi - lo) as usize;
-                    let grad = bucket.grad_shards[rank][a..a + len].to_vec();
-                    let slice = &mut bucket.dbuffer.shards[rank][a..a + len];
+                    let grad = &grad_shards[rank][a..a + len];
+                    let slice = &mut dbuffer.shards[rank][a..a + len];
                     let slot = pid * m + rank;
                     let blocks_ok = lo % block == 0 && (len as u64) % block == 0;
                     if shape.len() >= 2 && blocks_ok {
-                        a8.step(slot, t, slice, &grad);
+                        a8.step(slot, t, slice, grad);
                     } else {
-                        fallback.step(slot, t, slice, &grad);
+                        fallback.step(slot, t, slice, grad);
                     }
                 }
             }
@@ -384,18 +450,17 @@ impl FsdpEngine {
                     }
                 } else {
                     // fallback optimizer on this tensor's local slices
-                    let bucket = &mut self.buckets[b_idx];
+                    // (split borrow — no gradient clone)
+                    let Bucket { dbuffer, grad_shards, .. } = &mut self.buckets[b_idx];
                     for rank in 0..self.m {
-                        if let Some(((lo, hi), _)) = bucket.dbuffer.layout.local_slice(pos, rank)
-                            .map(|r| (r, ()))
-                        {
-                            let off = bucket.dbuffer.layout.offsets[pos];
-                            let s = bucket.dbuffer.layout.shard_size;
+                        if let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) {
+                            let off = dbuffer.layout.offsets[pos];
+                            let s = dbuffer.layout.shard_size;
                             let a = (off + lo - rank as u64 * s) as usize;
                             let len = (hi - lo) as usize;
-                            let grad = bucket.grad_shards[rank][a..a + len].to_vec();
-                            let shard = &mut bucket.dbuffer.shards[rank][a..a + len];
-                            fallback[b_idx].step(rank, t, shard, &grad);
+                            let grad = &grad_shards[rank][a..a + len];
+                            let shard = &mut dbuffer.shards[rank][a..a + len];
+                            fallback[b_idx].step(rank, t, shard, grad);
                         }
                     }
                 }
@@ -552,6 +617,59 @@ mod tests {
         // embed (non-hidden) also changed via fallback
         let emb = e.read_param(0);
         assert!(emb.iter().zip(&full[0]).any(|(a, b)| (a - b).abs() > 1e-6));
+    }
+
+    #[test]
+    fn hsdp_reduce_grads_runs_replica_allreduce() {
+        // regression: the engine used to reimplement reduction without the
+        // cross-replica AllReduce that DBuffer::reduce_gradients performs
+        let params = tiny_params();
+        let groups = vec![0, 1, 1, 2, 2, 3];
+        let mut e = FsdpEngine::new(
+            params,
+            &groups,
+            DeviceMesh::new(&[("replica", 2), ("fsdp", 2)]).unwrap(),
+            &ShardingPolicy::element_wise(),
+            Fabric::h800(),
+        )
+        .unwrap();
+        let full = rand_full(6);
+        e.init_params(&full).unwrap();
+        // fsdp rank r contributes grad (r+1) everywhere -> fsdp mean 1.5,
+        // preserved through the replica AllReduce
+        let grads: Vec<Vec<Vec<f32>>> = (0..2)
+            .map(|r| {
+                full.iter()
+                    .map(|p| vec![(r + 1) as f32; p.len()])
+                    .collect()
+            })
+            .collect();
+        e.reduce_grads(&grads).unwrap();
+        for b in &e.buckets {
+            for rank in 0..2 {
+                for &g in &b.grad_shards[rank] {
+                    assert!(g == 0.0 || (g - 1.5).abs() < 1e-6, "{g}");
+                }
+            }
+        }
+        let stats = e.stats();
+        assert_eq!(stats.count("all_reduce"), e.buckets.len());
+        assert_eq!(stats.count("reduce_scatter"), e.buckets.len());
+    }
+
+    #[test]
+    fn allocator_accounts_shard_and_gather_storage() {
+        let mut e = engine(4);
+        let (_, peak_alloc_0) = e.memory_stats();
+        assert!(peak_alloc_0 > 0, "persistent shard claims missing");
+        let before = e.alloc.lock().unwrap().allocated;
+        e.gather_params().unwrap();
+        let during = e.alloc.lock().unwrap().allocated;
+        assert!(during > before, "gather must claim full buffers");
+        e.release_params();
+        assert_eq!(e.alloc.lock().unwrap().allocated, before, "reshard frees");
+        let (peak_res, peak_alloc) = e.memory_stats();
+        assert!(peak_res >= peak_alloc && peak_alloc >= during);
     }
 
     #[test]

@@ -1,0 +1,512 @@
+//! Bucket-pipelined overlap executor: the real (numeric) counterpart of
+//! the `sim.rs` timeline model.
+//!
+//! A training step is driven by an [`ExecMode`] schedule over the
+//! engine's FSDP buckets (embed | layer 0..L-1 | final-norm+head for the
+//! native L2 transformer):
+//!
+//! * **Sequential** — the seed behavior: AllGather *every* bucket, run
+//!   the monolithic fwd/bwd per rank, reshard, ReduceScatter every
+//!   bucket. All parameters are live at once and every collective is
+//!   exposed.
+//! * **Pipelined** (`--prefetch N`) — the paper's overlap schedule
+//!   (§5–6): bucket l+1's AllGather is issued on the comm backend's
+//!   background threads *during* bucket l's forward compute
+//!   (prefetching, up to N gathers in flight), each bucket is resharded
+//!   immediately after its forward (reshard-after-forward, re-gathered
+//!   in backward with the same prefetch window), and bucket l's
+//!   ReduceScatter overlaps bucket l-1's backward compute. At most
+//!   N+1 full buckets are live at any point, and every full-buffer
+//!   acquire/release goes through the engine's [`CachingAllocator`]
+//!   account — so the memory claim is *measured*, not asserted.
+//!
+//! Both schedules execute the identical float operations in the
+//! identical order (the native runtime's monolithic `train_step` is a
+//! composition of the same layer-wise functions the pipelined path
+//! drives, and the async collectives run the same algorithms as their
+//! blocking forms), so loss trajectories are **bit-identical** across
+//! {serial, threaded} x {sequential, pipelined} x any prefetch depth.
+//!
+//! The executor also measures its own timeline: wall seconds spent
+//! blocked on collectives (`exposed_comm_s` — what compute could not
+//! hide) next to the fabric model's simulated comm seconds, which is
+//! what `benches/overlap_pipeline.rs` compares against the `sim.rs`
+//! prediction for the same preset.
+//!
+//! [`CachingAllocator`]: crate::memory::CachingAllocator
+
+use std::collections::VecDeque;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{Cluster, CommBackend, PendingOp};
+use crate::fsdp::engine::Bucket;
+use crate::fsdp::FsdpEngine;
+use crate::memory::BlockId;
+use crate::runtime::native::{self, LayerCache, LayerParams};
+use crate::runtime::{Engine as ComputeEngine, ModelCfg};
+
+/// How the step loop drives buckets (`--prefetch` flag: 0 = sequential,
+/// N >= 1 = pipelined with at most N gathers in flight).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Gather all buckets, compute monolithically, reduce all buckets.
+    Sequential,
+    /// Layer-wise schedule with `prefetch` in-flight bucket collectives.
+    Pipelined { prefetch: usize },
+}
+
+impl ExecMode {
+    /// `--prefetch N` semantics: 0 selects the sequential path.
+    pub fn from_prefetch(n: usize) -> ExecMode {
+        if n == 0 {
+            ExecMode::Sequential
+        } else {
+            ExecMode::Pipelined { prefetch: n }
+        }
+    }
+
+    pub fn prefetch(&self) -> usize {
+        match self {
+            ExecMode::Sequential => 0,
+            ExecMode::Pipelined { prefetch } => *prefetch,
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            ExecMode::Sequential => "sequential".to_string(),
+            ExecMode::Pipelined { prefetch } => format!("pipelined{prefetch}"),
+        }
+    }
+}
+
+/// Measured timeline of one executed step.
+#[derive(Debug, Clone, Default)]
+pub struct ExecReport {
+    /// Wall-clock seconds for the whole step.
+    pub wall_s: f64,
+    /// Wall seconds the step spent *blocked* on collectives — the
+    /// measured exposed-communication time (compute hid the rest).
+    pub exposed_comm_s: f64,
+    /// Fabric-model (simulated H800) comm seconds recorded this step.
+    pub sim_comm_s: f64,
+    /// Allocator peak reserved bytes on the simulated device (cumulative
+    /// over the run — steady after the first step).
+    pub peak_reserved: u64,
+    /// Allocator peak allocated bytes.
+    pub peak_allocated: u64,
+}
+
+/// Result of one executed training step.
+pub struct StepOutcome {
+    /// Per-rank losses (rank order).
+    pub losses: Vec<f32>,
+    pub report: ExecReport,
+}
+
+/// Execute one training step of `engine` under `mode`. `batches[rank]`
+/// is that rank's (tokens, targets) microbatch. The pipelined mode
+/// requires the native runtime (compute must be drivable per layer);
+/// sequential works with any runtime.
+pub fn run_step(
+    engine: &mut FsdpEngine,
+    runtime: &mut ComputeEngine,
+    config: &str,
+    batches: &[(Vec<i32>, Vec<i32>)],
+    mode: ExecMode,
+) -> Result<StepOutcome> {
+    let cfg = runtime
+        .manifest
+        .configs
+        .get(config)
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("config '{config}' not in manifest"))?;
+    if batches.len() != engine.num_devices() {
+        bail!(
+            "run_step: {} batches for {} devices",
+            batches.len(),
+            engine.num_devices()
+        );
+    }
+    let t0 = Instant::now();
+    let comm_before = engine.comm.sim_time();
+    let mut exposed = 0.0f64;
+    let losses = match mode {
+        ExecMode::Sequential => {
+            run_sequential(engine, runtime, config, &cfg, batches, &mut exposed)?
+        }
+        ExecMode::Pipelined { prefetch } => {
+            if !runtime.is_native() {
+                bail!(
+                    "the pipelined executor drives compute layer-wise and \
+                     requires the native runtime"
+                );
+            }
+            run_pipelined(engine, &cfg, batches, prefetch.max(1), &mut exposed)?
+        }
+    };
+    let (peak_reserved, peak_allocated) = engine.memory_stats();
+    Ok(StepOutcome {
+        losses,
+        report: ExecReport {
+            wall_s: t0.elapsed().as_secs_f64(),
+            exposed_comm_s: exposed,
+            sim_comm_s: engine.comm.sim_time() - comm_before,
+            peak_reserved,
+            peak_allocated,
+        },
+    })
+}
+
+// ---- sequential schedule (the seed step loop) ---------------------------
+
+fn run_sequential(
+    engine: &mut FsdpEngine,
+    runtime: &mut ComputeEngine,
+    config: &str,
+    cfg: &ModelCfg,
+    batches: &[(Vec<i32>, Vec<i32>)],
+    exposed: &mut f64,
+) -> Result<Vec<f32>> {
+    let m = engine.num_devices();
+    // every collective in this schedule is exposed: nothing computes
+    // while the gathers / reductions run
+    let tg = Instant::now();
+    engine.gather_params()?;
+    *exposed += tg.elapsed().as_secs_f64();
+    let mut losses = Vec::with_capacity(m);
+    let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
+    if engine.comm.backend() == CommBackend::Threaded && runtime.is_native() {
+        // SPMD fan-out: each rank materializes its parameters and runs
+        // fwd/bwd on its own thread. native::train_step is called
+        // directly (not through Engine::train_step) so the closure never
+        // captures &Engine — under the pjrt feature the xla handles
+        // inside Engine are not Sync.
+        let eng = &*engine;
+        let (outs, _) = Cluster::run_spmd(m, |rank, _ctx| {
+            let params = eng.device_params(rank);
+            let (tokens, targets) = &batches[rank];
+            native::train_step(cfg, &params, tokens, targets)
+        });
+        for out in outs {
+            let (loss, grads) = out?;
+            losses.push(loss);
+            all_grads.push(grads);
+        }
+    } else {
+        for (rank, (tokens, targets)) in batches.iter().enumerate() {
+            let params = engine.device_params(rank);
+            let (loss, grads) = runtime.train_step(config, &params, tokens, targets)?;
+            losses.push(loss);
+            all_grads.push(grads);
+        }
+    }
+    engine.release_params();
+    let tr = Instant::now();
+    engine.reduce_grads(&all_grads)?;
+    *exposed += tr.elapsed().as_secs_f64();
+    Ok(losses)
+}
+
+// ---- pipelined schedule -------------------------------------------------
+
+/// Per-rank compute state threaded through the bucket schedule.
+#[derive(Default)]
+struct RankState {
+    /// Running activation (b*t, d).
+    x: Vec<f32>,
+    /// Per-layer backward caches, forward order.
+    caches: Vec<LayerCache>,
+    nf: Vec<f32>,
+    rf: Vec<f32>,
+    dlogits: Vec<f32>,
+    /// Running activation gradient during backward.
+    dx: Vec<f32>,
+    loss: f32,
+    /// Scratch: the current bucket's parameter grads (bucket-pos order).
+    bucket_grads: Vec<Vec<f32>>,
+}
+
+/// The pipelined executor assumes the trainers' wrapping policy:
+/// bucket 0 = embed, bucket 1+l = layer l, last bucket = final_ln + head.
+fn check_wrapping(engine: &FsdpEngine, cfg: &ModelCfg) -> Result<()> {
+    let nl = cfg.n_layers;
+    if engine.buckets.len() != nl + 2 {
+        bail!(
+            "pipelined executor expects embed|layer|head wrapping: \
+             {} buckets for {} layers",
+            engine.buckets.len(),
+            nl
+        );
+    }
+    if engine.params.len() != 3 + 8 * nl {
+        bail!("parameter ABI mismatch: {} params", engine.params.len());
+    }
+    let expect = |i: usize, bucket: usize| -> Result<()> {
+        if engine.param_loc(i).bucket != bucket {
+            bail!("param {i} not in bucket {bucket} — custom wrapping unsupported");
+        }
+        Ok(())
+    };
+    expect(0, 0)?;
+    for l in 0..nl {
+        for k in 0..8 {
+            expect(1 + 8 * l + k, 1 + l)?;
+        }
+    }
+    expect(1 + 8 * nl, nl + 1)?;
+    expect(2 + 8 * nl, nl + 1)?;
+    Ok(())
+}
+
+fn validate_batches(cfg: &ModelCfg, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<()> {
+    let n = cfg.batch * cfg.seq;
+    for (tokens, targets) in batches {
+        if tokens.len() != n || targets.len() != n {
+            bail!("tokens/targets must be batch*seq = {n} elements");
+        }
+        for &tok in tokens.iter().chain(targets) {
+            if tok < 0 || tok as usize >= cfg.vocab {
+                bail!("token {tok} out of vocab {}", cfg.vocab);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Below this many activation elements per rank (tokens x d_model) a
+/// per-bucket thread fan-out costs more than the compute it
+/// parallelizes — run ranks serially instead (identical math; mirrors
+/// `ThreadedComm`'s `min_parallel_elems` fallback for collectives).
+const MIN_PARALLEL_ACT_ELEMS: usize = 1 << 15;
+
+/// Run `f(rank, state)` for every rank — on its own OS thread under the
+/// threaded backend (the compute fan-out), serially otherwise. Identical
+/// math either way.
+fn par_ranks<F>(states: &mut [RankState], threaded: bool, f: F)
+where
+    F: Fn(usize, &mut RankState) + Sync,
+{
+    if !threaded || states.len() <= 1 {
+        for (rank, st) in states.iter_mut().enumerate() {
+            f(rank, st);
+        }
+    } else {
+        std::thread::scope(|s| {
+            for (rank, st) in states.iter_mut().enumerate() {
+                let f = &f;
+                s.spawn(move || f(rank, st));
+            }
+        });
+    }
+}
+
+/// Layer `l`'s parameters as zero-copy views into `rank`'s gathered
+/// bucket (no `device_params` materialization).
+fn layer_view(engine: &FsdpEngine, rank: usize, l: usize) -> LayerParams<'_> {
+    let base = 1 + 8 * l;
+    LayerParams {
+        ln1: engine.full_param_view(rank, base),
+        wq: engine.full_param_view(rank, base + 1),
+        wk: engine.full_param_view(rank, base + 2),
+        wv: engine.full_param_view(rank, base + 3),
+        wo: engine.full_param_view(rank, base + 4),
+        ln2: engine.full_param_view(rank, base + 5),
+        w1: engine.full_param_view(rank, base + 6),
+        w2: engine.full_param_view(rank, base + 7),
+    }
+}
+
+/// Issue bucket gathers in `order` until `cap` are in flight. Issue time
+/// counts as exposed comm: on an eager (serial) backend the collective
+/// runs right here, and on the threaded backend it is only the spawn
+/// cost.
+fn issue_gathers(
+    engine: &mut FsdpEngine,
+    inflight: &mut VecDeque<(usize, PendingOp)>,
+    order: &mut dyn Iterator<Item = usize>,
+    cap: usize,
+    exposed: &mut f64,
+) -> Result<()> {
+    while inflight.len() < cap {
+        let Some(b) = order.next() else {
+            return Ok(());
+        };
+        let comm = engine.comm.clone();
+        let t0 = Instant::now();
+        let op = engine.buckets[b].dbuffer.begin_gather(comm.as_ref())?;
+        *exposed += t0.elapsed().as_secs_f64();
+        inflight.push_back((b, op));
+    }
+    Ok(())
+}
+
+/// Block until bucket `b`'s gather completes (finishing any earlier
+/// in-flight gathers along the way); the block time is exposed comm.
+fn wait_gather(
+    engine: &mut FsdpEngine,
+    inflight: &mut VecDeque<(usize, PendingOp)>,
+    b: usize,
+    exposed: &mut f64,
+) -> Result<()> {
+    if engine.buckets[b].dbuffer.gathered {
+        return Ok(());
+    }
+    let comm = engine.comm.clone();
+    let fabric = engine.fabric.clone();
+    while let Some((bucket, op)) = inflight.pop_front() {
+        let t0 = Instant::now();
+        engine.buckets[bucket]
+            .dbuffer
+            .finish_gather(op, comm.as_ref(), &fabric)?;
+        *exposed += t0.elapsed().as_secs_f64();
+        if bucket == b {
+            return Ok(());
+        }
+    }
+    bail!("bucket {b} gather was never issued");
+}
+
+/// Stage bucket `b`'s per-rank gradients at layout offsets (via the same
+/// `stage_bucket_grads` the sequential reduction uses) and issue its
+/// ReduceScatter on the comm backend (overlaps the next bucket's
+/// backward). The staged full-size gradient buffer is transient device
+/// memory — claimed from the allocator until `finish_reduce` frees it.
+fn begin_reduce(
+    engine: &mut FsdpEngine,
+    states: &mut [RankState],
+    b: usize,
+    exposed: &mut f64,
+) -> Result<(usize, PendingOp, BlockId)> {
+    let m = engine.num_devices();
+    let s = engine.buckets[b].dbuffer.shard_elems();
+    let (bufs, block) = crate::fsdp::engine::stage_bucket_grads(
+        &engine.buckets[b],
+        m,
+        &engine.alloc,
+        &|rank, pos| &states[rank].bucket_grads[pos][..],
+    )?;
+    for st in states.iter_mut() {
+        st.bucket_grads.clear();
+    }
+    let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.mesh);
+    let t0 = Instant::now();
+    let op = engine.comm.reduce_scatter_async(bufs, s, scale);
+    *exposed += t0.elapsed().as_secs_f64();
+    Ok((b, op, block))
+}
+
+/// Complete an in-flight ReduceScatter: copy the reduced shard regions
+/// into the bucket's grad shards (plus the HSDP replica AllReduce) and
+/// release the staged gradient buffer.
+fn finish_reduce(
+    engine: &mut FsdpEngine,
+    b: usize,
+    op: PendingOp,
+    block: BlockId,
+    exposed: &mut f64,
+) -> Result<()> {
+    let t0 = Instant::now();
+    let bufs = op.wait()?;
+    *exposed += t0.elapsed().as_secs_f64();
+    let comm = engine.comm.clone();
+    let fabric = engine.fabric.clone();
+    let mesh = engine.mesh.clone();
+    let Bucket { dbuffer, grad_shards, .. } = &mut engine.buckets[b];
+    dbuffer.reduce_gradients_finish(&bufs, grad_shards, &mesh, comm.as_ref(), &fabric)?;
+    engine.alloc.lock().unwrap().free(block)?;
+    Ok(())
+}
+
+fn run_pipelined(
+    engine: &mut FsdpEngine,
+    cfg: &ModelCfg,
+    batches: &[(Vec<i32>, Vec<i32>)],
+    prefetch: usize,
+    exposed: &mut f64,
+) -> Result<Vec<f32>> {
+    check_wrapping(engine, cfg)?;
+    validate_batches(cfg, batches)?;
+    let m = engine.num_devices();
+    let nb = engine.buckets.len();
+    let nl = cfg.n_layers;
+    let threaded = engine.comm.backend() == CommBackend::Threaded
+        && cfg.batch * cfg.seq * cfg.d_model >= MIN_PARALLEL_ACT_ELEMS;
+    let mut states: Vec<RankState> = (0..m).map(|_| RankState::default()).collect();
+
+    // ---- forward: prefetch AG(l+1..) under compute of bucket l ----
+    let mut inflight: VecDeque<(usize, PendingOp)> = VecDeque::new();
+    let mut fwd_order = 0..nb;
+    for l in 0..nb {
+        issue_gathers(engine, &mut inflight, &mut fwd_order, prefetch, exposed)?;
+        wait_gather(engine, &mut inflight, l, exposed)?;
+        issue_gathers(engine, &mut inflight, &mut fwd_order, prefetch, exposed)?;
+        par_ranks(&mut states, threaded, |rank, st| {
+            if l == 0 {
+                st.x = native::embed_fwd(cfg, engine.full_param_view(rank, 0), &batches[rank].0);
+            } else if l <= nl {
+                let lp = layer_view(engine, rank, l - 1);
+                st.caches.push(native::layer_fwd(cfg, &lp, &mut st.x));
+            } else {
+                let final_ln = engine.full_param_view(rank, 1 + 8 * nl);
+                let head = engine.full_param_view(rank, 2 + 8 * nl);
+                let (nf, rf, logits) = native::head_fwd(cfg, final_ln, head, &st.x);
+                let (loss, dlogits) = native::loss_grad(cfg, &logits, &batches[rank].1);
+                st.nf = nf;
+                st.rf = rf;
+                st.loss = loss;
+                st.dlogits = dlogits;
+            }
+        });
+        // reshard-after-forward: drop the full bucket; backward
+        // re-gathers it through the same prefetch window
+        engine.buckets[l].dbuffer.release_full();
+    }
+    debug_assert!(inflight.is_empty());
+
+    // ---- backward: re-gather in reverse with prefetch; RS of bucket b
+    // overlaps backward compute of bucket b-1 ----
+    let mut bwd_order = (0..nb).rev();
+    let mut rs_pending: VecDeque<(usize, PendingOp, BlockId)> = VecDeque::new();
+    for b in (0..nb).rev() {
+        issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
+        wait_gather(engine, &mut inflight, b, exposed)?;
+        issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
+        par_ranks(&mut states, threaded, |rank, st| {
+            if b == nb - 1 {
+                let final_ln = engine.full_param_view(rank, 1 + 8 * nl);
+                let head = engine.full_param_view(rank, 2 + 8 * nl);
+                let (d_ln, d_head, dx) =
+                    native::head_bwd(cfg, &st.dlogits, &st.x, &st.nf, &st.rf, final_ln, head);
+                st.dx = dx;
+                st.bucket_grads = vec![d_ln, d_head];
+            } else if b >= 1 {
+                let lp = layer_view(engine, rank, b - 1);
+                let grads = native::layer_bwd(cfg, &lp, &st.caches[b - 1], &mut st.dx);
+                st.bucket_grads = grads.into_iter().collect();
+            } else {
+                let d_embed = native::embed_bwd(cfg, &batches[rank].0, &st.dx);
+                st.bucket_grads = vec![d_embed];
+            }
+        });
+        engine.buckets[b].dbuffer.release_full();
+        let pending = begin_reduce(engine, &mut states, b, exposed)?;
+        rs_pending.push_back(pending);
+        // opportunistically retire reductions that already completed
+        while rs_pending.front().is_some_and(|(_, op, _)| op.is_done()) {
+            let (rb, op, blk) = rs_pending.pop_front().unwrap();
+            finish_reduce(engine, rb, op, blk, exposed)?;
+        }
+        // bound the in-flight reductions (live staged-grad memory)
+        while rs_pending.len() > prefetch {
+            let (rb, op, blk) = rs_pending.pop_front().unwrap();
+            finish_reduce(engine, rb, op, blk, exposed)?;
+        }
+    }
+    while let Some((rb, op, blk)) = rs_pending.pop_front() {
+        finish_reduce(engine, rb, op, blk, exposed)?;
+    }
+    Ok(states.iter().map(|s| s.loss).collect())
+}

@@ -11,9 +11,18 @@
 //!   real collectives, real optimizer math, compute supplied by the PJRT
 //!   runtime (or any closure). The e2e example and Fig-10 convergence runs
 //!   use this.
+//!
+//! [`exec`] bridges the two: it drives the numeric engine through the
+//! same bucket-pipelined overlap schedule the symbolic engine models
+//! (prefetched AllGathers, reshard-after-forward, ReduceScatter under
+//! backward compute) and measures the real timeline, so the simulator's
+//! exposed-comm and peak-memory claims can be checked against an
+//! executed step (`benches/overlap_pipeline.rs`).
 
 pub mod engine;
+pub mod exec;
 pub mod sim;
 
 pub use engine::{FsdpEngine, ShardingPolicy};
+pub use exec::{ExecMode, ExecReport, StepOutcome};
 pub use sim::{simulate_step, GpuSpec, ShardingFormat, StepReport, SystemBehavior};

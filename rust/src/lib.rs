@@ -22,17 +22,42 @@
 //! The `cluster` module is the SPMD execution layer: a [`cluster::Communicator`]
 //! trait with two backends — `SerialComm` (single-thread loop collectives,
 //! the reference semantics) and `ThreadedComm` (one OS thread per rank,
-//! barrier-phased rendezvous collectives over shared buffers). The FSDP
-//! engine, DBuffer, DTensor redistribution, and both trainers are wired
-//! through the trait; `--backend serial|threaded` selects at run time and
-//! the two produce bit-identical results (reductions preserve the serial
-//! rank-order summation). Under the threaded backend, per-rank fwd/bwd
-//! compute also fans out across threads via `cluster::Cluster::run_spmd`.
+//! barrier-phased rendezvous collectives over shared buffers). Collectives
+//! come in blocking and nonblocking forms: `all_gather_async` /
+//! `reduce_scatter_async` return a waitable [`cluster::PendingOp`] that the
+//! threaded backend services on background comm threads (the serial
+//! backend completes eagerly — results are bit-identical either way). The
+//! FSDP engine, DBuffer, DTensor redistribution, and both trainers are
+//! wired through the trait; `--backend serial|threaded` selects at run
+//! time and the two produce bit-identical results (reductions preserve the
+//! serial rank-order summation). Under the threaded backend, per-rank
+//! fwd/bwd compute also fans out across threads via
+//! `cluster::Cluster::run_spmd`.
+//!
+//! ## Step schedule
+//!
+//! The training step loop is driven by [`fsdp::exec`] — a `Schedule` over
+//! the engine's FSDP buckets selected with `--prefetch N`. N = 0 is the
+//! sequential loop (gather everything, compute monolithically, reduce
+//! everything); N >= 1 is the paper's bucket-pipelined overlap schedule:
+//! bucket l+1's AllGather prefetches under bucket l's forward compute (up
+//! to N in flight), buckets reshard immediately after their forward and
+//! re-gather in backward, and bucket l's ReduceScatter overlaps bucket
+//! l-1's backward. Compute is driven layer-wise through the split native
+//! fwd/bwd (`runtime::native::{embed,layer,head}_{fwd,bwd}` — the
+//! monolithic `train_step` composes the same functions), and every
+//! DBuffer's storage is accounted against a `memory::CachingAllocator`,
+//! so peak reserved bytes and exposed-communication time are *measured*
+//! per step (`fsdp::ExecReport`). Trajectories are bit-identical across
+//! {serial, threaded} x {sequential, pipelined} x prefetch depth
+//! (`tests/schedule_equivalence.rs`).
 //!
 //! Timing is split in two: wall-clock speedup comes from the threaded
-//! runtime (see `benches/table3_backend_speedup.rs`), while the paper's
-//! H800 fabric numbers come from the analytic `comm::cost::Fabric` model,
-//! accumulated thread-safely in `comm::SharedStats`.
+//! runtime (see `benches/table3_backend_speedup.rs` and
+//! `benches/overlap_pipeline.rs`, which also compares the measured
+//! exposed-comm fraction against the `fsdp::sim` prediction), while the
+//! paper's H800 fabric numbers come from the analytic `comm::cost::Fabric`
+//! model, accumulated thread-safely in `comm::SharedStats`.
 
 pub mod checkpoint;
 pub mod cluster;

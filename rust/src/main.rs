@@ -2,7 +2,9 @@
 //!
 //!     vescale-fsdp train  [--config-file cfg.toml] [--model tiny] [--mesh 4]
 //!                         [--opt adamw|adam8bit|muon|sgd] [--steps 50]
-//!                         [--backend serial|threaded]
+//!                         [--backend serial|threaded] [--prefetch N]
+//!                         (N=0: sequential step loop; N>=1: bucket-pipelined
+//!                          executor with up to N in-flight bucket collectives)
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
 //!     vescale-fsdp sim    [--preset llama70b] [--system vescale] [--fsdp 128]
 //!     vescale-fsdp bench  (points at `cargo bench`)
@@ -15,7 +17,7 @@ use vescale_fsdp::comm::Fabric;
 use vescale_fsdp::config::file::ConfigFile;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig, System, TrainConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
-use vescale_fsdp::fsdp::ShardingPolicy;
+use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::planner::{plan, TensorDecl};
 use vescale_fsdp::train::{save_log, Trainer};
@@ -57,6 +59,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         Some(s) => CommBackend::parse(s).ok_or_else(|| anyhow!("unknown --backend {s}"))?,
         None => base.backend,
     };
+    let exec = ExecMode::from_prefetch(args.usize_or("prefetch", base.prefetch));
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -66,17 +69,27 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let hyper = AdamHyper { lr, ..AdamHyper::default() };
     println!(
-        "train: model={model} mesh={mesh} opt={} steps={steps} backend={}",
+        "train: model={model} mesh={mesh} opt={} steps={steps} backend={} exec={}",
         opt.name(),
-        backend.name()
+        backend.name(),
+        exec.name()
     );
-    let mut trainer = Trainer::with_backend(&model, mesh, opt, &policy, hyper, base.seed, backend)?;
+    let mut trainer =
+        Trainer::with_exec(&model, mesh, opt, &policy, hyper, base.seed, backend, exec)?;
     println!("compute runtime: {}", trainer.runtime.backend_name());
     for step in 1..=steps {
         let loss = trainer.train_step()?;
         if step % 10 == 0 || step == 1 {
             println!("step {step:>4}  loss {loss:.4}");
         }
+    }
+    if let Some(r) = &trainer.last_report {
+        let (peak_res, _) = trainer.engine.memory_stats();
+        println!(
+            "executor: exposed comm {:.1}% of step wall, peak reserved {:.2} MB",
+            100.0 * r.exposed_comm_s / r.wall_s.max(1e-12),
+            peak_res as f64 / 1e6
+        );
     }
     let path = save_log(
         &format!("train_{model}_{}_{}", opt.name(), backend.name()),

@@ -21,8 +21,20 @@
 //!   recorded (they stall the device for ~ms).
 
 use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
+
+/// Shared handle to one device's allocator: the FSDP engine and every
+/// DBuffer it owns account their storage against the same simulated
+/// device (rank 0's HBM view), so peak reserved/allocated bytes are
+/// *measured* across the whole step schedule rather than asserted.
+pub type SharedAllocator = Arc<Mutex<CachingAllocator>>;
+
+/// Construct a shared allocator handle.
+pub fn shared_allocator(policy: FreePolicy, limit: u64) -> SharedAllocator {
+    Arc::new(Mutex::new(CachingAllocator::new(policy, limit)))
+}
 
 const SMALL_ALLOC: u64 = 1 << 20; // <1 MiB goes to the small pool
 const SMALL_SEGMENT: u64 = 2 << 20; // 2 MiB small-pool segments

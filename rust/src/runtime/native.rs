@@ -305,9 +305,18 @@ fn attn_bwd(
     (dwq, dwk, dwv, dwo, dn1)
 }
 
-// ---- whole-model forward / backward ------------------------------------
+// ---- layer-wise compute API --------------------------------------------
+//
+// The model is drivable one FSDP bucket at a time: embed | layer 0..L-1 |
+// final-norm+head, each with its own fwd/bwd entry point. The monolithic
+// `train_step`/`eval_loss` below are thin compositions of these functions,
+// so the bucket-pipelined executor (`fsdp::exec`) and the one-shot path
+// execute the *same* float operations in the same order — trajectories
+// are bit-identical by construction.
 
-struct LayerCache {
+/// Backward cache of one decoder layer (opaque: produced by
+/// [`layer_fwd`], consumed by [`layer_bwd`]).
+pub struct LayerCache {
     x_in: Vec<f32>,
     n1: Vec<f32>,
     r1: Vec<f32>,
@@ -319,7 +328,146 @@ struct LayerCache {
     g: Vec<f32>,
 }
 
-fn validate(cfg: &ModelCfg, params: &[Vec<f32>], tokens: &[i32], targets: &[i32]) -> Result<()> {
+/// One decoder layer's parameter slices, in layer ABI order.
+pub struct LayerParams<'a> {
+    pub ln1: &'a [f32],
+    pub wq: &'a [f32],
+    pub wk: &'a [f32],
+    pub wv: &'a [f32],
+    pub wo: &'a [f32],
+    pub ln2: &'a [f32],
+    pub w1: &'a [f32],
+    pub w2: &'a [f32],
+}
+
+/// Layer `l`'s parameter slices out of the ABI-ordered parameter list.
+pub fn layer_params(params: &[Vec<f32>], l: usize) -> LayerParams<'_> {
+    let base = 1 + 8 * l;
+    LayerParams {
+        ln1: &params[base],
+        wq: &params[base + 1],
+        wk: &params[base + 2],
+        wv: &params[base + 3],
+        wo: &params[base + 4],
+        ln2: &params[base + 5],
+        w1: &params[base + 6],
+        w2: &params[base + 7],
+    }
+}
+
+/// Embedding lookup (bucket 0 of the layer-wise schedule).
+pub fn embed_fwd(cfg: &ModelCfg, embed: &[f32], tokens: &[i32]) -> Vec<f32> {
+    let d = cfg.d_model;
+    let mut x = vec![0.0f32; tokens.len() * d];
+    for (row, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        x[row * d..(row + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
+    }
+    x
+}
+
+/// One decoder layer's forward on the running activation (in place);
+/// returns the cache its backward needs.
+pub fn layer_fwd(cfg: &ModelCfg, lp: &LayerParams, x: &mut Vec<f32>) -> LayerCache {
+    let (b, t, d, h, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let n = b * t;
+    let x_in = x.clone();
+    let (n1, r1) = rmsnorm_fwd(x, lp.ln1, n, d);
+    let (y, attn) = attn_fwd(&n1, lp.wq, lp.wk, lp.wv, lp.wo, b, t, d, h);
+    add_into(x, &y);
+    let x_mid = x.clone();
+    let (n2, r2) = rmsnorm_fwd(x, lp.ln2, n, d);
+    let h1 = mm(&n2, lp.w1, n, d, f);
+    let g: Vec<f32> = h1.iter().map(|&z| gelu(z)).collect();
+    let y2 = mm(&g, lp.w2, n, f, d);
+    add_into(x, &y2);
+    LayerCache { x_in, n1, r1, attn, x_mid, n2, r2, h1, g }
+}
+
+/// Final norm + head projection; returns (nf, 1/rms, logits).
+pub fn head_fwd(
+    cfg: &ModelCfg,
+    final_ln: &[f32],
+    head: &[f32],
+    x: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = cfg.batch * cfg.seq;
+    let (nf, rf) = rmsnorm_fwd(x, final_ln, n, cfg.d_model);
+    let logits = mm(&nf, head, n, cfg.d_model, cfg.vocab);
+    (nf, rf, logits)
+}
+
+/// Mean next-token cross-entropy and dL/dlogits.
+pub fn loss_grad(cfg: &ModelCfg, logits: &[f32], targets: &[i32]) -> (f32, Vec<f32>) {
+    ce_loss(logits, targets, cfg.batch * cfg.seq, cfg.vocab, true)
+}
+
+/// Head-bucket backward: returns (d final_ln, d head, dL/dx).
+pub fn head_bwd(
+    cfg: &ModelCfg,
+    dlogits: &[f32],
+    x: &[f32],
+    nf: &[f32],
+    rf: &[f32],
+    final_ln: &[f32],
+    head: &[f32],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let (n, d, v) = (cfg.batch * cfg.seq, cfg.d_model, cfg.vocab);
+    let d_head = mm_tn(nf, dlogits, n, d, v);
+    let dnf = mm_nt(dlogits, head, n, v, d);
+    let mut dx = vec![0.0f32; n * d];
+    let mut d_ln = vec![0.0f32; d];
+    rmsnorm_bwd(&dnf, x, final_ln, rf, n, d, &mut dx, &mut d_ln);
+    (d_ln, d_head, dx)
+}
+
+/// One decoder layer's backward. `dx` holds dL/d(layer output) on entry
+/// and dL/d(layer input) on return; the 8 parameter gradients come back
+/// in layer ABI order (ln1, wq, wk, wv, wo, ln2, w1, w2).
+pub fn layer_bwd(
+    cfg: &ModelCfg,
+    lp: &LayerParams,
+    c: &LayerCache,
+    dx: &mut Vec<f32>,
+) -> [Vec<f32>; 8] {
+    let (b, t, d, h, f) = (cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff);
+    let n = b * t;
+    // ---- MLP branch: x_out = x_mid + w2·gelu(w1·rms(x_mid)) ----
+    let mut dh1 = mm_nt(dx, lp.w2, n, d, f);
+    let d_w2 = mm_tn(&c.g, dx, n, f, d);
+    for (z, &pre) in dh1.iter_mut().zip(&c.h1) {
+        *z *= gelu_grad(pre);
+    }
+    let d_w1 = mm_tn(&c.n2, &dh1, n, d, f);
+    let dn2 = mm_nt(&dh1, lp.w1, n, f, d);
+    // residual: dx becomes dL/dx_mid (pass-through + norm branch)
+    let mut d_ln2 = vec![0.0f32; d];
+    rmsnorm_bwd(&dn2, &c.x_mid, lp.ln2, &c.r2, n, d, dx, &mut d_ln2);
+    // ---- attention branch: x_mid = x_in + attn(rms(x_in)) ----
+    let (d_wq, d_wk, d_wv, d_wo, dn1) =
+        attn_bwd(dx, &c.n1, lp.wq, lp.wk, lp.wv, lp.wo, &c.attn, b, t, d, h);
+    let mut d_ln1 = vec![0.0f32; d];
+    rmsnorm_bwd(&dn1, &c.x_in, lp.ln1, &c.r1, n, d, dx, &mut d_ln1);
+    [d_ln1, d_wq, d_wk, d_wv, d_wo, d_ln2, d_w1, d_w2]
+}
+
+/// Embedding backward: scatter-add of dL/dx rows into token rows.
+pub fn embed_bwd(cfg: &ModelCfg, tokens: &[i32], dx: &[f32]) -> Vec<f32> {
+    let d = cfg.d_model;
+    let mut ge = vec![0.0f32; cfg.vocab * d];
+    for (row, &tok) in tokens.iter().enumerate() {
+        let tok = tok as usize;
+        let gr = &mut ge[tok * d..(tok + 1) * d];
+        for (g, &dxi) in gr.iter_mut().zip(&dx[row * d..(row + 1) * d]) {
+            *g += dxi;
+        }
+    }
+    ge
+}
+
+// ---- whole-model forward / backward ------------------------------------
+
+pub(crate) fn validate(cfg: &ModelCfg, params: &[Vec<f32>], tokens: &[i32], targets: &[i32]) -> Result<()> {
     // embed + 8 per layer + final_ln + head
     let expect = 3 + 8 * cfg.n_layers;
     if cfg.params.len() != expect {
@@ -350,7 +498,8 @@ fn validate(cfg: &ModelCfg, params: &[Vec<f32>], tokens: &[i32], targets: &[i32]
 }
 
 /// Forward pass with per-layer caches; returns (final x, caches, nf, rf,
-/// logits).
+/// logits). Composed from the layer-wise API above so the monolithic and
+/// bucket-pipelined paths run identical float operations.
 #[allow(clippy::type_complexity)]
 fn forward(
     cfg: &ModelCfg,
@@ -358,48 +507,17 @@ fn forward(
     tokens: &[i32],
     keep_caches: bool,
 ) -> (Vec<f32>, Vec<LayerCache>, Vec<f32>, Vec<f32>, Vec<f32>) {
-    let (b, t, d, h, f, v) = (
-        cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab,
-    );
-    let n = b * t;
     let nl = cfg.n_layers;
-    let embed = &params[0];
-    let mut x = vec![0.0f32; n * d];
-    for (row, &tok) in tokens.iter().enumerate() {
-        let tok = tok as usize;
-        x[row * d..(row + 1) * d].copy_from_slice(&embed[tok * d..(tok + 1) * d]);
-    }
+    let mut x = embed_fwd(cfg, &params[0], tokens);
     let mut caches = Vec::with_capacity(if keep_caches { nl } else { 0 });
     for l in 0..nl {
-        let base = 1 + 8 * l;
-        let (ln1, wq, wk, wv, wo, ln2, w1, w2) = (
-            &params[base],
-            &params[base + 1],
-            &params[base + 2],
-            &params[base + 3],
-            &params[base + 4],
-            &params[base + 5],
-            &params[base + 6],
-            &params[base + 7],
-        );
-        let x_in = x.clone();
-        let (n1, r1) = rmsnorm_fwd(&x, ln1, n, d);
-        let (y, attn) = attn_fwd(&n1, wq, wk, wv, wo, b, t, d, h);
-        add_into(&mut x, &y);
-        let x_mid = x.clone();
-        let (n2, r2) = rmsnorm_fwd(&x, ln2, n, d);
-        let h1 = mm(&n2, w1, n, d, f);
-        let g: Vec<f32> = h1.iter().map(|&z| gelu(z)).collect();
-        let y2 = mm(&g, w2, n, f, d);
-        add_into(&mut x, &y2);
+        let lp = layer_params(params, l);
+        let c = layer_fwd(cfg, &lp, &mut x);
         if keep_caches {
-            caches.push(LayerCache { x_in, n1, r1, attn, x_mid, n2, r2, h1, g });
+            caches.push(c);
         }
     }
-    let final_ln = &params[1 + 8 * nl];
-    let head = &params[2 + 8 * nl];
-    let (nf, rf) = rmsnorm_fwd(&x, final_ln, n, d);
-    let logits = mm(&nf, head, n, d, v);
+    let (nf, rf, logits) = head_fwd(cfg, &params[1 + 8 * nl], &params[2 + 8 * nl], &x);
     (x, caches, nf, rf, logits)
 }
 
@@ -440,70 +558,29 @@ pub fn train_step(
     targets: &[i32],
 ) -> Result<(f32, Vec<Vec<f32>>)> {
     validate(cfg, params, tokens, targets)?;
-    let (b, t, d, h, f, v) = (
-        cfg.batch, cfg.seq, cfg.d_model, cfg.n_heads, cfg.d_ff, cfg.vocab,
-    );
-    let n = b * t;
     let nl = cfg.n_layers;
     let (x, caches, nf, rf, logits) = forward(cfg, params, tokens, true);
-    let (loss, dlogits) = ce_loss(&logits, targets, n, v, true);
+    let (loss, dlogits) = loss_grad(cfg, &logits, targets);
 
-    let mut grads: Vec<Vec<f32>> = params.iter().map(|p| vec![0.0f32; p.len()]).collect();
-    let head_idx = 2 + 8 * nl;
-    let final_ln_idx = 1 + 8 * nl;
-    grads[head_idx] = mm_tn(&nf, &dlogits, n, d, v);
-    let dnf = mm_nt(&dlogits, &params[head_idx], n, v, d);
-    let mut dx = vec![0.0f32; n * d];
-    rmsnorm_bwd(
-        &dnf, &x, &params[final_ln_idx], &rf, n, d, &mut dx, &mut grads[final_ln_idx],
+    let (d_final_ln, d_head, mut dx) = head_bwd(
+        cfg, &dlogits, &x, &nf, &rf, &params[1 + 8 * nl], &params[2 + 8 * nl],
     );
+    let mut layer_grads: Vec<[Vec<f32>; 8]> = Vec::with_capacity(nl);
     for l in (0..nl).rev() {
-        let base = 1 + 8 * l;
-        let c = &caches[l];
-        // ---- MLP branch: x_out = x_mid + w2·gelu(w1·rms(x_mid)) ----
-        let w1 = &params[base + 6];
-        let w2 = &params[base + 7];
-        let mut dh1 = mm_nt(&dx, w2, n, d, f);
-        grads[base + 7] = mm_tn(&c.g, &dx, n, f, d);
-        for (z, &pre) in dh1.iter_mut().zip(&c.h1) {
-            *z *= gelu_grad(pre);
-        }
-        grads[base + 6] = mm_tn(&c.n2, &dh1, n, d, f);
-        let dn2 = mm_nt(&dh1, w1, n, f, d);
-        // residual: dx becomes dL/dx_mid (pass-through + norm branch)
-        rmsnorm_bwd(
-            &dn2, &c.x_mid, &params[base + 5], &c.r2, n, d, &mut dx, &mut grads[base + 5],
-        );
-        // ---- attention branch: x_mid = x_in + attn(rms(x_in)) ----
-        let (dwq, dwk, dwv, dwo, dn1) = attn_bwd(
-            &dx,
-            &c.n1,
-            &params[base + 1],
-            &params[base + 2],
-            &params[base + 3],
-            &params[base + 4],
-            &c.attn,
-            b,
-            t,
-            d,
-            h,
-        );
-        grads[base + 1] = dwq;
-        grads[base + 2] = dwk;
-        grads[base + 3] = dwv;
-        grads[base + 4] = dwo;
-        rmsnorm_bwd(
-            &dn1, &c.x_in, &params[base], &c.r1, n, d, &mut dx, &mut grads[base],
-        );
+        let lp = layer_params(params, l);
+        layer_grads.push(layer_bwd(cfg, &lp, &caches[l], &mut dx));
     }
-    // embedding scatter-add
-    for (row, &tok) in tokens.iter().enumerate() {
-        let tok = tok as usize;
-        let ge = &mut grads[0][tok * d..(tok + 1) * d];
-        for (g, &dxi) in ge.iter_mut().zip(&dx[row * d..(row + 1) * d]) {
-            *g += dxi;
-        }
+    let d_embed = embed_bwd(cfg, tokens, &dx);
+
+    // assemble in ABI order: embed | layers 0..nl | final_ln | head
+    let mut grads: Vec<Vec<f32>> = Vec::with_capacity(params.len());
+    grads.push(d_embed);
+    layer_grads.reverse();
+    for lg in layer_grads {
+        grads.extend(lg);
     }
+    grads.push(d_final_ln);
+    grads.push(d_head);
     Ok((loss, grads))
 }
 

@@ -21,7 +21,7 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::{make_comm, Cluster, CommBackend};
 use crate::comm::{CommRecord, Fabric};
 use crate::config::OptimKind;
-use crate::fsdp::{FsdpEngine, ShardingPolicy};
+use crate::fsdp::{exec, ExecMode, ExecReport, FsdpEngine, ShardingPolicy};
 use crate::mesh::DeviceMesh;
 use crate::optim::{Adam8bit, AdamHyper, AdamW, Muon, Sgd, ShardOptimizer};
 use crate::runtime::Engine;
@@ -127,6 +127,9 @@ pub struct StepLog {
     pub step: u64,
     pub loss: f32,
     pub comm_time: f64,
+    /// Wall seconds this step spent blocked on collectives (the measured
+    /// exposed communication; 0 for the DDP trainer).
+    pub exposed_s: f64,
     pub wall_s: f64,
 }
 
@@ -141,6 +144,11 @@ pub struct Trainer {
     /// 8-bit Adam pair: quantized optimizer for matrices, fp32 fallback
     /// for 1-D params (state keyed per parameter x rank).
     pub adam8: Option<(Adam8bit, AdamW)>,
+    /// Step-loop schedule (`--prefetch` flag): sequential, or the
+    /// bucket-pipelined overlap executor.
+    pub exec: ExecMode,
+    /// Measured timeline of the most recent step.
+    pub last_report: Option<ExecReport>,
     pub step: u64,
     pub log: Vec<StepLog>,
 }
@@ -166,6 +174,21 @@ impl Trainer {
         hyper: AdamHyper,
         seed: u64,
         backend: CommBackend,
+    ) -> Result<Trainer> {
+        Trainer::with_exec(config, m, optim, policy, hyper, seed, backend, ExecMode::Sequential)
+    }
+
+    /// Full constructor: cluster backend + executor schedule.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_exec(
+        config: &str,
+        m: usize,
+        optim: OptimKind,
+        policy: &ShardingPolicy,
+        hyper: AdamHyper,
+        seed: u64,
+        backend: CommBackend,
+        exec: ExecMode,
     ) -> Result<Trainer> {
         let runtime = Engine::load_default().context("loading compute runtime")?;
         let cfg = runtime
@@ -212,6 +235,19 @@ impl Trainer {
         } else {
             None
         };
+        // the pipelined executor drives compute layer-wise, which only the
+        // native runtime supports; PJRT falls back to the sequential path
+        let exec = if runtime.is_native() {
+            exec
+        } else {
+            if exec != ExecMode::Sequential {
+                eprintln!(
+                    "note: the pipelined executor requires the native runtime; \
+                     falling back to the sequential schedule"
+                );
+            }
+            ExecMode::Sequential
+        };
         Ok(Trainer {
             engine,
             runtime,
@@ -220,54 +256,35 @@ impl Trainer {
             optimizers,
             muon,
             adam8,
+            exec,
+            last_report: None,
             step: 0,
             log: Vec::new(),
         })
     }
 
-    /// One synchronous training step across all simulated devices.
+    /// One synchronous training step across all simulated devices, driven
+    /// by the executor schedule (`self.exec`).
     pub fn train_step(&mut self) -> Result<f32> {
         let t0 = std::time::Instant::now();
-        let cfg = self.runtime.manifest.configs[&self.config].clone();
+        let (batch, seq) = {
+            let cfg = &self.runtime.manifest.configs[&self.config];
+            (cfg.batch, cfg.seq)
+        };
         let m = self.engine.num_devices();
-        self.engine.gather_params()?;
         let comm_before = self.engine.comm.sim_time();
 
         // draw every rank's batch on the coordinator in rank order so the
         // token stream is identical no matter how compute executes
         let batches: Vec<(Vec<i32>, Vec<i32>)> =
-            (0..m).map(|_| self.corpus.batch(cfg.batch, cfg.seq)).collect();
-        let mut losses = Vec::with_capacity(m);
-        let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
-        if self.engine.comm.backend() == CommBackend::Threaded && self.runtime.is_native() {
-            // SPMD fan-out: each rank materializes its parameters and runs
-            // fwd/bwd on its own thread. native::train_step is called
-            // directly (not through Engine::train_step_shared) so the
-            // closure never captures &Engine — under the pjrt feature the
-            // xla handles inside Engine are not Sync.
-            let engine = &self.engine;
-            let (outs, _) = Cluster::run_spmd(m, |rank, _ctx| {
-                let params = engine.device_params(rank);
-                let (tokens, targets) = &batches[rank];
-                crate::runtime::native::train_step(&cfg, &params, tokens, targets)
-            });
-            for out in outs {
-                let (loss, grads) = out?;
-                losses.push(loss);
-                all_grads.push(grads);
-            }
-        } else {
-            for rank in 0..m {
-                let params = self.engine.device_params(rank);
-                let (tokens, targets) = &batches[rank];
-                let (loss, grads) =
-                    self.runtime.train_step(&self.config, &params, tokens, targets)?;
-                losses.push(loss);
-                all_grads.push(grads);
-            }
-        }
-        self.engine.release_params();
-        self.engine.reduce_grads(&all_grads)?;
+            (0..m).map(|_| self.corpus.batch(batch, seq)).collect();
+        let outcome = exec::run_step(
+            &mut self.engine,
+            &mut self.runtime,
+            &self.config,
+            &batches,
+            self.exec,
+        )?;
         self.step += 1;
         if let Some(muon) = self.muon.as_mut() {
             self.engine.muon_step(muon, &mut self.optimizers, self.step)?;
@@ -276,13 +293,16 @@ impl Trainer {
         } else {
             self.engine.optimizer_step(&mut self.optimizers, self.step)?;
         }
-        let loss = losses.iter().sum::<f32>() / m as f32;
+        let loss = outcome.losses.iter().sum::<f32>() / m as f32;
         self.log.push(StepLog {
             step: self.step,
             loss,
+            // simulated comm this step, including optimizer collectives
             comm_time: self.engine.comm.sim_time() - comm_before,
+            exposed_s: outcome.report.exposed_comm_s,
             wall_s: t0.elapsed().as_secs_f64(),
         });
+        self.last_report = Some(outcome.report);
         Ok(loss)
     }
 
@@ -438,6 +458,7 @@ impl DdpTrainer {
             step: self.step,
             loss,
             comm_time: 0.0,
+            exposed_s: 0.0,
             wall_s: t0.elapsed().as_secs_f64(),
         });
         Ok(loss)
@@ -456,9 +477,12 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"));
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
-    let mut out = String::from("step,loss,comm_time,wall_s\n");
+    let mut out = String::from("step,loss,comm_time,exposed_s,wall_s\n");
     for l in log {
-        out.push_str(&format!("{},{},{},{}\n", l.step, l.loss, l.comm_time, l.wall_s));
+        out.push_str(&format!(
+            "{},{},{},{},{}\n",
+            l.step, l.loss, l.comm_time, l.exposed_s, l.wall_s
+        ));
     }
     std::fs::write(&path, out)?;
     Ok(path)

@@ -1,0 +1,319 @@
+//! Schedule equivalence: the bucket-pipelined overlap executor must
+//! produce **bit-identical** trajectories to the sequential step loop —
+//! across cluster backends {serial, threaded}, prefetch depths, and
+//! optimizers {AdamW, Muon, Adam8bit} — plus the HSDP reduction path and
+//! the prefetch-bounded memory claim.
+
+use vescale_fsdp::cluster::{make_comm, CommBackend};
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::{exec, ExecMode, FsdpEngine, ShardingPolicy};
+use vescale_fsdp::mesh::DeviceMesh;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::runtime::{Engine as Runtime, ModelCfg};
+use vescale_fsdp::train::{init_full_params, Corpus, Trainer};
+
+// ---- harness over a custom many-layer micro config ----------------------
+// 8 layers of d=16 make 10 buckets with trivial compute, so deep prefetch
+// windows and per-bucket memory lifecycles are exercised cheaply.
+
+fn micro_runtime() -> (Runtime, ModelCfg) {
+    let mut runtime = Runtime::load_default().unwrap();
+    let cfg = ModelCfg::with_abi(64, 16, 8, 2, 32, 8, 2);
+    runtime.manifest.configs.insert("micro8".to_string(), cfg.clone());
+    (runtime, cfg)
+}
+
+fn layer_groups(cfg: &ModelCfg) -> Vec<usize> {
+    cfg.params
+        .iter()
+        .map(|(name, _)| {
+            if name.starts_with("embed") {
+                0
+            } else if let Some(rest) = name.strip_prefix("layers.") {
+                1 + rest.split('.').next().unwrap().parse::<usize>().unwrap()
+            } else {
+                1 + cfg.n_layers
+            }
+        })
+        .collect()
+}
+
+struct MicroRun {
+    losses: Vec<f32>,
+    grad_shards: Vec<Vec<Vec<f32>>>,
+    param_shards: Vec<Vec<Vec<f32>>>,
+    all_reduce_count: usize,
+    peak_allocated: u64,
+}
+
+/// Run `steps` micro8 steps under one (mesh, backend, mode) combination,
+/// with a plain SGD fold-in between steps so trajectories compound.
+fn run_micro(mesh: DeviceMesh, backend: CommBackend, mode: ExecMode, steps: usize) -> MicroRun {
+    let (mut runtime, cfg) = micro_runtime();
+    let groups = layer_groups(&cfg);
+    let mut engine = FsdpEngine::new_with_comm(
+        cfg.params.clone(),
+        &groups,
+        mesh,
+        &ShardingPolicy::element_wise(),
+        Fabric::h800(),
+        make_comm(backend),
+    )
+    .unwrap();
+    engine.init_params(&init_full_params(&cfg.params, 5)).unwrap();
+    let m = engine.num_devices();
+    let mut corpus = Corpus::new(cfg.vocab, 9);
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        let batches: Vec<_> = (0..m).map(|_| corpus.batch(cfg.batch, cfg.seq)).collect();
+        let out = exec::run_step(&mut engine, &mut runtime, "micro8", &batches, mode).unwrap();
+        losses.extend(out.losses);
+        for b in engine.buckets.iter_mut() {
+            let grads = b.grad_shards.clone();
+            for (shard, g) in b.dbuffer.shards.iter_mut().zip(&grads) {
+                for (p, &gv) in shard.iter_mut().zip(g) {
+                    *p -= 0.1 * gv;
+                }
+            }
+        }
+    }
+    let (_, peak_allocated) = engine.memory_stats();
+    MicroRun {
+        losses,
+        grad_shards: engine.buckets.iter().map(|b| b.grad_shards.clone()).collect(),
+        param_shards: engine.buckets.iter().map(|b| b.dbuffer.shards.clone()).collect(),
+        all_reduce_count: engine.stats().count("all_reduce"),
+        peak_allocated,
+    }
+}
+
+fn assert_runs_equal(a: &MicroRun, b: &MicroRun, what: &str) {
+    assert_eq!(a.losses.len(), b.losses.len(), "{what}: loss count");
+    for (i, (x, y)) in a.losses.iter().zip(&b.losses).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss {i}: {x} vs {y}");
+    }
+    for (bi, (ga, gb)) in a.grad_shards.iter().zip(&b.grad_shards).enumerate() {
+        for (x, y) in ga.iter().flatten().zip(gb.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: bucket {bi} grads differ");
+        }
+    }
+    for (pa, pb) in a.param_shards.iter().zip(&b.param_shards) {
+        for (x, y) in pa.iter().flatten().zip(pb.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: params differ");
+        }
+    }
+}
+
+#[test]
+fn micro_all_schedules_bit_identical() {
+    let reference = run_micro(
+        DeviceMesh::flat("fsdp", 4),
+        CommBackend::Serial,
+        ExecMode::Sequential,
+        3,
+    );
+    for backend in [CommBackend::Serial, CommBackend::Threaded] {
+        for prefetch in [1usize, 2, 8] {
+            let r = run_micro(
+                DeviceMesh::flat("fsdp", 4),
+                backend,
+                ExecMode::Pipelined { prefetch },
+                3,
+            );
+            assert_runs_equal(
+                &reference,
+                &r,
+                &format!("{} pipelined{prefetch}", backend.name()),
+            );
+        }
+    }
+    let thr_seq = run_micro(
+        DeviceMesh::flat("fsdp", 4),
+        CommBackend::Threaded,
+        ExecMode::Sequential,
+        3,
+    );
+    assert_runs_equal(&reference, &thr_seq, "threaded sequential");
+}
+
+#[test]
+fn hsdp_schedules_bit_identical_and_account_allreduce() {
+    let mesh = || DeviceMesh::new(&[("replica", 2), ("fsdp", 2)]).unwrap();
+    let reference = run_micro(mesh(), CommBackend::Serial, ExecMode::Sequential, 2);
+    // 10 buckets x 2 steps, each reduction runs the cross-replica AR
+    assert_eq!(reference.all_reduce_count, 20, "HSDP AllReduce not accounted");
+    for (backend, mode) in [
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 1 }),
+    ] {
+        let r = run_micro(mesh(), backend, mode, 2);
+        assert_runs_equal(&reference, &r, &format!("hsdp {} {}", backend.name(), mode.name()));
+        assert_eq!(r.all_reduce_count, 20);
+    }
+}
+
+#[test]
+fn prefetch_caps_live_memory() {
+    // sequential keeps all 10 full buckets live; pipelined-1 keeps at
+    // most 2 (plus bounded ReduceScatter staging) — the allocator must
+    // *measure* that difference
+    let seq = run_micro(
+        DeviceMesh::flat("fsdp", 2),
+        CommBackend::Serial,
+        ExecMode::Sequential,
+        1,
+    );
+    let pip1 = run_micro(
+        DeviceMesh::flat("fsdp", 2),
+        CommBackend::Serial,
+        ExecMode::Pipelined { prefetch: 1 },
+        1,
+    );
+    let pip8 = run_micro(
+        DeviceMesh::flat("fsdp", 2),
+        CommBackend::Serial,
+        ExecMode::Pipelined { prefetch: 8 },
+        1,
+    );
+    assert!(
+        pip1.peak_allocated < seq.peak_allocated,
+        "pipelined-1 peak {} !< sequential peak {}",
+        pip1.peak_allocated,
+        seq.peak_allocated
+    );
+    assert!(
+        pip1.peak_allocated <= pip8.peak_allocated,
+        "deeper prefetch cannot shrink the window: {} vs {}",
+        pip1.peak_allocated,
+        pip8.peak_allocated
+    );
+}
+
+// ---- full-trainer trajectories (real optimizers) ------------------------
+
+fn run_trainer(
+    opt: OptimKind,
+    m: usize,
+    backend: CommBackend,
+    exec: ExecMode,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let hyper = match opt {
+        OptimKind::Muon => AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+        _ => AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+    };
+    let policy = if opt == OptimKind::Adam8bit {
+        ShardingPolicy::uniform_rows(32)
+    } else {
+        ShardingPolicy::element_wise()
+    };
+    let mut t = Trainer::with_exec("tiny", m, opt, &policy, hyper, 42, backend, exec).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let params = (0..t.engine.params.len())
+        .map(|i| t.engine.read_param(i))
+        .collect();
+    (losses, params)
+}
+
+fn assert_trajectories_equal(
+    a: &(Vec<f32>, Vec<Vec<f32>>),
+    b: &(Vec<f32>, Vec<Vec<f32>>),
+    what: &str,
+) {
+    for (step, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: step {step}: {x} vs {y}");
+    }
+    for (i, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        for (x, y) in pa.iter().zip(pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}");
+        }
+    }
+}
+
+#[test]
+fn adamw_trainer_pipelined_matches_sequential() {
+    let reference = run_trainer(
+        OptimKind::AdamW,
+        4,
+        CommBackend::Serial,
+        ExecMode::Sequential,
+        2,
+    );
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 1 }),
+    ] {
+        let r = run_trainer(OptimKind::AdamW, 4, backend, exec, 2);
+        assert_trajectories_equal(
+            &reference,
+            &r,
+            &format!("adamw {} {}", backend.name(), exec.name()),
+        );
+    }
+}
+
+#[test]
+fn muon_trainer_pipelined_matches_sequential() {
+    let reference = run_trainer(
+        OptimKind::Muon,
+        2,
+        CommBackend::Serial,
+        ExecMode::Sequential,
+        2,
+    );
+    let r = run_trainer(
+        OptimKind::Muon,
+        2,
+        CommBackend::Threaded,
+        ExecMode::Pipelined { prefetch: 2 },
+        2,
+    );
+    assert_trajectories_equal(&reference, &r, "muon threaded pipelined2");
+}
+
+#[test]
+fn adam8bit_trainer_pipelined_matches_sequential() {
+    let reference = run_trainer(
+        OptimKind::Adam8bit,
+        2,
+        CommBackend::Serial,
+        ExecMode::Sequential,
+        2,
+    );
+    let r = run_trainer(
+        OptimKind::Adam8bit,
+        2,
+        CommBackend::Threaded,
+        ExecMode::Pipelined { prefetch: 8 },
+        2,
+    );
+    assert_trajectories_equal(&reference, &r, "adam8bit threaded pipelined8");
+}
+
+#[test]
+fn executor_reports_measured_timeline() {
+    let mut t = Trainer::with_exec(
+        "tiny",
+        2,
+        OptimKind::AdamW,
+        &ShardingPolicy::element_wise(),
+        AdamHyper::default(),
+        3,
+        CommBackend::Threaded,
+        ExecMode::Pipelined { prefetch: 2 },
+    )
+    .unwrap();
+    t.train_step().unwrap();
+    let r = t.last_report.as_ref().expect("report");
+    assert!(r.wall_s > 0.0);
+    assert!(r.exposed_comm_s >= 0.0 && r.exposed_comm_s <= r.wall_s * 1.5);
+    assert!(r.sim_comm_s > 0.0, "fabric comm must be recorded");
+    assert!(r.peak_reserved >= r.peak_allocated);
+    assert!(r.peak_allocated > 0);
+    assert!(t.log[0].exposed_s >= 0.0);
+}
