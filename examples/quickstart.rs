@@ -1,45 +1,54 @@
-//! Quickstart: shard a tiny transformer with the fully_shard-style API,
-//! run a few training steps on a simulated 4-device mesh, print the loss.
+//! Quickstart: shard a tiny transformer with the declarative
+//! `fully_shard`-style spec API, bind a *different optimizer per wrap
+//! unit* (Muon on layer matrices, AdamW on embed/head — the paper's §6.3
+//! mixed setup), run a few training steps on a simulated 4-device mesh,
+//! print the loss.
 //!
 //!     cargo run --release --example quickstart
 
-use vescale_fsdp::config::OptimKind;
-use vescale_fsdp::fsdp::ShardingPolicy;
+use vescale_fsdp::fsdp::spec::ModelSpec;
 use vescale_fsdp::optim::AdamHyper;
-use vescale_fsdp::train::Trainer;
+use vescale_fsdp::train::TrainSession;
 
 fn main() -> anyhow::Result<()> {
-    // fully_shard the `tiny` model over 4 simulated devices, element-wise
-    // RaggedShard granularity (the production default)
-    let mut trainer = Trainer::new(
-        "tiny",
-        4,
-        OptimKind::AdamW,
-        &ShardingPolicy::element_wise(),
-        AdamHyper::default(),
-        42,
-    )?;
+    // fully_shard the `tiny` model over 4 simulated devices: the
+    // layerwise wrap graph (embed | layer i | head) with Muon bound to
+    // the layer groups and AdamW everywhere else
+    let spec = ModelSpec::layerwise_mixed_muon(
+        2, // tiny has 2 layers
+        AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+    );
+    let mut session = TrainSession::builder("tiny")
+        .devices(4)
+        .spec(spec)
+        .hyper(AdamHyper::default()) // embed/head AdamW hyper
+        .seed(42)
+        .build()?;
 
-    println!("model: tiny | devices: 4 | optimizer: adamw");
+    println!("model: tiny | devices: 4 | per-group optimizers:");
+    for (bucket, opt) in session.engine.buckets.iter().zip(&session.optimizers) {
+        println!("  {:>8} -> {}", bucket.name, opt.name());
+    }
     println!(
         "sharded elements/device: {} (padding {:.3}%)",
-        trainer.engine.shard_elems(),
-        trainer.engine.padding_ratio() * 100.0
+        session.engine.shard_elems(),
+        session.engine.padding_ratio() * 100.0
     );
 
     for step in 1..=20 {
-        let loss = trainer.train_step()?;
+        let loss = session.train_step()?;
         if step % 5 == 0 || step == 1 {
             println!("step {step:>3}  loss {loss:.4}");
         }
     }
-    let s = trainer.engine.stats();
+    let s = session.engine.stats();
     println!(
-        "collectives: {} AllGather + {} ReduceScatter, {:.1} MB moved, {:.1} ms simulated",
+        "collectives: {} AllGather + {} ReduceScatter, {:.1} MB moved, {:.1} ms simulated on {}",
         s.count("all_gather"),
         s.count("reduce_scatter"),
         s.total_bytes() as f64 / 1e6,
         s.total_time() * 1e3,
+        session.engine.fabric.name,
     );
     Ok(())
 }

@@ -16,9 +16,10 @@ use vescale_fsdp::cluster::CommBackend;
 use vescale_fsdp::comm::Fabric;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
-use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
 use vescale_fsdp::optim::AdamHyper;
-use vescale_fsdp::train::Trainer;
+use vescale_fsdp::train::TrainSession;
 use vescale_fsdp::util::args::Args;
 use vescale_fsdp::util::json::Json;
 use vescale_fsdp::util::table::Table;
@@ -34,19 +35,19 @@ fn run(
     model: &str,
     m: usize,
     exec: ExecMode,
+    fabric: &Fabric,
     warmup: usize,
     steps: usize,
 ) -> anyhow::Result<RunStats> {
-    let mut t = Trainer::with_exec(
-        model,
-        m,
-        OptimKind::AdamW,
-        &ShardingPolicy::element_wise(),
-        AdamHyper { lr: 1e-3, ..AdamHyper::default() },
-        42,
-        CommBackend::Threaded,
-        exec,
-    )?;
+    let mut t = TrainSession::builder(model)
+        .devices(m)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .backend(CommBackend::Threaded)
+        .exec(exec)
+        .fabric(fabric.clone())
+        .build()?;
     let mut losses = Vec::with_capacity(warmup + steps);
     for _ in 0..warmup {
         losses.push(t.train_step()?);
@@ -73,8 +74,13 @@ fn main() -> anyhow::Result<()> {
     let m = args.usize_or("mesh", 4);
     let steps = args.usize_or("steps", 6);
     let warmup = args.usize_or("warmup", 1);
+    let fabric = Fabric::by_name(&args.str_or("fabric", "h800"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fabric"))?;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
-    println!("model {model}, mesh {m}, host cores {cores}; {steps} steps (+{warmup} warmup)\n");
+    println!(
+        "model {model}, mesh {m}, fabric {}, host cores {cores}; {steps} steps (+{warmup} warmup)\n",
+        fabric.name
+    );
 
     // ---- sim.rs prediction for the same preset ----
     let preset = presets::by_name(&model)
@@ -91,7 +97,7 @@ fn main() -> anyhow::Result<()> {
         &ParallelConfig::fsdp_only(m),
         OptimKind::AdamW,
         tokens_per_dev,
-        &Fabric::h800(),
+        &fabric,
         &GpuSpec::h800(),
         &baselines::vescale(1),
     )?;
@@ -110,7 +116,7 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut stats: Vec<RunStats> = Vec::new();
     for mode in modes {
-        stats.push(run(&model, m, mode, warmup, steps)?);
+        stats.push(run(&model, m, mode, &fabric, warmup, steps)?);
     }
     let reference = &stats[0].losses;
     for (mode, st) in modes.iter().zip(&stats) {
@@ -151,10 +157,11 @@ fn main() -> anyhow::Result<()> {
         if pipelined_wins { "pipelined wins" } else { "sequential wins on this host" }
     );
     println!(
-        "measured exposed-comm fraction (pipelined-1): {:.1}%  |  sim.rs prediction ({}, {} dev, H800 model): {:.1}%",
+        "measured exposed-comm fraction (pipelined-1): {:.1}%  |  sim.rs prediction ({}, {} dev, {} model): {:.1}%",
         100.0 * stats[1].exposed_per_step / stats[1].wall_per_step.max(1e-12),
         preset.name,
         m,
+        fabric.name,
         100.0 * sim_exposed_frac
     );
     println!(
@@ -167,6 +174,7 @@ fn main() -> anyhow::Result<()> {
         ("bench", Json::str("overlap_pipeline")),
         ("model", Json::str(&model)),
         ("mesh", Json::num(m as f64)),
+        ("fabric", Json::str(fabric.name)),
         ("steps", Json::num(steps as f64)),
         ("host_cores", Json::num(cores as f64)),
         ("rows", Json::Arr(rows)),

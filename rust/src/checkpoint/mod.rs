@@ -39,7 +39,9 @@ pub fn save(engine: &FsdpEngine, dir: &Path) -> Result<()> {
         std::fs::write(dir.join(format!("rank_{rank}.bin")), bytes)?;
     }
     let meta = Json::obj(vec![
-        ("version", Json::num(1)),
+        // v2: buckets additionally record their shard-group name (the
+        // spec's wrap-unit identity); v1 checkpoints load fine without it
+        ("version", Json::num(2)),
         ("mesh", Json::num(m as f64)),
         (
             "params",
@@ -54,6 +56,7 @@ pub fn save(engine: &FsdpEngine, dir: &Path) -> Result<()> {
             "buckets",
             Json::arr(engine.buckets.iter().map(|b| {
                 Json::obj(vec![
+                    ("name", Json::str(&b.name)),
                     ("shard_size", Json::num(b.dbuffer.layout.shard_size as f64)),
                     ("param_ids", Json::arr(b.param_ids.iter().map(|&i| Json::num(i as f64)))),
                     // planner-assigned offsets in the bucket's global
@@ -76,6 +79,9 @@ pub fn save(engine: &FsdpEngine, dir: &Path) -> Result<()> {
 pub struct Meta {
     pub mesh: usize,
     pub params: Vec<(String, Vec<usize>)>,
+    /// Shard-group (wrap unit) names, bucket order. Empty for v1
+    /// checkpoints, which predate the spec API.
+    pub groups: Vec<String>,
 }
 
 pub fn read_meta(dir: &Path) -> Result<Meta> {
@@ -97,7 +103,17 @@ pub fn read_meta(dir: &Path) -> Result<Meta> {
             (name, shape)
         })
         .collect();
-    Ok(Meta { mesh, params })
+    let groups = j
+        .get("buckets")
+        .and_then(|b| b.as_arr())
+        .map(|bs| {
+            bs.iter()
+                .filter_map(|b| b.get("name").and_then(|n| n.as_str()))
+                .map(str::to_string)
+                .collect()
+        })
+        .unwrap_or_default();
+    Ok(Meta { mesh, params, groups })
 }
 
 /// Load a checkpoint into an engine. The engine's mesh size may differ
@@ -275,5 +291,49 @@ mod tests {
         assert_eq!(meta.mesh, 2);
         assert_eq!(meta.params.len(), 3);
         assert_eq!(meta.params[0].0, "embed");
+        // legacy flat-array construction records g<N> wrap-unit names
+        assert_eq!(meta.groups, vec!["g0".to_string(), "g1".to_string()]);
+    }
+
+    #[test]
+    fn spec_engine_checkpoint_records_group_names_and_reshards() {
+        use crate::cluster::SerialComm;
+        use crate::fsdp::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
+        use std::sync::Arc;
+        let params = vec![
+            ("embed".to_string(), vec![32, 16]),
+            ("w1".to_string(), vec![16, 16]),
+            ("norm".to_string(), vec![16]),
+        ];
+        let spec = ModelSpec::new()
+            .group(ShardGroupSpec::new("embed", GroupFilter::prefix("embed")))
+            .group(
+                ShardGroupSpec::new("body", GroupFilter::Rest)
+                    .policy(crate::fsdp::ShardingPolicy::uniform_rows(4)),
+            );
+        let build = |m: usize| {
+            FsdpEngine::from_spec(
+                params.clone(),
+                &spec,
+                DeviceMesh::flat("fsdp", m),
+                Fabric::h800(),
+                Arc::new(SerialComm::new()),
+            )
+            .unwrap()
+        };
+        let dir = std::env::temp_dir().join("vescale_ckpt_spec_groups");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut e = build(4);
+        let full = rand_params(9);
+        e.init_params(&full).unwrap();
+        save(&e, &dir).unwrap();
+        let meta = read_meta(&dir).unwrap();
+        assert_eq!(meta.groups, vec!["embed".to_string(), "body".to_string()]);
+        // reshard onto a different mesh size through the same spec
+        let mut e2 = build(2);
+        load(&mut e2, &dir).unwrap();
+        for i in 0..full.len() {
+            assert_eq!(e2.read_param(i), full[i], "param {i}");
+        }
     }
 }

@@ -32,6 +32,8 @@ pub enum CopyKind {
 
 #[derive(Debug, Clone)]
 pub struct Fabric {
+    /// Preset name (`--fabric` flag; recorded in step logs / bench JSON).
+    pub name: &'static str,
     /// Effective per-rank collective bandwidth within one node (bytes/s).
     pub intra_bw: f64,
     /// Effective per-rank collective bandwidth when the group spans nodes.
@@ -57,6 +59,7 @@ impl Fabric {
     /// H800 cluster of the paper (§6 hardware), Table-1 calibrated.
     pub fn h800() -> Fabric {
         Fabric {
+            name: "h800",
             intra_bw: 350e9,
             inter_bw: 145e9,
             rs_factor: 0.464,
@@ -70,6 +73,58 @@ impl Fabric {
             interleave_cols_factor: 0.38,
             align_bytes: 16,
         }
+    }
+
+    /// H100 SXM cluster: full-rate NVLink4 and 400 Gb/s IB per GPU
+    /// (the export-unrestricted sibling of the H800 — same copy engines,
+    /// faster inter-node tier).
+    pub fn h100() -> Fabric {
+        Fabric {
+            name: "h100",
+            intra_bw: 400e9,
+            inter_bw: 190e9,
+            rs_factor: 0.464,
+            launch: 20e-6,
+            devices_per_node: 8,
+            misalign_factor: 0.8,
+            copy_bw: 1.35e12,
+            interleave_rows_factor: 1.0,
+            interleave_cols_factor: 0.38,
+            align_bytes: 16,
+        }
+    }
+
+    /// A100 SXM cluster: NVLink3 + 200 Gb/s IB, slower HBM2e copy engines
+    /// and a slightly higher launch overhead (older driver stack).
+    pub fn a100() -> Fabric {
+        Fabric {
+            name: "a100",
+            intra_bw: 230e9,
+            inter_bw: 90e9,
+            rs_factor: 0.464,
+            launch: 25e-6,
+            devices_per_node: 8,
+            misalign_factor: 0.8,
+            copy_bw: 0.9e12,
+            interleave_rows_factor: 1.0,
+            interleave_cols_factor: 0.38,
+            align_bytes: 16,
+        }
+    }
+
+    /// Look a fabric preset up by name (`--fabric h800|h100|a100`).
+    pub fn by_name(s: &str) -> Option<Fabric> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "h800" => Fabric::h800(),
+            "h100" => Fabric::h100(),
+            "a100" => Fabric::a100(),
+            _ => return None,
+        })
+    }
+
+    /// All preset names, for error messages.
+    pub fn preset_names() -> [&'static str; 3] {
+        ["h800", "h100", "a100"]
     }
 
     /// Collective bandwidth for a group of `m` ranks.
@@ -223,5 +278,25 @@ mod tests {
         let f = Fabric::h800();
         assert_eq!(f.all_gather_time(1, 1 << 30, true), 0.0);
         assert_eq!(f.reduce_scatter_time(1, 1 << 30, true), 0.0);
+    }
+
+    #[test]
+    fn presets_parse_by_name() {
+        for name in Fabric::preset_names() {
+            let f = Fabric::by_name(name).unwrap();
+            assert_eq!(f.name, name);
+        }
+        assert!(Fabric::by_name("H800").is_some(), "case-insensitive");
+        assert!(Fabric::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn preset_ordering_is_sane() {
+        // h100 beats h800 inter-node; a100 is the slowest tier everywhere
+        let big = 1 << 28;
+        let h800 = Fabric::h800().all_gather_time(64, big, true);
+        let h100 = Fabric::h100().all_gather_time(64, big, true);
+        let a100 = Fabric::a100().all_gather_time(64, big, true);
+        assert!(h100 < h800 && h800 < a100, "{h100} {h800} {a100}");
     }
 }

@@ -2,12 +2,33 @@
 //! offline). Supports `[sections]`, `key = value` with string / integer /
 //! float / bool values, `#` comments, and flat key lookup as
 //! `section.key`.
+//!
+//! Beyond the flat `[model]` / `[parallel]` / `[run]` sections, the
+//! launcher config deserializes `[group.<name>]` sections straight into
+//! the spec API's per-group overrides — e.g. the paper's mixed-optimizer
+//! setup is just a config file:
+//!
+//! ```toml
+//! [model]
+//! preset = "tiny"
+//!
+//! [run]
+//! optimizer = "adamw"     # session default: embed/head
+//! fabric = "h800"
+//!
+//! [group.layers]          # every layer group
+//! optimizer = "muon"
+//! lr = 0.02
+//! ```
 
 use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use super::{CommBackend, OptimKind, ParallelConfig, System, TrainConfig};
+use crate::comm::Fabric;
+use crate::fsdp::spec::OptimBinding;
+
+use super::{CommBackend, GroupOverride, OptimKind, ParallelConfig, System, TrainConfig};
 
 #[derive(Debug, Default, Clone)]
 pub struct ConfigFile {
@@ -63,6 +84,63 @@ impl ConfigFile {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Collect the `[group.<name>]` sections into per-group overrides.
+    /// Unknown fields and unknown optimizer names are errors (a config
+    /// typo must not silently train the wrong setup).
+    pub fn group_overrides(&self) -> Result<Vec<GroupOverride>> {
+        let mut by_name: BTreeMap<String, GroupOverride> = BTreeMap::new();
+        for (key, val) in &self.values {
+            let Some(rest) = key.strip_prefix("group.") else {
+                continue;
+            };
+            let Some((which, field)) = rest.rsplit_once('.') else {
+                bail!("bad group key '{key}': expected [group.<name>] field = value");
+            };
+            let o = by_name.entry(which.to_string()).or_insert_with(|| GroupOverride {
+                which: which.to_string(),
+                ..GroupOverride::default()
+            });
+            match field {
+                "optimizer" => {
+                    o.optim = Some(OptimBinding::parse(val).ok_or_else(|| {
+                        anyhow::anyhow!("[group.{which}]: unknown optimizer '{val}'")
+                    })?);
+                }
+                "rows" => {
+                    o.rows = Some(val.parse().map_err(|_| {
+                        anyhow::anyhow!("[group.{which}]: rows = '{val}' is not an integer")
+                    })?);
+                }
+                "granularity" => {
+                    o.granularity = Some(val.parse().map_err(|_| {
+                        anyhow::anyhow!(
+                            "[group.{which}]: granularity = '{val}' is not an integer"
+                        )
+                    })?);
+                }
+                "reshard_after_forward" => {
+                    o.reshard = Some(match val.to_ascii_lowercase().as_str() {
+                        "true" | "1" | "yes" => true,
+                        "false" | "0" | "no" => false,
+                        _ => bail!(
+                            "[group.{which}]: reshard_after_forward = '{val}' is not a bool"
+                        ),
+                    });
+                }
+                "lr" => {
+                    o.lr = Some(val.parse().map_err(|_| {
+                        anyhow::anyhow!("[group.{which}]: lr = '{val}' is not a number")
+                    })?);
+                }
+                _ => bail!(
+                    "[group.{which}]: unknown field '{field}' (expected optimizer, \
+                     rows, granularity, reshard_after_forward, or lr)"
+                ),
+            }
+        }
+        Ok(by_name.into_values().collect())
+    }
+
     /// Materialize a TrainConfig (missing keys fall back to defaults).
     pub fn train_config(&self) -> Result<TrainConfig> {
         let d = TrainConfig::default();
@@ -81,6 +159,13 @@ impl ConfigFile {
                 .ok_or_else(|| anyhow::anyhow!("unknown backend '{s}'"))?,
             None => d.backend,
         };
+        let fabric = self.str_or("run.fabric", &d.fabric);
+        if Fabric::by_name(&fabric).is_none() {
+            bail!(
+                "unknown fabric '{fabric}' (expected one of {:?})",
+                Fabric::preset_names()
+            );
+        }
         Ok(TrainConfig {
             model: self.str_or("model.preset", &d.model),
             parallel: ParallelConfig {
@@ -98,6 +183,8 @@ impl ConfigFile {
             granularity: self.usize_or("run.granularity", 1) as u64,
             backend,
             prefetch: self.usize_or("run.prefetch", d.prefetch),
+            fabric,
+            groups: self.group_overrides()?,
         })
     }
 }
@@ -165,5 +252,47 @@ prefetch = 2
     fn comments_ignored() {
         let c = ConfigFile::parse("a = 1 # trailing\n# full line\n").unwrap();
         assert_eq!(c.usize_or("a", 0), 1);
+    }
+
+    const MIXED: &str = r#"
+[model]
+preset = "tiny"
+
+[run]
+optimizer = "adamw"
+fabric = "h100"
+
+[group.layers]
+optimizer = "muon"
+lr = 0.02
+
+[group.head]
+rows = 32
+reshard_after_forward = false
+"#;
+
+    #[test]
+    fn group_sections_deserialize_into_overrides() {
+        let c = ConfigFile::parse(MIXED).unwrap();
+        let tc = c.train_config().unwrap();
+        assert_eq!(tc.fabric, "h100");
+        assert_eq!(tc.groups.len(), 2);
+        let layers = tc.groups.iter().find(|o| o.which == "layers").unwrap();
+        assert_eq!(layers.optim, Some(crate::fsdp::spec::OptimBinding::Muon));
+        assert_eq!(layers.lr, Some(0.02));
+        let head = tc.groups.iter().find(|o| o.which == "head").unwrap();
+        assert_eq!(head.rows, Some(32));
+        assert_eq!(head.reshard, Some(false));
+        assert!(head.optim.is_none());
+    }
+
+    #[test]
+    fn group_section_rejects_typos() {
+        let bad_field = ConfigFile::parse("[group.embed]\nrowz = 32").unwrap();
+        assert!(bad_field.group_overrides().is_err());
+        let bad_opt = ConfigFile::parse("[group.embed]\noptimizer = \"lion\"").unwrap();
+        assert!(bad_opt.group_overrides().is_err());
+        let bad_fabric = ConfigFile::parse("[run]\nfabric = \"tpu\"").unwrap();
+        assert!(bad_fabric.train_config().is_err());
     }
 }

@@ -15,6 +15,27 @@ pub mod presets;
 pub use crate::cluster::CommBackend;
 pub use presets::{ModelPreset, MoeInfo, ParamDecl, ParamGroup};
 
+use crate::fsdp::spec::OptimBinding;
+
+/// One `[group.<which>]` config-file section: per-group edits applied on
+/// top of the layerwise wrapping at session build time. `which` is a
+/// group name (`embed`, `head`, `layer3`, ...) or `layers`, which targets
+/// every layer group.
+#[derive(Debug, Clone, Default)]
+pub struct GroupOverride {
+    pub which: String,
+    /// Optimizer binding for the group(s).
+    pub optim: Option<OptimBinding>,
+    /// Row sharding granularity (0 = element-wise).
+    pub rows: Option<u64>,
+    /// Element sharding granularity (overrides the policy default).
+    pub granularity: Option<u64>,
+    /// Reshard-after-forward toggle.
+    pub reshard: Option<bool>,
+    /// Group-local learning rate.
+    pub lr: Option<f32>,
+}
+
 /// Which FSDP implementation to run (paper §6 baselines).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum System {
@@ -154,6 +175,10 @@ pub struct TrainConfig {
     /// (`--prefetch`): 0 = sequential step loop, N >= 1 = bucket-wise
     /// schedule with up to N prefetched gathers.
     pub prefetch: usize,
+    /// Fabric preset name (`run.fabric` / `--fabric`): h800 | h100 | a100.
+    pub fabric: String,
+    /// Per-group `[group.*]` overrides, applied on the layerwise wrapping.
+    pub groups: Vec<GroupOverride>,
 }
 
 impl Default for TrainConfig {
@@ -171,6 +196,8 @@ impl Default for TrainConfig {
             granularity: 1,
             backend: CommBackend::Serial,
             prefetch: 0,
+            fabric: "h800".into(),
+            groups: Vec::new(),
         }
     }
 }

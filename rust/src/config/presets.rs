@@ -100,6 +100,30 @@ impl ModelPreset {
     pub fn flops_per_token(&self) -> f64 {
         6.0 * self.active_params()
     }
+
+    /// The preset's wrap units as a declarative shard spec: one
+    /// [`crate::fsdp::spec::ShardGroupSpec`] per [`ParamGroup`], filtered
+    /// by exact parameter names (so `plan`-style tooling and the numeric
+    /// engine consume the same `fully_shard` graph).
+    pub fn shard_spec(&self) -> crate::fsdp::spec::ModelSpec {
+        use crate::fsdp::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
+        let mut spec = ModelSpec::new();
+        for g in &self.groups {
+            spec = spec.group(ShardGroupSpec::new(
+                g.name.clone(),
+                GroupFilter::Names(g.params.iter().map(|p| p.name.clone()).collect()),
+            ));
+        }
+        spec
+    }
+
+    /// The preset's parameter table in the engine's (name, shape) form.
+    pub fn param_table(&self) -> Vec<(String, Vec<usize>)> {
+        self.all_params()
+            .iter()
+            .map(|p| (p.name.clone(), p.shape.clone()))
+            .collect()
+    }
 }
 
 fn p(name: String, shape: &[usize]) -> ParamDecl {
@@ -351,6 +375,23 @@ mod tests {
         assert!((69.0..73.0).contains(&b), "llama70b = {b}B");
         assert!(m.moe.is_none());
         assert_eq!(m.groups.len(), 82); // embed + 80 layers + head
+    }
+
+    #[test]
+    fn preset_shard_spec_covers_every_parameter() {
+        let m = tiny_like("t", 512, 64, 3, 256);
+        let spec = m.shard_spec();
+        assert_eq!(spec.groups.len(), m.groups.len());
+        let table = m.param_table();
+        let group_of = spec.assign(&table).unwrap();
+        // wrap-unit order is preserved and every parameter is claimed
+        assert_eq!(group_of.len(), table.len());
+        for (gi, g) in m.groups.iter().enumerate() {
+            for p in &g.params {
+                let i = table.iter().position(|(n, _)| n == &p.name).unwrap();
+                assert_eq!(group_of[i], gi, "{}", p.name);
+            }
+        }
     }
 
     #[test]

@@ -23,12 +23,13 @@ use anyhow::{bail, Context, Result};
 use crate::cluster::{Communicator, SerialComm};
 use crate::comm::{CommStats, Fabric};
 use crate::dbuffer::DBuffer;
-use crate::dtensor::DTensor;
 use crate::memory::{shared_allocator, BlockId, FreePolicy, SharedAllocator};
 use crate::mesh::DeviceMesh;
-use crate::optim::{Muon, ShardOptimizer};
-use crate::placement::Placement;
+use crate::optim::group::{self as optim_group, GroupEnv};
+use crate::optim::{GroupOptimizer, Muon, ShardOptimizer};
 use crate::planner::{self, TensorDecl};
+
+use super::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
 
 /// Simulated per-device memory limit for the engine's allocator account
 /// (generous: the numeric models are tiny; the limit only exists so the
@@ -78,12 +79,43 @@ pub struct ParamLoc {
     pub idx: usize,
 }
 
+/// One shard group's runtime state: the planned DBuffer plus the
+/// group-local choices the spec declared for it (mesh, fabric,
+/// reshard-after-forward). Collectives on this bucket run on *its* mesh
+/// and fabric, so groups can differ (the HSDP-per-group and multi-tier
+/// directions later PRs build on).
 pub struct Bucket {
+    /// Wrap-unit name from the spec (`g<N>` for legacy flat-array
+    /// construction).
+    pub name: String,
     pub dbuffer: DBuffer,
     /// Gradient shards (m x S), filled by `reduce_grads`.
     pub grad_shards: Vec<Vec<f32>>,
     /// Global parameter indices of the tensors in this bucket.
     pub param_ids: Vec<usize>,
+    /// (name, shape) per tensor, bucket-position order (mirrors
+    /// `param_ids` into the engine's global parameter table).
+    pub param_meta: Vec<(String, Vec<usize>)>,
+    /// Group-local mesh (same fsdp dim as the session; may add replica).
+    pub mesh: DeviceMesh,
+    /// Group-local fabric model.
+    pub fabric: Fabric,
+    /// Whether the pipelined executor reshards this group right after its
+    /// forward (`true` = the paper's default schedule).
+    pub reshard_after_forward: bool,
+}
+
+/// Borrow one bucket's state as a [`GroupEnv`] for a group-optimizer
+/// step (split field borrows — no clones).
+fn bucket_env<'a>(bucket: &'a mut Bucket, comm: &'a dyn Communicator) -> GroupEnv<'a> {
+    GroupEnv {
+        params: &bucket.param_meta,
+        dbuffer: &mut bucket.dbuffer,
+        grad_shards: &bucket.grad_shards,
+        mesh: &bucket.mesh,
+        fabric: &bucket.fabric,
+        comm,
+    }
 }
 
 /// Stage one bucket's per-rank gradient slices into full-buffer-sized
@@ -115,7 +147,9 @@ pub(crate) fn stage_bucket_grads<'g>(
 }
 
 pub struct FsdpEngine {
+    /// Session-default mesh (each bucket may carry its own via the spec).
     pub mesh: DeviceMesh,
+    /// Session-default fabric (each bucket may carry its own via the spec).
     pub fabric: Fabric,
     /// Cluster backend every collective (and its stats) goes through.
     pub comm: Arc<dyn Communicator>,
@@ -146,6 +180,11 @@ impl FsdpEngine {
         FsdpEngine::new_with_comm(params, group_of, mesh, policy, fabric, Arc::new(SerialComm::new()))
     }
 
+    /// Legacy flat-array constructor: a thin shim that lifts `group_of`
+    /// + the single global policy into a uniform [`ModelSpec`] (groups
+    /// `g0..gN`, every group with the same policy, mesh, and fabric) and
+    /// plans through [`FsdpEngine::from_spec`]. Bit-identical to the
+    /// pre-spec construction.
     pub fn new_with_comm(
         params: Vec<(String, Vec<usize>)>,
         group_of: &[usize],
@@ -157,35 +196,84 @@ impl FsdpEngine {
         if params.len() != group_of.len() {
             bail!("group_of length mismatch");
         }
+        let n_buckets = group_of.iter().max().map(|&g| g + 1).unwrap_or(0);
+        let mut spec = ModelSpec::new();
+        for b in 0..n_buckets {
+            let ids: Vec<usize> =
+                (0..params.len()).filter(|&i| group_of[i] == b).collect();
+            spec = spec.group(
+                ShardGroupSpec::new(format!("g{b}"), GroupFilter::Indices(ids))
+                    .policy(policy.clone()),
+            );
+        }
+        FsdpEngine::from_spec(params, &spec, mesh, fabric, comm)
+    }
+
+    /// Plan an engine from a declarative [`ModelSpec`]: each shard group
+    /// becomes one bucket, laid out by the planner under its *group-local*
+    /// sharding policy, carrying its group-local mesh / fabric /
+    /// reshard-after-forward choices. `mesh` and `fabric` are the session
+    /// defaults groups inherit when they declare no override; a group
+    /// mesh must keep the session's fsdp dim size.
+    pub fn from_spec(
+        params: Vec<(String, Vec<usize>)>,
+        spec: &ModelSpec,
+        mesh: DeviceMesh,
+        fabric: Fabric,
+        comm: Arc<dyn Communicator>,
+    ) -> Result<FsdpEngine> {
         let m = mesh
             .dim_size("fsdp")
             .context("mesh needs an 'fsdp' dim")?;
-        let n_buckets = group_of.iter().max().map(|&g| g + 1).unwrap_or(0);
+        let group_of = spec.assign(&params)?;
         let mut locs = vec![ParamLoc { bucket: 0, idx: 0 }; params.len()];
-        let mut buckets = Vec::with_capacity(n_buckets);
+        let mut buckets = Vec::with_capacity(spec.groups.len());
         let alloc = shared_allocator(FreePolicy::Deterministic, DEVICE_MEM_LIMIT);
-        for b in 0..n_buckets {
-            let ids: Vec<usize> = (0..params.len()).filter(|&i| group_of[i] == b).collect();
+        for (b, g) in spec.groups.iter().enumerate() {
+            let ids: Vec<usize> =
+                (0..params.len()).filter(|&i| group_of[i] == b).collect();
+            let g_mesh = match &g.mesh {
+                Some(gm) => {
+                    if gm.dim_size("fsdp") != Some(m) {
+                        bail!(
+                            "shard group '{}': mesh fsdp dim {:?} must match the \
+                             session's fsdp dim {m}",
+                            g.name,
+                            gm.dim_size("fsdp")
+                        );
+                    }
+                    gm.clone()
+                }
+                None => mesh.clone(),
+            };
+            let g_fabric = g.fabric.clone().unwrap_or_else(|| fabric.clone());
             let decls: Vec<TensorDecl> = ids
                 .iter()
                 .map(|&i| {
                     let (name, shape) = &params[i];
                     let numel: u64 = shape.iter().map(|&s| s as u64).product();
-                    let g = policy.granularity_of(name, shape).min(numel).max(1);
-                    TensorDecl::new(name, numel, g)
+                    let gran = g.policy.granularity_of(name, shape).min(numel).max(1);
+                    TensorDecl::new(name, numel, gran)
                 })
                 .collect();
             let layout = planner::plan(&decls, m, 4)
-                .with_context(|| format!("planning bucket {b}"))?;
+                .with_context(|| format!("planning shard group '{}'", g.name))?;
             for (pos, &i) in ids.iter().enumerate() {
                 locs[i] = ParamLoc { bucket: b, idx: pos };
             }
             let s = layout.shard_size as usize;
+            let param_meta: Vec<(String, Vec<usize>)> =
+                ids.iter().map(|&i| params[i].clone()).collect();
             buckets.push(Bucket {
+                name: g.name.clone(),
                 dbuffer: DBuffer::with_allocator(layout, alloc.clone())
-                    .with_context(|| format!("allocating bucket {b}"))?,
+                    .with_context(|| format!("allocating shard group '{}'", g.name))?,
                 grad_shards: vec![vec![0.0; s]; m],
                 param_ids: ids,
+                param_meta,
+                mesh: g_mesh,
+                fabric: g_fabric,
+                reshard_after_forward: g.reshard_after_forward,
             });
         }
         // persistent gradient-shard storage, claimed in one batched call
@@ -258,9 +346,10 @@ impl FsdpEngine {
     }
 
     /// AllGather every bucket (in-place, zero-copy views afterwards).
+    /// Each bucket's collective is timed on its own fabric.
     pub fn gather_params(&mut self) -> Result<()> {
         for b in &mut self.buckets {
-            b.dbuffer.all_gather_params(self.comm.as_ref(), &self.fabric)?;
+            b.dbuffer.all_gather_params(self.comm.as_ref(), &b.fabric)?;
         }
         Ok(())
     }
@@ -307,17 +396,42 @@ impl FsdpEngine {
             bucket.dbuffer.reduce_gradients_core(
                 &mut bufs,
                 &mut bucket.grad_shards,
-                &self.mesh,
+                &bucket.mesh,
                 self.comm.as_ref(),
-                &self.fabric,
+                &bucket.fabric,
             )?;
             self.alloc.lock().unwrap().free(block)?;
         }
         Ok(())
     }
 
+    /// Uniform per-group optimizer dispatch: `opts[bucket]` is that shard
+    /// group's [`GroupOptimizer`] (bound from the spec's `OptimBinding`),
+    /// so a single run can step Muon matrices next to AdamW embeddings —
+    /// no special-cased optimizer paths.
+    pub fn optimizer_step_groups(
+        &mut self,
+        opts: &mut [Box<dyn GroupOptimizer>],
+        t: u64,
+    ) -> Result<()> {
+        if opts.len() != self.buckets.len() {
+            bail!(
+                "need one group optimizer per shard group ({} given, {} groups)",
+                opts.len(),
+                self.buckets.len()
+            );
+        }
+        let comm = self.comm.clone();
+        for (bucket, opt) in self.buckets.iter_mut().zip(opts.iter_mut()) {
+            opt.step_group(bucket_env(bucket, comm.as_ref()), t)?;
+        }
+        Ok(())
+    }
+
     /// Flat-shard optimizer step over every bucket. `opts[bucket]` holds
-    /// that bucket's optimizer (state is per bucket x rank).
+    /// that bucket's optimizer (state is per bucket x rank). Legacy
+    /// interface — runs the same per-bucket code as a
+    /// [`crate::optim::FlatGroup`] binding.
     pub fn optimizer_step(
         &mut self,
         opts: &mut [Box<dyn ShardOptimizer>],
@@ -326,13 +440,9 @@ impl FsdpEngine {
         if opts.len() != self.buckets.len() {
             bail!("need one optimizer per bucket");
         }
+        let comm = self.comm.clone();
         for (bucket, opt) in self.buckets.iter_mut().zip(opts.iter_mut()) {
-            // split borrow: param shards (mut) and grad shards (shared)
-            // are disjoint fields — no per-step gradient clone
-            let Bucket { dbuffer, grad_shards, .. } = bucket;
-            for rank in 0..self.m {
-                opt.step(rank, t, &mut dbuffer.shards[rank], &grad_shards[rank]);
-            }
+            optim_group::flat_bucket_step(opt.as_mut(), bucket_env(bucket, comm.as_ref()), t)?;
         }
         Ok(())
     }
@@ -349,34 +459,19 @@ impl FsdpEngine {
         fallback: &mut crate::optim::AdamW,
         t: u64,
     ) -> Result<()> {
-        use crate::optim::ShardOptimizer;
         let m = self.m;
-        let block = a8.block as u64;
-        for b_idx in 0..self.buckets.len() {
-            for pos in 0..self.buckets[b_idx].param_ids.len() {
-                let pid = self.buckets[b_idx].param_ids[pos];
-                let shape = self.params[pid].1.clone();
-                // split borrow: grads read-only alongside mutable params
-                let Bucket { dbuffer, grad_shards, .. } = &mut self.buckets[b_idx];
-                for rank in 0..m {
-                    let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) else {
-                        continue;
-                    };
-                    let off = dbuffer.layout.offsets[pos];
-                    let s = dbuffer.layout.shard_size;
-                    let a = (off + lo - rank as u64 * s) as usize;
-                    let len = (hi - lo) as usize;
-                    let grad = &grad_shards[rank][a..a + len];
-                    let slice = &mut dbuffer.shards[rank][a..a + len];
-                    let slot = pid * m + rank;
-                    let blocks_ok = lo % block == 0 && (len as u64) % block == 0;
-                    if shape.len() >= 2 && blocks_ok {
-                        a8.step(slot, t, slice, grad);
-                    } else {
-                        fallback.step(slot, t, slice, grad);
-                    }
-                }
-            }
+        let comm = self.comm.clone();
+        for bucket in self.buckets.iter_mut() {
+            // legacy state keying: slot = global param id * m + rank
+            let slot_base: Vec<usize> =
+                bucket.param_ids.iter().map(|&pid| pid * m).collect();
+            optim_group::adam8bit_bucket_step(
+                a8,
+                fallback,
+                bucket_env(bucket, comm.as_ref()),
+                &slot_base,
+                t,
+            )?;
         }
         Ok(())
     }
@@ -389,82 +484,17 @@ impl FsdpEngine {
         fallback: &mut [Box<dyn ShardOptimizer>],
         t: u64,
     ) -> Result<()> {
-        for b_idx in 0..self.buckets.len() {
-            for pos in 0..self.buckets[b_idx].param_ids.len() {
-                let pid = self.buckets[b_idx].param_ids[pos];
-                let (name, shape) = self.params[pid].clone();
-                let is_hidden_matrix = shape.len() == 2
-                    && !name.contains("embed")
-                    && !name.contains("head");
-                if is_hidden_matrix {
-                    let spec = self.buckets[b_idx].dbuffer.layout.ragged_spec(pos);
-                    let numel: u64 = shape.iter().map(|&s| s as u64).product();
-                    spec.validate(numel)?;
-                    let bucket = &self.buckets[b_idx];
-                    let collect = |src: &dyn Fn(usize) -> Vec<f32>| -> Vec<Vec<f32>> {
-                        (0..self.m).map(src).collect()
-                    };
-                    let p_locals = collect(&|rank| {
-                        bucket
-                            .dbuffer
-                            .local_view(rank, pos)
-                            .map(|(_, v)| v.to_vec())
-                            .unwrap_or_default()
-                    });
-                    let g_locals = collect(&|rank| {
-                        bucket
-                            .dbuffer
-                            .local_view(rank, pos)
-                            .map(|((lo, hi), _)| {
-                                let off = bucket.dbuffer.layout.offsets[pos];
-                                let s = bucket.dbuffer.layout.shard_size;
-                                let a = (off + lo - rank as u64 * s) as usize;
-                                bucket.grad_shards[rank][a..a + (hi - lo) as usize].to_vec()
-                            })
-                            .unwrap_or_default()
-                    });
-                    let param = DTensor {
-                        global_shape: shape.clone(),
-                        placement: Placement::RaggedShard(spec.clone()),
-                        locals: p_locals,
-                    };
-                    let grad = DTensor {
-                        global_shape: shape.clone(),
-                        placement: Placement::RaggedShard(spec),
-                        locals: g_locals,
-                    };
-                    let updated = muon.step_matrix(
-                        &name,
-                        (shape[0], shape[1]),
-                        &param,
-                        &grad,
-                        &self.fabric,
-                        self.comm.as_ref(),
-                    )?;
-                    // write updated shards back into the DBuffer
-                    let bucket = &mut self.buckets[b_idx];
-                    for rank in 0..self.m {
-                        if let Some((_, view)) = bucket.dbuffer.local_view_mut(rank, pos) {
-                            view.copy_from_slice(&updated.locals[rank]);
-                        }
-                    }
-                } else {
-                    // fallback optimizer on this tensor's local slices
-                    // (split borrow — no gradient clone)
-                    let Bucket { dbuffer, grad_shards, .. } = &mut self.buckets[b_idx];
-                    for rank in 0..self.m {
-                        if let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) {
-                            let off = dbuffer.layout.offsets[pos];
-                            let s = dbuffer.layout.shard_size;
-                            let a = (off + lo - rank as u64 * s) as usize;
-                            let len = (hi - lo) as usize;
-                            let grad = &grad_shards[rank][a..a + len];
-                            let shard = &mut dbuffer.shards[rank][a..a + len];
-                            fallback[b_idx].step(rank, t, shard, grad);
-                        }
-                    }
-                }
-            }
+        if fallback.len() != self.buckets.len() {
+            bail!("need one fallback optimizer per bucket");
+        }
+        let comm = self.comm.clone();
+        for (bucket, fb) in self.buckets.iter_mut().zip(fallback.iter_mut()) {
+            optim_group::muon_bucket_step(
+                muon,
+                fb.as_mut(),
+                bucket_env(bucket, comm.as_ref()),
+                t,
+            )?;
         }
         Ok(())
     }
@@ -696,5 +726,84 @@ mod tests {
     fn padding_small_for_tiny_model() {
         let e = engine(4);
         assert!(e.padding_ratio() < 0.2, "padding {}", e.padding_ratio());
+    }
+
+    #[test]
+    fn from_spec_plans_group_local_policies() {
+        let params = vec![
+            ("embed".to_string(), vec![32, 8]),
+            ("l0.w".to_string(), vec![64, 16]),
+        ];
+        let spec = ModelSpec::new()
+            .group(ShardGroupSpec::new("embed", GroupFilter::prefix("embed")))
+            .group(
+                ShardGroupSpec::new("quant", GroupFilter::prefix("l0"))
+                    .policy(ShardingPolicy::uniform_rows(8)),
+            );
+        let e = FsdpEngine::from_spec(
+            params,
+            &spec,
+            DeviceMesh::flat("fsdp", 4),
+            Fabric::h800(),
+            Arc::new(SerialComm::new()),
+        )
+        .unwrap();
+        assert_eq!(e.buckets[0].name, "embed");
+        assert_eq!(e.buckets[1].name, "quant");
+        // the 8-row policy applies only to its own group
+        assert_eq!(e.buckets[1].dbuffer.layout.ragged_spec(0).granularity, 128);
+        assert_eq!(e.buckets[0].dbuffer.layout.ragged_spec(0).granularity, 1);
+        assert_eq!(e.buckets[0].param_meta[0].0, "embed");
+    }
+
+    #[test]
+    fn from_spec_rejects_mismatched_group_mesh() {
+        let params = vec![("w".to_string(), vec![16, 16])];
+        let spec = ModelSpec::new().group(
+            ShardGroupSpec::new("w", GroupFilter::prefix("w"))
+                .mesh(DeviceMesh::flat("fsdp", 8)),
+        );
+        let err = FsdpEngine::from_spec(
+            params,
+            &spec,
+            DeviceMesh::flat("fsdp", 4),
+            Fabric::h800(),
+            Arc::new(SerialComm::new()),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("fsdp dim"), "{err}");
+    }
+
+    #[test]
+    fn from_spec_group_fabric_and_hsdp_mesh_override() {
+        let params = vec![
+            ("a.w".to_string(), vec![16, 16]),
+            ("b.w".to_string(), vec![16, 16]),
+        ];
+        let spec = ModelSpec::new()
+            .group(
+                ShardGroupSpec::new("a", GroupFilter::prefix("a"))
+                    .fabric(Fabric::a100())
+                    .mesh(DeviceMesh::new(&[("replica", 2), ("fsdp", 2)]).unwrap()),
+            )
+            .group(ShardGroupSpec::new("b", GroupFilter::prefix("b")));
+        let mut e = FsdpEngine::from_spec(
+            params,
+            &spec,
+            DeviceMesh::flat("fsdp", 2),
+            Fabric::h800(),
+            Arc::new(SerialComm::new()),
+        )
+        .unwrap();
+        assert_eq!(e.buckets[0].fabric.name, "a100");
+        assert_eq!(e.buckets[1].fabric.name, "h800");
+        let full = vec![vec![0.5f32; 256], vec![0.25f32; 256]];
+        e.init_params(&full).unwrap();
+        let grads: Vec<Vec<Vec<f32>>> =
+            (0..2).map(|_| vec![vec![1.0f32; 256], vec![1.0f32; 256]]).collect();
+        e.reduce_grads(&grads).unwrap();
+        // only group 'a' has a replica dim: exactly one AllReduce per step
+        assert_eq!(e.stats().count("all_reduce"), 1);
+        assert_eq!(e.stats().count("reduce_scatter"), 2);
     }
 }

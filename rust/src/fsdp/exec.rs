@@ -355,9 +355,10 @@ fn wait_gather(
         return Ok(());
     }
     let comm = engine.comm.clone();
-    let fabric = engine.fabric.clone();
     while let Some((bucket, op)) = inflight.pop_front() {
         let t0 = Instant::now();
+        // each bucket's collective is timed on its own (group-local) fabric
+        let fabric = engine.buckets[bucket].fabric.clone();
         engine.buckets[bucket]
             .dbuffer
             .finish_gather(op, comm.as_ref(), &fabric)?;
@@ -391,7 +392,7 @@ fn begin_reduce(
     for st in states.iter_mut() {
         st.bucket_grads.clear();
     }
-    let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.mesh);
+    let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.buckets[b].mesh);
     let t0 = Instant::now();
     let op = engine.comm.reduce_scatter_async(bufs, s, scale);
     *exposed += t0.elapsed().as_secs_f64();
@@ -412,10 +413,8 @@ fn finish_reduce(
     let bufs = op.wait()?;
     *exposed += t0.elapsed().as_secs_f64();
     let comm = engine.comm.clone();
-    let fabric = engine.fabric.clone();
-    let mesh = engine.mesh.clone();
-    let Bucket { dbuffer, grad_shards, .. } = &mut engine.buckets[b];
-    dbuffer.reduce_gradients_finish(&bufs, grad_shards, &mesh, comm.as_ref(), &fabric)?;
+    let Bucket { dbuffer, grad_shards, mesh, fabric, .. } = &mut engine.buckets[b];
+    dbuffer.reduce_gradients_finish(&bufs, grad_shards, mesh, comm.as_ref(), fabric)?;
     engine.alloc.lock().unwrap().free(block)?;
     Ok(())
 }
@@ -460,15 +459,24 @@ fn run_pipelined(
                 st.dlogits = dlogits;
             }
         });
-        // reshard-after-forward: drop the full bucket; backward
-        // re-gathers it through the same prefetch window
-        engine.buckets[l].dbuffer.release_full();
+        // reshard-after-forward: drop the full bucket so backward
+        // re-gathers it through the same prefetch window — unless the
+        // group's spec opted out, in which case it stays live (more
+        // memory, one less backward AllGather)
+        if engine.buckets[l].reshard_after_forward {
+            engine.buckets[l].dbuffer.release_full();
+        }
     }
     debug_assert!(inflight.is_empty());
 
     // ---- backward: re-gather in reverse with prefetch; RS of bucket b
-    // overlaps backward compute of bucket b-1 ----
-    let mut bwd_order = (0..nb).rev();
+    // overlaps backward compute of bucket b-1. Groups kept live through
+    // forward need no re-gather and are skipped by the issue order. ----
+    let bwd_regather: Vec<usize> = (0..nb)
+        .rev()
+        .filter(|&b| !engine.buckets[b].dbuffer.gathered)
+        .collect();
+    let mut bwd_order = bwd_regather.into_iter();
     let mut rs_pending: VecDeque<(usize, PendingOp, BlockId)> = VecDeque::new();
     for b in (0..nb).rev() {
         issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;

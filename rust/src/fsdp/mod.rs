@@ -1,5 +1,9 @@
 //! The FSDP engine layer.
 //!
+//! [`spec`] is the front door: the declarative `fully_shard`-style
+//! [`ModelSpec`] wrap graph with per-group policies, optimizer bindings,
+//! and mesh/fabric choices, consumed by [`engine::FsdpEngine::from_spec`].
+//!
 //! Two engines, one abstraction:
 //!
 //! * [`sim`] — the *symbolic* engine: replays one training iteration of a
@@ -22,7 +26,9 @@
 pub mod engine;
 pub mod exec;
 pub mod sim;
+pub mod spec;
 
 pub use engine::{FsdpEngine, ShardingPolicy};
 pub use exec::{ExecMode, ExecReport, StepOutcome};
 pub use sim::{simulate_step, GpuSpec, ShardingFormat, StepReport, SystemBehavior};
+pub use spec::{GroupFilter, ModelSpec, OptimBinding, ShardGroupSpec};

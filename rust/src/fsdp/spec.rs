@@ -1,0 +1,487 @@
+//! Declarative `fully_shard`-style sharding spec: the user-facing wrap
+//! graph the engine plans from (`FsdpEngine::from_spec`).
+//!
+//! A [`ModelSpec`] is an ordered list of [`ShardGroupSpec`] wrap units.
+//! Each group declares, independently of every other group:
+//!
+//! * **which parameters it wraps** — a validated [`GroupFilter`]
+//!   (prefixes / exact names / explicit indices / the rest), replacing
+//!   the old panicking name-prefix parse: a parameter no group claims is
+//!   a `Result` error naming the parameter, not an `unwrap` panic;
+//! * **its sharding policy** — the group-local `orig_param_policy`
+//!   granularity the planner lays that bucket out with (so a quantized
+//!   group can demand 32-row blocks while a dense group shards
+//!   element-wise);
+//! * **its optimizer binding** — [`OptimBinding`], so one run can train
+//!   Muon on layer matrices next to AdamW on embeddings and 8-bit Adam on
+//!   an MoE block, each with an optional group-local hyper override;
+//! * **reshard-after-forward** — whether the pipelined executor drops the
+//!   gathered parameters after the group's forward (re-gathering in
+//!   backward) or keeps them live through the step;
+//! * **its mesh and fabric** — optional per-group overrides (the fsdp dim
+//!   must match the session's; a group may add a replica dim or sit on a
+//!   different fabric tier).
+//!
+//! # Worked example: mixed per-group optimizers
+//!
+//! The paper's flexibility claim (§6.3) is exactly this configuration —
+//! Muon on the 2-D transformer matrices, AdamW on embeddings / head /
+//! norms, chosen *per wrap unit* rather than globally:
+//!
+//! ```no_run
+//! use vescale_fsdp::fsdp::spec::{GroupFilter, ModelSpec, OptimBinding, ShardGroupSpec};
+//! use vescale_fsdp::fsdp::ShardingPolicy;
+//! use vescale_fsdp::optim::AdamHyper;
+//!
+//! let n_layers = 2;
+//! let mut spec = ModelSpec::new()
+//!     .group(ShardGroupSpec::new("embed", GroupFilter::prefix("embed"))
+//!         .optim(OptimBinding::AdamW));
+//! for i in 0..n_layers {
+//!     spec = spec.group(
+//!         ShardGroupSpec::new(format!("layer{i}"), GroupFilter::prefix(format!("layers.{i}.")))
+//!             .optim(OptimBinding::Muon)
+//!             .hyper(AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() }),
+//!     );
+//! }
+//! let spec = spec.group(
+//!     ShardGroupSpec::new("head", GroupFilter::Prefixes(vec!["final_ln".into(), "head".into()]))
+//!         .optim(OptimBinding::AdamW)
+//!         .policy(ShardingPolicy::element_wise()),
+//! );
+//! # let _ = spec;
+//! ```
+//!
+//! The same spec comes out of `ModelSpec::layerwise(n_layers)` +
+//! per-group edits, out of `TrainSession::builder(..)` group overrides,
+//! or out of a config file's `[group.*]` sections — one graph, three
+//! front doors.
+
+use anyhow::{bail, Result};
+
+use crate::comm::Fabric;
+use crate::config::OptimKind;
+use crate::mesh::DeviceMesh;
+use crate::optim::{
+    Adam8bitGroup, AdamHyper, AdamW, FlatGroup, GroupOptimizer, Muon, MuonGroup, Sgd,
+};
+
+use super::engine::ShardingPolicy;
+
+/// Which optimizer a shard group trains with. The binding is resolved to
+/// a [`GroupOptimizer`] per group at session build time, so every group
+/// dispatches uniformly — no special-cased optimizer fields.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimBinding {
+    /// SGD with momentum 0.9 on flat shards.
+    Sgd,
+    /// fp32 AdamW on flat shards.
+    AdamW,
+    /// Block-wise 8-bit Adam on >=2-D parameters (fp32 AdamW on 1-D).
+    /// Pair with a row-granularity sharding policy that preserves quant
+    /// blocks.
+    Adam8bit,
+    /// Muon (Alg 2) on the group's 2-D hidden matrices, AdamW fallback on
+    /// embeddings / head / 1-D parameters inside the group.
+    Muon,
+}
+
+impl OptimBinding {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptimBinding::Sgd => "sgd",
+            OptimBinding::AdamW => "adamw",
+            OptimBinding::Adam8bit => "adam8bit",
+            OptimBinding::Muon => "muon",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OptimBinding> {
+        OptimKind::parse(s).map(OptimBinding::from_kind)
+    }
+
+    /// The binding matching a legacy global [`OptimKind`] selection.
+    pub fn from_kind(kind: OptimKind) -> OptimBinding {
+        match kind {
+            OptimKind::Sgd => OptimBinding::Sgd,
+            OptimKind::AdamW => OptimBinding::AdamW,
+            OptimKind::Adam8bit => OptimBinding::Adam8bit,
+            OptimKind::Muon => OptimBinding::Muon,
+        }
+    }
+
+    /// Build the group optimizer for a group of `n_params` tensors
+    /// sharded over `ranks` devices. `qblock` is the quantization block
+    /// for 8-bit Adam state.
+    pub fn build(
+        &self,
+        hyper: AdamHyper,
+        qblock: usize,
+        n_params: usize,
+        ranks: usize,
+    ) -> Box<dyn GroupOptimizer> {
+        match self {
+            OptimBinding::Sgd => {
+                Box::new(FlatGroup::new(Box::new(Sgd::new(hyper.lr, 0.9, ranks)), ranks))
+            }
+            OptimBinding::AdamW => {
+                Box::new(FlatGroup::new(Box::new(AdamW::new(hyper, ranks)), ranks))
+            }
+            OptimBinding::Adam8bit => {
+                Box::new(Adam8bitGroup::new(hyper, qblock, n_params, ranks))
+            }
+            OptimBinding::Muon => Box::new(MuonGroup::new(
+                Muon::new(hyper.lr, 0.95, hyper.wd),
+                Box::new(AdamW::new(hyper, ranks)),
+                ranks,
+            )),
+        }
+    }
+}
+
+/// How a shard group claims parameters. Groups claim in declaration
+/// order; a parameter already claimed by an earlier group is skipped by
+/// later prefix filters and is an error for explicit index filters.
+#[derive(Debug, Clone)]
+pub enum GroupFilter {
+    /// Parameters whose name starts with any of these prefixes.
+    Prefixes(Vec<String>),
+    /// Parameters with exactly these names.
+    Names(Vec<String>),
+    /// Explicit global parameter indices.
+    Indices(Vec<usize>),
+    /// Every parameter not claimed by an earlier group.
+    Rest,
+}
+
+impl GroupFilter {
+    /// Single-prefix convenience.
+    pub fn prefix(p: impl Into<String>) -> GroupFilter {
+        GroupFilter::Prefixes(vec![p.into()])
+    }
+}
+
+/// One `fully_shard` wrap unit and all of its per-group choices.
+#[derive(Debug, Clone)]
+pub struct ShardGroupSpec {
+    pub name: String,
+    pub filter: GroupFilter,
+    /// Group-local sharding granularity (`orig_param_policy`).
+    pub policy: ShardingPolicy,
+    pub optim: OptimBinding,
+    /// Group-local hyper override (session hyper when `None`).
+    pub hyper: Option<AdamHyper>,
+    /// Drop the gathered parameters right after this group's forward
+    /// (re-gather in backward). `false` keeps them live through the step
+    /// — more memory, one less AllGather.
+    pub reshard_after_forward: bool,
+    /// Mesh override; must keep the session's fsdp dim size. `None`
+    /// inherits the session mesh.
+    pub mesh: Option<DeviceMesh>,
+    /// Fabric override; `None` inherits the session fabric.
+    pub fabric: Option<Fabric>,
+}
+
+impl ShardGroupSpec {
+    pub fn new(name: impl Into<String>, filter: GroupFilter) -> ShardGroupSpec {
+        ShardGroupSpec {
+            name: name.into(),
+            filter,
+            policy: ShardingPolicy::element_wise(),
+            optim: OptimBinding::AdamW,
+            hyper: None,
+            reshard_after_forward: true,
+            mesh: None,
+            fabric: None,
+        }
+    }
+
+    pub fn policy(mut self, policy: ShardingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn optim(mut self, optim: OptimBinding) -> Self {
+        self.optim = optim;
+        self
+    }
+
+    pub fn hyper(mut self, hyper: AdamHyper) -> Self {
+        self.hyper = Some(hyper);
+        self
+    }
+
+    pub fn reshard_after_forward(mut self, reshard: bool) -> Self {
+        self.reshard_after_forward = reshard;
+        self
+    }
+
+    pub fn mesh(mut self, mesh: DeviceMesh) -> Self {
+        self.mesh = Some(mesh);
+        self
+    }
+
+    pub fn fabric(mut self, fabric: Fabric) -> Self {
+        self.fabric = Some(fabric);
+        self
+    }
+}
+
+/// The whole model's wrap graph: an ordered list of shard groups. Group
+/// declaration order is bucket order (the executor's schedule order).
+#[derive(Debug, Clone, Default)]
+pub struct ModelSpec {
+    pub groups: Vec<ShardGroupSpec>,
+}
+
+impl ModelSpec {
+    pub fn new() -> ModelSpec {
+        ModelSpec::default()
+    }
+
+    /// Append a wrap unit (builder style).
+    pub fn group(mut self, g: ShardGroupSpec) -> Self {
+        self.groups.push(g);
+        self
+    }
+
+    /// The canonical transformer wrapping: embed | layer 0..n-1 | head
+    /// (final norm + output head), every group with default policy and
+    /// AdamW. Matches the trainers' legacy name-prefix bucketing, but
+    /// validated: a parameter outside the ABI is an error, not a panic.
+    pub fn layerwise(n_layers: usize) -> ModelSpec {
+        let mut spec = ModelSpec::new()
+            .group(ShardGroupSpec::new("embed", GroupFilter::prefix("embed")));
+        for i in 0..n_layers {
+            spec = spec.group(ShardGroupSpec::new(
+                format!("layer{i}"),
+                GroupFilter::prefix(format!("layers.{i}.")),
+            ));
+        }
+        spec.group(ShardGroupSpec::new(
+            "head",
+            GroupFilter::Prefixes(vec!["final_ln".into(), "head".into()]),
+        ))
+    }
+
+    /// The §6.3 mixed-optimizer wrapping: Muon on every layer group's
+    /// matrices, AdamW on embed / head (and, via Muon's fallback, on the
+    /// norm scales inside layer groups). `muon_hyper` applies to the
+    /// layer groups; the session hyper covers embed/head.
+    pub fn layerwise_mixed_muon(n_layers: usize, muon_hyper: AdamHyper) -> ModelSpec {
+        let mut spec = ModelSpec::layerwise(n_layers);
+        for g in spec.groups.iter_mut() {
+            if g.name.starts_with("layer") {
+                g.optim = OptimBinding::Muon;
+                g.hyper = Some(muon_hyper);
+            }
+        }
+        spec
+    }
+
+    /// Look a group up by name.
+    pub fn group_named(&self, name: &str) -> Option<&ShardGroupSpec> {
+        self.groups.iter().find(|g| g.name == name)
+    }
+
+    pub fn group_named_mut(&mut self, name: &str) -> Option<&mut ShardGroupSpec> {
+        self.groups.iter_mut().find(|g| g.name == name)
+    }
+
+    /// Assign every parameter to a group: `group_of[i]` is the bucket
+    /// index of parameter `i`. Errors (instead of panicking) on
+    /// parameters no group claims, on groups that claim nothing, and on
+    /// double claims — each error names the offending parameter or group.
+    pub fn assign(&self, params: &[(String, Vec<usize>)]) -> Result<Vec<usize>> {
+        const UNCLAIMED: usize = usize::MAX;
+        let mut group_of = vec![UNCLAIMED; params.len()];
+        for (gi, g) in self.groups.iter().enumerate() {
+            match &g.filter {
+                GroupFilter::Indices(ids) => {
+                    for &i in ids {
+                        if i >= params.len() {
+                            bail!(
+                                "shard group '{}' claims parameter index {i}, \
+                                 but the model has {} parameters",
+                                g.name,
+                                params.len()
+                            );
+                        }
+                        if group_of[i] != UNCLAIMED {
+                            bail!(
+                                "parameter '{}' claimed by both shard group '{}' and '{}'",
+                                params[i].0,
+                                self.groups[group_of[i]].name,
+                                g.name
+                            );
+                        }
+                        group_of[i] = gi;
+                    }
+                }
+                GroupFilter::Prefixes(ps) => {
+                    let mut hit = false;
+                    for (i, (name, _)) in params.iter().enumerate() {
+                        if group_of[i] == UNCLAIMED
+                            && ps.iter().any(|p| name.starts_with(p.as_str()))
+                        {
+                            group_of[i] = gi;
+                            hit = true;
+                        }
+                    }
+                    if !hit {
+                        bail!(
+                            "shard group '{}' matched no parameters (prefixes {ps:?})",
+                            g.name
+                        );
+                    }
+                }
+                GroupFilter::Names(ns) => {
+                    for n in ns {
+                        let Some(i) = params.iter().position(|(name, _)| name == n) else {
+                            bail!(
+                                "shard group '{}' names parameter '{n}', \
+                                 which the model does not have",
+                                g.name
+                            );
+                        };
+                        if group_of[i] != UNCLAIMED {
+                            bail!(
+                                "parameter '{n}' claimed by both shard group '{}' and '{}'",
+                                self.groups[group_of[i]].name,
+                                g.name
+                            );
+                        }
+                        group_of[i] = gi;
+                    }
+                }
+                GroupFilter::Rest => {
+                    let mut hit = false;
+                    for x in group_of.iter_mut() {
+                        if *x == UNCLAIMED {
+                            *x = gi;
+                            hit = true;
+                        }
+                    }
+                    if !hit {
+                        bail!("shard group '{}' (rest) matched no parameters", g.name);
+                    }
+                }
+            }
+        }
+        if let Some((i, _)) = group_of.iter().enumerate().find(|(_, &g)| g == UNCLAIMED) {
+            let names: Vec<&str> = self.groups.iter().map(|g| g.name.as_str()).collect();
+            bail!(
+                "parameter '{}' matched no shard group — declare a group for it \
+                 (groups: {names:?})",
+                params[i].0
+            );
+        }
+        Ok(group_of)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn abi() -> Vec<(String, Vec<usize>)> {
+        crate::runtime::ModelCfg::with_abi(64, 16, 2, 2, 32, 8, 2).params
+    }
+
+    #[test]
+    fn layerwise_matches_legacy_prefix_bucketing() {
+        let params = abi();
+        let spec = ModelSpec::layerwise(2);
+        let group_of = spec.assign(&params).unwrap();
+        // legacy rule: embed -> 0, layers.i -> 1+i, rest -> n_layers+1
+        for (i, (name, _)) in params.iter().enumerate() {
+            let expect = if name.starts_with("embed") {
+                0
+            } else if let Some(rest) = name.strip_prefix("layers.") {
+                1 + rest.split('.').next().unwrap().parse::<usize>().unwrap()
+            } else {
+                3
+            };
+            assert_eq!(group_of[i], expect, "{name}");
+        }
+    }
+
+    #[test]
+    fn unclaimed_parameter_is_named_in_error() {
+        let mut params = abi();
+        params.push(("layers.banana.w".into(), vec![4, 4]));
+        let err = ModelSpec::layerwise(2).assign(&params).unwrap_err();
+        assert!(
+            err.to_string().contains("layers.banana.w"),
+            "error must name the parameter: {err}"
+        );
+    }
+
+    #[test]
+    fn empty_prefix_group_is_an_error() {
+        let err = ModelSpec::layerwise(5).assign(&abi()).unwrap_err();
+        // layers 2..4 match nothing in a 2-layer ABI
+        assert!(err.to_string().contains("layer2"), "{err}");
+    }
+
+    #[test]
+    fn double_claim_is_an_error() {
+        let params = abi();
+        let spec = ModelSpec::new()
+            .group(ShardGroupSpec::new("a", GroupFilter::Indices(vec![0, 1])))
+            .group(ShardGroupSpec::new("b", GroupFilter::Indices(vec![1])));
+        let err = spec.assign(&params).unwrap_err();
+        assert!(err.to_string().contains("claimed by both"), "{err}");
+    }
+
+    #[test]
+    fn rest_claims_leftovers_in_order() {
+        let params = abi();
+        let spec = ModelSpec::new()
+            .group(ShardGroupSpec::new("embed", GroupFilter::prefix("embed")))
+            .group(ShardGroupSpec::new("rest", GroupFilter::Rest));
+        let group_of = spec.assign(&params).unwrap();
+        assert_eq!(group_of[0], 0);
+        assert!(group_of[1..].iter().all(|&g| g == 1));
+    }
+
+    #[test]
+    fn names_filter_exact_match() {
+        let params = abi();
+        let spec = ModelSpec::new()
+            .group(ShardGroupSpec::new(
+                "special",
+                GroupFilter::Names(vec!["head.weight".into()]),
+            ))
+            .group(ShardGroupSpec::new("rest", GroupFilter::Rest));
+        let group_of = spec.assign(&params).unwrap();
+        let head = params.iter().position(|(n, _)| n == "head.weight").unwrap();
+        assert_eq!(group_of[head], 0);
+        let bad = ModelSpec::new().group(ShardGroupSpec::new(
+            "x",
+            GroupFilter::Names(vec!["nope".into()]),
+        ));
+        assert!(bad.assign(&params).is_err());
+    }
+
+    #[test]
+    fn mixed_muon_spec_binds_per_group() {
+        let spec = ModelSpec::layerwise_mixed_muon(2, AdamHyper::default());
+        assert_eq!(spec.group_named("embed").unwrap().optim, OptimBinding::AdamW);
+        assert_eq!(spec.group_named("layer0").unwrap().optim, OptimBinding::Muon);
+        assert_eq!(spec.group_named("layer1").unwrap().optim, OptimBinding::Muon);
+        assert_eq!(spec.group_named("head").unwrap().optim, OptimBinding::AdamW);
+        assert!(spec.group_named("layer0").unwrap().hyper.is_some());
+    }
+
+    #[test]
+    fn binding_roundtrip_and_build() {
+        for kind in [OptimKind::Sgd, OptimKind::AdamW, OptimKind::Adam8bit, OptimKind::Muon] {
+            let b = OptimBinding::from_kind(kind);
+            assert_eq!(b.name(), kind.name());
+            assert_eq!(OptimBinding::parse(b.name()), Some(b));
+            let opt = b.build(AdamHyper::default(), 64, 3, 2);
+            assert_eq!(opt.name(), kind.name());
+        }
+    }
+}

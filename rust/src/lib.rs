@@ -17,6 +17,22 @@
 //! * **L1** — `python/compile/kernels/`: Pallas kernels (block-wise quant,
 //!   fused AdamW, Newton-Schulz, MXU-tiled matmul).
 //!
+//! ## The declarative spec API
+//!
+//! The user-facing surface is [`fsdp::spec`]: a `fully_shard`-style
+//! [`fsdp::ModelSpec`] graph of [`fsdp::ShardGroupSpec`] wrap units, each
+//! declaring its own sharding-granularity policy, optimizer binding
+//! ([`fsdp::OptimBinding`] — so Muon matrices train next to AdamW
+//! embeddings in one run), reshard-after-forward toggle, and optional
+//! mesh/fabric override. [`fsdp::FsdpEngine::from_spec`] plans each group
+//! with its group-local policy; `train::TrainSession::builder` replaces
+//! the old 8-argument trainer constructor (the legacy
+//! `Trainer::{new,with_backend,with_exec}` shims remain, bit-identical);
+//! optimizers dispatch uniformly per group through
+//! [`optim::GroupOptimizer`]. Config files deserialize `[group.*]`
+//! sections straight into the spec, and `--fabric h800|h100|a100`
+//! selects the cost model (recorded in `train::StepLog`).
+//!
 //! ## Execution model
 //!
 //! The `cluster` module is the SPMD execution layer: a [`cluster::Communicator`]

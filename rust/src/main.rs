@@ -3,11 +3,17 @@
 //!     vescale-fsdp train  [--config-file cfg.toml] [--model tiny] [--mesh 4]
 //!                         [--opt adamw|adam8bit|muon|sgd] [--steps 50]
 //!                         [--backend serial|threaded] [--prefetch N]
+//!                         [--fabric h800|h100|a100]
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
 //!                          executor with up to N in-flight bucket collectives)
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
 //!     vescale-fsdp sim    [--preset llama70b] [--system vescale] [--fsdp 128]
 //!     vescale-fsdp bench  (points at `cargo bench`)
+//!
+//! Config files additionally support `[group.<name>]` sections (per-group
+//! optimizer / granularity / reshard-after-forward / lr on the layerwise
+//! wrapping), deserialized straight into the `fsdp::spec` API — see
+//! `config::file`.
 
 use anyhow::{anyhow, Result};
 
@@ -17,10 +23,11 @@ use vescale_fsdp::comm::Fabric;
 use vescale_fsdp::config::file::ConfigFile;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig, System, TrainConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
+use vescale_fsdp::fsdp::spec::OptimBinding;
 use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::planner::{plan, TensorDecl};
-use vescale_fsdp::train::{save_log, Trainer};
+use vescale_fsdp::train::{save_log, TrainSession};
 use vescale_fsdp::util::args::Args;
 
 fn main() -> Result<()> {
@@ -60,6 +67,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         None => base.backend,
     };
     let exec = ExecMode::from_prefetch(args.usize_or("prefetch", base.prefetch));
+    let fabric_name = args.str_or("fabric", &base.fabric);
+    let fabric = Fabric::by_name(&fabric_name).ok_or_else(|| {
+        anyhow!(
+            "unknown --fabric '{fabric_name}' (expected one of {:?})",
+            Fabric::preset_names()
+        )
+    })?;
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -69,14 +83,36 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let hyper = AdamHyper { lr, ..AdamHyper::default() };
     println!(
-        "train: model={model} mesh={mesh} opt={} steps={steps} backend={} exec={}",
+        "train: model={model} mesh={mesh} opt={} steps={steps} backend={} exec={} fabric={}",
         opt.name(),
         backend.name(),
-        exec.name()
+        exec.name(),
+        fabric.name
     );
-    let mut trainer =
-        Trainer::with_exec(&model, mesh, opt, &policy, hyper, base.seed, backend, exec)?;
+    let mut trainer = TrainSession::builder(&model)
+        .devices(mesh)
+        .replicas(base.parallel.replicas)
+        .optimizer(OptimBinding::from_kind(opt))
+        .policy(policy)
+        .hyper(hyper)
+        .seed(base.seed)
+        .backend(backend)
+        .exec(exec)
+        .fabric(fabric)
+        .overrides(base.groups.clone())
+        .build()?;
     println!("compute runtime: {}", trainer.runtime.backend_name());
+    println!(
+        "shard groups: {}",
+        trainer
+            .engine
+            .buckets
+            .iter()
+            .zip(&trainer.optimizers)
+            .map(|(b, o)| format!("{}:{}", b.name, o.name()))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
     for step in 1..=steps {
         let loss = trainer.train_step()?;
         if step % 10 == 0 || step == 1 {
@@ -86,9 +122,11 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(r) = &trainer.last_report {
         let (peak_res, _) = trainer.engine.memory_stats();
         println!(
-            "executor: exposed comm {:.1}% of step wall, peak reserved {:.2} MB",
+            "executor: exposed comm {:.1}% of step wall, peak reserved {:.2} MB \
+             (fabric {})",
             100.0 * r.exposed_comm_s / r.wall_s.max(1e-12),
-            peak_res as f64 / 1e6
+            peak_res as f64 / 1e6,
+            trainer.engine.fabric.name
         );
     }
     let path = save_log(
@@ -142,12 +180,14 @@ fn cmd_sim(args: &Args) -> Result<()> {
         ep: args.usize_or("ep", 1),
     };
     let tokens = args.u64_or("tokens", preset.seq_default as u64);
+    let fabric = Fabric::by_name(&args.str_or("fabric", "h800"))
+        .ok_or_else(|| anyhow!("unknown --fabric"))?;
     let r = simulate_step(
         &preset,
         &parallel,
         OptimKind::parse(&args.str_or("opt", "adamw")).ok_or_else(|| anyhow!("bad --opt"))?,
         tokens,
-        &Fabric::h800(),
+        &fabric,
         &GpuSpec::h800(),
         &baselines::behavior_for(system, args.u64_or("granularity", 1)),
     )?;

@@ -8,7 +8,7 @@
 //! `python/compile/kernels/blockwise_quant.py` exactly (symmetric linear
 //! absmax code — see DESIGN.md for the dynamic-tree-code substitution).
 
-use once_cell::sync::Lazy;
+use std::sync::OnceLock;
 
 use super::{AdamHyper, ShardOptimizer};
 
@@ -49,8 +49,16 @@ pub fn create_dynamic_map(signed: bool) -> Vec<f32> {
     data
 }
 
-static SIGNED_MAP: Lazy<Vec<f32>> = Lazy::new(|| create_dynamic_map(true));
-static UNSIGNED_MAP: Lazy<Vec<f32>> = Lazy::new(|| create_dynamic_map(false));
+static SIGNED_MAP: OnceLock<Vec<f32>> = OnceLock::new();
+static UNSIGNED_MAP: OnceLock<Vec<f32>> = OnceLock::new();
+
+fn signed_map() -> &'static [f32] {
+    SIGNED_MAP.get_or_init(|| create_dynamic_map(true))
+}
+
+fn unsigned_map() -> &'static [f32] {
+    UNSIGNED_MAP.get_or_init(|| create_dynamic_map(false))
+}
 
 fn nearest_code(map: &[f32], x: f32) -> u8 {
     // binary search for the nearest codebook entry
@@ -73,7 +81,7 @@ fn nearest_code(map: &[f32], x: f32) -> u8 {
 
 /// Dynamic-code block quantization: returns scale (absmax).
 pub fn quant_block_dyn(x: &[f32], q: &mut [u8], signed: bool) -> f32 {
-    let map: &[f32] = if signed { &SIGNED_MAP } else { &UNSIGNED_MAP };
+    let map: &[f32] = if signed { signed_map() } else { unsigned_map() };
     let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
     let scale = if absmax > 0.0 { absmax } else { 1.0 };
     for (qi, &v) in q.iter_mut().zip(x) {
@@ -83,7 +91,7 @@ pub fn quant_block_dyn(x: &[f32], q: &mut [u8], signed: bool) -> f32 {
 }
 
 pub fn dequant_block_dyn(q: &[u8], scale: f32, out: &mut [f32], signed: bool) {
-    let map: &[f32] = if signed { &SIGNED_MAP } else { &UNSIGNED_MAP };
+    let map: &[f32] = if signed { signed_map() } else { unsigned_map() };
     for (o, &c) in out.iter_mut().zip(q) {
         *o = map[c as usize] * scale;
     }
@@ -132,6 +140,11 @@ impl Adam8bit {
             states: (0..ranks).map(|_| QState::default()).collect(),
         }
     }
+
+    /// Number of independent state slots this instance was created with.
+    pub fn num_slots(&self) -> usize {
+        self.states.len()
+    }
 }
 
 impl ShardOptimizer for Adam8bit {
@@ -148,7 +161,7 @@ impl ShardOptimizer for Adam8bit {
         let nb = param.len() / self.block;
         let st = &mut self.states[rank];
         if st.m_q.len() != param.len() {
-            st.m_q = vec![SIGNED_MAP.iter().position(|&x| x == 0.0).unwrap() as u8; param.len()];
+            st.m_q = vec![signed_map().iter().position(|&x| x == 0.0).unwrap() as u8; param.len()];
             st.v_q = vec![0; param.len()]; // unsigned map code 0 == 0.0
             st.m_scale = vec![1.0; nb];
             st.v_scale = vec![1.0; nb];

@@ -1,0 +1,293 @@
+//! Per-wrap-unit optimizer dispatch: the uniform interface the spec API
+//! binds optimizers through (`OptimBinding` in [`crate::fsdp::spec`]).
+//!
+//! A [`GroupOptimizer`] steps one whole FSDP shard group (bucket) at a
+//! time, given a [`GroupEnv`] view of that bucket's sharded parameters,
+//! reduced gradient shards, and comm/fabric context. Three adapters cover
+//! the optimizer families:
+//!
+//! * [`FlatGroup`] — any element-wise [`ShardOptimizer`] (AdamW / SGD /
+//!   raw 8-bit Adam) applied to each rank's flat shard;
+//! * [`MuonGroup`] — Muon's Algorithm 2 on the group's 2-D hidden
+//!   matrices (redistribute-to-root + Newton–Schulz through the cluster
+//!   backend), an element-wise fallback on everything else;
+//! * [`Adam8bitGroup`] — block-wise quantized state on >=2-D parameters
+//!   whose shard slices preserve quant-block boundaries, fp32 AdamW on
+//!   1-D parameters — the paper's §6.3 structure-aware setup.
+//!
+//! The bucket-step free functions (`flat_bucket_step`,
+//! `muon_bucket_step`, `adam8bit_bucket_step`) are shared with the
+//! engine's legacy `optimizer_step` / `muon_step` / `adam8bit_step`
+//! methods, so the legacy and spec paths execute the identical float
+//! operations in the identical order — the bit-identity the equivalence
+//! tests assert.
+
+use anyhow::Result;
+
+use crate::cluster::Communicator;
+use crate::comm::Fabric;
+use crate::dbuffer::DBuffer;
+use crate::dtensor::DTensor;
+use crate::mesh::DeviceMesh;
+use crate::placement::Placement;
+
+use super::{Adam8bit, AdamW, Muon, ShardOptimizer};
+
+/// Everything an optimizer may need about one shard group for one step.
+/// All references borrow from the engine's bucket; the env is rebuilt per
+/// step (it is a bundle of borrows, not state).
+pub struct GroupEnv<'a> {
+    /// (name, shape) of each tensor in the bucket, bucket-position order.
+    pub params: &'a [(String, Vec<usize>)],
+    /// The group's sharded parameter storage (mutated in place).
+    pub dbuffer: &'a mut DBuffer,
+    /// Per-rank reduced gradient shards (same layout as the DBuffer
+    /// shards).
+    pub grad_shards: &'a [Vec<f32>],
+    /// The group's mesh (fsdp + optional replica dims).
+    pub mesh: &'a DeviceMesh,
+    /// The group's fabric (timing model for optimizer collectives).
+    pub fabric: &'a Fabric,
+    /// Cluster backend for structure-aware optimizer collectives.
+    pub comm: &'a dyn Communicator,
+}
+
+/// One shard group's optimizer: the uniform per-group dispatch interface.
+/// `t` is the 1-based step.
+pub trait GroupOptimizer {
+    fn step_group(&mut self, env: GroupEnv<'_>, t: u64) -> Result<()>;
+
+    /// Optimizer-state bytes currently held across all ranks.
+    fn state_bytes(&self) -> u64;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Element-wise step over every rank's flat shard (the legacy
+/// `FsdpEngine::optimizer_step` body for one bucket).
+pub fn flat_bucket_step(
+    opt: &mut dyn ShardOptimizer,
+    env: GroupEnv<'_>,
+    t: u64,
+) -> Result<()> {
+    let GroupEnv { dbuffer, grad_shards, .. } = env;
+    for rank in 0..dbuffer.num_devices() {
+        opt.step(rank, t, &mut dbuffer.shards[rank], &grad_shards[rank]);
+    }
+    Ok(())
+}
+
+/// Muon step over one bucket: 2-D hidden matrices go through Alg 2
+/// (redistribute-to-root + Newton–Schulz); everything else through the
+/// element-wise `fallback` on its local slices.
+pub fn muon_bucket_step(
+    muon: &mut Muon,
+    fallback: &mut dyn ShardOptimizer,
+    env: GroupEnv<'_>,
+    t: u64,
+) -> Result<()> {
+    let GroupEnv { params, dbuffer, grad_shards, fabric, comm, .. } = env;
+    let m = dbuffer.num_devices();
+    for pos in 0..params.len() {
+        let (name, shape) = &params[pos];
+        let is_hidden_matrix =
+            shape.len() == 2 && !name.contains("embed") && !name.contains("head");
+        if is_hidden_matrix {
+            let spec = dbuffer.layout.ragged_spec(pos);
+            let numel: u64 = shape.iter().map(|&s| s as u64).product();
+            spec.validate(numel)?;
+            let p_locals: Vec<Vec<f32>> = (0..m)
+                .map(|rank| {
+                    dbuffer
+                        .local_view(rank, pos)
+                        .map(|(_, v)| v.to_vec())
+                        .unwrap_or_default()
+                })
+                .collect();
+            let g_locals: Vec<Vec<f32>> = (0..m)
+                .map(|rank| {
+                    dbuffer
+                        .local_view(rank, pos)
+                        .map(|((lo, hi), _)| {
+                            let off = dbuffer.layout.offsets[pos];
+                            let s = dbuffer.layout.shard_size;
+                            let a = (off + lo - rank as u64 * s) as usize;
+                            grad_shards[rank][a..a + (hi - lo) as usize].to_vec()
+                        })
+                        .unwrap_or_default()
+                })
+                .collect();
+            let param = DTensor {
+                global_shape: shape.clone(),
+                placement: Placement::RaggedShard(spec.clone()),
+                locals: p_locals,
+            };
+            let grad = DTensor {
+                global_shape: shape.clone(),
+                placement: Placement::RaggedShard(spec),
+                locals: g_locals,
+            };
+            let updated =
+                muon.step_matrix(name, (shape[0], shape[1]), &param, &grad, fabric, comm)?;
+            for rank in 0..m {
+                if let Some((_, view)) = dbuffer.local_view_mut(rank, pos) {
+                    view.copy_from_slice(&updated.locals[rank]);
+                }
+            }
+        } else {
+            // element-wise fallback on this tensor's local slices
+            // (split borrow — no gradient clone)
+            for rank in 0..m {
+                if let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) {
+                    let off = dbuffer.layout.offsets[pos];
+                    let s = dbuffer.layout.shard_size;
+                    let a = (off + lo - rank as u64 * s) as usize;
+                    let len = (hi - lo) as usize;
+                    let grad = &grad_shards[rank][a..a + len];
+                    let shard = &mut dbuffer.shards[rank][a..a + len];
+                    fallback.step(rank, t, shard, grad);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// 8-bit Adam step over one bucket (paper §6.3): quantized state on >=2-D
+/// parameters whose shard slices keep every quant block local, fp32
+/// fallback otherwise. `slot_base[pos] + rank` keys the state slot of the
+/// bucket's pos-th tensor on `rank` (the caller chooses global vs
+/// group-local keying; state is independent per slot either way).
+pub fn adam8bit_bucket_step(
+    a8: &mut Adam8bit,
+    fallback: &mut AdamW,
+    env: GroupEnv<'_>,
+    slot_base: &[usize],
+    t: u64,
+) -> Result<()> {
+    let GroupEnv { params, dbuffer, grad_shards, .. } = env;
+    let m = dbuffer.num_devices();
+    let block = a8.block as u64;
+    for pos in 0..params.len() {
+        let shape = &params[pos].1;
+        for rank in 0..m {
+            let Some((lo, hi)) = dbuffer.layout.local_slice(pos, rank) else {
+                continue;
+            };
+            let off = dbuffer.layout.offsets[pos];
+            let s = dbuffer.layout.shard_size;
+            let a = (off + lo - rank as u64 * s) as usize;
+            let len = (hi - lo) as usize;
+            let grad = &grad_shards[rank][a..a + len];
+            let slice = &mut dbuffer.shards[rank][a..a + len];
+            let slot = slot_base[pos] + rank;
+            let blocks_ok = lo % block == 0 && (len as u64) % block == 0;
+            if shape.len() >= 2 && blocks_ok {
+                a8.step(slot, t, slice, grad);
+            } else {
+                fallback.step(slot, t, slice, grad);
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Adapter: any element-wise [`ShardOptimizer`] as a group optimizer.
+pub struct FlatGroup {
+    inner: Box<dyn ShardOptimizer>,
+    ranks: usize,
+}
+
+impl FlatGroup {
+    pub fn new(inner: Box<dyn ShardOptimizer>, ranks: usize) -> FlatGroup {
+        FlatGroup { inner, ranks }
+    }
+}
+
+impl GroupOptimizer for FlatGroup {
+    fn step_group(&mut self, env: GroupEnv<'_>, t: u64) -> Result<()> {
+        flat_bucket_step(self.inner.as_mut(), env, t)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        (0..self.ranks).map(|r| self.inner.state_bytes(r)).sum()
+    }
+
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+/// Adapter: Muon on the group's 2-D hidden matrices, an element-wise
+/// fallback (AdamW unless the caller picks otherwise) on the rest.
+pub struct MuonGroup {
+    muon: Muon,
+    fallback: Box<dyn ShardOptimizer>,
+    ranks: usize,
+}
+
+impl MuonGroup {
+    pub fn new(muon: Muon, fallback: Box<dyn ShardOptimizer>, ranks: usize) -> MuonGroup {
+        MuonGroup { muon, fallback, ranks }
+    }
+}
+
+impl GroupOptimizer for MuonGroup {
+    fn step_group(&mut self, env: GroupEnv<'_>, t: u64) -> Result<()> {
+        muon_bucket_step(&mut self.muon, self.fallback.as_mut(), env, t)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.muon.state_bytes()
+            + (0..self.ranks).map(|r| self.fallback.state_bytes(r)).sum::<u64>()
+    }
+
+    fn name(&self) -> &'static str {
+        "muon"
+    }
+}
+
+/// Adapter: block-wise 8-bit Adam with the fp32 fallback pair, state
+/// keyed per (group tensor, rank).
+pub struct Adam8bitGroup {
+    a8: Adam8bit,
+    fallback: AdamW,
+    ranks: usize,
+}
+
+impl Adam8bitGroup {
+    /// `n_params` is the number of tensors in the group (state slots are
+    /// `n_params * ranks`).
+    pub fn new(
+        hyper: super::AdamHyper,
+        qblock: usize,
+        n_params: usize,
+        ranks: usize,
+    ) -> Adam8bitGroup {
+        let slots = n_params.max(1) * ranks;
+        Adam8bitGroup {
+            a8: Adam8bit::new(hyper, qblock, slots),
+            fallback: AdamW::new(hyper, slots),
+            ranks,
+        }
+    }
+}
+
+impl GroupOptimizer for Adam8bitGroup {
+    fn step_group(&mut self, env: GroupEnv<'_>, t: u64) -> Result<()> {
+        let slot_base: Vec<usize> =
+            (0..env.params.len()).map(|pos| pos * self.ranks).collect();
+        adam8bit_bucket_step(&mut self.a8, &mut self.fallback, env, &slot_base, t)
+    }
+
+    fn state_bytes(&self) -> u64 {
+        let slots = self.a8.num_slots();
+        (0..slots)
+            .map(|s| self.a8.state_bytes(s) + self.fallback.state_bytes(s))
+            .sum()
+    }
+
+    fn name(&self) -> &'static str {
+        "adam8bit"
+    }
+}

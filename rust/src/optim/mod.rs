@@ -8,14 +8,22 @@
 //! (same update equations as `python/compile/kernels/`); the runtime can
 //! swap in the AOT `adamw_chunk` / `adam8bit_chunk` HLO artifacts and the
 //! integration tests check host-vs-artifact agreement.
+//!
+//! [`group`] layers the uniform per-wrap-unit dispatch on top: a
+//! [`GroupOptimizer`] steps one whole shard group, with adapters that put
+//! Muon and block-wise 8-bit Adam behind the same interface as the
+//! element-wise family — what the spec API's per-group `OptimBinding`
+//! resolves to.
 
 pub mod adam8bit;
 pub mod adamw;
+pub mod group;
 pub mod muon;
 pub mod sgd;
 
 pub use adam8bit::Adam8bit;
 pub use adamw::AdamW;
+pub use group::{Adam8bitGroup, FlatGroup, GroupEnv, GroupOptimizer, MuonGroup};
 pub use muon::Muon;
 pub use sgd::Sgd;
 

@@ -16,14 +16,15 @@
 
 use std::sync::Arc;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::cluster::{make_comm, Cluster, CommBackend};
 use crate::comm::{CommRecord, Fabric};
-use crate::config::OptimKind;
+use crate::config::{GroupOverride, OptimKind};
+use crate::fsdp::spec::{ModelSpec, OptimBinding, ShardGroupSpec};
 use crate::fsdp::{exec, ExecMode, ExecReport, FsdpEngine, ShardingPolicy};
 use crate::mesh::DeviceMesh;
-use crate::optim::{Adam8bit, AdamHyper, AdamW, Muon, Sgd, ShardOptimizer};
+use crate::optim::{Adam8bit, AdamHyper, AdamW, GroupOptimizer, Sgd, ShardOptimizer};
 use crate::runtime::Engine;
 use crate::util::Rng;
 
@@ -131,19 +132,27 @@ pub struct StepLog {
     /// exposed communication; 0 for the DDP trainer).
     pub exposed_s: f64,
     pub wall_s: f64,
+    /// Session-default fabric preset this step was timed on.
+    pub fabric: &'static str,
 }
 
-/// FSDP trainer over the numeric engine + compute runtime.
-pub struct Trainer {
+/// Legacy alias: the FSDP trainer is now [`TrainSession`]; every old
+/// constructor (`Trainer::{new,with_backend,with_exec}`) remains as a
+/// thin shim over [`SessionBuilder`].
+pub type Trainer = TrainSession;
+
+/// FSDP training session over the numeric engine + compute runtime.
+/// Construct one with [`TrainSession::builder`] (or the legacy
+/// constructor shims).
+pub struct TrainSession {
     pub engine: FsdpEngine,
     pub runtime: Engine,
     pub config: String,
     pub corpus: Corpus,
-    pub optimizers: Vec<Box<dyn ShardOptimizer>>,
-    pub muon: Option<Muon>,
-    /// 8-bit Adam pair: quantized optimizer for matrices, fp32 fallback
-    /// for 1-D params (state keyed per parameter x rank).
-    pub adam8: Option<(Adam8bit, AdamW)>,
+    /// One optimizer per shard group — the uniform per-group dispatch
+    /// (`OptimBinding` resolved per wrap unit; Muon / 8-bit Adam run
+    /// behind the same trait as AdamW / SGD).
+    pub optimizers: Vec<Box<dyn GroupOptimizer>>,
     /// Step-loop schedule (`--prefetch` flag): sequential, or the
     /// bucket-pipelined overlap executor.
     pub exec: ExecMode,
@@ -153,8 +162,291 @@ pub struct Trainer {
     pub log: Vec<StepLog>,
 }
 
-impl Trainer {
-    /// Serial-backend trainer (the seed behavior).
+/// Builder for a [`TrainSession`] — replaces the old 8-positional-argument
+/// `Trainer::with_exec`. Every knob has a default; `.group(..)` /
+/// `.spec(..)` switch from the canonical layerwise wrapping to a custom
+/// declarative [`ModelSpec`] with per-group policies and optimizers.
+///
+/// ```no_run
+/// use vescale_fsdp::cluster::CommBackend;
+/// use vescale_fsdp::comm::Fabric;
+/// use vescale_fsdp::fsdp::spec::OptimBinding;
+/// use vescale_fsdp::fsdp::ExecMode;
+/// use vescale_fsdp::train::TrainSession;
+///
+/// let mut session = TrainSession::builder("tiny")
+///     .devices(8)
+///     .backend(CommBackend::Threaded)
+///     .exec(ExecMode::Pipelined { prefetch: 2 })
+///     .fabric(Fabric::h800())
+///     .optimizer(OptimBinding::AdamW)
+///     .build()?;
+/// session.run(10)?;
+/// # Ok::<(), anyhow::Error>(())
+/// ```
+pub struct SessionBuilder {
+    config: String,
+    devices: usize,
+    replicas: usize,
+    optim: OptimBinding,
+    policy: ShardingPolicy,
+    hyper: AdamHyper,
+    seed: u64,
+    backend: CommBackend,
+    exec: ExecMode,
+    fabric: Fabric,
+    groups: Vec<ShardGroupSpec>,
+    spec: Option<ModelSpec>,
+    overrides: Vec<GroupOverride>,
+}
+
+impl SessionBuilder {
+    pub fn new(config: &str) -> SessionBuilder {
+        SessionBuilder {
+            config: config.to_string(),
+            devices: 4,
+            replicas: 1,
+            optim: OptimBinding::AdamW,
+            policy: ShardingPolicy::element_wise(),
+            hyper: AdamHyper::default(),
+            seed: 0,
+            backend: CommBackend::Serial,
+            exec: ExecMode::Sequential,
+            fabric: Fabric::h800(),
+            groups: Vec::new(),
+            spec: None,
+            overrides: Vec::new(),
+        }
+    }
+
+    /// FSDP shard-group size (the mesh's fsdp dim).
+    pub fn devices(mut self, m: usize) -> Self {
+        self.devices = m;
+        self
+    }
+
+    /// HSDP replication factor (default 1 = plain FSDP).
+    pub fn replicas(mut self, r: usize) -> Self {
+        self.replicas = r.max(1);
+        self
+    }
+
+    /// Optimizer binding applied to every group of the *layerwise
+    /// default* wrapping. Ignored once `.group(..)` / `.spec(..)`
+    /// declares explicit wrap units — each declared [`ShardGroupSpec`]
+    /// carries its own binding.
+    pub fn optimizer(mut self, optim: OptimBinding) -> Self {
+        self.optim = optim;
+        self
+    }
+
+    /// Sharding policy applied to every group of the *layerwise default*
+    /// wrapping. Like [`SessionBuilder::optimizer`], ignored once
+    /// explicit wrap units are declared.
+    pub fn policy(mut self, policy: ShardingPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn hyper(mut self, hyper: AdamHyper) -> Self {
+        self.hyper = hyper;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Cluster backend executing collectives + per-rank compute.
+    pub fn backend(mut self, backend: CommBackend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Step-loop schedule (sequential or bucket-pipelined).
+    pub fn exec(mut self, exec: ExecMode) -> Self {
+        self.exec = exec;
+        self
+    }
+
+    /// Fabric cost model the session (and its step logs) runs on.
+    pub fn fabric(mut self, fabric: Fabric) -> Self {
+        self.fabric = fabric;
+        self
+    }
+
+    /// Append a custom wrap unit. The first `.group(..)` call switches
+    /// the builder from the layerwise default to fully explicit wrapping
+    /// — declare every group (declaration order = bucket order), each
+    /// with its own policy and optimizer binding
+    /// ([`SessionBuilder::optimizer`] / [`SessionBuilder::policy`] no
+    /// longer apply).
+    pub fn group(mut self, g: ShardGroupSpec) -> Self {
+        self.groups.push(g);
+        self
+    }
+
+    /// Use a complete [`ModelSpec`] (e.g.
+    /// [`ModelSpec::layerwise_mixed_muon`]) instead of the layerwise
+    /// default; takes precedence over `.group(..)` calls.
+    pub fn spec(mut self, spec: ModelSpec) -> Self {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Apply config-file `[group.*]` sections on top of the resolved spec
+    /// (per-group optimizer / granularity / reshard / lr edits).
+    pub fn overrides(mut self, overrides: Vec<GroupOverride>) -> Self {
+        self.overrides = overrides;
+        self
+    }
+
+    /// The wrap spec this builder resolves to (explicit spec > custom
+    /// groups > layerwise default with the builder's uniform
+    /// policy/optimizer).
+    pub fn resolve_spec(&self, n_layers: usize) -> ModelSpec {
+        match &self.spec {
+            Some(s) => s.clone(),
+            None if !self.groups.is_empty() => ModelSpec { groups: self.groups.clone() },
+            None => {
+                let mut s = ModelSpec::layerwise(n_layers);
+                for g in s.groups.iter_mut() {
+                    g.policy = self.policy.clone();
+                    g.optim = self.optim;
+                }
+                s
+            }
+        }
+    }
+
+    pub fn build(self) -> Result<TrainSession> {
+        let runtime = Engine::load_default().context("loading compute runtime")?;
+        let cfg = runtime
+            .manifest
+            .configs
+            .get(&self.config)
+            .ok_or_else(|| anyhow!("config '{}' not in manifest", self.config))?
+            .clone();
+        let mut spec = self.resolve_spec(cfg.n_layers);
+        // blanket sections ([group.layers]) first, then specific ones, so
+        // a [group.layer0] exception survives a [group.layers] default no
+        // matter how the config file (or the BTreeMap) ordered them
+        let (blanket, specific): (Vec<&GroupOverride>, Vec<&GroupOverride>) =
+            self.overrides.iter().partition(|o| o.which == "layers");
+        for o in blanket.into_iter().chain(specific) {
+            apply_group_override(&mut spec, o, self.hyper)?;
+        }
+        let mesh = if self.replicas > 1 {
+            DeviceMesh::new(&[("replica", self.replicas), ("fsdp", self.devices)])?
+        } else {
+            DeviceMesh::flat("fsdp", self.devices)
+        };
+        let mut engine = FsdpEngine::from_spec(
+            cfg.params.clone(),
+            &spec,
+            mesh,
+            self.fabric.clone(),
+            make_comm(self.backend),
+        )?;
+        engine.init_params(&init_full_params(&cfg.params, self.seed))?;
+        let qblock = runtime.manifest.qblock;
+        let m = engine.num_devices();
+        let optimizers: Vec<Box<dyn GroupOptimizer>> = spec
+            .groups
+            .iter()
+            .enumerate()
+            .map(|(b, g)| {
+                let n_params = engine.buckets[b].param_ids.len();
+                g.optim.build(g.hyper.unwrap_or(self.hyper), qblock, n_params, m)
+            })
+            .collect();
+        // the pipelined executor drives compute layer-wise, which only the
+        // native runtime supports; PJRT falls back to the sequential path
+        let exec = if runtime.is_native() {
+            self.exec
+        } else {
+            if self.exec != ExecMode::Sequential {
+                eprintln!(
+                    "note: the pipelined executor requires the native runtime; \
+                     falling back to the sequential schedule"
+                );
+            }
+            ExecMode::Sequential
+        };
+        Ok(TrainSession {
+            engine,
+            runtime,
+            config: self.config,
+            corpus: Corpus::new(cfg.vocab, self.seed + 1),
+            optimizers,
+            exec,
+            last_report: None,
+            step: 0,
+            log: Vec::new(),
+        })
+    }
+}
+
+/// Apply one `[group.<which>]` override to the resolved spec. Errors
+/// (naming the section) when it matches no group — a typo in a config
+/// file must not silently train the wrong setup.
+fn apply_group_override(
+    spec: &mut ModelSpec,
+    o: &GroupOverride,
+    base_hyper: AdamHyper,
+) -> Result<()> {
+    let mut applied = false;
+    for g in spec.groups.iter_mut() {
+        let hit = if o.which == "layers" {
+            g.name.starts_with("layer")
+        } else {
+            g.name == o.which
+        };
+        if !hit {
+            continue;
+        }
+        applied = true;
+        if let Some(b) = o.optim {
+            g.optim = b;
+        }
+        if let Some(rows) = o.rows {
+            g.policy = if rows > 0 {
+                ShardingPolicy::uniform_rows(rows)
+            } else {
+                ShardingPolicy::element_wise()
+            };
+        }
+        if let Some(gran) = o.granularity {
+            g.policy.default_granularity = gran.max(1);
+        }
+        if let Some(r) = o.reshard {
+            g.reshard_after_forward = r;
+        }
+        if let Some(lr) = o.lr {
+            let mut h = g.hyper.unwrap_or(base_hyper);
+            h.lr = lr;
+            g.hyper = Some(h);
+        }
+    }
+    if !applied {
+        let names: Vec<&str> = spec.groups.iter().map(|g| g.name.as_str()).collect();
+        bail!(
+            "[group.{}] matched no shard group (groups: {names:?})",
+            o.which
+        );
+    }
+    Ok(())
+}
+
+impl TrainSession {
+    /// Start a [`SessionBuilder`] for `config`.
+    pub fn builder(config: &str) -> SessionBuilder {
+        SessionBuilder::new(config)
+    }
+
+    /// Serial-backend trainer (the seed behavior). Legacy shim over
+    /// [`SessionBuilder`].
     pub fn new(
         config: &str,
         m: usize,
@@ -162,10 +454,11 @@ impl Trainer {
         policy: &ShardingPolicy,
         hyper: AdamHyper,
         seed: u64,
-    ) -> Result<Trainer> {
-        Trainer::with_backend(config, m, optim, policy, hyper, seed, CommBackend::Serial)
+    ) -> Result<TrainSession> {
+        TrainSession::with_backend(config, m, optim, policy, hyper, seed, CommBackend::Serial)
     }
 
+    /// Legacy shim over [`SessionBuilder`].
     pub fn with_backend(
         config: &str,
         m: usize,
@@ -174,11 +467,23 @@ impl Trainer {
         hyper: AdamHyper,
         seed: u64,
         backend: CommBackend,
-    ) -> Result<Trainer> {
-        Trainer::with_exec(config, m, optim, policy, hyper, seed, backend, ExecMode::Sequential)
+    ) -> Result<TrainSession> {
+        TrainSession::with_exec(
+            config,
+            m,
+            optim,
+            policy,
+            hyper,
+            seed,
+            backend,
+            ExecMode::Sequential,
+        )
     }
 
-    /// Full constructor: cluster backend + executor schedule.
+    /// Legacy 8-argument constructor: a thin shim over the builder (one
+    /// uniform optimizer binding + one global policy on the layerwise
+    /// wrapping). Bit-identical to the builder path — asserted by
+    /// `tests/spec_api.rs`.
     #[allow(clippy::too_many_arguments)]
     pub fn with_exec(
         config: &str,
@@ -189,78 +494,16 @@ impl Trainer {
         seed: u64,
         backend: CommBackend,
         exec: ExecMode,
-    ) -> Result<Trainer> {
-        let runtime = Engine::load_default().context("loading compute runtime")?;
-        let cfg = runtime
-            .manifest
-            .configs
-            .get(config)
-            .ok_or_else(|| anyhow::anyhow!("config '{config}' not in manifest"))?
-            .clone();
-        // FSDP wrapping: embed | each layer | head (group by name prefix)
-        let group_of: Vec<usize> = cfg
-            .params
-            .iter()
-            .map(|(name, _)| {
-                if name.starts_with("embed") {
-                    0
-                } else if let Some(rest) = name.strip_prefix("layers.") {
-                    1 + rest.split('.').next().unwrap().parse::<usize>().unwrap()
-                } else {
-                    1 + cfg.n_layers
-                }
-            })
-            .collect();
-        let mut engine = FsdpEngine::new_with_comm(
-            cfg.params.clone(),
-            &group_of,
-            DeviceMesh::flat("fsdp", m),
-            policy,
-            Fabric::h800(),
-            make_comm(backend),
-        )?;
-        let full = init_full_params(&cfg.params, seed);
-        engine.init_params(&full)?;
-        let n_buckets = engine.buckets.len();
-        let qblock = runtime.manifest.qblock;
-        let optimizers = make_optimizers(optim, hyper, qblock, n_buckets, m);
-        let muon = if optim == OptimKind::Muon {
-            Some(Muon::new(hyper.lr, 0.95, hyper.wd))
-        } else {
-            None
-        };
-        let adam8 = if optim == OptimKind::Adam8bit {
-            let slots = cfg.params.len() * m;
-            Some((Adam8bit::new(hyper, qblock, slots), AdamW::new(hyper, slots)))
-        } else {
-            None
-        };
-        // the pipelined executor drives compute layer-wise, which only the
-        // native runtime supports; PJRT falls back to the sequential path
-        let exec = if runtime.is_native() {
-            exec
-        } else {
-            if exec != ExecMode::Sequential {
-                eprintln!(
-                    "note: the pipelined executor requires the native runtime; \
-                     falling back to the sequential schedule"
-                );
-            }
-            ExecMode::Sequential
-        };
-        Ok(Trainer {
-            engine,
-            runtime,
-            config: config.to_string(),
-            corpus: Corpus::new(cfg.vocab, seed + 1),
-            optimizers,
-            muon,
-            adam8,
-            exec,
-            last_report: None,
-            step: 0,
-            log: Vec::new(),
-        })
+    ) -> Result<TrainSession> {
+        TrainSession::builder(config)
+            .devices(m)
+            .optimizer(OptimBinding::from_kind(optim))
+            .policy(policy.clone())
+            .hyper(hyper)
+            .seed(seed)
+            .backend(backend)
+            .exec(exec)
+            .build()
     }
 
     /// One synchronous training step across all simulated devices, driven
@@ -286,13 +529,9 @@ impl Trainer {
             self.exec,
         )?;
         self.step += 1;
-        if let Some(muon) = self.muon.as_mut() {
-            self.engine.muon_step(muon, &mut self.optimizers, self.step)?;
-        } else if let Some((a8, fallback)) = self.adam8.as_mut() {
-            self.engine.adam8bit_step(a8, fallback, self.step)?;
-        } else {
-            self.engine.optimizer_step(&mut self.optimizers, self.step)?;
-        }
+        // uniform per-group dispatch — Muon / 8-bit Adam / AdamW / SGD all
+        // step through the same trait, group by group
+        self.engine.optimizer_step_groups(&mut self.optimizers, self.step)?;
         let loss = outcome.losses.iter().sum::<f32>() / m as f32;
         self.log.push(StepLog {
             step: self.step,
@@ -301,6 +540,7 @@ impl Trainer {
             comm_time: self.engine.comm.sim_time() - comm_before,
             exposed_s: outcome.report.exposed_comm_s,
             wall_s: t0.elapsed().as_secs_f64(),
+            fabric: self.engine.fabric.name,
         });
         self.last_report = Some(outcome.report);
         Ok(loss)
@@ -460,6 +700,7 @@ impl DdpTrainer {
             comm_time: 0.0,
             exposed_s: 0.0,
             wall_s: t0.elapsed().as_secs_f64(),
+            fabric: self.fabric.name,
         });
         Ok(loss)
     }
@@ -477,11 +718,11 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"));
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
-    let mut out = String::from("step,loss,comm_time,exposed_s,wall_s\n");
+    let mut out = String::from("step,loss,comm_time,exposed_s,wall_s,fabric\n");
     for l in log {
         out.push_str(&format!(
-            "{},{},{},{},{}\n",
-            l.step, l.loss, l.comm_time, l.exposed_s, l.wall_s
+            "{},{},{},{},{},{}\n",
+            l.step, l.loss, l.comm_time, l.exposed_s, l.wall_s, l.fabric
         ));
     }
     std::fs::write(&path, out)?;
@@ -557,6 +798,95 @@ mod tests {
         let opts = make_optimizers(OptimKind::Adam8bit, AdamHyper::default(), 64, 3, 2);
         assert_eq!(opts.len(), 3);
         assert_eq!(opts[0].name(), "adam8bit");
+    }
+
+    #[test]
+    fn builder_resolves_layerwise_spec_with_defaults() {
+        let b = TrainSession::builder("tiny")
+            .optimizer(OptimBinding::Muon)
+            .policy(ShardingPolicy::uniform_rows(4));
+        let spec = b.resolve_spec(2);
+        assert_eq!(spec.groups.len(), 4); // embed | layer0 | layer1 | head
+        assert!(spec.groups.iter().all(|g| g.optim == OptimBinding::Muon));
+        assert!(spec
+            .groups
+            .iter()
+            .all(|g| g.policy.row_granularity.contains_key("*")));
+    }
+
+    #[test]
+    fn explicit_groups_replace_layerwise_default() {
+        use crate::fsdp::spec::GroupFilter;
+        let b = TrainSession::builder("tiny")
+            .group(ShardGroupSpec::new("all", GroupFilter::Rest));
+        let spec = b.resolve_spec(2);
+        assert_eq!(spec.groups.len(), 1);
+        assert_eq!(spec.groups[0].name, "all");
+    }
+
+    #[test]
+    fn group_override_targets_layer_groups() {
+        let mut spec = ModelSpec::layerwise(2);
+        let o = GroupOverride {
+            which: "layers".into(),
+            optim: Some(OptimBinding::Muon),
+            lr: Some(0.02),
+            ..GroupOverride::default()
+        };
+        apply_group_override(&mut spec, &o, AdamHyper::default()).unwrap();
+        assert_eq!(spec.group_named("layer0").unwrap().optim, OptimBinding::Muon);
+        assert_eq!(spec.group_named("layer1").unwrap().optim, OptimBinding::Muon);
+        assert_eq!(spec.group_named("embed").unwrap().optim, OptimBinding::AdamW);
+        let h = spec.group_named("layer0").unwrap().hyper.unwrap();
+        assert_eq!(h.lr, 0.02);
+    }
+
+    #[test]
+    fn group_override_rows_and_reshard() {
+        let mut spec = ModelSpec::layerwise(1);
+        let o = GroupOverride {
+            which: "head".into(),
+            rows: Some(32),
+            reshard: Some(false),
+            ..GroupOverride::default()
+        };
+        apply_group_override(&mut spec, &o, AdamHyper::default()).unwrap();
+        let head = spec.group_named("head").unwrap();
+        assert!(!head.reshard_after_forward);
+        assert_eq!(head.policy.row_granularity.get("*"), Some(&32));
+    }
+
+    #[test]
+    fn specific_layer_override_survives_blanket_layers_section() {
+        // [group.layers] (blanket) + [group.layer0] (exception): build
+        // applies blanket first so the exception wins, regardless of the
+        // config map's alphabetical section order ("layer0" < "layers")
+        let t = TrainSession::builder("tiny")
+            .devices(2)
+            .overrides(vec![
+                GroupOverride {
+                    which: "layer0".into(),
+                    optim: Some(OptimBinding::AdamW),
+                    ..GroupOverride::default()
+                },
+                GroupOverride {
+                    which: "layers".into(),
+                    optim: Some(OptimBinding::Muon),
+                    ..GroupOverride::default()
+                },
+            ])
+            .build()
+            .unwrap();
+        let names: Vec<&str> = t.optimizers.iter().map(|o| o.name()).collect();
+        assert_eq!(names, vec!["adamw", "adamw", "muon", "adamw"]);
+    }
+
+    #[test]
+    fn group_override_typo_is_an_error() {
+        let mut spec = ModelSpec::layerwise(1);
+        let o = GroupOverride { which: "embedd".into(), ..GroupOverride::default() };
+        let err = apply_group_override(&mut spec, &o, AdamHyper::default()).unwrap_err();
+        assert!(err.to_string().contains("embedd"), "{err}");
     }
 
     // End-to-end Trainer tests (need artifacts + PJRT) live in

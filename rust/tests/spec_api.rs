@@ -1,0 +1,320 @@
+//! Spec-API acceptance tests.
+//!
+//! 1. **Shim bit-identity** — the legacy `Trainer::{new,with_backend,
+//!    with_exec}` constructors are thin shims over `SessionBuilder`; a
+//!    hand-declared `ModelSpec` with uniform per-group bindings must
+//!    produce trajectories bit-identical to the legacy path across
+//!    {serial, threaded} x {sequential, pipelined} x {AdamW, Muon,
+//!    Adam8bit}.
+//! 2. **Mixed per-group optimizers** — Muon on layer matrices next to
+//!    AdamW on embed/head (inexpressible pre-spec) trains end-to-end,
+//!    with each group's granularity planned independently, from the Rust
+//!    API and from a config file.
+//! 3. **Checkpoint round-trips** through the spec API, including
+//!    save-at-m / load-at-m' resharding under mixed optimizers.
+//! 4. **Per-group schedule/fabric choices** — reshard-after-forward and
+//!    fabric selection change comm schedules / timing only, never math.
+
+use std::io::Write;
+
+use vescale_fsdp::checkpoint;
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::file::ConfigFile;
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::spec::{ModelSpec, OptimBinding};
+use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::train::{TrainSession, Trainer};
+
+const TINY_LAYERS: usize = 2;
+
+fn hyper_for(opt: OptimKind) -> AdamHyper {
+    match opt {
+        OptimKind::Muon => AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+        _ => AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+    }
+}
+
+fn policy_for(opt: OptimKind) -> ShardingPolicy {
+    if opt == OptimKind::Adam8bit {
+        ShardingPolicy::uniform_rows(32)
+    } else {
+        ShardingPolicy::element_wise()
+    }
+}
+
+type Trajectory = (Vec<f32>, Vec<Vec<f32>>);
+
+fn trajectory(t: &mut TrainSession, steps: usize) -> Trajectory {
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let params = (0..t.engine.params.len()).map(|i| t.engine.read_param(i)).collect();
+    (losses, params)
+}
+
+fn assert_identical(a: &Trajectory, b: &Trajectory, what: &str) {
+    assert_eq!(a.0.len(), b.0.len(), "{what}: step count");
+    for (s, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss step {s}: {x} vs {y}");
+    }
+    for (i, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        for (x, y) in pa.iter().zip(pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}");
+        }
+    }
+}
+
+/// The declarative counterpart of the legacy constructor: an explicit
+/// layerwise `ModelSpec` with the same uniform binding on every group.
+fn uniform_spec(opt: OptimKind, policy: &ShardingPolicy) -> ModelSpec {
+    let mut spec = ModelSpec::layerwise(TINY_LAYERS);
+    for g in spec.groups.iter_mut() {
+        g.optim = OptimBinding::from_kind(opt);
+        g.policy = policy.clone();
+    }
+    spec
+}
+
+fn run_legacy(opt: OptimKind, m: usize, backend: CommBackend, exec: ExecMode) -> Trajectory {
+    let mut t =
+        Trainer::with_exec("tiny", m, opt, &policy_for(opt), hyper_for(opt), 42, backend, exec)
+            .unwrap();
+    trajectory(&mut t, 2)
+}
+
+fn run_builder(opt: OptimKind, m: usize, backend: CommBackend, exec: ExecMode) -> Trajectory {
+    let mut t = TrainSession::builder("tiny")
+        .devices(m)
+        .spec(uniform_spec(opt, &policy_for(opt)))
+        .hyper(hyper_for(opt))
+        .seed(42)
+        .backend(backend)
+        .exec(exec)
+        .build()
+        .unwrap();
+    trajectory(&mut t, 2)
+}
+
+#[test]
+fn legacy_shims_bit_identical_to_builder_spec_path() {
+    for opt in [OptimKind::AdamW, OptimKind::Muon, OptimKind::Adam8bit] {
+        for (backend, exec) in [
+            (CommBackend::Serial, ExecMode::Sequential),
+            (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+            (CommBackend::Threaded, ExecMode::Sequential),
+            (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 1 }),
+        ] {
+            let legacy = run_legacy(opt, 2, backend, exec);
+            let built = run_builder(opt, 2, backend, exec);
+            assert_identical(
+                &legacy,
+                &built,
+                &format!("{} {} {}", opt.name(), backend.name(), exec.name()),
+            );
+        }
+    }
+}
+
+fn mixed_session(m: usize, backend: CommBackend, exec: ExecMode) -> TrainSession {
+    // Muon on layer matrices (with its own lr), AdamW on embed/head —
+    // and a per-group granularity only the layer groups use.
+    let mut spec = ModelSpec::layerwise_mixed_muon(
+        TINY_LAYERS,
+        AdamHyper { lr: 0.02, wd: 0.0, ..AdamHyper::default() },
+    );
+    for g in spec.groups.iter_mut() {
+        if g.name.starts_with("layer") {
+            g.policy = ShardingPolicy::uniform_rows(4);
+        }
+    }
+    TrainSession::builder("tiny")
+        .devices(m)
+        .spec(spec)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(7)
+        .backend(backend)
+        .exec(exec)
+        .build()
+        .unwrap()
+}
+
+#[test]
+fn mixed_optimizers_train_end_to_end_with_per_group_planning() {
+    let mut t = mixed_session(2, CommBackend::Serial, ExecMode::Sequential);
+    // one optimizer per group, bound per the spec
+    let names: Vec<&str> = t.optimizers.iter().map(|o| o.name()).collect();
+    assert_eq!(names, vec!["adamw", "muon", "muon", "adamw"]);
+    assert_eq!(t.engine.buckets[0].name, "embed");
+    assert_eq!(t.engine.buckets[3].name, "head");
+    // group-local granularity: layer buckets planned with 4-row blocks
+    // (4 * d_model = 512 elements), embed/head element-wise
+    let d_model = 128u64;
+    for b in [1, 2] {
+        let spec0 = t.engine.buckets[b].dbuffer.layout.ragged_spec(1);
+        assert_eq!(spec0.granularity, 4 * d_model, "layer bucket {b}");
+    }
+    assert_eq!(t.engine.buckets[0].dbuffer.layout.ragged_spec(0).granularity, 1);
+    // trains: loss strictly improves over the first ln(V)-ish value
+    let first = t.train_step().unwrap();
+    let mut last = first;
+    for _ in 0..5 {
+        last = t.train_step().unwrap();
+    }
+    assert!(last.is_finite() && last < first, "loss {first} -> {last}");
+    // both optimizer families actually hold state
+    assert!(t.optimizers[1].state_bytes() > 0, "muon state");
+    assert!(t.optimizers[0].state_bytes() > 0, "adamw state");
+}
+
+#[test]
+fn mixed_optimizers_bit_identical_across_backends_and_schedules() {
+    let reference = {
+        let mut t = mixed_session(2, CommBackend::Serial, ExecMode::Sequential);
+        trajectory(&mut t, 2)
+    };
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 8 }),
+    ] {
+        let mut t = mixed_session(2, backend, exec);
+        let r = trajectory(&mut t, 2);
+        assert_identical(
+            &reference,
+            &r,
+            &format!("mixed {} {}", backend.name(), exec.name()),
+        );
+    }
+}
+
+#[test]
+fn mixed_config_file_drives_the_builder() {
+    let toml = r#"
+[model]
+preset = "tiny"
+
+[parallel]
+fsdp = 2
+
+[run]
+optimizer = "adamw"
+fabric = "h800"
+steps = 2
+
+[group.layers]
+optimizer = "muon"
+lr = 0.02
+
+[group.head]
+granularity = 8
+"#;
+    let dir = std::env::temp_dir().join("vescale_spec_api_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mixed.toml");
+    let mut f = std::fs::File::create(&path).unwrap();
+    f.write_all(toml.as_bytes()).unwrap();
+    drop(f);
+    // the same path `vescale-fsdp train --config-file mixed.toml` takes
+    let tc = ConfigFile::load(path.to_str().unwrap()).unwrap().train_config().unwrap();
+    let mut t = TrainSession::builder(&tc.model)
+        .devices(tc.parallel.fsdp)
+        .optimizer(OptimBinding::from_kind(tc.optimizer))
+        .hyper(AdamHyper { lr: tc.lr as f32, ..AdamHyper::default() })
+        .seed(tc.seed)
+        .backend(tc.backend)
+        .fabric(Fabric::by_name(&tc.fabric).unwrap())
+        .overrides(tc.groups.clone())
+        .build()
+        .unwrap();
+    let names: Vec<&str> = t.optimizers.iter().map(|o| o.name()).collect();
+    assert_eq!(names, vec!["adamw", "muon", "muon", "adamw"]);
+    // the [group.head] granularity reached the planner
+    let head = &t.engine.buckets[3];
+    assert_eq!(head.dbuffer.layout.ragged_spec(0).granularity, 8);
+    let loss = t.train_step().unwrap();
+    assert!(loss.is_finite());
+    assert_eq!(t.log[0].fabric, "h800");
+}
+
+#[test]
+fn mixed_checkpoint_reshards_across_mesh_sizes() {
+    let dir = std::env::temp_dir().join("vescale_spec_api_ckpt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut src = mixed_session(4, CommBackend::Serial, ExecMode::Sequential);
+    for _ in 0..2 {
+        src.train_step().unwrap();
+    }
+    checkpoint::save(&src.engine, &dir).unwrap();
+    let meta = checkpoint::read_meta(&dir).unwrap();
+    assert_eq!(meta.mesh, 4);
+    assert_eq!(meta.groups, vec!["embed", "layer0", "layer1", "head"]);
+    // load at a different mesh size (save-at-4 / load-at-2 resharding)
+    let mut dst = mixed_session(2, CommBackend::Serial, ExecMode::Sequential);
+    checkpoint::load(&mut dst.engine, &dir).unwrap();
+    for i in 0..src.engine.params.len() {
+        let a = src.engine.read_param(i);
+        let b = dst.engine.read_param(i);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "param {i} resharded");
+        }
+    }
+    // the restored session keeps training under its mixed bindings
+    let loss = dst.train_step().unwrap();
+    assert!(loss.is_finite());
+}
+
+#[test]
+fn keep_unsharded_group_skips_backward_regather_same_math() {
+    let build = |keep_head: bool| {
+        let mut spec = ModelSpec::layerwise(TINY_LAYERS);
+        if keep_head {
+            spec.group_named_mut("head").unwrap().reshard_after_forward = false;
+        }
+        TrainSession::builder("tiny")
+            .devices(2)
+            .spec(spec)
+            .seed(11)
+            .exec(ExecMode::Pipelined { prefetch: 2 })
+            .build()
+            .unwrap()
+    };
+    let mut reshard = build(false);
+    let mut keep = build(true);
+    let a = trajectory(&mut reshard, 2);
+    let b = trajectory(&mut keep, 2);
+    assert_identical(&a, &b, "reshard toggle must not change math");
+    // 4 buckets: resharding path re-gathers all 4 in backward (8 AG/step),
+    // keeping the head live saves exactly one AllGather per step
+    let ag_reshard = reshard.engine.stats().count("all_gather");
+    let ag_keep = keep.engine.stats().count("all_gather");
+    assert_eq!(ag_reshard, 2 * 8, "baseline schedule");
+    assert_eq!(ag_keep, 2 * 7, "one backward re-gather skipped per step");
+}
+
+#[test]
+fn fabric_choice_changes_timing_not_math() {
+    let run = |fabric: Fabric| {
+        let mut t = TrainSession::builder("tiny")
+            .devices(2)
+            .seed(3)
+            .fabric(fabric)
+            .build()
+            .unwrap();
+        let traj = trajectory(&mut t, 2);
+        let sim = t.engine.comm.sim_time();
+        let fabric_name = t.log[0].fabric;
+        (traj, sim, fabric_name)
+    };
+    let (a, sim_h800, name_h800) = run(Fabric::h800());
+    let (b, sim_a100, name_a100) = run(Fabric::a100());
+    assert_identical(&a, &b, "fabric is a timing model only");
+    assert_eq!(name_h800, "h800");
+    assert_eq!(name_a100, "a100");
+    assert!(
+        sim_a100 > sim_h800,
+        "a100 must be modeled slower: {sim_a100} vs {sim_h800}"
+    );
+}
