@@ -1,0 +1,48 @@
+"""Golden-vector parity: the Pallas block-wise quant kernel vs the shared
+JSON fixtures in ``rust/tests/fixtures/blockwise_quant_golden.json``.
+
+The same file is asserted against both Rust implementations
+(``optim/adam8bit.rs`` and ``quant/``) by ``rust/tests/quant_parity.rs``,
+tying all three to one source of truth: absmax scale with the 1.0
+zero-block fallback, round half to even (``jnp.round``), clip to ±127.
+"""
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import blockwise_dequant, blockwise_quant
+
+_FIXTURE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), os.pardir, os.pardir,
+    "rust", "tests", "fixtures", "blockwise_quant_golden.json")
+
+
+def _cases():
+    with open(_FIXTURE) as f:
+        return json.load(f)["cases"]
+
+
+def test_golden_codes_and_scales():
+    for case in _cases():
+        x = jnp.asarray(np.asarray(case["x"], np.float32))
+        q, s = blockwise_quant(x, case["block"])
+        np.testing.assert_array_equal(
+            np.asarray(q), np.asarray(case["q"], np.int8), err_msg=case["name"])
+        np.testing.assert_array_equal(
+            np.asarray(s), np.asarray(case["scales"], np.float32),
+            err_msg=case["name"])
+
+
+def test_golden_dequant_is_q_scale_over_127():
+    for case in _cases():
+        block = case["block"]
+        q = jnp.asarray(np.asarray(case["q"], np.int8))
+        s = jnp.asarray(np.asarray(case["scales"], np.float32))
+        x = blockwise_dequant(q, s, block)
+        expect = (np.asarray(case["q"], np.float32).reshape(-1, block)
+                  * np.asarray(case["scales"], np.float32)[:, None]
+                  / 127.0).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(x), expect,
+                                      err_msg=case["name"])

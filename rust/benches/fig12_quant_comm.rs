@@ -1,0 +1,214 @@
+//! Fig-12 (repo-specific): quantized-communication bench — **measured**
+//! wire bytes (payload / scale / pad, straight from what the collectives
+//! shipped) and wall-clock for F32 vs Bf16 vs Q8 across rank counts, a
+//! fig-10-style convergence check (Q8-with-error-feedback final loss vs
+//! f32), and the `fsdp::sim` comm-time prediction at the matching wire
+//! precision next to the engine's fabric-model measurement.
+//!
+//!     cargo bench --bench fig12_quant_comm [-- --model tiny --steps 12
+//!         --warmup 1 --block 64 --smoke]
+//!
+//! `--smoke` shrinks the sweep to one mesh and two steps (the CI mode).
+//! Emits `BENCH_quant.json` at the crate root.
+
+use vescale_fsdp::baselines;
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
+use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::args::Args;
+use vescale_fsdp::util::json::Json;
+use vescale_fsdp::util::table::Table;
+
+struct RunOut {
+    wall_per_step: f64,
+    sim_comm_per_step: f64,
+    wire_payload: u64,
+    wire_scale: u64,
+    wire_pad: u64,
+    final_loss: f32,
+}
+
+fn run(
+    model: &str,
+    m: usize,
+    prec: CommPrecision,
+    warmup: usize,
+    steps: usize,
+) -> anyhow::Result<RunOut> {
+    let mut t = TrainSession::builder(model)
+        .devices(m)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .backend(CommBackend::Threaded)
+        .exec(ExecMode::Pipelined { prefetch: 2 })
+        .comm_precision(prec)
+        .build()?;
+    for _ in 0..warmup {
+        t.train_step()?;
+    }
+    let log_before = t.log.len();
+    let comm_before = t.engine.comm.sim_time();
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        t.train_step()?;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let sim_comm = t.engine.comm.sim_time() - comm_before;
+    let (mut payload, mut scale, mut pad) = (0u64, 0u64, 0u64);
+    for l in &t.log[log_before..] {
+        payload += l.wire_payload;
+        scale += l.wire_scale;
+        pad += l.wire_pad;
+    }
+    let tail: Vec<f32> = t.log.iter().rev().take(5).map(|l| l.loss).collect();
+    Ok(RunOut {
+        wall_per_step: wall / steps as f64,
+        sim_comm_per_step: sim_comm / steps as f64,
+        wire_payload: payload,
+        wire_scale: scale,
+        wire_pad: pad,
+        final_loss: tail.iter().sum::<f32>() / tail.len() as f32,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let model = args.str_or("model", "tiny");
+    let block = args.usize_or("block", 64);
+    let (meshes, steps, warmup) = if smoke {
+        (vec![2usize], args.usize_or("steps", 2), 0)
+    } else {
+        (vec![2usize, 4, 8], args.usize_or("steps", 12), args.usize_or("warmup", 1))
+    };
+    let fabric = Fabric::by_name(&args.str_or("fabric", "h800"))
+        .ok_or_else(|| anyhow::anyhow!("unknown --fabric"))?;
+    let precisions = [
+        CommPrecision::F32,
+        CommPrecision::Bf16,
+        CommPrecision::Q8 { block },
+    ];
+    println!(
+        "model {model}, meshes {meshes:?}, {steps} steps (+{warmup} warmup), fabric {}{}\n",
+        fabric.name,
+        if smoke { ", SMOKE" } else { "" }
+    );
+
+    let preset = presets::by_name(&model)
+        .ok_or_else(|| anyhow::anyhow!("no sim preset for '{model}'"))?;
+    let cfgs = vescale_fsdp::runtime::Manifest::builtin();
+    let mcfg = cfgs
+        .configs
+        .get(&model)
+        .ok_or_else(|| anyhow::anyhow!("no model config '{model}'"))?
+        .clone();
+    let tokens_per_dev = (mcfg.batch * mcfg.seq) as u64;
+
+    let mut table = Table::new(
+        "Fig 12 — quantized communication (measured wire bytes + wall, threaded pipelined)",
+        &[
+            "mesh",
+            "wire",
+            "s/step",
+            "payload MB",
+            "scale MB",
+            "pad MB",
+            "wire vs f32",
+            "sim comm s/step",
+            "sim predicted s",
+            "final loss",
+        ],
+    );
+    let mut rows = Vec::new();
+    let mut q8_reduction_min = f64::INFINITY;
+    let mut q8_loss_ok = true;
+    for &m in &meshes {
+        let mut f32_total = 0u64;
+        let mut f32_loss = 0.0f32;
+        for prec in precisions {
+            let r = run(&model, m, prec, warmup, steps)?;
+            let total = r.wire_payload + r.wire_scale + r.wire_pad;
+            let (reduction, red_str) = if prec.is_f32() {
+                f32_total = total;
+                f32_loss = r.final_loss;
+                (1.0, "1.00x".to_string())
+            } else {
+                let red = f32_total as f64 / total.max(1) as f64;
+                (red, format!("{red:.2}x"))
+            };
+            if let CommPrecision::Q8 { .. } = prec {
+                q8_reduction_min = q8_reduction_min.min(reduction);
+                let gap = (r.final_loss - f32_loss).abs() / f32_loss.max(1e-6);
+                q8_loss_ok &= gap <= 0.05;
+            }
+            // sim.rs prediction of one step's comm seconds at this wire
+            // precision (same vescale behavior the overlap bench uses)
+            let sim = simulate_step(
+                &preset,
+                &ParallelConfig::fsdp_only(m),
+                OptimKind::AdamW,
+                tokens_per_dev,
+                &fabric,
+                &GpuSpec::h800(),
+                &baselines::vescale_with_precision(1, prec),
+            )?;
+            table.rowv(vec![
+                format!("{m}"),
+                prec.name(),
+                format!("{:.4}", r.wall_per_step),
+                format!("{:.3}", r.wire_payload as f64 / 1e6),
+                format!("{:.3}", r.wire_scale as f64 / 1e6),
+                format!("{:.3}", r.wire_pad as f64 / 1e6),
+                red_str,
+                format!("{:.5}", r.sim_comm_per_step),
+                format!("{:.5}", sim.comm_time),
+                format!("{:.4}", r.final_loss),
+            ]);
+            rows.push(Json::obj(vec![
+                ("mesh", Json::num(m as f64)),
+                ("precision", Json::str(&prec.name())),
+                ("s_per_step", Json::num(r.wall_per_step)),
+                ("wire_payload_bytes", Json::num(r.wire_payload as f64)),
+                ("wire_scale_bytes", Json::num(r.wire_scale as f64)),
+                ("wire_pad_bytes", Json::num(r.wire_pad as f64)),
+                ("wire_total_bytes", Json::num(total as f64)),
+                ("wire_reduction_vs_f32", Json::num(reduction)),
+                ("sim_comm_s_per_step", Json::num(r.sim_comm_per_step)),
+                ("sim_predicted_comm_s", Json::num(sim.comm_time)),
+                ("final_loss", Json::num(r.final_loss as f64)),
+            ]));
+        }
+    }
+    table.print();
+    println!(
+        "\nQ8 wire reduction vs f32 (worst mesh): {q8_reduction_min:.2}x ({})",
+        if q8_reduction_min >= 3.0 { ">= 3x target met" } else { "below 3x target" }
+    );
+    println!(
+        "Q8 final loss within 5% of f32 on every mesh: {q8_loss_ok} (fig-10-style convergence)"
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig12_quant_comm")),
+        ("model", Json::str(&model)),
+        ("steps", Json::num(steps as f64)),
+        ("smoke", Json::Bool(smoke)),
+        ("fabric", Json::str(fabric.name)),
+        ("q8_block", Json::num(block as f64)),
+        ("rows", Json::Arr(rows)),
+        ("q8_wire_reduction_min", Json::num(q8_reduction_min)),
+        ("q8_wire_reduction_ge_3x", Json::Bool(q8_reduction_min >= 3.0)),
+        ("q8_loss_within_5pct", Json::Bool(q8_loss_ok)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_quant.json");
+    std::fs::write(path, out.to_string())?;
+    println!("\nwrote {path}");
+    Ok(())
+}

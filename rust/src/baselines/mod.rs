@@ -7,6 +7,7 @@
 use crate::config::System;
 use crate::fsdp::sim::{ShardingFormat, SystemBehavior};
 use crate::memory::FreePolicy;
+use crate::quant::CommPrecision;
 
 /// DeepSpeed ZeRO-3: element-wise concatenated shards, fragmented
 /// per-parameter AllGathers (issue #5047), unaligned buffers,
@@ -23,6 +24,7 @@ pub fn deepspeed() -> SystemBehavior {
         batched_alloc: false,
         persist_lp_buffers: false,
         granularity: 1,
+        comm_precision: CommPrecision::Bf16,
     }
 }
 
@@ -41,6 +43,7 @@ pub fn fsdp1() -> SystemBehavior {
         batched_alloc: false,
         persist_lp_buffers: false,
         granularity: 1,
+        comm_precision: CommPrecision::Bf16,
     }
 }
 
@@ -61,6 +64,7 @@ pub fn fsdp2() -> SystemBehavior {
         batched_alloc: false,
         persist_lp_buffers: false,
         granularity: 1,
+        comm_precision: CommPrecision::Bf16,
     }
 }
 
@@ -80,6 +84,7 @@ pub fn megatron() -> SystemBehavior {
         batched_alloc: true,
         persist_lp_buffers: true,
         granularity: 1,
+        comm_precision: CommPrecision::Bf16,
     }
 }
 
@@ -98,7 +103,16 @@ pub fn vescale(granularity: u64) -> SystemBehavior {
         batched_alloc: true,
         persist_lp_buffers: false,
         granularity,
+        comm_precision: CommPrecision::Bf16,
     }
+}
+
+/// veScale with a quantized (or full-precision) wire: the §6.3
+/// block-wise-quantized-communication scenario the `quant/` subsystem
+/// executes numerically; the simulator prices its comm with the same
+/// payload + scale + pad arithmetic the engine measures.
+pub fn vescale_with_precision(granularity: u64, prec: CommPrecision) -> SystemBehavior {
+    SystemBehavior { comm_precision: prec, ..vescale(granularity) }
 }
 
 /// Ablations for Table 2.

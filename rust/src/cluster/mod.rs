@@ -171,6 +171,15 @@ pub trait Communicator: Send + Sync {
         PendingOp::done(r)
     }
 
+    /// Nonblocking All-to-all; same contract as
+    /// [`Communicator::all_gather_async`]. The quantized ReduceScatter
+    /// (`quant::reduce_scatter_prec`) rides on this: encoded chunk slots
+    /// are exchanged here and dequant-reduced at each destination.
+    fn all_to_all_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
+        let r = self.all_to_all(&mut bufs, s).map(|()| bufs);
+        PendingOp::done(r)
+    }
+
     /// Record one collective in the backend's thread-safe stats.
     fn record(&self, rec: CommRecord);
 
@@ -180,6 +189,10 @@ pub trait Communicator: Send + Sync {
     /// Total simulated seconds so far — cheap (no record-history clone),
     /// for per-step accounting on hot paths.
     fn sim_time(&self) -> f64;
+
+    /// Cumulative measured wire bytes as (payload, scale, pad) — cheap
+    /// (no record-history clone), for per-step accounting on hot paths.
+    fn wire_totals(&self) -> (u64, u64, u64);
 
     fn reset_stats(&self);
 }
@@ -310,12 +323,7 @@ mod tests {
     #[test]
     fn rank_local_stats_merge_in_rank_order() {
         let (_, stats) = Cluster::run_spmd(4, |rank, ctx| {
-            ctx.record(CommRecord {
-                op: "all_gather",
-                bytes_per_rank: rank as u64,
-                group_size: 4,
-                sim_time: 0.0,
-            });
+            ctx.record(CommRecord::dense("all_gather", rank as u64, 4, 0.0));
         });
         let bytes: Vec<u64> = stats.records.iter().map(|r| r.bytes_per_rank).collect();
         assert_eq!(bytes, vec![0, 1, 2, 3]);
@@ -356,6 +364,10 @@ mod tests {
         comm.reduce_scatter(&mut sync_rs, s, 0.25).unwrap();
         let async_rs = comm.reduce_scatter_async(mk(), s, 0.25).wait().unwrap();
         assert_eq!(sync_rs, async_rs);
+        let mut sync_a2a = mk();
+        comm.all_to_all(&mut sync_a2a, s).unwrap();
+        let async_a2a = comm.all_to_all_async(mk(), s).wait().unwrap();
+        assert_eq!(sync_a2a, async_a2a);
     }
 
     #[test]

@@ -56,6 +56,10 @@ impl Communicator for SerialComm {
         self.stats.total_time()
     }
 
+    fn wire_totals(&self) -> (u64, u64, u64) {
+        self.stats.wire_totals()
+    }
+
     fn reset_stats(&self) {
         self.stats.reset();
     }
@@ -79,12 +83,7 @@ mod tests {
     #[test]
     fn records_are_thread_safe() {
         let c = SerialComm::new();
-        c.record(CommRecord {
-            op: "all_gather",
-            bytes_per_rank: 4,
-            group_size: 2,
-            sim_time: 0.1,
-        });
+        c.record(CommRecord::dense("all_gather", 4, 2, 0.1));
         assert_eq!(c.stats().count("all_gather"), 1);
         c.reset_stats();
         assert_eq!(c.stats().records.len(), 0);

@@ -204,6 +204,41 @@ fn rendezvous_reduce_scatter(
     Ok(())
 }
 
+/// The rendezvous all-to-all, as a free function so the sync path and the
+/// background comm thread of `all_to_all_async` run the exact same
+/// algorithm (pure region copies — bit patterns are preserved, which the
+/// quantized collectives' packed int8 wire format relies on).
+fn rendezvous_all_to_all(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: usize) -> Result<()> {
+    let m = bufs.len();
+    if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
+        return comm::all_to_all(bufs, s);
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("all_to_all buffer too small");
+        }
+    }
+    let shared = SharedBufs::new(bufs);
+    let barrier = Barrier::new(m);
+    fan_out(m, |rank| {
+        // phase 1 (reads only): pull slot `rank` from every sender —
+        // the incoming column of the transpose
+        let mut incoming = vec![0.0f32; m * s];
+        unsafe {
+            for r in 0..m {
+                incoming[r * s..(r + 1) * s]
+                    .copy_from_slice(shared.region(r, rank * s, (rank + 1) * s));
+            }
+        }
+        barrier.wait();
+        // phase 2 (writes only): overwrite own buffer in place
+        unsafe {
+            shared.region_mut(rank, 0, m * s).copy_from_slice(&incoming);
+        }
+    });
+    Ok(())
+}
+
 impl Communicator for ThreadedComm {
     fn backend(&self) -> CommBackend {
         CommBackend::Threaded
@@ -328,34 +363,20 @@ impl Communicator for ThreadedComm {
     }
 
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        rendezvous_all_to_all(bufs, s, self.min_parallel_elems)
+    }
+
+    fn all_to_all_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
         let m = bufs.len();
-        if m <= 1 || s == 0 || self.serial_faster(m * m * s) {
-            return comm::all_to_all(bufs, s);
+        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
+            let r = rendezvous_all_to_all(&mut bufs, s, self.min_parallel_elems).map(|()| bufs);
+            return PendingOp::done(r);
         }
-        for b in bufs.iter() {
-            if b.len() < m * s {
-                bail!("all_to_all buffer too small");
-            }
-        }
-        let shared = SharedBufs::new(bufs);
-        let barrier = Barrier::new(m);
-        fan_out(m, |rank| {
-            // phase 1 (reads only): pull slot `rank` from every sender —
-            // the incoming column of the transpose
-            let mut incoming = vec![0.0f32; m * s];
-            unsafe {
-                for r in 0..m {
-                    incoming[r * s..(r + 1) * s]
-                        .copy_from_slice(shared.region(r, rank * s, (rank + 1) * s));
-                }
-            }
-            barrier.wait();
-            // phase 2 (writes only): overwrite own buffer in place
-            unsafe {
-                shared.region_mut(rank, 0, m * s).copy_from_slice(&incoming);
-            }
-        });
-        Ok(())
+        let min = self.min_parallel_elems;
+        PendingOp::spawn(move || {
+            rendezvous_all_to_all(&mut bufs, s, min)?;
+            Ok(bufs)
+        })
     }
 
     fn record(&self, rec: CommRecord) {
@@ -368,6 +389,10 @@ impl Communicator for ThreadedComm {
 
     fn sim_time(&self) -> f64 {
         self.stats.total_time()
+    }
+
+    fn wire_totals(&self) -> (u64, u64, u64) {
+        self.stats.wire_totals()
     }
 
     fn reset_stats(&self) {
@@ -485,6 +510,12 @@ mod tests {
         comm.reduce_scatter(&mut sync_rs, s, 0.25).unwrap();
         let async_rs = comm.reduce_scatter_async(mk(4), s, 0.25).wait().unwrap();
         for (a, b) in sync_rs.iter().flatten().zip(async_rs.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut sync_a2a = mk(5);
+        comm.all_to_all(&mut sync_a2a, s).unwrap();
+        let async_a2a = comm.all_to_all_async(mk(5), s).wait().unwrap();
+        for (a, b) in sync_a2a.iter().flatten().zip(async_a2a.iter().flatten()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
         // errors surface at wait(), not at issue

@@ -26,28 +26,79 @@ pub use cost::{CopyKind, Fabric};
 #[derive(Debug, Clone, PartialEq)]
 pub struct CommRecord {
     pub op: &'static str,
-    /// Bytes each rank contributes/receives (per-rank payload).
+    /// Total wire bytes each rank contributes/receives (payload + quant
+    /// scales + packing pad).
     pub bytes_per_rank: u64,
+    /// Bytes per rank carrying tensor data (== `bytes_per_rank` for dense
+    /// f32 collectives; the int8/bf16 payload for quantized ones).
+    pub payload_bytes: u64,
+    /// Per-block quantization-scale side-channel bytes per rank (0 for
+    /// dense collectives).
+    pub scale_bytes: u64,
     pub group_size: usize,
     /// Simulated seconds on the modeled fabric.
     pub sim_time: f64,
+}
+
+impl CommRecord {
+    /// A dense full-precision record: every wire byte is payload.
+    pub fn dense(
+        op: &'static str,
+        bytes_per_rank: u64,
+        group_size: usize,
+        sim_time: f64,
+    ) -> CommRecord {
+        CommRecord {
+            op,
+            bytes_per_rank,
+            payload_bytes: bytes_per_rank,
+            scale_bytes: 0,
+            group_size,
+            sim_time,
+        }
+    }
+
+    /// Word-packing pad bytes per rank (wire total minus payload+scales).
+    pub fn pad_bytes(&self) -> u64 {
+        self.bytes_per_rank.saturating_sub(self.payload_bytes + self.scale_bytes)
+    }
 }
 
 /// Cumulative comm statistics for a run.
 #[derive(Debug, Clone, Default)]
 pub struct CommStats {
     pub records: Vec<CommRecord>,
+    // running wire totals maintained by push/merge so per-step accounting
+    // reads them in O(1) instead of rescanning the record history
+    wire_payload: u64,
+    wire_scale: u64,
+    wire_pad: u64,
 }
 
 impl CommStats {
     pub fn push(&mut self, r: CommRecord) {
+        let g = r.group_size as u64;
+        self.wire_payload += r.payload_bytes * g;
+        self.wire_scale += r.scale_bytes * g;
+        self.wire_pad += r.pad_bytes() * g;
         self.records.push(r);
     }
 
     /// Append another stats block (rank-order merging of per-rank local
     /// stats; see [`SharedStats`]).
     pub fn merge(&mut self, other: CommStats) {
+        self.wire_payload += other.wire_payload;
+        self.wire_scale += other.wire_scale;
+        self.wire_pad += other.wire_pad;
         self.records.extend(other.records);
+    }
+
+    /// Drop every record and reset the running totals.
+    pub fn clear(&mut self) {
+        self.records.clear();
+        self.wire_payload = 0;
+        self.wire_scale = 0;
+        self.wire_pad = 0;
     }
 
     pub fn total_time(&self) -> f64 {
@@ -63,6 +114,16 @@ impl CommStats {
 
     pub fn count(&self, op: &str) -> usize {
         self.records.iter().filter(|r| r.op == op).count()
+    }
+
+    /// Measured wire bytes split as (payload, scale, pad), summed over
+    /// records and multiplied by group size (the same convention as
+    /// [`CommStats::total_bytes`]). This is what the per-step CSV and the
+    /// quant bench report — measured from what the collectives actually
+    /// shipped, not estimated. O(1): the totals are maintained by
+    /// [`CommStats::push`]/[`CommStats::merge`].
+    pub fn wire_breakdown(&self) -> (u64, u64, u64) {
+        (self.wire_payload, self.wire_scale, self.wire_pad)
     }
 
     pub fn time_of(&self, op: &str) -> f64 {
@@ -105,8 +166,15 @@ impl SharedStats {
         self.inner.lock().unwrap().total_time()
     }
 
+    /// Cumulative (payload, scale, pad) wire bytes without cloning the
+    /// record history — the hot-path counterpart of
+    /// [`CommStats::wire_breakdown`].
+    pub fn wire_totals(&self) -> (u64, u64, u64) {
+        self.inner.lock().unwrap().wire_breakdown()
+    }
+
     pub fn reset(&self) {
-        self.inner.lock().unwrap().records.clear();
+        self.inner.lock().unwrap().clear();
     }
 }
 
@@ -333,11 +401,36 @@ mod tests {
     #[test]
     fn stats_accumulate() {
         let mut st = CommStats::default();
-        st.push(CommRecord { op: "all_gather", bytes_per_rank: 100, group_size: 4, sim_time: 0.5 });
-        st.push(CommRecord { op: "reduce_scatter", bytes_per_rank: 50, group_size: 4, sim_time: 0.25 });
+        st.push(CommRecord::dense("all_gather", 100, 4, 0.5));
+        st.push(CommRecord::dense("reduce_scatter", 50, 4, 0.25));
         assert_eq!(st.total_bytes(), 600);
         assert_eq!(st.total_time(), 0.75);
         assert_eq!(st.count("all_gather"), 1);
+        // dense records are all payload
+        assert_eq!(st.wire_breakdown(), (600, 0, 0));
+    }
+
+    #[test]
+    fn wire_breakdown_splits_quantized_records() {
+        let mut st = CommStats::default();
+        st.push(CommRecord {
+            op: "all_gather",
+            bytes_per_rank: 40,
+            payload_bytes: 32,
+            scale_bytes: 4,
+            group_size: 2,
+            sim_time: 0.1,
+        });
+        assert_eq!(st.wire_breakdown(), (64, 8, 8));
+        assert_eq!(st.total_bytes(), 80);
+        // merge carries the running totals; clear resets them
+        let mut other = CommStats::default();
+        other.push(CommRecord::dense("all_gather", 10, 2, 0.0));
+        st.merge(other);
+        assert_eq!(st.wire_breakdown(), (84, 8, 8));
+        st.clear();
+        assert_eq!(st.wire_breakdown(), (0, 0, 0));
+        assert!(st.records.is_empty());
     }
 
     #[test]
@@ -348,12 +441,7 @@ mod tests {
                 let shared = &shared;
                 s.spawn(move || {
                     let mut local = CommStats::default();
-                    local.push(CommRecord {
-                        op: "all_gather",
-                        bytes_per_rank: 10 * (rank + 1),
-                        group_size: 4,
-                        sim_time: 0.1,
-                    });
+                    local.push(CommRecord::dense("all_gather", 10 * (rank + 1), 4, 0.1));
                     shared.merge(local);
                 });
             }

@@ -27,6 +27,7 @@ use anyhow::{bail, Result};
 
 use crate::comm::Fabric;
 use crate::fsdp::spec::OptimBinding;
+use crate::quant::CommPrecision;
 
 use super::{CommBackend, GroupOverride, OptimKind, ParallelConfig, System, TrainConfig};
 
@@ -132,9 +133,17 @@ impl ConfigFile {
                         anyhow::anyhow!("[group.{which}]: lr = '{val}' is not a number")
                     })?);
                 }
+                "comm_precision" => {
+                    o.comm = Some(CommPrecision::parse(val).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "[group.{which}]: unknown comm_precision '{val}' \
+                             (expected f32, bf16, or q8[:block])"
+                        )
+                    })?);
+                }
                 _ => bail!(
                     "[group.{which}]: unknown field '{field}' (expected optimizer, \
-                     rows, granularity, reshard_after_forward, or lr)"
+                     rows, granularity, reshard_after_forward, lr, or comm_precision)"
                 ),
             }
         }
@@ -166,6 +175,12 @@ impl ConfigFile {
                 Fabric::preset_names()
             );
         }
+        let comm_precision = self.str_or("run.comm_precision", &d.comm_precision);
+        if CommPrecision::parse(&comm_precision).is_none() {
+            bail!(
+                "unknown comm_precision '{comm_precision}' (expected f32, bf16, or q8[:block])"
+            );
+        }
         Ok(TrainConfig {
             model: self.str_or("model.preset", &d.model),
             parallel: ParallelConfig {
@@ -184,6 +199,7 @@ impl ConfigFile {
             backend,
             prefetch: self.usize_or("run.prefetch", d.prefetch),
             fabric,
+            comm_precision,
             groups: self.group_overrides()?,
         })
     }
@@ -261,6 +277,7 @@ preset = "tiny"
 [run]
 optimizer = "adamw"
 fabric = "h100"
+comm_precision = "bf16"
 
 [group.layers]
 optimizer = "muon"
@@ -269,6 +286,7 @@ lr = 0.02
 [group.head]
 rows = 32
 reshard_after_forward = false
+comm_precision = "q8:128"
 "#;
 
     #[test]
@@ -284,6 +302,9 @@ reshard_after_forward = false
         assert_eq!(head.rows, Some(32));
         assert_eq!(head.reshard, Some(false));
         assert!(head.optim.is_none());
+        assert_eq!(tc.comm_precision, "bf16");
+        assert_eq!(head.comm, Some(CommPrecision::Q8 { block: 128 }));
+        assert!(tc.groups.iter().find(|o| o.which == "layers").unwrap().comm.is_none());
     }
 
     #[test]
@@ -294,5 +315,10 @@ reshard_after_forward = false
         assert!(bad_opt.group_overrides().is_err());
         let bad_fabric = ConfigFile::parse("[run]\nfabric = \"tpu\"").unwrap();
         assert!(bad_fabric.train_config().is_err());
+        let bad_prec = ConfigFile::parse("[run]\ncomm_precision = \"int3\"").unwrap();
+        assert!(bad_prec.train_config().is_err());
+        let bad_group_prec =
+            ConfigFile::parse("[group.embed]\ncomm_precision = \"q8:0\"").unwrap();
+        assert!(bad_group_prec.group_overrides().is_err());
     }
 }

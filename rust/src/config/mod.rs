@@ -16,6 +16,7 @@ pub use crate::cluster::CommBackend;
 pub use presets::{ModelPreset, MoeInfo, ParamDecl, ParamGroup};
 
 use crate::fsdp::spec::OptimBinding;
+use crate::quant::CommPrecision;
 
 /// One `[group.<which>]` config-file section: per-group edits applied on
 /// top of the layerwise wrapping at session build time. `which` is a
@@ -34,6 +35,9 @@ pub struct GroupOverride {
     pub reshard: Option<bool>,
     /// Group-local learning rate.
     pub lr: Option<f32>,
+    /// Wire precision of the group's collectives
+    /// (`comm_precision = "f32" | "bf16" | "q8[:block]"`).
+    pub comm: Option<CommPrecision>,
 }
 
 /// Which FSDP implementation to run (paper §6 baselines).
@@ -177,6 +181,9 @@ pub struct TrainConfig {
     pub prefetch: usize,
     /// Fabric preset name (`run.fabric` / `--fabric`): h800 | h100 | a100.
     pub fabric: String,
+    /// Session-default wire precision (`run.comm_precision` /
+    /// `--comm-precision`): f32 | bf16 | q8[:block].
+    pub comm_precision: String,
     /// Per-group `[group.*]` overrides, applied on the layerwise wrapping.
     pub groups: Vec<GroupOverride>,
 }
@@ -197,6 +204,7 @@ impl Default for TrainConfig {
             backend: CommBackend::Serial,
             prefetch: 0,
             fabric: "h800".into(),
+            comm_precision: "f32".into(),
             groups: Vec::new(),
         }
     }

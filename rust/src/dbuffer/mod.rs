@@ -38,6 +38,7 @@ use crate::comm::{CommRecord, Fabric};
 use crate::memory::{BlockId, SharedAllocator};
 use crate::mesh::DeviceMesh;
 use crate::planner::Layout;
+use crate::quant::{self, CommPrecision};
 
 /// Per-bucket distributed buffer over an FSDP group of `m` devices.
 #[derive(Debug)]
@@ -59,6 +60,12 @@ pub struct DBuffer {
     /// Transient claim for the gathered full buffer (alive while
     /// `gathered` or a gather is in flight).
     full_block: Option<BlockId>,
+    /// Transient claim for quantized wire buffers (alive while an encoded
+    /// gather is in flight).
+    wire_block: Option<BlockId>,
+    /// A quantized (wire-encoded) gather is in flight: `full` stays home
+    /// but must not be read until `finish_gather_prec` decodes into it.
+    wire_inflight: bool,
 }
 
 impl DBuffer {
@@ -73,6 +80,8 @@ impl DBuffer {
             alloc: None,
             _shard_block: None,
             full_block: None,
+            wire_block: None,
+            wire_inflight: false,
         }
     }
 
@@ -216,6 +225,149 @@ impl DBuffer {
         Ok(())
     }
 
+    /// Claim transient allocator storage for quantized wire buffers.
+    fn acquire_wire(&mut self, words: usize) -> Result<()> {
+        if let Some(alloc) = &self.alloc {
+            if self.wire_block.is_none() {
+                self.wire_block =
+                    Some(alloc.lock().unwrap().alloc(((words * 4) as u64).max(1))?);
+            }
+        }
+        Ok(())
+    }
+
+    fn release_wire(&mut self) {
+        if let (Some(alloc), Some(id)) = (&self.alloc, self.wire_block.take()) {
+            alloc.lock().unwrap().free(id).expect("wire block double-freed");
+        }
+    }
+
+    /// Encode every rank's local shard into its slot of a packed wire
+    /// buffer set (rank k owns `wire[k][k*w..(k+1)*w]`) — the
+    /// cast-before-comm half of the quantized AllGather.
+    fn encode_shard_wire(&self, prec: CommPrecision) -> Vec<Vec<f32>> {
+        let m = self.num_devices();
+        let w = prec.wire_words(self.shard_elems());
+        let mut wire: Vec<Vec<f32>> = vec![vec![0.0; m * w]; m];
+        for (rank, (wb, shard)) in wire.iter_mut().zip(&self.shards).enumerate() {
+            quant::encode_slot(prec, shard, &mut wb[rank * w..(rank + 1) * w]);
+        }
+        wire
+    }
+
+    /// Decode every gathered wire slot into the persistent full buffers.
+    /// Every rank — the shard owner included — receives the *dequantized*
+    /// values, so all ranks compute on identical parameters while the
+    /// fp32 master shards stay exact.
+    fn decode_full_from_wire(&mut self, prec: CommPrecision, wire: &[Vec<f32>]) {
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        let w = prec.wire_words(s);
+        for (rank, full) in self.full.iter_mut().enumerate() {
+            for k in 0..m {
+                quant::decode_slot(
+                    prec,
+                    &wire[rank][k * w..(k + 1) * w],
+                    &mut full[k * s..(k + 1) * s],
+                );
+            }
+        }
+    }
+
+    /// Precision-aware in-place parameter AllGather: `F32` is exactly
+    /// [`DBuffer::all_gather_params`] (bit-identical legacy path); `Bf16`
+    /// / `Q8` encode each shard, ship the packed wire buffers through the
+    /// collective, and dequantize on arrival. Wire-byte accounting (true
+    /// payload + scale + pad) comes from the encoded buffer sizes.
+    pub fn all_gather_params_prec(
+        &mut self,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+        prec: CommPrecision,
+    ) -> Result<()> {
+        if prec.is_f32() {
+            return self.all_gather_params(comm, fabric);
+        }
+        if self.wire_inflight {
+            bail!("all_gather_params_prec: an encoded gather is in flight");
+        }
+        self.acquire_full()?;
+        let w = prec.wire_words(self.shard_elems());
+        let m = self.num_devices();
+        self.acquire_wire(m * w)?;
+        let mut wire = self.encode_shard_wire(prec);
+        comm.all_gather(&mut wire, w)?;
+        self.decode_full_from_wire(prec, &wire);
+        self.release_wire();
+        self.gathered = true;
+        self.record_gather_prec(comm, fabric, prec);
+        Ok(())
+    }
+
+    /// Begin a nonblocking precision-aware gather: `F32` delegates to
+    /// [`DBuffer::begin_gather`]; otherwise the *encoded wire buffers*
+    /// travel in the returned op while `full` stays home, and
+    /// [`DBuffer::finish_gather_prec`] decodes on completion — which is
+    /// how the pipelined executor overlaps bucket *l*'s dequant with
+    /// bucket *l+1*'s in-flight quantized AllGather.
+    pub fn begin_gather_prec(
+        &mut self,
+        comm: &dyn Communicator,
+        prec: CommPrecision,
+    ) -> Result<PendingOp> {
+        if prec.is_f32() {
+            return self.begin_gather(comm);
+        }
+        if self.gathered {
+            bail!("begin_gather_prec: buffer already gathered");
+        }
+        if self.wire_inflight {
+            bail!("begin_gather_prec: a gather is already in flight");
+        }
+        self.acquire_full()?;
+        let w = prec.wire_words(self.shard_elems());
+        let m = self.num_devices();
+        self.acquire_wire(m * w)?;
+        let wire = self.encode_shard_wire(prec);
+        self.wire_inflight = true;
+        Ok(comm.all_gather_async(wire, w))
+    }
+
+    /// Complete a gather started with [`DBuffer::begin_gather_prec`]:
+    /// blocks until the wire exchange finishes, decodes every slot into
+    /// the full buffers, and records the op with its true wire bytes.
+    pub fn finish_gather_prec(
+        &mut self,
+        op: PendingOp,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+        prec: CommPrecision,
+    ) -> Result<()> {
+        if prec.is_f32() {
+            return self.finish_gather(op, comm, fabric);
+        }
+        if !self.wire_inflight {
+            bail!("finish_gather_prec: no encoded gather in flight");
+        }
+        self.wire_inflight = false;
+        match op.wait() {
+            Ok(wire) => {
+                self.decode_full_from_wire(prec, &wire);
+                self.release_wire();
+                self.gathered = true;
+                self.record_gather_prec(comm, fabric, prec);
+                Ok(())
+            }
+            Err(e) => {
+                // restore a usable (ungathered) state and release the
+                // transient claims
+                self.release_wire();
+                self.release_full();
+                Err(e)
+            }
+        }
+    }
+
     /// Begin a nonblocking parameter AllGather: the full buffers move
     /// into the returned [`PendingOp`] (their shard regions pre-filled
     /// from the local shards) and come back via
@@ -266,12 +418,22 @@ impl DBuffer {
     }
 
     fn record_gather(&self, comm: &dyn Communicator, fabric: &Fabric) {
+        self.record_gather_prec(comm, fabric, CommPrecision::F32);
+    }
+
+    /// Record an AllGather with the wire bytes the chosen precision
+    /// actually shipped (for `F32` this is exactly the legacy record).
+    fn record_gather_prec(&self, comm: &dyn Communicator, fabric: &Fabric, prec: CommPrecision) {
+        let vol = prec.wire_volume(self.layout.shard_size);
+        let bytes = vol.total();
         let aligned = fabric.is_aligned(0, self.shard_bytes());
         comm.record(CommRecord {
             op: "all_gather",
-            bytes_per_rank: self.shard_bytes(),
+            bytes_per_rank: bytes,
+            payload_bytes: vol.payload,
+            scale_bytes: vol.scale,
             group_size: self.num_devices(),
-            sim_time: fabric.all_gather_time(self.num_devices(), self.shard_bytes(), aligned),
+            sim_time: fabric.all_gather_time(self.num_devices(), bytes, aligned),
         });
     }
 
@@ -281,6 +443,12 @@ impl DBuffer {
     /// gather can reuse the segment immediately.
     pub fn release_full(&mut self) {
         self.gathered = false;
+        if self.wire_inflight {
+            // an encoded gather still owns the wire storage — keep the
+            // claims; finish_gather_prec (or its error path) releases them
+            debug_assert!(false, "release_full during in-flight encoded gather");
+            return;
+        }
         if self.full.len() != self.num_devices() {
             // an async gather still owns the storage — keep the allocator
             // claim; finish_gather (or its error path) releases it
@@ -341,6 +509,52 @@ impl DBuffer {
         self.reduce_gradients_finish(grads, dst, mesh, comm, fabric)
     }
 
+    /// Precision-aware gradient reduction into caller-owned shards: `F32`
+    /// is exactly [`DBuffer::reduce_gradients_core`]; `Bf16`/`Q8` run the
+    /// quantized ReduceScatter (`quant::reduce_scatter_prec` — encoded
+    /// all-to-all + rank-ordered dequant-sum), with `Q8` maintaining the
+    /// shard-held error-feedback residuals in `ef`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn reduce_gradients_core_prec(
+        &self,
+        grads: &mut [Vec<f32>],
+        dst: &mut [Vec<f32>],
+        mesh: &DeviceMesh,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+        prec: CommPrecision,
+        ef: &mut Vec<Vec<f32>>,
+    ) -> Result<()> {
+        if prec.is_f32() {
+            return self.reduce_gradients_core(grads, dst, mesh, comm, fabric);
+        }
+        let m = self.num_devices();
+        if grads.len() != m {
+            bail!("reduce_gradients: {} grad buffers != {m}", grads.len());
+        }
+        // transient wire claim: one device's encoded buffers, charged for
+        // the duration of the exchange — the same accounting the
+        // pipelined executor applies to its async wire buffers
+        let wire_bytes = (m * prec.wire_words(self.shard_elems()) * 4) as u64;
+        let wire_claim = match &self.alloc {
+            Some(a) => Some(a.lock().unwrap().alloc(wire_bytes.max(1))?),
+            None => None,
+        };
+        let result = quant::reduce_scatter_prec(
+            comm,
+            prec,
+            grads,
+            self.shard_elems(),
+            self.reduce_scale(mesh),
+            ef,
+        );
+        if let (Some(a), Some(id)) = (&self.alloc, wire_claim) {
+            a.lock().unwrap().free(id)?;
+        }
+        result?;
+        self.reduce_gradients_finish_prec(grads, dst, mesh, comm, fabric, prec)
+    }
+
     /// Completion half of a gradient reduction whose ReduceScatter
     /// already ran (synchronously, or via `reduce_scatter_async` — the
     /// pipelined executor's overlap path): copies the reduced shard
@@ -354,6 +568,23 @@ impl DBuffer {
         comm: &dyn Communicator,
         fabric: &Fabric,
     ) -> Result<()> {
+        self.reduce_gradients_finish_prec(reduced, dst, mesh, comm, fabric, CommPrecision::F32)
+    }
+
+    /// Completion half of a precision-aware gradient reduction: copies
+    /// the reduced shard regions into `dst`, performs the cross-replica
+    /// AllReduce under HSDP (always dense f32 — replicas exchange
+    /// already-reduced shards), and records the ReduceScatter with the
+    /// wire bytes its precision actually shipped.
+    pub fn reduce_gradients_finish_prec(
+        &self,
+        reduced: &[Vec<f32>],
+        dst: &mut [Vec<f32>],
+        mesh: &DeviceMesh,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+        prec: CommPrecision,
+    ) -> Result<()> {
         let m = self.num_devices();
         let s = self.shard_elems();
         if reduced.len() != m || dst.len() != m {
@@ -362,12 +593,16 @@ impl DBuffer {
         for (rank, (dst_shard, buf)) in dst.iter_mut().zip(reduced).enumerate() {
             dst_shard.copy_from_slice(&buf[rank * s..(rank + 1) * s]);
         }
+        let vol = prec.wire_volume(self.layout.shard_size);
+        let bytes = vol.total();
         let aligned = fabric.is_aligned(0, self.shard_bytes());
         comm.record(CommRecord {
             op: "reduce_scatter",
-            bytes_per_rank: self.shard_bytes(),
+            bytes_per_rank: bytes,
+            payload_bytes: vol.payload,
+            scale_bytes: vol.scale,
             group_size: m,
-            sim_time: fabric.reduce_scatter_time(m, self.shard_bytes(), aligned),
+            sim_time: fabric.reduce_scatter_time(m, bytes, aligned),
         });
         let replicas = mesh.dim_size("replica").unwrap_or(1);
         if replicas > 1 {
@@ -380,12 +615,12 @@ impl DBuffer {
                     *x *= replicas as f32;
                 }
             }
-            comm.record(CommRecord {
-                op: "all_reduce",
-                bytes_per_rank: self.shard_bytes(),
-                group_size: replicas,
-                sim_time: fabric.all_reduce_time(replicas, self.shard_bytes(), aligned),
-            });
+            comm.record(CommRecord::dense(
+                "all_reduce",
+                self.shard_bytes(),
+                replicas,
+                fabric.all_reduce_time(replicas, self.shard_bytes(), aligned),
+            ));
         }
         Ok(())
     }
@@ -605,6 +840,112 @@ mod tests {
         db.finish_gather(op, &comm, &fabric).unwrap();
         assert_eq!(alloc.lock().unwrap().reserved, reserved, "no segment growth");
         db.release_full();
+    }
+
+    #[test]
+    fn quantized_gather_bit_identical_across_backends_and_halves() {
+        let prec = CommPrecision::Q8 { block: 16 };
+        let fabric = Fabric::h800();
+        let comm = SerialComm::new();
+        let (mut serial_db, _) = demo_buffer(4);
+        serial_db.all_gather_params_prec(&comm, &fabric, prec).unwrap();
+        let (mut thr_db, _) = demo_buffer(4);
+        thr_db
+            .all_gather_params_prec(&ThreadedComm::with_min_parallel_elems(0), &fabric, prec)
+            .unwrap();
+        let (mut split_db, _) = demo_buffer(4);
+        let op = split_db.begin_gather_prec(&comm, prec).unwrap();
+        assert!(!split_db.gathered);
+        split_db.finish_gather_prec(op, &comm, &fabric, prec).unwrap();
+        assert!(split_db.gathered);
+        for rank in 0..4 {
+            for ((a, b), c) in serial_db.full[rank]
+                .iter()
+                .zip(&thr_db.full[rank])
+                .zip(&split_db.full[rank])
+            {
+                assert_eq!(a.to_bits(), b.to_bits(), "threaded diverged");
+                assert_eq!(a.to_bits(), c.to_bits(), "split halves diverged");
+            }
+        }
+        // every rank — the owner included — sees the *dequantized* shard
+        let s = serial_db.shard_elems();
+        for k in 0..4 {
+            let expect = quant::QBlockTensor::quantize(&serial_db.shards[k], 16).dequantize();
+            for (a, b) in serial_db.full[0][k * s..(k + 1) * s].iter().zip(&expect) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // the record carries the measured, reduced wire bytes + scales
+        let stats = comm.stats();
+        let rec = stats.records.iter().find(|r| r.op == "all_gather").unwrap();
+        assert!(rec.bytes_per_rank < serial_db.shard_bytes() / 3);
+        assert!(rec.scale_bytes > 0);
+        assert_eq!(
+            rec.bytes_per_rank,
+            prec.wire_volume(serial_db.layout.shard_size).total()
+        );
+    }
+
+    #[test]
+    fn quantized_gather_allocator_lifecycle() {
+        use crate::memory::{shared_allocator, FreePolicy};
+        let prec = CommPrecision::Q8 { block: 8 };
+        let ts = vec![TensorDecl::new("a", 96, 32), TensorDecl::new("b", 100, 1)];
+        let layout = plan(&ts, 4, 1).unwrap();
+        let alloc = shared_allocator(FreePolicy::Deterministic, 1 << 30);
+        let mut db = DBuffer::with_allocator(layout, alloc.clone()).unwrap();
+        let base = alloc.lock().unwrap().allocated;
+        let comm = SerialComm::new();
+        let fabric = Fabric::h800();
+        // sync path frees the wire claim before returning
+        db.all_gather_params_prec(&comm, &fabric, prec).unwrap();
+        let gathered = alloc.lock().unwrap().allocated;
+        assert_eq!(gathered, base + db.full_bytes(), "wire claim must be transient");
+        db.release_full();
+        assert_eq!(alloc.lock().unwrap().allocated, base);
+        // split path holds the wire claim only while the op is in flight
+        let op = db.begin_gather_prec(&comm, prec).unwrap();
+        let inflight = alloc.lock().unwrap().allocated;
+        assert!(inflight > base + db.full_bytes(), "wire claim missing in flight");
+        db.finish_gather_prec(op, &comm, &fabric, prec).unwrap();
+        assert_eq!(alloc.lock().unwrap().allocated, base + db.full_bytes());
+        db.release_full();
+        assert_eq!(alloc.lock().unwrap().allocated, base);
+    }
+
+    #[test]
+    fn quantized_reduce_close_to_dense_and_replica_ar_preserved() {
+        let (db, _) = demo_buffer(4);
+        let m = 4;
+        let n = m * db.shard_elems();
+        let mk = || -> Vec<Vec<f32>> {
+            let mut rng = Rng::new(21);
+            (0..m)
+                .map(|_| (0..n).map(|_| rng.normal_f32()).collect())
+                .collect()
+        };
+        let mesh = DeviceMesh::new(&[("replica", 2), ("fsdp", 4)]).unwrap();
+        let fabric = Fabric::h800();
+        let comm = SerialComm::new();
+        let mut dense = mk();
+        let mut dst_dense = vec![vec![0.0f32; db.shard_elems()]; m];
+        db.reduce_gradients_core(&mut dense, &mut dst_dense, &mesh, &comm, &fabric)
+            .unwrap();
+        let prec = CommPrecision::Q8 { block: 8 };
+        let mut q = mk();
+        let mut dst_q = vec![vec![0.0f32; db.shard_elems()]; m];
+        let mut ef = Vec::new();
+        db.reduce_gradients_core_prec(&mut q, &mut dst_q, &mesh, &comm, &fabric, prec, &mut ef)
+            .unwrap();
+        assert_eq!(ef.len(), m);
+        for (a, b) in dst_dense.iter().flatten().zip(dst_q.iter().flatten()) {
+            // 4 contributions x half a quant step each, replica-rescaled
+            assert!((a - b).abs() < 4.0 * 4.0 / 127.0, "{a} vs {b}");
+        }
+        // both paths account the RS + the cross-replica AR
+        assert_eq!(comm.stats().count("reduce_scatter"), 2);
+        assert_eq!(comm.stats().count("all_reduce"), 2);
     }
 
     #[test]

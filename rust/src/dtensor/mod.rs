@@ -135,24 +135,24 @@ impl DTensor {
                 // cost: each element moving ranks crosses the wire once;
                 // worst case (gather to root) ~ AllGather of others' shards
                 let moved = self.moved_bytes(spec2, numel);
-                comm.record(CommRecord {
-                    op: "redistribute",
-                    bytes_per_rank: moved / m as u64,
-                    group_size: m,
-                    sim_time: fabric.all_gather_time(m, moved / m as u64, true),
-                });
+                comm.record(CommRecord::dense(
+                    "redistribute",
+                    moved / m as u64,
+                    m,
+                    fabric.all_gather_time(m, moved / m as u64, true),
+                ));
                 Ok(out)
             }
 
             // ---- RaggedShard -> Replicate (AllGather) ----
             (Placement::RaggedShard(spec), Placement::Replicate) => {
                 let full = self.to_full();
-                comm.record(CommRecord {
-                    op: "all_gather",
-                    bytes_per_rank: spec.max_local_numel(numel) * 4,
-                    group_size: m,
-                    sim_time: fabric.all_gather_time(m, spec.max_local_numel(numel) * 4, true),
-                });
+                comm.record(CommRecord::dense(
+                    "all_gather",
+                    spec.max_local_numel(numel) * 4,
+                    m,
+                    fabric.all_gather_time(m, spec.max_local_numel(numel) * 4, true),
+                ));
                 Ok(DTensor::replicate(&self.global_shape, &full, m))
             }
 
@@ -168,12 +168,12 @@ impl DTensor {
                 comm.all_reduce(&mut bufs, 1.0)?;
                 let out =
                     DTensor::ragged_from_full(&self.global_shape, &bufs[0], spec2.clone())?;
-                comm.record(CommRecord {
-                    op: "reduce_scatter",
-                    bytes_per_rank: bytes / m as u64,
-                    group_size: m,
-                    sim_time: fabric.reduce_scatter_time(m, bytes / m as u64, true),
-                });
+                comm.record(CommRecord::dense(
+                    "reduce_scatter",
+                    bytes / m as u64,
+                    m,
+                    fabric.reduce_scatter_time(m, bytes / m as u64, true),
+                ));
                 Ok(out)
             }
 
@@ -181,12 +181,12 @@ impl DTensor {
             (Placement::Partial, Placement::Replicate) => {
                 let mut bufs = self.locals.clone();
                 comm.all_reduce(&mut bufs, 1.0)?;
-                comm.record(CommRecord {
-                    op: "all_reduce",
-                    bytes_per_rank: bytes / m as u64,
-                    group_size: m,
-                    sim_time: fabric.all_reduce_time(m, bytes / m as u64, true),
-                });
+                comm.record(CommRecord::dense(
+                    "all_reduce",
+                    bytes / m as u64,
+                    m,
+                    fabric.all_reduce_time(m, bytes / m as u64, true),
+                ));
                 Ok(DTensor {
                     global_shape: self.global_shape.clone(),
                     placement: Placement::Replicate,

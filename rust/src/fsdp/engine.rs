@@ -28,6 +28,8 @@ use crate::mesh::DeviceMesh;
 use crate::optim::group::{self as optim_group, GroupEnv};
 use crate::optim::{GroupOptimizer, Muon, ShardOptimizer};
 use crate::planner::{self, TensorDecl};
+use crate::quant::CommPrecision;
+use crate::util::lcm;
 
 use super::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
 
@@ -103,6 +105,13 @@ pub struct Bucket {
     /// Whether the pipelined executor reshards this group right after its
     /// forward (`true` = the paper's default schedule).
     pub reshard_after_forward: bool,
+    /// Wire precision of this group's collectives (from the spec).
+    pub comm_precision: CommPrecision,
+    /// Per-rank error-feedback residuals (one `S`-element f32 vector per
+    /// rank) for the quantized gradient ReduceScatter — the aggregate
+    /// quantization error of each owned chunk, re-injected next step.
+    /// Empty until the first `Q8` reduction.
+    pub ef: Vec<Vec<f32>>,
 }
 
 /// Borrow one bucket's state as a [`GroupEnv`] for a group-optimizer
@@ -247,16 +256,23 @@ impl FsdpEngine {
                 None => mesh.clone(),
             };
             let g_fabric = g.fabric.clone().unwrap_or_else(|| fabric.clone());
+            // a Q8 wire precision feeds its quant block into the planner:
+            // tensor granularities are lcm'd with the block (so device
+            // boundaries inside tensors respect it) and the collective
+            // alignment forces the shard size to a whole number of blocks
+            // — every quant block and its scale live on exactly one device
+            let prec_align = g.comm_precision.align_elems();
             let decls: Vec<TensorDecl> = ids
                 .iter()
                 .map(|&i| {
                     let (name, shape) = &params[i];
                     let numel: u64 = shape.iter().map(|&s| s as u64).product();
-                    let gran = g.policy.granularity_of(name, shape).min(numel).max(1);
+                    let base = g.policy.granularity_of(name, shape).max(1);
+                    let gran = lcm(base, prec_align).min(numel).max(1);
                     TensorDecl::new(name, numel, gran)
                 })
                 .collect();
-            let layout = planner::plan(&decls, m, 4)
+            let layout = planner::plan(&decls, m, lcm(4, prec_align))
                 .with_context(|| format!("planning shard group '{}'", g.name))?;
             for (pos, &i) in ids.iter().enumerate() {
                 locs[i] = ParamLoc { bucket: b, idx: pos };
@@ -274,6 +290,8 @@ impl FsdpEngine {
                 mesh: g_mesh,
                 fabric: g_fabric,
                 reshard_after_forward: g.reshard_after_forward,
+                comm_precision: g.comm_precision,
+                ef: Vec::new(),
             });
         }
         // persistent gradient-shard storage, claimed in one batched call
@@ -346,10 +364,12 @@ impl FsdpEngine {
     }
 
     /// AllGather every bucket (in-place, zero-copy views afterwards).
-    /// Each bucket's collective is timed on its own fabric.
+    /// Each bucket's collective is timed on its own fabric and shipped at
+    /// its own wire precision (cast-before-comm for `Bf16`/`Q8`).
     pub fn gather_params(&mut self) -> Result<()> {
         for b in &mut self.buckets {
-            b.dbuffer.all_gather_params(self.comm.as_ref(), &b.fabric)?;
+            b.dbuffer
+                .all_gather_params_prec(self.comm.as_ref(), &b.fabric, b.comm_precision)?;
         }
         Ok(())
     }
@@ -393,12 +413,15 @@ impl FsdpEngine {
                 stage_bucket_grads(bucket, self.m, &self.alloc, &|rank, pos| {
                     &grads[rank][bucket.param_ids[pos]][..]
                 })?;
-            bucket.dbuffer.reduce_gradients_core(
+            let Bucket { dbuffer, grad_shards, mesh, fabric, comm_precision, ef, .. } = bucket;
+            dbuffer.reduce_gradients_core_prec(
                 &mut bufs,
-                &mut bucket.grad_shards,
-                &bucket.mesh,
+                grad_shards,
+                mesh,
                 self.comm.as_ref(),
-                &bucket.fabric,
+                fabric,
+                *comm_precision,
+                ef,
             )?;
             self.alloc.lock().unwrap().free(block)?;
         }
@@ -754,6 +777,35 @@ mod tests {
         assert_eq!(e.buckets[1].dbuffer.layout.ragged_spec(0).granularity, 128);
         assert_eq!(e.buckets[0].dbuffer.layout.ragged_spec(0).granularity, 1);
         assert_eq!(e.buckets[0].param_meta[0].0, "embed");
+    }
+
+    #[test]
+    fn q8_precision_aligns_planner_to_quant_blocks() {
+        let params = vec![
+            ("w".to_string(), vec![25, 7]), // 175 elems, deliberately ragged
+            ("b".to_string(), vec![13]),
+        ];
+        let spec = ModelSpec::new().group(
+            ShardGroupSpec::new("all", GroupFilter::Rest)
+                .comm_precision(CommPrecision::Q8 { block: 32 }),
+        );
+        let e = FsdpEngine::from_spec(
+            params,
+            &spec,
+            DeviceMesh::flat("fsdp", 4),
+            Fabric::h800(),
+            Arc::new(SerialComm::new()),
+        )
+        .unwrap();
+        let layout = &e.buckets[0].dbuffer.layout;
+        // the shard size is a whole number of quant blocks, so per-rank
+        // shard quantization never straddles a device boundary
+        assert_eq!(layout.shard_size % 32, 0);
+        // tensor granularity is lcm'd with the block (tensors smaller
+        // than a block shard whole)
+        assert_eq!(layout.tensors[0].granularity, 32);
+        assert_eq!(layout.tensors[1].granularity, 13);
+        assert_eq!(e.buckets[0].comm_precision, CommPrecision::Q8 { block: 32 });
     }
 
     #[test]

@@ -44,6 +44,7 @@ use crate::cluster::{Cluster, CommBackend, PendingOp};
 use crate::fsdp::engine::Bucket;
 use crate::fsdp::FsdpEngine;
 use crate::memory::BlockId;
+use crate::quant;
 use crate::runtime::native::{self, LayerCache, LayerParams};
 use crate::runtime::{Engine as ComputeEngine, ModelCfg};
 
@@ -335,8 +336,11 @@ fn issue_gathers(
             return Ok(());
         };
         let comm = engine.comm.clone();
+        let prec = engine.buckets[b].comm_precision;
         let t0 = Instant::now();
-        let op = engine.buckets[b].dbuffer.begin_gather(comm.as_ref())?;
+        // cast-before-comm: the encode (quant kernel) runs at issue time,
+        // so it is charged as exposed alongside the issue cost
+        let op = engine.buckets[b].dbuffer.begin_gather_prec(comm.as_ref(), prec)?;
         *exposed += t0.elapsed().as_secs_f64();
         inflight.push_back((b, op));
     }
@@ -357,11 +361,14 @@ fn wait_gather(
     let comm = engine.comm.clone();
     while let Some((bucket, op)) = inflight.pop_front() {
         let t0 = Instant::now();
-        // each bucket's collective is timed on its own (group-local) fabric
+        // each bucket's collective is timed on its own (group-local)
+        // fabric and decoded at its own wire precision; the dequant of an
+        // earlier bucket overlaps later buckets' in-flight gathers
         let fabric = engine.buckets[bucket].fabric.clone();
+        let prec = engine.buckets[bucket].comm_precision;
         engine.buckets[bucket]
             .dbuffer
-            .finish_gather(op, comm.as_ref(), &fabric)?;
+            .finish_gather_prec(op, comm.as_ref(), &fabric, prec)?;
         *exposed += t0.elapsed().as_secs_f64();
         if bucket == b {
             return Ok(());
@@ -370,20 +377,38 @@ fn wait_gather(
     bail!("bucket {b} gather was never issued");
 }
 
+/// One in-flight gradient reduction. For the dense (F32) path the staged
+/// gradient buffers travel inside the op; for a quantized precision only
+/// the encoded wire buffers do, and the (residual-injected) staged
+/// originals are kept here so `finish_reduce` can update the
+/// error-feedback residuals and write the reduced chunks.
+struct PendingReduce {
+    bucket: usize,
+    op: PendingOp,
+    /// Staged originals — `Some` only on the quantized path.
+    staged: Option<Vec<Vec<f32>>>,
+    /// Allocator claim for the staged full-size gradient buffers.
+    staged_block: BlockId,
+    /// Allocator claim for the encoded wire buffers (quantized path).
+    wire_block: Option<BlockId>,
+}
+
 /// Stage bucket `b`'s per-rank gradients at layout offsets (via the same
 /// `stage_bucket_grads` the sequential reduction uses) and issue its
 /// ReduceScatter on the comm backend (overlaps the next bucket's
-/// backward). The staged full-size gradient buffer is transient device
-/// memory — claimed from the allocator until `finish_reduce` frees it.
+/// backward): the dense nonblocking collective for `F32`, or the encoded
+/// all-to-all of `quant::rs_inject_and_encode` for `Bf16`/`Q8`. The
+/// staged full-size gradient buffer is transient device memory — claimed
+/// from the allocator until `finish_reduce` frees it.
 fn begin_reduce(
     engine: &mut FsdpEngine,
     states: &mut [RankState],
     b: usize,
     exposed: &mut f64,
-) -> Result<(usize, PendingOp, BlockId)> {
+) -> Result<PendingReduce> {
     let m = engine.num_devices();
     let s = engine.buckets[b].dbuffer.shard_elems();
-    let (bufs, block) = crate::fsdp::engine::stage_bucket_grads(
+    let (mut bufs, block) = crate::fsdp::engine::stage_bucket_grads(
         &engine.buckets[b],
         m,
         &engine.alloc,
@@ -393,29 +418,77 @@ fn begin_reduce(
         st.bucket_grads.clear();
     }
     let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.buckets[b].mesh);
+    let prec = engine.buckets[b].comm_precision;
+    if prec.is_f32() {
+        let t0 = Instant::now();
+        let op = engine.comm.reduce_scatter_async(bufs, s, scale);
+        *exposed += t0.elapsed().as_secs_f64();
+        return Ok(PendingReduce {
+            bucket: b,
+            op,
+            staged: None,
+            staged_block: block,
+            wire_block: None,
+        });
+    }
+    // cast-before-comm: the encode (quant kernel) and wire claim happen
+    // at issue time and count as exposed, mirroring the gather path
     let t0 = Instant::now();
-    let op = engine.comm.reduce_scatter_async(bufs, s, scale);
+    let wire = quant::rs_inject_and_encode(prec, &mut bufs, s, &mut engine.buckets[b].ef)?;
+    let w = prec.wire_words(s);
+    let wire_block = engine.alloc.lock().unwrap().alloc(((m * w * 4) as u64).max(1))?;
+    let op = engine.comm.all_to_all_async(wire, w);
     *exposed += t0.elapsed().as_secs_f64();
-    Ok((b, op, block))
+    Ok(PendingReduce {
+        bucket: b,
+        op,
+        staged: Some(bufs),
+        staged_block: block,
+        wire_block: Some(wire_block),
+    })
 }
 
-/// Complete an in-flight ReduceScatter: copy the reduced shard regions
-/// into the bucket's grad shards (plus the HSDP replica AllReduce) and
-/// release the staged gradient buffer.
-fn finish_reduce(
-    engine: &mut FsdpEngine,
-    b: usize,
-    op: PendingOp,
-    block: BlockId,
-    exposed: &mut f64,
-) -> Result<()> {
+/// Complete an in-flight ReduceScatter: (for quantized precisions,
+/// dequantize-and-sum the exchanged chunks in rank order and update the
+/// error-feedback residuals first — the same `quant` functions the
+/// sequential path composes, so the bits match), then copy the reduced
+/// shard regions into the bucket's grad shards (plus the HSDP replica
+/// AllReduce) and release the staged gradient / wire buffers.
+fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut f64) -> Result<()> {
+    let PendingReduce { bucket: b, op, staged, staged_block, wire_block } = pending;
     let t0 = Instant::now();
-    let bufs = op.wait()?;
+    let returned = op.wait()?;
     *exposed += t0.elapsed().as_secs_f64();
     let comm = engine.comm.clone();
-    let Bucket { dbuffer, grad_shards, mesh, fabric, .. } = &mut engine.buckets[b];
-    dbuffer.reduce_gradients_finish(&bufs, grad_shards, mesh, comm.as_ref(), fabric)?;
-    engine.alloc.lock().unwrap().free(block)?;
+    let Bucket { dbuffer, grad_shards, mesh, fabric, comm_precision, ef, .. } =
+        &mut engine.buckets[b];
+    match staged {
+        None => {
+            dbuffer.reduce_gradients_finish(&returned, grad_shards, mesh, comm.as_ref(), fabric)?;
+        }
+        Some(mut bufs) => {
+            let s = dbuffer.shard_elems();
+            let scale = dbuffer.reduce_scale(mesh);
+            // the dequant-reduce is wall time the step cannot hide —
+            // exposed, like finish_gather_prec's decode
+            let t1 = Instant::now();
+            quant::rs_decode_reduce(*comm_precision, &returned, &mut bufs, s, scale, ef)?;
+            *exposed += t1.elapsed().as_secs_f64();
+            dbuffer.reduce_gradients_finish_prec(
+                &bufs,
+                grad_shards,
+                mesh,
+                comm.as_ref(),
+                fabric,
+                *comm_precision,
+            )?;
+        }
+    }
+    let mut alloc = engine.alloc.lock().unwrap();
+    alloc.free(staged_block)?;
+    if let Some(wb) = wire_block {
+        alloc.free(wb)?;
+    }
     Ok(())
 }
 
@@ -477,7 +550,7 @@ fn run_pipelined(
         .filter(|&b| !engine.buckets[b].dbuffer.gathered)
         .collect();
     let mut bwd_order = bwd_regather.into_iter();
-    let mut rs_pending: VecDeque<(usize, PendingOp, BlockId)> = VecDeque::new();
+    let mut rs_pending: VecDeque<PendingReduce> = VecDeque::new();
     for b in (0..nb).rev() {
         issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
         wait_gather(engine, &mut inflight, b, exposed)?;
@@ -503,18 +576,18 @@ fn run_pipelined(
         let pending = begin_reduce(engine, &mut states, b, exposed)?;
         rs_pending.push_back(pending);
         // opportunistically retire reductions that already completed
-        while rs_pending.front().is_some_and(|(_, op, _)| op.is_done()) {
-            let (rb, op, blk) = rs_pending.pop_front().unwrap();
-            finish_reduce(engine, rb, op, blk, exposed)?;
+        while rs_pending.front().is_some_and(|p| p.op.is_done()) {
+            let p = rs_pending.pop_front().unwrap();
+            finish_reduce(engine, p, exposed)?;
         }
         // bound the in-flight reductions (live staged-grad memory)
         while rs_pending.len() > prefetch {
-            let (rb, op, blk) = rs_pending.pop_front().unwrap();
-            finish_reduce(engine, rb, op, blk, exposed)?;
+            let p = rs_pending.pop_front().unwrap();
+            finish_reduce(engine, p, exposed)?;
         }
     }
-    while let Some((rb, op, blk)) = rs_pending.pop_front() {
-        finish_reduce(engine, rb, op, blk, exposed)?;
+    while let Some(p) = rs_pending.pop_front() {
+        finish_reduce(engine, p, exposed)?;
     }
     Ok(states.iter().map(|s| s.loss).collect())
 }

@@ -19,6 +19,7 @@ use crate::config::presets::{ModelPreset, ParamGroup};
 use crate::config::{OptimKind, ParallelConfig};
 use crate::memory::{CachingAllocator, FreePolicy};
 use crate::planner::{self, TensorDecl};
+use crate::quant::CommPrecision;
 use crate::util::round_up;
 
 /// GPU under simulation (paper: H800).
@@ -88,6 +89,11 @@ pub struct SystemBehavior {
     pub persist_lp_buffers: bool,
     /// RaggedShard granularity (elements) when format == Planned.
     pub granularity: u64,
+    /// Wire dtype of parameter/gradient collectives: bf16 is the
+    /// production default every baseline ships; `Q8` additionally pays
+    /// the per-block scale + packing overhead — so the predicted comm
+    /// time matches what the numeric engine's quantized path measures.
+    pub comm_precision: CommPrecision,
 }
 
 /// Result of simulating one training iteration on one device.
@@ -248,7 +254,9 @@ pub fn simulate_step(
     let mut comm_time = 0.0f64;
 
     for (i, g) in groups.iter().enumerate() {
-        let bytes = shard_elems[i] * 2; // bf16 on the wire
+        // wire bytes follow the system's comm precision (payload + quant
+        // scales + packing pad), not a hardcoded bf16 assumption
+        let bytes = sys.comm_precision.wire_volume(shard_elems[i]).total();
         let (ag_t, rs_t) = if sys.per_param_collectives {
             // DeepSpeed: one (unaligned) collective per parameter
             let n = g.params.len() as u64;
@@ -601,6 +609,30 @@ mod tests {
         let f2 = quick(&dense, &baselines::fsdp2(), 128);
         assert!(ve.tokens_per_sec > f2.tokens_per_sec * 1.02,
                 "ve {} f2 {}", ve.tokens_per_sec, f2.tokens_per_sec);
+    }
+
+    #[test]
+    fn wire_precision_drives_comm_time() {
+        let preset = presets::llama70b();
+        let mk = |prec: CommPrecision| {
+            let mut sys = baselines::vescale(1);
+            sys.comm_precision = prec;
+            quick(&preset, &sys, 128)
+        };
+        let full = mk(CommPrecision::F32);
+        let bf = mk(CommPrecision::Bf16);
+        let q8 = mk(CommPrecision::Q8 { block: 64 });
+        assert!(
+            full.comm_time > bf.comm_time * 1.8,
+            "f32 {} bf16 {}",
+            full.comm_time,
+            bf.comm_time
+        );
+        assert!(bf.comm_time > q8.comm_time * 1.5, "bf16 {} q8 {}", bf.comm_time, q8.comm_time);
+        // the per-block scale overhead is accounted: coarser blocks ship
+        // fewer scale bytes
+        let q8_coarse = mk(CommPrecision::Q8 { block: 1024 });
+        assert!(q8.comm_time > q8_coarse.comm_time);
     }
 
     #[test]

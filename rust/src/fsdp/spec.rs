@@ -65,6 +65,7 @@ use crate::mesh::DeviceMesh;
 use crate::optim::{
     Adam8bitGroup, AdamHyper, AdamW, FlatGroup, GroupOptimizer, Muon, MuonGroup, Sgd,
 };
+use crate::quant::CommPrecision;
 
 use super::engine::ShardingPolicy;
 
@@ -180,6 +181,13 @@ pub struct ShardGroupSpec {
     pub mesh: Option<DeviceMesh>,
     /// Fabric override; `None` inherits the session fabric.
     pub fabric: Option<Fabric>,
+    /// Wire precision of this group's parameter AllGather / gradient
+    /// ReduceScatter: full f32 (default, bit-identical legacy path),
+    /// cast-before-comm bf16, or block-wise int8 with shard-held
+    /// error-feedback on gradients. Choosing `Q8` feeds its block into
+    /// the planner granularity so quant blocks and scales never straddle
+    /// devices.
+    pub comm_precision: CommPrecision,
 }
 
 impl ShardGroupSpec {
@@ -193,6 +201,7 @@ impl ShardGroupSpec {
             reshard_after_forward: true,
             mesh: None,
             fabric: None,
+            comm_precision: CommPrecision::F32,
         }
     }
 
@@ -223,6 +232,11 @@ impl ShardGroupSpec {
 
     pub fn fabric(mut self, fabric: Fabric) -> Self {
         self.fabric = Some(fabric);
+        self
+    }
+
+    pub fn comm_precision(mut self, prec: CommPrecision) -> Self {
+        self.comm_precision = prec;
         self
     }
 }
@@ -472,6 +486,14 @@ mod tests {
         assert_eq!(spec.group_named("layer1").unwrap().optim, OptimBinding::Muon);
         assert_eq!(spec.group_named("head").unwrap().optim, OptimBinding::AdamW);
         assert!(spec.group_named("layer0").unwrap().hyper.is_some());
+    }
+
+    #[test]
+    fn comm_precision_defaults_f32_and_overrides() {
+        let g = ShardGroupSpec::new("g", GroupFilter::Rest);
+        assert!(g.comm_precision.is_f32());
+        let g = g.comm_precision(CommPrecision::Q8 { block: 32 });
+        assert_eq!(g.comm_precision, CommPrecision::Q8 { block: 32 });
     }
 
     #[test]

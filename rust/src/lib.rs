@@ -74,6 +74,29 @@
 //! exposed-comm fraction against the `fsdp::sim` prediction), while the
 //! paper's H800 fabric numbers come from the analytic `comm::cost::Fabric`
 //! model, accumulated thread-safely in `comm::SharedStats`.
+//!
+//! ## Quantized communication
+//!
+//! The [`quant`] module is the block-wise quantized communication
+//! subsystem (§6.3): a per-shard-group [`quant::CommPrecision`] wire
+//! policy (`F32` | `Bf16` | `Q8 { block }`) declared on the spec /
+//! builder / config / `--comm-precision`. `Q8` groups cast-before-comm
+//! their parameter AllGathers to `{packed int8 codes, per-block f32
+//! absmax scales}` (quant math bit-for-bit equal to
+//! `python/compile/kernels/blockwise_quant.py` and `optim::adam8bit`) and
+//! run their gradient ReduceScatter as an encoded all-to-all with
+//! rank-ordered dequant-reduction plus **shard-held error-feedback
+//! residuals**, so quantization error is re-injected the next step
+//! instead of biasing training. Choosing `Q8` feeds the quant block into
+//! the planner's granularity (lcm with the group's row granularity), so
+//! every quant block and its scale live entirely on one device — the
+//! paper's structure-aware planning put to work on the wire. True wire
+//! bytes (payload vs scale vs packing pad) are measured into
+//! `comm::CommRecord`/`train::StepLog` and priced identically by the
+//! `fsdp::sim` cost model; `benches/fig12_quant_comm.rs` compares F32 /
+//! Bf16 / Q8 wire volume and wall-clock across rank counts
+//! (`BENCH_quant.json`). `F32` bypasses the subsystem entirely —
+//! bit-identical to the pre-quantization engine (`tests/quant_comm.rs`).
 
 pub mod checkpoint;
 pub mod cluster;
@@ -88,6 +111,7 @@ pub mod mesh;
 pub mod optim;
 pub mod placement;
 pub mod planner;
+pub mod quant;
 pub mod runtime;
 pub mod tensor;
 pub mod train;

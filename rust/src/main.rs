@@ -4,6 +4,7 @@
 //!                         [--opt adamw|adam8bit|muon|sgd] [--steps 50]
 //!                         [--backend serial|threaded] [--prefetch N]
 //!                         [--fabric h800|h100|a100]
+//!                         [--comm-precision f32|bf16|q8[:block]]
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
 //!                          executor with up to N in-flight bucket collectives)
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
@@ -27,6 +28,7 @@ use vescale_fsdp::fsdp::spec::OptimBinding;
 use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::planner::{plan, TensorDecl};
+use vescale_fsdp::quant::CommPrecision;
 use vescale_fsdp::train::{save_log, TrainSession};
 use vescale_fsdp::util::args::Args;
 
@@ -74,6 +76,10 @@ fn cmd_train(args: &Args) -> Result<()> {
             Fabric::preset_names()
         )
     })?;
+    let prec_name = args.str_or("comm-precision", &base.comm_precision);
+    let comm_precision = CommPrecision::parse(&prec_name).ok_or_else(|| {
+        anyhow!("unknown --comm-precision '{prec_name}' (expected f32, bf16, or q8[:block])")
+    })?;
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -83,11 +89,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     let hyper = AdamHyper { lr, ..AdamHyper::default() };
     println!(
-        "train: model={model} mesh={mesh} opt={} steps={steps} backend={} exec={} fabric={}",
+        "train: model={model} mesh={mesh} opt={} steps={steps} backend={} exec={} fabric={} wire={}",
         opt.name(),
         backend.name(),
         exec.name(),
-        fabric.name
+        fabric.name,
+        comm_precision.name()
     );
     let mut trainer = TrainSession::builder(&model)
         .devices(mesh)
@@ -99,6 +106,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .backend(backend)
         .exec(exec)
         .fabric(fabric)
+        .comm_precision(comm_precision)
         .overrides(base.groups.clone())
         .build()?;
     println!("compute runtime: {}", trainer.runtime.backend_name());
@@ -127,6 +135,15 @@ fn cmd_train(args: &Args) -> Result<()> {
             100.0 * r.exposed_comm_s / r.wall_s.max(1e-12),
             peak_res as f64 / 1e6,
             trainer.engine.fabric.name
+        );
+    }
+    if let Some(last) = trainer.log.last() {
+        println!(
+            "wire/step: {:.3} MB payload + {:.3} MB scales + {:.3} MB pad ({})",
+            last.wire_payload as f64 / 1e6,
+            last.wire_scale as f64 / 1e6,
+            last.wire_pad as f64 / 1e6,
+            comm_precision.name()
         );
     }
     let path = save_log(

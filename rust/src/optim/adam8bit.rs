@@ -97,20 +97,17 @@ pub fn dequant_block_dyn(q: &[u8], scale: f32, out: &mut [f32], signed: bool) {
     }
 }
 
-/// Quantize a block: returns (codes, scale).
+/// Quantize a block with the symmetric linear absmax code: returns the
+/// scale. Delegates to the canonical kernel in [`crate::quant`], which
+/// rounds half to even exactly like the Pallas reference (`jnp.round`) —
+/// golden-vector parity between the two is asserted by
+/// `tests/quant_parity.rs`.
 pub fn quant_block(x: &[f32], q: &mut [i8]) -> f32 {
-    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
-    let scale = if absmax > 0.0 { absmax } else { 1.0 };
-    for (qi, &v) in q.iter_mut().zip(x) {
-        *qi = (v / scale * QMAX).round().clamp(-QMAX, QMAX) as i8;
-    }
-    scale
+    crate::quant::quant_block(x, q)
 }
 
 pub fn dequant_block(q: &[i8], scale: f32, out: &mut [f32]) {
-    for (o, &c) in out.iter_mut().zip(q) {
-        *o = c as f32 * scale / QMAX;
-    }
+    crate::quant::dequant_block(q, scale, out)
 }
 
 /// Per-rank quantized Adam state (dynamic-code u8 indices).

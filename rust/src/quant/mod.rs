@@ -1,0 +1,723 @@
+//! Block-wise quantized mixed-precision communication (paper §6.3; Markov
+//! et al., *Quantized Distributed Training of Large Models with
+//! Convergence Guarantees*).
+//!
+//! The paper's flexibility claim is that RaggedShard "empowers block-wise
+//! quantization": because the planner can keep every quantization block on
+//! exactly one device, casting a shard to `{int8 codes, per-block f32
+//! absmax scales}` needs no cross-device metadata. This module puts that
+//! to work on the *wire*, not just in optimizer state:
+//!
+//! * [`CommPrecision`] — the per-shard-group wire policy (`F32` | `Bf16` |
+//!   `Q8 { block }`), declared on `ShardGroupSpec`, selected via
+//!   `SessionBuilder::comm_precision`, config `[group.*] comm_precision`,
+//!   or `--comm-precision`. Choosing `Q8` feeds the block into the
+//!   planner's granularity (lcm with the group's row granularity), so
+//!   every quant block and its scale live entirely on one device.
+//! * [`QBlockTensor`] + [`quant_block`]/[`dequant_block`] — symmetric
+//!   linear int8 quantization over flat RaggedShard slices, matching
+//!   `python/compile/kernels/blockwise_quant.py` bit-for-bit (absmax
+//!   scale, round **half to even** like `jnp.round`, clip to ±127,
+//!   zero blocks quantize with scale 1.0). Golden-vector parity with the
+//!   Pallas kernel and `optim/adam8bit.rs` is asserted by
+//!   `tests/quant_parity.rs` over shared JSON fixtures.
+//! * [`encode_slot`]/[`decode_slot`] — the wire codec: codes are packed
+//!   four per f32 word (scales ride behind them), so the simulated
+//!   collectives genuinely move fewer words and the recorded
+//!   [`WireVolume`] (payload vs scale vs packing pad) is *measured* from
+//!   buffer sizes, not estimated.
+//! * Cast-before-comm **AllGather** (implemented in
+//!   [`DBuffer`](crate::dbuffer::DBuffer) over this codec): each rank
+//!   encodes its own shard, the collective ships the packed wire buffers,
+//!   and every rank — including the owner — decodes on arrival, so all
+//!   ranks compute on identical dequantized parameters while the fp32
+//!   master shards stay exact.
+//! * Quantized **ReduceScatter with error feedback**
+//!   ([`reduce_scatter_prec`]) — implemented as an all-to-all of encoded
+//!   chunks plus a rank-ordered dequantize-and-sum at each destination
+//!   (bit-identical across serial/threaded backends and across
+//!   sequential/pipelined schedules). Per-rank residuals are held *in the
+//!   shard* (one `S`-element f32 vector per rank per group): the residual
+//!   is the aggregate quantization error of the rank's owned chunk,
+//!   re-injected into the next step's reduction — the classic
+//!   error-feedback operator `ĝ = C(g + e)`, `e ← (g + e) − ĝ` applied to
+//!   the aggregated shard gradient. (A physical implementation would hold
+//!   the same information as per-destination residuals at each sender; the
+//!   simulation's god-view collective lets us keep the memory cost at one
+//!   extra shard per rank, which is what `StepReport`/README account.)
+//!
+//! `F32` bypasses every code path in this module — trajectories are
+//! bit-identical to the pre-quantization engine, enforced by
+//! `tests/quant_comm.rs`.
+
+use anyhow::{bail, Result};
+
+use crate::cluster::Communicator;
+use crate::util::ceil_div;
+
+/// Quantization range of the int8 code (±127; −128 is unused, as in the
+/// Pallas kernel and bitsandbytes).
+pub const QMAX: f32 = 127.0;
+
+/// Default quant block for `--comm-precision q8` when no `:block` suffix
+/// is given. 64 elements keep the scale overhead at 1/16 of the payload
+/// while staying fine-grained enough for gradient outliers.
+pub const DEFAULT_Q8_BLOCK: usize = 64;
+
+/// Wire precision of a shard group's parameter AllGather and gradient
+/// ReduceScatter.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommPrecision {
+    /// Full-precision f32 wire — the legacy path, bit-identical to the
+    /// pre-quantization engine.
+    F32,
+    /// Cast-before-comm bf16 (round-to-nearest-even truncation), two
+    /// bytes per element, no scales.
+    Bf16,
+    /// Block-wise symmetric int8: one byte per element plus one f32
+    /// absmax scale per `block` elements (~`1 + 4/block` bytes/element).
+    /// Gradient ReduceScatter runs with shard-held error feedback.
+    Q8 {
+        /// Quantization block in elements; fed into the planner's
+        /// granularity so blocks and scales never straddle devices.
+        block: usize,
+    },
+}
+
+impl CommPrecision {
+    /// Parse `f32 | bf16 | q8 | q8:<block>` (case-insensitive).
+    pub fn parse(s: &str) -> Option<CommPrecision> {
+        let t = s.to_ascii_lowercase();
+        match t.as_str() {
+            "f32" | "fp32" | "full" => Some(CommPrecision::F32),
+            "bf16" => Some(CommPrecision::Bf16),
+            "q8" | "int8" => Some(CommPrecision::Q8 { block: DEFAULT_Q8_BLOCK }),
+            _ => {
+                let rest = t.strip_prefix("q8:").or_else(|| t.strip_prefix("int8:"))?;
+                let block: usize = rest.parse().ok()?;
+                if block == 0 {
+                    return None;
+                }
+                Some(CommPrecision::Q8 { block })
+            }
+        }
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            CommPrecision::F32 => "f32".to_string(),
+            CommPrecision::Bf16 => "bf16".to_string(),
+            CommPrecision::Q8 { block } => format!("q8:{block}"),
+        }
+    }
+
+    pub fn is_f32(&self) -> bool {
+        matches!(self, CommPrecision::F32)
+    }
+
+    /// Sharding-granularity alignment this precision demands of the
+    /// planner: `Q8` requires every per-device shard to hold a whole
+    /// number of quant blocks (the engine lcm's this into both the tensor
+    /// granularities and the collective alignment).
+    pub fn align_elems(&self) -> u64 {
+        match self {
+            CommPrecision::Q8 { block } => *block as u64,
+            _ => 1,
+        }
+    }
+
+    /// f32 words one `elems`-element slot occupies on the wire.
+    pub fn wire_words(&self, elems: usize) -> usize {
+        match self {
+            CommPrecision::F32 => elems,
+            CommPrecision::Bf16 => elems.div_ceil(2),
+            CommPrecision::Q8 { block } => elems.div_ceil(4) + elems.div_ceil(*block),
+        }
+    }
+
+    /// Exact wire volume of one `elems`-element slot: payload bytes that
+    /// carry tensor data, scale side-channel bytes, and word-packing pad.
+    pub fn wire_volume(&self, elems: u64) -> WireVolume {
+        match self {
+            CommPrecision::F32 => WireVolume { payload: elems * 4, scale: 0, pad: 0 },
+            CommPrecision::Bf16 => {
+                let total = ceil_div(elems, 2) * 4;
+                WireVolume { payload: elems * 2, scale: 0, pad: total - elems * 2 }
+            }
+            CommPrecision::Q8 { block } => {
+                let scale = ceil_div(elems, *block as u64) * 4;
+                let total = ceil_div(elems, 4) * 4 + scale;
+                WireVolume { payload: elems, scale, pad: total - elems - scale }
+            }
+        }
+    }
+}
+
+/// Measured wire bytes of one encoded slot, split the way the per-step
+/// CSV and `BENCH_quant.json` report them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireVolume {
+    /// Bytes carrying tensor data (4/elem f32, 2/elem bf16, 1/elem int8).
+    pub payload: u64,
+    /// Per-block f32 scale bytes (Q8 only).
+    pub scale: u64,
+    /// Word-packing remainder (tails of the 4-codes-per-word packing).
+    pub pad: u64,
+}
+
+impl WireVolume {
+    pub fn total(&self) -> u64 {
+        self.payload + self.scale + self.pad
+    }
+}
+
+/// `jnp.round` semantics — round half to **even** — which is what the
+/// Pallas kernel applies; `f32::round` rounds half away from zero
+/// instead. (Implemented by hand so the crate keeps building on older
+/// stable toolchains without `f32::round_ties_even`.)
+pub fn round_half_even(x: f32) -> f32 {
+    let f = x.floor();
+    let d = x - f;
+    match d.partial_cmp(&0.5) {
+        Some(std::cmp::Ordering::Less) => f,
+        Some(std::cmp::Ordering::Greater) => f + 1.0,
+        // exact tie (or NaN, which callers never pass): pick the even
+        // neighbor, like jnp.round
+        _ => {
+            if (f as i64) % 2 == 0 {
+                f
+            } else {
+                f + 1.0
+            }
+        }
+    }
+}
+
+/// Quantize one block: symmetric linear absmax code, exactly the Pallas
+/// `_quant_kernel` math (absmax scale with 1.0 fallback for zero blocks,
+/// round half to even, clip to ±127). Returns the scale.
+pub fn quant_block(x: &[f32], q: &mut [i8]) -> f32 {
+    let absmax = x.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+    let scale = if absmax > 0.0 { absmax } else { 1.0 };
+    for (qi, &v) in q.iter_mut().zip(x) {
+        *qi = round_half_even(v / scale * QMAX).clamp(-QMAX, QMAX) as i8;
+    }
+    scale
+}
+
+/// Dequantize one block: `q * scale / 127`, the Pallas `_dequant_kernel`.
+pub fn dequant_block(q: &[i8], scale: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(q) {
+        *o = c as f32 * scale / QMAX;
+    }
+}
+
+/// A block-wise quantized tensor: int8 payload + per-block f32 absmax
+/// scales over a flat (RaggedShard) slice. The final block may be a tail.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QBlockTensor {
+    pub codes: Vec<i8>,
+    pub scales: Vec<f32>,
+    pub block: usize,
+    /// Original element count (== `codes.len()`).
+    pub len: usize,
+}
+
+impl QBlockTensor {
+    pub fn quantize(x: &[f32], block: usize) -> QBlockTensor {
+        assert!(block > 0, "quant block must be positive");
+        let nb = x.len().div_ceil(block);
+        let mut codes = vec![0i8; x.len()];
+        let mut scales = vec![1.0f32; nb];
+        for (b, s) in scales.iter_mut().enumerate() {
+            let lo = b * block;
+            let hi = (lo + block).min(x.len());
+            *s = quant_block(&x[lo..hi], &mut codes[lo..hi]);
+        }
+        QBlockTensor { codes, scales, block, len: x.len() }
+    }
+
+    pub fn dequantize_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len);
+        for (b, &s) in self.scales.iter().enumerate() {
+            let lo = b * self.block;
+            let hi = (lo + self.block).min(self.len);
+            dequant_block(&self.codes[lo..hi], s, &mut out[lo..hi]);
+        }
+    }
+
+    pub fn dequantize(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.dequantize_into(&mut out);
+        out
+    }
+
+    /// Measured wire bytes of this tensor under the packed codec.
+    pub fn wire_volume(&self) -> WireVolume {
+        CommPrecision::Q8 { block: self.block }.wire_volume(self.len as u64)
+    }
+}
+
+// ---- bf16 helpers -------------------------------------------------------
+
+/// f32 → bf16 bits with round-to-nearest-even (the standard truncation
+/// used by cast-before-comm mixed precision).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let b = x.to_bits();
+    let rounded = b.wrapping_add(0x7FFF + ((b >> 16) & 1));
+    (rounded >> 16) as u16
+}
+
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+// ---- wire codec ---------------------------------------------------------
+
+/// Encode `src` into its wire slot. `wire.len()` must equal
+/// `prec.wire_words(src.len())`. Q8 packs four int8 codes per f32 word
+/// (little-endian) followed by the per-block scales; Bf16 packs two
+/// half-words per f32 word. Words are moved as raw bit patterns only
+/// (memcpy'd by the collectives, never arithmetically touched).
+pub fn encode_slot(prec: CommPrecision, src: &[f32], wire: &mut [f32]) {
+    debug_assert_eq!(wire.len(), prec.wire_words(src.len()));
+    match prec {
+        CommPrecision::F32 => wire.copy_from_slice(src),
+        CommPrecision::Bf16 => {
+            for (i, w) in wire.iter_mut().enumerate() {
+                let lo = f32_to_bf16_bits(src[2 * i]) as u32;
+                let hi = if 2 * i + 1 < src.len() {
+                    f32_to_bf16_bits(src[2 * i + 1]) as u32
+                } else {
+                    0
+                };
+                *w = f32::from_bits(lo | (hi << 16));
+            }
+        }
+        CommPrecision::Q8 { block } => {
+            let qt = QBlockTensor::quantize(src, block);
+            let pw = src.len().div_ceil(4);
+            for (i, w) in wire.iter_mut().take(pw).enumerate() {
+                let mut bytes = [0u8; 4];
+                for (j, byte) in bytes.iter_mut().enumerate() {
+                    let idx = 4 * i + j;
+                    if idx < qt.codes.len() {
+                        *byte = qt.codes[idx] as u8;
+                    }
+                }
+                *w = f32::from_bits(u32::from_le_bytes(bytes));
+            }
+            wire[pw..pw + qt.scales.len()].copy_from_slice(&qt.scales);
+        }
+    }
+}
+
+/// Decode a wire slot back into `dst` (the exact inverse layout of
+/// [`encode_slot`]; for Q8 the result is the dequantized values).
+pub fn decode_slot(prec: CommPrecision, wire: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(wire.len(), prec.wire_words(dst.len()));
+    match prec {
+        CommPrecision::F32 => dst.copy_from_slice(wire),
+        CommPrecision::Bf16 => {
+            for (i, d) in dst.iter_mut().enumerate() {
+                let w = wire[i / 2].to_bits();
+                let half = if i % 2 == 0 { w & 0xFFFF } else { w >> 16 };
+                *d = bf16_bits_to_f32(half as u16);
+            }
+        }
+        CommPrecision::Q8 { block } => {
+            let n = dst.len();
+            let pw = n.div_ceil(4);
+            let nb = n.div_ceil(block);
+            let scales = &wire[pw..pw + nb];
+            for (i, d) in dst.iter_mut().enumerate() {
+                let code = wire[i / 4].to_bits().to_le_bytes()[i % 4] as i8;
+                *d = code as f32 * scales[i / block] / QMAX;
+            }
+        }
+    }
+}
+
+// ---- quantized ReduceScatter with error feedback ------------------------
+
+/// Phase 1 of the quantized ReduceScatter: inject the per-rank residuals
+/// into each rank's *own* chunk (Q8 only), then encode every chunk of
+/// every rank's buffer into wire buffers laid out for `all_to_all` (rank
+/// r's slot k holds its encoded contribution to destination k). `bufs`
+/// keeps the (residual-injected) originals — [`rs_decode_reduce`] needs
+/// them to update the residuals.
+pub fn rs_inject_and_encode(
+    prec: CommPrecision,
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>> {
+    let m = bufs.len();
+    if prec.is_f32() {
+        bail!("rs_inject_and_encode: F32 takes the dense reduce_scatter path");
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("quantized reduce_scatter buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    if matches!(prec, CommPrecision::Q8 { .. }) {
+        if ef.len() != m || ef.iter().any(|e| e.len() != s) {
+            *ef = vec![vec![0.0; s]; m];
+        }
+        for (k, buf) in bufs.iter_mut().enumerate() {
+            for (x, e) in buf[k * s..(k + 1) * s].iter_mut().zip(&ef[k]) {
+                *x += *e;
+            }
+        }
+    }
+    let w = prec.wire_words(s);
+    let mut wire: Vec<Vec<f32>> = vec![vec![0.0; m * w]; m];
+    for (buf, wb) in bufs.iter().zip(wire.iter_mut()) {
+        for k in 0..m {
+            encode_slot(prec, &buf[k * s..(k + 1) * s], &mut wb[k * w..(k + 1) * w]);
+        }
+    }
+    Ok(wire)
+}
+
+/// Phase 2: after `all_to_all(wire, w)` delivered every sender's encoded
+/// chunk-k slot to destination k, decode and sum in **rank order 0..m**
+/// (the serial backend's exact summation order — results are
+/// bit-identical across backends and schedules), apply `scale`, and write
+/// the reduced chunk into each rank's own chunk region of `bufs` (the
+/// same output convention as the dense `reduce_scatter`). For Q8 the
+/// residuals are replaced with the aggregate quantization error of each
+/// owned chunk: `e' = Σ_r (g'_r − DQ(Q(g'_r)))`, unscaled, so next step's
+/// injection telescopes the error away.
+pub fn rs_decode_reduce(
+    prec: CommPrecision,
+    wire: &[Vec<f32>],
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    scale: f32,
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    let m = bufs.len();
+    let w = prec.wire_words(s);
+    if wire.len() != m {
+        bail!("rs_decode_reduce: {} wire buffers != {m}", wire.len());
+    }
+    let update_ef = matches!(prec, CommPrecision::Q8 { .. });
+    if update_ef && (ef.len() != m || ef.iter().any(|e| e.len() != s)) {
+        bail!("rs_decode_reduce: residuals not initialized by rs_inject_and_encode");
+    }
+    let mut dec = vec![0.0f32; s];
+    for k in 0..m {
+        let mut acc = vec![0.0f32; s];
+        let mut err = vec![0.0f32; s];
+        for (r, buf) in bufs.iter().enumerate() {
+            decode_slot(prec, &wire[k][r * w..(r + 1) * w], &mut dec);
+            for (a, &d) in acc.iter_mut().zip(dec.iter()) {
+                *a += d;
+            }
+            if update_ef {
+                for i in 0..s {
+                    err[i] += buf[k * s + i] - dec[i];
+                }
+            }
+        }
+        for a in acc.iter_mut() {
+            *a *= scale;
+        }
+        bufs[k][k * s..(k + 1) * s].copy_from_slice(&acc);
+        if update_ef {
+            ef[k] = err;
+        }
+    }
+    Ok(())
+}
+
+/// Synchronous quantized ReduceScatter (sum then `scale`) over the
+/// cluster backend: inject + encode, one `all_to_all` of the packed wire
+/// buffers, rank-ordered dequantize-and-sum at each destination. `F32`
+/// delegates to the dense collective (bit-identical legacy path). The
+/// pipelined executor runs the same three phases with the `all_to_all`
+/// issued asynchronously — same functions, same bits.
+pub fn reduce_scatter_prec(
+    comm: &dyn Communicator,
+    prec: CommPrecision,
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    scale: f32,
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    if prec.is_f32() {
+        return comm.reduce_scatter(bufs, s, scale);
+    }
+    let mut wire = rs_inject_and_encode(prec, bufs, s, ef)?;
+    comm.all_to_all(&mut wire, prec.wire_words(s))?;
+    rs_decode_reduce(prec, &wire, bufs, s, scale, ef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{SerialComm, ThreadedComm};
+    use crate::util::Rng;
+
+    #[test]
+    fn parse_name_roundtrip() {
+        for p in [
+            CommPrecision::F32,
+            CommPrecision::Bf16,
+            CommPrecision::Q8 { block: 64 },
+            CommPrecision::Q8 { block: 32 },
+        ] {
+            assert_eq!(CommPrecision::parse(&p.name()), Some(p));
+        }
+        assert_eq!(CommPrecision::parse("q8"), Some(CommPrecision::Q8 { block: DEFAULT_Q8_BLOCK }));
+        assert_eq!(CommPrecision::parse("FP32"), Some(CommPrecision::F32));
+        assert_eq!(CommPrecision::parse("q8:0"), None);
+        assert_eq!(CommPrecision::parse("int4"), None);
+    }
+
+    #[test]
+    fn round_half_even_matches_jnp_round() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(62.5), 62.0);
+        assert_eq!(round_half_even(63.5), 64.0);
+        assert_eq!(round_half_even(-0.5), 0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(1.25), 1.0);
+        assert_eq!(round_half_even(1.75), 2.0);
+    }
+
+    #[test]
+    fn wire_volume_math() {
+        // f32: identity
+        let v = CommPrecision::F32.wire_volume(100);
+        assert_eq!((v.payload, v.scale, v.pad), (400, 0, 0));
+        // bf16: 2 B/elem, odd length pads half a word
+        let v = CommPrecision::Bf16.wire_volume(101);
+        assert_eq!(v.payload, 202);
+        assert_eq!(v.total(), 51 * 4);
+        // q8: 1 B/elem + scales, code tail pads to a word
+        let p = CommPrecision::Q8 { block: 32 };
+        let v = p.wire_volume(96);
+        assert_eq!((v.payload, v.scale, v.pad), (96, 12, 0));
+        let v = p.wire_volume(97);
+        assert_eq!(v.payload, 97);
+        assert_eq!(v.scale, 4 * 4);
+        assert_eq!(v.total() % 4, 0);
+        // wire_words agrees with wire_volume for every precision
+        for prec in [CommPrecision::F32, CommPrecision::Bf16, p] {
+            for n in [1usize, 4, 31, 32, 97, 1024] {
+                assert_eq!(
+                    prec.wire_words(n) as u64 * 4,
+                    prec.wire_volume(n as u64).total(),
+                    "{} n={n}",
+                    prec.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_bounded_and_zero_block() {
+        let mut rng = Rng::new(3);
+        let x: Vec<f32> = (0..300).map(|_| rng.normal_f32() * 2.0).collect();
+        let qt = QBlockTensor::quantize(&x, 64); // 300 = 4 blocks + tail 44
+        assert_eq!(qt.scales.len(), 5);
+        let y = qt.dequantize();
+        for (b, &s) in qt.scales.iter().enumerate() {
+            let lo = b * 64;
+            let hi = (lo + 64).min(300);
+            for i in lo..hi {
+                assert!((x[i] - y[i]).abs() <= s / QMAX * 0.5 + 1e-6);
+            }
+        }
+        let z = QBlockTensor::quantize(&[0.0; 16], 16);
+        assert_eq!(z.scales, vec![1.0]);
+        assert!(z.codes.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn codec_roundtrip_equals_quantize_dequantize() {
+        let mut rng = Rng::new(4);
+        for n in [7usize, 32, 65, 128] {
+            let x: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            for prec in [CommPrecision::Bf16, CommPrecision::Q8 { block: 16 }] {
+                let mut wire = vec![0.0f32; prec.wire_words(n)];
+                encode_slot(prec, &x, &mut wire);
+                let mut back = vec![0.0f32; n];
+                decode_slot(prec, &wire, &mut back);
+                match prec {
+                    CommPrecision::Q8 { block } => {
+                        let expect = QBlockTensor::quantize(&x, block).dequantize();
+                        for (a, b) in back.iter().zip(&expect) {
+                            assert_eq!(a.to_bits(), b.to_bits());
+                        }
+                    }
+                    CommPrecision::Bf16 => {
+                        for (a, &orig) in back.iter().zip(&x) {
+                            let expect = bf16_bits_to_f32(f32_to_bf16_bits(orig));
+                            assert_eq!(a.to_bits(), expect.to_bits());
+                            assert!((a - orig).abs() <= orig.abs() * 0.01 + 1e-6);
+                        }
+                    }
+                    CommPrecision::F32 => unreachable!(),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_rounds_to_nearest_even() {
+        // 1.0 + 2^-8 is exactly halfway between bf16(1.0) and the next
+        // code; round-to-nearest-even keeps the even mantissa (1.0)
+        let x = 1.0f32 + 2f32.powi(-8);
+        assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(x)), 1.0);
+        // values already representable pass through exactly
+        for v in [0.0f32, 1.0, -2.5, 0.375] {
+            assert_eq!(bf16_bits_to_f32(f32_to_bf16_bits(v)), v);
+        }
+    }
+
+    fn mk_grads(m: usize, s: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| (0..m * s).map(|_| rng.normal_f32()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn quantized_rs_close_to_dense_and_backend_bit_identical() {
+        let (m, s) = (4usize, 32usize);
+        let prec = CommPrecision::Q8 { block: 8 };
+        let mut dense = mk_grads(m, s, 7);
+        SerialComm::new().reduce_scatter(&mut dense, s, 0.25).unwrap();
+
+        let mut ef_a = Vec::new();
+        let mut a = mk_grads(m, s, 7);
+        reduce_scatter_prec(&SerialComm::new(), prec, &mut a, s, 0.25, &mut ef_a).unwrap();
+        let mut ef_b = Vec::new();
+        let mut b = mk_grads(m, s, 7);
+        reduce_scatter_prec(
+            &ThreadedComm::with_min_parallel_elems(0),
+            prec,
+            &mut b,
+            s,
+            0.25,
+            &mut ef_b,
+        )
+        .unwrap();
+        for k in 0..m {
+            for i in 0..s {
+                let x = a[k][k * s + i];
+                let y = b[k][k * s + i];
+                assert_eq!(x.to_bits(), y.to_bits(), "backends diverged");
+                // close to the dense reduction: m block errors, scaled
+                let d = dense[k][k * s + i];
+                assert!((x - d).abs() < 0.25 * m as f32 * 4.0 / QMAX + 1e-4);
+            }
+        }
+        for (ea, eb) in ef_a.iter().flatten().zip(ef_b.iter().flatten()) {
+            assert_eq!(ea.to_bits(), eb.to_bits());
+        }
+    }
+
+    #[test]
+    fn error_feedback_recovers_sub_quantile_gradients() {
+        // every rank contributes a block whose absmax (1.0) drowns a tiny
+        // constant signal (0.003 < one quant step): without feedback the
+        // tiny elements quantize to 0 forever; with the shard-held
+        // residual their time-average converges to the true mean
+        let (m, s, block) = (2usize, 8usize, 8usize);
+        let prec = CommPrecision::Q8 { block };
+        let scale = 1.0 / m as f32;
+        let tiny = 0.003f32;
+        let mk = || -> Vec<Vec<f32>> {
+            (0..m)
+                .map(|_| {
+                    let mut b = vec![tiny; m * s];
+                    for k in 0..m {
+                        b[k * s] = 1.0; // pins each block's absmax
+                    }
+                    b
+                })
+                .collect()
+        };
+        let comm = SerialComm::new();
+        let rounds = 64;
+        let mut with_ef = vec![0.0f64; s];
+        let mut without_ef = vec![0.0f64; s];
+        let mut ef = Vec::new();
+        for _ in 0..rounds {
+            let mut bufs = mk();
+            reduce_scatter_prec(&comm, prec, &mut bufs, s, scale, &mut ef).unwrap();
+            for i in 0..s {
+                with_ef[i] += bufs[0][i] as f64;
+            }
+            let mut bufs = mk();
+            let mut fresh = Vec::new(); // zeroed residual every round
+            reduce_scatter_prec(&comm, prec, &mut bufs, s, scale, &mut fresh).unwrap();
+            for i in 0..s {
+                without_ef[i] += bufs[0][i] as f64;
+            }
+        }
+        // element 1..s of chunk 0 carries the tiny signal (element 0 is
+        // the absmax pin)
+        let truth = tiny as f64;
+        for i in 1..s {
+            let avg_ef = with_ef[i] / rounds as f64;
+            let avg_no = without_ef[i] / rounds as f64;
+            assert_eq!(avg_no, 0.0, "tiny signal should vanish without EF");
+            assert!(
+                (avg_ef - truth).abs() < truth * 0.35,
+                "EF average {avg_ef} should approach {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn error_feedback_telescopes() {
+        // sum of T quantized-RS outputs == T * dense output + e_0 - e_T:
+        // the cumulative deviation is bounded by one step's residual
+        let (m, s) = (2usize, 16usize);
+        let prec = CommPrecision::Q8 { block: 16 };
+        let scale = 1.0 / m as f32;
+        let comm = SerialComm::new();
+        let mut dense = mk_grads(m, s, 11);
+        comm.reduce_scatter(&mut dense, s, scale).unwrap();
+        let mut ef = Vec::new();
+        let t_rounds = 32;
+        let mut acc = vec![0.0f64; s];
+        for _ in 0..t_rounds {
+            let mut bufs = mk_grads(m, s, 11);
+            reduce_scatter_prec(&comm, prec, &mut bufs, s, scale, &mut ef).unwrap();
+            for i in 0..s {
+                acc[i] += bufs[0][i] as f64;
+            }
+        }
+        for i in 0..s {
+            let drift = (acc[i] - t_rounds as f64 * dense[0][i] as f64).abs();
+            // |e_T| * scale, loosely bounded by m quant steps of the
+            // largest block absmax (~3 sigma)
+            let bound = (m as f32 * 6.0 / QMAX * scale) as f64 + 1e-5;
+            assert!(drift <= bound, "elem {i}: drift {drift} > {bound}");
+        }
+    }
+
+    #[test]
+    fn f32_reduce_scatter_prec_is_the_dense_path() {
+        let (m, s) = (3usize, 8usize);
+        let mut a = mk_grads(m, s, 13);
+        let mut b = a.clone();
+        let comm = SerialComm::new();
+        comm.reduce_scatter(&mut a, s, 1.0 / 3.0).unwrap();
+        let mut ef = Vec::new();
+        reduce_scatter_prec(&comm, CommPrecision::F32, &mut b, s, 1.0 / 3.0, &mut ef).unwrap();
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert!(ef.is_empty(), "F32 must not materialize residuals");
+    }
+}

@@ -25,6 +25,7 @@ use crate::fsdp::spec::{ModelSpec, OptimBinding, ShardGroupSpec};
 use crate::fsdp::{exec, ExecMode, ExecReport, FsdpEngine, ShardingPolicy};
 use crate::mesh::DeviceMesh;
 use crate::optim::{Adam8bit, AdamHyper, AdamW, GroupOptimizer, Sgd, ShardOptimizer};
+use crate::quant::CommPrecision;
 use crate::runtime::Engine;
 use crate::util::Rng;
 
@@ -134,6 +135,14 @@ pub struct StepLog {
     pub wall_s: f64,
     /// Session-default fabric preset this step was timed on.
     pub fabric: &'static str,
+    /// Measured wire bytes this step shipped carrying tensor data
+    /// (summed over collectives x group size; int8/bf16 payload for
+    /// quantized groups, full f32 otherwise).
+    pub wire_payload: u64,
+    /// Quantization-scale side-channel bytes this step shipped.
+    pub wire_scale: u64,
+    /// Word-packing pad bytes this step shipped.
+    pub wire_pad: u64,
 }
 
 /// Legacy alias: the FSDP trainer is now [`TrainSession`]; every old
@@ -195,6 +204,7 @@ pub struct SessionBuilder {
     backend: CommBackend,
     exec: ExecMode,
     fabric: Fabric,
+    comm_precision: CommPrecision,
     groups: Vec<ShardGroupSpec>,
     spec: Option<ModelSpec>,
     overrides: Vec<GroupOverride>,
@@ -213,6 +223,7 @@ impl SessionBuilder {
             backend: CommBackend::Serial,
             exec: ExecMode::Sequential,
             fabric: Fabric::h800(),
+            comm_precision: CommPrecision::F32,
             groups: Vec::new(),
             spec: None,
             overrides: Vec::new(),
@@ -276,6 +287,15 @@ impl SessionBuilder {
         self
     }
 
+    /// Wire precision applied to every group of the *layerwise default*
+    /// wrapping (`--comm-precision f32|bf16|q8[:block]`). Like
+    /// [`SessionBuilder::optimizer`], ignored once explicit wrap units
+    /// are declared — each [`ShardGroupSpec`] carries its own precision.
+    pub fn comm_precision(mut self, prec: CommPrecision) -> Self {
+        self.comm_precision = prec;
+        self
+    }
+
     /// Append a custom wrap unit. The first `.group(..)` call switches
     /// the builder from the layerwise default to fully explicit wrapping
     /// — declare every group (declaration order = bucket order), each
@@ -314,6 +334,7 @@ impl SessionBuilder {
                 for g in s.groups.iter_mut() {
                     g.policy = self.policy.clone();
                     g.optim = self.optim;
+                    g.comm_precision = self.comm_precision;
                 }
                 s
             }
@@ -428,6 +449,9 @@ fn apply_group_override(
             h.lr = lr;
             g.hyper = Some(h);
         }
+        if let Some(p) = o.comm {
+            g.comm_precision = p;
+        }
     }
     if !applied {
         let names: Vec<&str> = spec.groups.iter().map(|g| g.name.as_str()).collect();
@@ -516,6 +540,7 @@ impl TrainSession {
         };
         let m = self.engine.num_devices();
         let comm_before = self.engine.comm.sim_time();
+        let wire_before = self.engine.comm.wire_totals();
 
         // draw every rank's batch on the coordinator in rank order so the
         // token stream is identical no matter how compute executes
@@ -533,6 +558,7 @@ impl TrainSession {
         // step through the same trait, group by group
         self.engine.optimizer_step_groups(&mut self.optimizers, self.step)?;
         let loss = outcome.losses.iter().sum::<f32>() / m as f32;
+        let wire_after = self.engine.comm.wire_totals();
         self.log.push(StepLog {
             step: self.step,
             loss,
@@ -541,6 +567,10 @@ impl TrainSession {
             exposed_s: outcome.report.exposed_comm_s,
             wall_s: t0.elapsed().as_secs_f64(),
             fabric: self.engine.fabric.name,
+            // measured per-step wire volume (payload vs scales vs pad)
+            wire_payload: wire_after.0 - wire_before.0,
+            wire_scale: wire_after.1 - wire_before.1,
+            wire_pad: wire_after.2 - wire_before.2,
         });
         self.last_report = Some(outcome.report);
         Ok(loss)
@@ -628,6 +658,7 @@ impl DdpTrainer {
         let t0 = std::time::Instant::now();
         let cfg = self.runtime.manifest.configs[&self.config].clone();
         let m = self.devices;
+        let wire_before = self.comm.wire_totals();
         // per-device microbatches (drawn in rank order on the coordinator)
         let batches: Vec<(Vec<i32>, Vec<i32>)> =
             (0..m).map(|_| self.corpus.batch(cfg.batch, cfg.seq)).collect();
@@ -664,12 +695,12 @@ impl DdpTrainer {
                 .collect();
             self.comm.all_reduce(&mut bufs, 1.0 / m as f32)?;
             let bytes = (bufs[0].len() * 4) as u64;
-            self.comm.record(CommRecord {
-                op: "all_reduce",
-                bytes_per_rank: bytes,
-                group_size: m,
-                sim_time: self.fabric.all_reduce_time(m, bytes, true),
-            });
+            self.comm.record(CommRecord::dense(
+                "all_reduce",
+                bytes,
+                m,
+                self.fabric.all_reduce_time(m, bytes, true),
+            ));
             mean_grads.push(bufs.into_iter().next().unwrap());
         }
         self.step += 1;
@@ -694,6 +725,7 @@ impl DdpTrainer {
             }
         }
         let loss = losses.iter().sum::<f32>() / self.devices as f32;
+        let wire_after = self.comm.wire_totals();
         self.log.push(StepLog {
             step: self.step,
             loss,
@@ -701,6 +733,9 @@ impl DdpTrainer {
             exposed_s: 0.0,
             wall_s: t0.elapsed().as_secs_f64(),
             fabric: self.fabric.name,
+            wire_payload: wire_after.0 - wire_before.0,
+            wire_scale: wire_after.1 - wire_before.1,
+            wire_pad: wire_after.2 - wire_before.2,
         });
         Ok(loss)
     }
@@ -718,11 +753,21 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"));
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
-    let mut out = String::from("step,loss,comm_time,exposed_s,wall_s,fabric\n");
+    let mut out = String::from(
+        "step,loss,comm_time,exposed_s,wall_s,fabric,wire_payload,wire_scale,wire_pad\n",
+    );
     for l in log {
         out.push_str(&format!(
-            "{},{},{},{},{},{}\n",
-            l.step, l.loss, l.comm_time, l.exposed_s, l.wall_s, l.fabric
+            "{},{},{},{},{},{},{},{},{}\n",
+            l.step,
+            l.loss,
+            l.comm_time,
+            l.exposed_s,
+            l.wall_s,
+            l.fabric,
+            l.wire_payload,
+            l.wire_scale,
+            l.wire_pad
         ));
     }
     std::fs::write(&path, out)?;

@@ -1,0 +1,284 @@
+//! End-to-end tests for the block-wise quantized communication subsystem:
+//! planner × quant-block alignment (property test over ragged sizes and
+//! mesh widths), `F32` bit-identity with the pre-quantization engine
+//! across {serial, threaded} × {sequential, pipelined}, `Q8`
+//! determinism across backends and schedules, measured wire-byte
+//! reduction, and convergence of the error-feedback quantized path.
+
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::config::OptimKind;
+use vescale_fsdp::fsdp::spec::{GroupFilter, ModelSpec, OptimBinding, ShardGroupSpec};
+use vescale_fsdp::fsdp::{ExecMode, FsdpEngine, ShardingPolicy};
+use vescale_fsdp::mesh::DeviceMesh;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::train::{TrainSession, Trainer};
+use vescale_fsdp::util::Rng;
+
+// ---- planner × quant alignment ------------------------------------------
+
+#[test]
+fn planner_keeps_quant_blocks_and_scales_on_one_device() {
+    let mut rng = Rng::new(0x5170);
+    for trial in 0..60u64 {
+        let m = [1usize, 2, 4, 8][(trial % 4) as usize];
+        let block = [8usize, 32][(trial as usize / 4) % 2];
+        let n_tensors = 1 + (rng.below(4) as usize);
+        let params: Vec<(String, Vec<usize>)> = (0..n_tensors)
+            .map(|i| {
+                let rows = 1 + rng.below(48) as usize;
+                let cols = [1usize, 3, 8, 16][rng.below(4) as usize];
+                (format!("t{i}.w"), vec![rows, cols])
+            })
+            .collect();
+        let policy = if trial % 3 == 0 {
+            ShardingPolicy::uniform_rows(2)
+        } else {
+            ShardingPolicy::element_wise()
+        };
+        let spec = ModelSpec::new().group(
+            ShardGroupSpec::new("all", GroupFilter::Rest)
+                .policy(policy)
+                .comm_precision(CommPrecision::Q8 { block }),
+        );
+        let engine = FsdpEngine::from_spec(
+            params.clone(),
+            &spec,
+            DeviceMesh::flat("fsdp", m),
+            Fabric::h800(),
+            std::sync::Arc::new(vescale_fsdp::cluster::SerialComm::new()),
+        )
+        .unwrap_or_else(|e| panic!("trial {trial} failed to plan: {e}"));
+        let layout = &engine.buckets[0].dbuffer.layout;
+        layout.verify().unwrap();
+        // (1) the per-device shard is a whole number of quant blocks, so
+        // shard-flat quantization never straddles a device and every
+        // scale belongs to exactly one device
+        assert_eq!(
+            layout.shard_size % block as u64,
+            0,
+            "trial {trial}: shard {} not block-aligned",
+            layout.shard_size
+        );
+        // (2) tensor granularities absorbed the block (tensors smaller
+        // than one block shard whole on a single device)
+        for (i, t) in layout.tensors.iter().enumerate() {
+            assert!(
+                t.granularity % block as u64 == 0 || t.granularity == t.numel,
+                "trial {trial}: tensor {i} granularity {}",
+                t.granularity
+            );
+            // (3) per-device slices of block-aligned tensors start on
+            // block boundaries and only the final (tail) slice may end
+            // off one
+            if t.granularity % block as u64 == 0 {
+                for rank in 0..m {
+                    if let Some((lo, hi)) = layout.local_slice(i, rank) {
+                        assert_eq!(lo % block as u64, 0, "trial {trial}: tensor {i} rank {rank}");
+                        assert!(
+                            hi % t.granularity == 0 || hi == t.numel,
+                            "trial {trial}: tensor {i} rank {rank} hi {hi}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- F32 bit-identity with the PR-3 path --------------------------------
+
+fn run_session(
+    prec: Option<CommPrecision>,
+    backend: CommBackend,
+    exec: ExecMode,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>) {
+    let mut b = TrainSession::builder("tiny")
+        .devices(2)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .backend(backend)
+        .exec(exec);
+    if let Some(p) = prec {
+        b = b.comm_precision(p);
+    }
+    let mut t = b.build().unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let params = (0..t.engine.params.len())
+        .map(|i| t.engine.read_param(i))
+        .collect();
+    (losses, params)
+}
+
+fn assert_bit_identical(a: &(Vec<f32>, Vec<Vec<f32>>), b: &(Vec<f32>, Vec<Vec<f32>>), what: &str) {
+    for (i, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss {i}: {x} vs {y}");
+    }
+    for (i, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        for (x, y) in pa.iter().zip(pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}");
+        }
+    }
+}
+
+#[test]
+fn f32_sessions_bit_identical_to_legacy_path() {
+    // explicit CommPrecision::F32 must change nothing vs the legacy
+    // constructor (the pre-quantization PR-3 trajectory), on every
+    // backend × schedule combination
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Sequential),
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 1 }),
+    ] {
+        let mut legacy = Trainer::with_exec(
+            "tiny",
+            2,
+            OptimKind::AdamW,
+            &ShardingPolicy::element_wise(),
+            AdamHyper { lr: 1e-3, ..AdamHyper::default() },
+            42,
+            backend,
+            exec,
+        )
+        .unwrap();
+        let mut legacy_losses = Vec::new();
+        for _ in 0..2 {
+            legacy_losses.push(legacy.train_step().unwrap());
+        }
+        let legacy_params: Vec<Vec<f32>> = (0..legacy.engine.params.len())
+            .map(|i| legacy.engine.read_param(i))
+            .collect();
+        let explicit = run_session(Some(CommPrecision::F32), backend, exec, 2);
+        assert_bit_identical(
+            &(legacy_losses, legacy_params),
+            &explicit,
+            &format!("{} {}", backend.name(), exec.name()),
+        );
+    }
+}
+
+// ---- Q8 determinism across backends and schedules -----------------------
+
+#[test]
+fn q8_trajectory_bit_identical_across_backends_and_schedules() {
+    let prec = CommPrecision::Q8 { block: 64 };
+    let reference = run_session(Some(prec), CommBackend::Serial, ExecMode::Sequential, 3);
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 2 }),
+    ] {
+        let r = run_session(Some(prec), backend, exec, 3);
+        assert_bit_identical(
+            &reference,
+            &r,
+            &format!("q8 {} {}", backend.name(), exec.name()),
+        );
+    }
+}
+
+// ---- wire volume + convergence ------------------------------------------
+
+struct PrecRun {
+    losses: Vec<f32>,
+    wire_total: u64,
+    wire_scale: u64,
+    wire_pad: u64,
+    ef_groups: usize,
+}
+
+fn run_prec(prec: CommPrecision, steps: usize) -> PrecRun {
+    let mut t = TrainSession::builder("tiny")
+        .devices(2)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .comm_precision(prec)
+        .build()
+        .unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let (mut total, mut scale, mut pad) = (0u64, 0u64, 0u64);
+    for l in &t.log {
+        total += l.wire_payload + l.wire_scale + l.wire_pad;
+        scale += l.wire_scale;
+        pad += l.wire_pad;
+    }
+    let ef_groups = t.engine.buckets.iter().filter(|b| !b.ef.is_empty()).count();
+    PrecRun { losses, wire_total: total, wire_scale: scale, wire_pad: pad, ef_groups }
+}
+
+fn tail_avg(losses: &[f32]) -> f32 {
+    let n = losses.len().min(5);
+    losses[losses.len() - n..].iter().sum::<f32>() / n as f32
+}
+
+#[test]
+fn quantized_wire_bytes_reduced_3x_and_q8_converges() {
+    let steps = 15;
+    let full = run_prec(CommPrecision::F32, steps);
+    let bf = run_prec(CommPrecision::Bf16, steps);
+    let q8 = run_prec(CommPrecision::Q8 { block: 64 }, steps);
+
+    // measured (not estimated) wire-byte reduction
+    assert!(full.wire_total > 0);
+    assert_eq!(full.wire_scale, 0);
+    assert_eq!(full.wire_pad, 0);
+    let bf_ratio = full.wire_total as f64 / bf.wire_total as f64;
+    assert!(bf_ratio > 1.9 && bf_ratio < 2.1, "bf16 ratio {bf_ratio}");
+    let q8_ratio = full.wire_total as f64 / q8.wire_total as f64;
+    assert!(q8_ratio >= 3.0, "q8 wire reduction only {q8_ratio}x");
+    assert!(q8.wire_scale > 0, "q8 must ship scale bytes");
+
+    // every Q8 group holds shard-sized error-feedback residuals
+    assert_eq!(q8.ef_groups, 4, "tiny = embed|layer0|layer1|head");
+    assert_eq!(full.ef_groups, 0, "F32 must not materialize residuals");
+
+    // training still works: losses finite and decreasing, and the
+    // quantized trajectories land near the f32 one
+    for r in [&full, &bf, &q8] {
+        assert!(r.losses.iter().all(|l| l.is_finite()));
+        assert!(
+            tail_avg(&r.losses) < r.losses[0] - 0.2,
+            "no learning: {} -> {}",
+            r.losses[0],
+            tail_avg(&r.losses)
+        );
+    }
+    let f = tail_avg(&full.losses);
+    let b = tail_avg(&bf.losses);
+    let q = tail_avg(&q8.losses);
+    assert!((b - f).abs() / f < 0.06, "bf16 {b} vs f32 {f}");
+    assert!((q - f).abs() / f < 0.10, "q8 {q} vs f32 {f}");
+}
+
+#[test]
+fn step_log_csv_has_wire_columns() {
+    let mut t = TrainSession::builder("tiny")
+        .devices(2)
+        .optimizer(OptimBinding::AdamW)
+        .seed(1)
+        .comm_precision(CommPrecision::Q8 { block: 64 })
+        .build()
+        .unwrap();
+    t.train_step().unwrap();
+    let path = vescale_fsdp::train::save_log("test_quant_wire_cols", &t.log).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    let header = csv.lines().next().unwrap();
+    assert!(header.ends_with("wire_payload,wire_scale,wire_pad"), "{header}");
+    let row: Vec<&str> = csv.lines().nth(1).unwrap().split(',').collect();
+    let payload: u64 = row[row.len() - 3].parse().unwrap();
+    let scale: u64 = row[row.len() - 2].parse().unwrap();
+    assert!(payload > 0 && scale > 0, "measured wire columns missing");
+    let _ = std::fs::remove_file(path);
+}

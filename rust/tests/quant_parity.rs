@@ -1,0 +1,135 @@
+//! Golden-vector parity for the block-wise int8 quantizer: shared JSON
+//! fixtures checked against BOTH the 8-bit-Adam linear kernels
+//! (`optim::adam8bit`) and the `quant/` communication kernels, pinning
+//! the Pallas reference semantics — absmax scale with the 1.0 zero-block
+//! fallback, round half to **even** (`jnp.round`), clip to ±127. The same
+//! fixture file is consumed by
+//! `python/tests/test_blockwise_quant_golden.py` against the Pallas
+//! kernel itself, so all three implementations are tied to one source of
+//! truth.
+
+use vescale_fsdp::optim::adam8bit;
+use vescale_fsdp::quant;
+use vescale_fsdp::util::json::Json;
+
+const GOLDEN: &str = include_str!("fixtures/blockwise_quant_golden.json");
+
+struct Case {
+    name: String,
+    block: usize,
+    x: Vec<f32>,
+    scales: Vec<f32>,
+    q: Vec<i8>,
+}
+
+fn cases() -> Vec<Case> {
+    let root = Json::parse(GOLDEN).expect("golden fixture parses");
+    root.get("cases")
+        .and_then(|c| c.as_arr())
+        .expect("cases array")
+        .iter()
+        .map(|c| {
+            let floats = |key: &str| -> Vec<f32> {
+                c.get(key)
+                    .and_then(|v| v.as_arr())
+                    .unwrap_or_else(|| panic!("missing {key}"))
+                    .iter()
+                    .map(|v| v.as_f64().unwrap() as f32)
+                    .collect()
+            };
+            Case {
+                name: c.get("name").and_then(|v| v.as_str()).unwrap().to_string(),
+                block: c.get("block").and_then(|v| v.as_usize()).unwrap(),
+                x: floats("x"),
+                scales: floats("scales"),
+                q: c
+                    .get("q")
+                    .and_then(|v| v.as_arr())
+                    .unwrap()
+                    .iter()
+                    .map(|v| v.as_f64().unwrap() as i8)
+                    .collect(),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn fixture_is_well_formed() {
+    let cs = cases();
+    assert!(cs.len() >= 5);
+    for c in &cs {
+        assert_eq!(c.x.len() % c.block, 0, "{}: python kernel needs whole blocks", c.name);
+        assert_eq!(c.x.len(), c.q.len(), "{}", c.name);
+        assert_eq!(c.scales.len(), c.x.len() / c.block, "{}", c.name);
+    }
+}
+
+#[test]
+fn quant_module_matches_golden() {
+    for c in cases() {
+        let qt = quant::QBlockTensor::quantize(&c.x, c.block);
+        assert_eq!(qt.codes, c.q, "{}: codes", c.name);
+        assert_eq!(qt.scales.len(), c.scales.len(), "{}", c.name);
+        for (got, want) in qt.scales.iter().zip(&c.scales) {
+            assert_eq!(got.to_bits(), want.to_bits(), "{}: scale {got} vs {want}", c.name);
+        }
+    }
+}
+
+#[test]
+fn adam8bit_linear_kernels_match_golden() {
+    for c in cases() {
+        let nb = c.x.len() / c.block;
+        for b in 0..nb {
+            let lo = b * c.block;
+            let hi = lo + c.block;
+            let mut q = vec![0i8; c.block];
+            let scale = adam8bit::quant_block(&c.x[lo..hi], &mut q);
+            assert_eq!(scale.to_bits(), c.scales[b].to_bits(), "{}: block {b}", c.name);
+            assert_eq!(&q[..], &c.q[lo..hi], "{}: block {b} codes", c.name);
+        }
+    }
+}
+
+#[test]
+fn dequant_matches_reference_formula_in_both_impls() {
+    // the Pallas dequant is q * scale / 127 — both Rust implementations
+    // must produce exactly those bits
+    for c in cases() {
+        let qt = quant::QBlockTensor {
+            codes: c.q.clone(),
+            scales: c.scales.clone(),
+            block: c.block,
+            len: c.x.len(),
+        };
+        let via_quant = qt.dequantize();
+        let mut via_adam8 = vec![0.0f32; c.x.len()];
+        for (b, &s) in c.scales.iter().enumerate() {
+            let lo = b * c.block;
+            let hi = lo + c.block;
+            adam8bit::dequant_block(&c.q[lo..hi], s, &mut via_adam8[lo..hi]);
+        }
+        for i in 0..c.x.len() {
+            let expect = c.q[i] as f32 * c.scales[i / c.block] / 127.0;
+            assert_eq!(via_quant[i].to_bits(), expect.to_bits(), "{}: [{i}]", c.name);
+            assert_eq!(via_adam8[i].to_bits(), expect.to_bits(), "{}: [{i}]", c.name);
+        }
+    }
+}
+
+#[test]
+fn roundtrip_error_within_half_step_on_golden_inputs() {
+    for c in cases() {
+        let qt = quant::QBlockTensor::quantize(&c.x, c.block);
+        let back = qt.dequantize();
+        for (i, (&orig, &got)) in c.x.iter().zip(&back).enumerate() {
+            let step = qt.scales[i / c.block] / 127.0;
+            assert!(
+                (orig - got).abs() <= step * 0.5 + 1e-7,
+                "{}: [{i}] {orig} vs {got}",
+                c.name
+            );
+        }
+    }
+}
