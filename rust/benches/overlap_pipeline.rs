@@ -6,6 +6,10 @@
 //! the same preset's exposed-comm fraction on the modeled H800 fabric.
 //! A bit-identity check confirms every mode ran the same trajectory.
 //!
+//! Each run is traced at the `comm` level, so the report also carries the
+//! tracer's overlap efficiency (hidden / total transport seconds) and the
+//! measured-vs-`fsdp::sim` seconds per collective op.
+//!
 //!     cargo bench --bench overlap_pipeline [-- --model tiny --mesh 4
 //!                                             --steps 6 --warmup 1]
 //!
@@ -19,6 +23,7 @@ use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
 use vescale_fsdp::fsdp::spec::OptimBinding;
 use vescale_fsdp::fsdp::ExecMode;
 use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::trace::{TraceLevel, TraceSummary};
 use vescale_fsdp::train::TrainSession;
 use vescale_fsdp::util::args::Args;
 use vescale_fsdp::util::json::Json;
@@ -29,6 +34,9 @@ struct RunStats {
     exposed_per_step: f64,
     peak_reserved: u64,
     losses: Vec<f32>,
+    /// Tracer roll-up over the whole run (warmup included): overlap
+    /// efficiency and measured-vs-sim per collective.
+    summary: TraceSummary,
 }
 
 fn run(
@@ -47,6 +55,7 @@ fn run(
         .backend(CommBackend::Threaded)
         .exec(exec)
         .fabric(fabric.clone())
+        .trace(TraceLevel::Comm)
         .build()?;
     let mut losses = Vec::with_capacity(warmup + steps);
     for _ in 0..warmup {
@@ -60,11 +69,13 @@ fn run(
     let wall = t0.elapsed().as_secs_f64();
     let exposed: f64 = t.log.iter().map(|l| l.exposed_s).sum::<f64>() - exposed_before;
     let (peak_reserved, _) = t.engine.memory_stats();
+    let summary = t.trace_summary();
     Ok(RunStats {
         wall_per_step: wall / steps as f64,
         exposed_per_step: exposed / steps as f64,
         peak_reserved,
         losses,
+        summary,
     })
 }
 
@@ -111,7 +122,15 @@ fn main() -> anyhow::Result<()> {
     ];
     let mut table = Table::new(
         "Overlap executor — pipelined vs sequential (threaded backend, measured)",
-        &["schedule", "s/step", "exposed s", "exposed %", "peak res MB", "bit-identical"],
+        &[
+            "schedule",
+            "s/step",
+            "exposed s",
+            "exposed %",
+            "overlap eff",
+            "peak res MB",
+            "bit-identical",
+        ],
     );
     let mut rows = Vec::new();
     let mut stats: Vec<RunStats> = Vec::new();
@@ -131,6 +150,7 @@ fn main() -> anyhow::Result<()> {
             format!("{:.4}", st.wall_per_step),
             format!("{:.4}", st.exposed_per_step),
             format!("{:.1}%", frac * 100.0),
+            format!("{:.1}%", st.summary.overlap_efficiency * 100.0),
             format!("{:.2}", st.peak_reserved as f64 / 1e6),
             format!("{identical}"),
         ]);
@@ -140,8 +160,10 @@ fn main() -> anyhow::Result<()> {
             ("s_per_step", Json::num(st.wall_per_step)),
             ("exposed_s_per_step", Json::num(st.exposed_per_step)),
             ("exposed_frac", Json::num(frac)),
+            ("overlap_efficiency", Json::num(st.summary.overlap_efficiency)),
             ("peak_reserved_bytes", Json::num(st.peak_reserved as f64)),
             ("bit_identical", Json::Bool(identical)),
+            ("trace_summary", st.summary.to_json()),
         ]));
     }
     table.print();
@@ -169,6 +191,18 @@ fn main() -> anyhow::Result<()> {
         stats[0].peak_reserved as f64 / 1e6,
         stats[1].peak_reserved as f64 / 1e6
     );
+    println!(
+        "tracer overlap efficiency: seq {:.1}% vs pipelined-1 {:.1}% (hidden / total transport s)",
+        100.0 * stats[0].summary.overlap_efficiency,
+        100.0 * stats[1].summary.overlap_efficiency
+    );
+    println!("measured vs sim per collective (pipelined-1):");
+    for op in &stats[1].summary.per_op {
+        println!(
+            "  {:<16} measured {:.4}s  sim {:.4}s  ({} calls)",
+            op.op, op.measured_s, op.sim_s, op.count
+        );
+    }
 
     let out = Json::obj(vec![
         ("bench", Json::str("overlap_pipeline")),

@@ -1,0 +1,46 @@
+//! Chrome-trace validator CLI (CI gate for `--trace` output).
+//!
+//!     trace-check trace_a.json trace_b.json ...
+//!
+//! Each file must parse as JSON and pass `trace::check::validate`:
+//! non-empty `traceEvents`, bucket + byte attribution on collective
+//! spans, and strict per-lane span nesting. Exits non-zero if any file
+//! fails, printing one line per file.
+
+use std::process::ExitCode;
+
+use vescale_fsdp::trace::check::validate;
+use vescale_fsdp::util::json::Json;
+
+fn check_file(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("read failed: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("JSON parse failed: {e}"))?;
+    validate(&doc)?;
+    let n = doc
+        .get("traceEvents")
+        .and_then(|e| e.as_arr())
+        .map(|a| a.len())
+        .unwrap_or(0);
+    println!("ok: {path} ({n} events)");
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let files: Vec<String> = std::env::args().skip(1).collect();
+    if files.is_empty() {
+        eprintln!("usage: trace-check <trace.json> [more.json ...]");
+        return ExitCode::from(2);
+    }
+    let mut failed = false;
+    for path in &files {
+        if let Err(e) = check_file(path) {
+            eprintln!("FAIL: {path}: {e}");
+            failed = true;
+        }
+    }
+    if failed {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}

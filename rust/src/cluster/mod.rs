@@ -199,9 +199,20 @@ pub trait Communicator: Send + Sync {
 
 /// Construct the communicator for a backend selection.
 pub fn make_comm(backend: CommBackend) -> Arc<dyn Communicator> {
+    make_comm_traced(backend, crate::trace::Tracer::off())
+}
+
+/// Construct the communicator with a trace sink: both backends emit a
+/// transport span on the `fabric` timeline for every collective they
+/// execute (in every code path — blocking, eager-async, and background
+/// comm thread — so serial and threaded runs record the same span set).
+pub fn make_comm_traced(
+    backend: CommBackend,
+    tracer: crate::trace::Tracer,
+) -> Arc<dyn Communicator> {
     match backend {
-        CommBackend::Serial => Arc::new(SerialComm::new()),
-        CommBackend::Threaded => Arc::new(ThreadedComm::new()),
+        CommBackend::Serial => Arc::new(SerialComm::with_tracer(tracer)),
+        CommBackend::Threaded => Arc::new(ThreadedComm::with_tracer(tracer)),
     }
 }
 

@@ -1,21 +1,30 @@
 //! SerialComm: the reference backend — wraps the original single-thread
 //! loop collectives from [`crate::comm`]. Defines the semantics (and the
 //! exact floating-point reduction order) every other backend must match.
+//! Every collective is bracketed by a transport span on the tracer's
+//! `fabric` timeline (a no-op when tracing is off).
 
 use anyhow::Result;
 
 use crate::comm::{self, CommRecord, CommStats, SharedStats};
+use crate::trace::{Cat, Span, Tracer};
 
 use super::{CommBackend, Communicator};
 
 #[derive(Debug, Default)]
 pub struct SerialComm {
     stats: SharedStats,
+    tracer: Tracer,
 }
 
 impl SerialComm {
     pub fn new() -> SerialComm {
         SerialComm::default()
+    }
+
+    /// Construct with a trace sink for per-collective transport spans.
+    pub fn with_tracer(tracer: Tracer) -> SerialComm {
+        SerialComm { stats: SharedStats::default(), tracer }
     }
 }
 
@@ -25,23 +34,48 @@ impl Communicator for SerialComm {
     }
 
     fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        comm::all_gather(bufs, s)
+        let bytes = (bufs.len() * s * 4) as u64;
+        let t = self.tracer.timer();
+        let r = comm::all_gather(bufs, s);
+        self.tracer
+            .finish_with(t, Cat::Comm, || Span::new("all_gather").fabric().bytes(bytes));
+        r
     }
 
     fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
-        comm::reduce_scatter(bufs, s, scale)
+        let bytes = (bufs.len() * s * 4) as u64;
+        let t = self.tracer.timer();
+        let r = comm::reduce_scatter(bufs, s, scale);
+        self.tracer
+            .finish_with(t, Cat::Comm, || Span::new("reduce_scatter").fabric().bytes(bytes));
+        r
     }
 
     fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
-        comm::all_reduce(bufs, scale)
+        let bytes = (bufs.first().map_or(0, Vec::len) * bufs.len() * 4) as u64;
+        let t = self.tracer.timer();
+        let r = comm::all_reduce(bufs, scale);
+        self.tracer
+            .finish_with(t, Cat::Comm, || Span::new("all_reduce").fabric().bytes(bytes));
+        r
     }
 
     fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
-        comm::broadcast(bufs, root)
+        let bytes = (bufs.first().map_or(0, Vec::len) * bufs.len() * 4) as u64;
+        let t = self.tracer.timer();
+        let r = comm::broadcast(bufs, root);
+        self.tracer
+            .finish_with(t, Cat::Comm, || Span::new("broadcast").fabric().bytes(bytes));
+        r
     }
 
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        comm::all_to_all(bufs, s)
+        let bytes = (bufs.len() * s * 4) as u64;
+        let t = self.tracer.timer();
+        let r = comm::all_to_all(bufs, s);
+        self.tracer
+            .finish_with(t, Cat::Comm, || Span::new("all_to_all").fabric().bytes(bytes));
+        r
     }
 
     fn record(&self, rec: CommRecord) {
@@ -68,6 +102,7 @@ impl Communicator for SerialComm {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::trace::TraceLevel;
 
     #[test]
     fn delegates_to_loop_collectives() {
@@ -87,5 +122,17 @@ mod tests {
         assert_eq!(c.stats().count("all_gather"), 1);
         c.reset_stats();
         assert_eq!(c.stats().records.len(), 0);
+    }
+
+    #[test]
+    fn collectives_emit_transport_spans() {
+        let tracer = Tracer::new(TraceLevel::Comm, 2);
+        let c = SerialComm::with_tracer(tracer.clone());
+        let mut bufs = vec![vec![0.0f32; 4], vec![0.0f32; 4]];
+        bufs[0][0] = 1.0;
+        bufs[1][2] = 2.0;
+        c.all_gather(&mut bufs, 2).unwrap();
+        c.reduce_scatter(&mut bufs, 2, 0.5).unwrap();
+        assert_eq!(tracer.span_count(), 2);
     }
 }

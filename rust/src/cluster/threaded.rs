@@ -25,11 +25,14 @@
 //! conflict are separated by `std::sync::Barrier`. Each algorithm's
 //! disjointness argument is spelled out inline.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Barrier;
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::comm::{self, CommRecord, CommStats, SharedStats};
+use crate::trace::{Cat, Span, Tracer};
 
 use super::{CommBackend, Communicator, PendingOp};
 
@@ -43,6 +46,7 @@ pub struct ThreadedComm {
     stats: SharedStats,
     /// Total-element threshold under which collectives run serially.
     min_parallel_elems: usize,
+    tracer: Tracer,
 }
 
 impl Default for ThreadedComm {
@@ -56,18 +60,105 @@ impl ThreadedComm {
         ThreadedComm {
             stats: SharedStats::default(),
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
+            tracer: Tracer::off(),
+        }
+    }
+
+    /// Construct with a trace sink: every collective — blocking, eager
+    /// fallback, or background comm thread — emits one transport span on
+    /// the `fabric` timeline, with the rendezvous time split into
+    /// `wait_s` (barrier waits) and `copy_s` (region transfers) attrs.
+    pub fn with_tracer(tracer: Tracer) -> ThreadedComm {
+        ThreadedComm {
+            stats: SharedStats::default(),
+            min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
+            tracer,
         }
     }
 
     /// Override the serial-fallback threshold (0 forces the rendezvous
     /// algorithms even for tiny buffers — used by the equivalence tests).
     pub fn with_min_parallel_elems(min_parallel_elems: usize) -> ThreadedComm {
-        ThreadedComm { stats: SharedStats::default(), min_parallel_elems }
+        ThreadedComm {
+            stats: SharedStats::default(),
+            min_parallel_elems,
+            tracer: Tracer::off(),
+        }
     }
 
     fn serial_faster(&self, total_elems: usize) -> bool {
         total_elems < self.min_parallel_elems
     }
+
+    /// Bracket a collective with a transport span. When tracing is off
+    /// this is a direct call with no timing state at all; when on, a
+    /// [`RendezvousTiming`] is handed to the algorithm so barrier-wait
+    /// vs region-copy time lands on the span as attributes.
+    fn traced<F>(&self, name: &'static str, bytes: u64, f: F) -> Result<()>
+    where
+        F: FnOnce(Option<&RendezvousTiming>) -> Result<()>,
+    {
+        spawned_traced(&self.tracer, name, bytes, f)
+    }
+}
+
+/// Per-collective rendezvous time split, accumulated across rank threads
+/// (sums over ranks; an m-rank barrier wait therefore contributes up to
+/// m× the wall time it occupied).
+#[derive(Debug, Default)]
+struct RendezvousTiming {
+    wait_ns: AtomicU64,
+    copy_ns: AtomicU64,
+}
+
+impl RendezvousTiming {
+    fn totals(&self) -> (f64, f64) {
+        (
+            self.wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.copy_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+}
+
+/// Run `f`, accumulating its duration into the wait or copy counter when
+/// timing is enabled. With `tm == None` this compiles down to the bare
+/// call — the disabled-tracing hot path takes no clock samples.
+fn timed<R>(tm: Option<&RendezvousTiming>, is_wait: bool, f: impl FnOnce() -> R) -> R {
+    match tm {
+        None => f(),
+        Some(tm) => {
+            let t0 = Instant::now();
+            let r = f();
+            let ns = t0.elapsed().as_nanos() as u64;
+            let ctr = if is_wait { &tm.wait_ns } else { &tm.copy_ns };
+            ctr.fetch_add(ns, Ordering::Relaxed);
+            r
+        }
+    }
+}
+
+/// [`ThreadedComm::traced`] for the background comm thread: same span,
+/// recorded from inside the spawned closure so the span's wall time is
+/// the transfer itself, not the issue site.
+fn spawned_traced<F>(tracer: &Tracer, name: &'static str, bytes: u64, f: F) -> Result<()>
+where
+    F: FnOnce(Option<&RendezvousTiming>) -> Result<()>,
+{
+    if !tracer.enabled(Cat::Comm) {
+        return f(None);
+    }
+    let tm = RendezvousTiming::default();
+    let t = tracer.timer();
+    let r = f(Some(&tm));
+    let (wait_s, copy_s) = tm.totals();
+    tracer.finish_with(t, Cat::Comm, || {
+        Span::new(name)
+            .fabric()
+            .bytes(bytes)
+            .attr("wait_s", format!("{wait_s:.9}"))
+            .attr("copy_s", format!("{copy_s:.9}"))
+    });
+    r
 }
 
 impl ThreadedComm {
@@ -131,10 +222,15 @@ fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
 /// The rendezvous ring AllGather, as a free function so the sync path and
 /// the background comm thread of `all_gather_async` run the exact same
 /// algorithm (bit-identical either way).
-fn ring_all_gather(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: usize) -> Result<()> {
+fn ring_all_gather(
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    min_parallel_elems: usize,
+    tm: Option<&RendezvousTiming>,
+) -> Result<()> {
     let m = bufs.len();
     if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
-        return comm::all_gather(bufs, s);
+        return timed(tm, false, || comm::all_gather(bufs, s));
     }
     for b in bufs.iter() {
         if b.len() < m * s {
@@ -151,11 +247,11 @@ fn ring_all_gather(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: usize) -
         let left = (rank + m - 1) % m;
         for step in 0..m - 1 {
             let c = (rank + m - 1 - step) % m;
-            unsafe {
+            timed(tm, false, || unsafe {
                 let src = shared.region(left, c * s, (c + 1) * s);
                 shared.region_mut(rank, c * s, (c + 1) * s).copy_from_slice(src);
-            }
-            barrier.wait();
+            });
+            timed(tm, true, || barrier.wait());
         }
     });
     Ok(())
@@ -168,10 +264,11 @@ fn rendezvous_reduce_scatter(
     s: usize,
     scale: f32,
     min_parallel_elems: usize,
+    tm: Option<&RendezvousTiming>,
 ) -> Result<()> {
     let m = bufs.len();
     if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
-        return comm::reduce_scatter(bufs, s, scale);
+        return timed(tm, false, || comm::reduce_scatter(bufs, s, scale));
     }
     for b in bufs.iter() {
         if b.len() < m * s {
@@ -185,21 +282,23 @@ fn rendezvous_reduce_scatter(
         // overwrites only its own chunk-k region. Rank j only ever
         // reads chunk j, so the single write per buffer is disjoint
         // from every concurrent read (j != k ⇒ different chunk).
-        let mut acc = vec![0.0f32; s];
-        unsafe {
-            for r in 0..m {
-                let src = shared.region(r, rank * s, (rank + 1) * s);
-                for (a, &x) in acc.iter_mut().zip(src) {
-                    *a += x;
+        timed(tm, false, || {
+            let mut acc = vec![0.0f32; s];
+            unsafe {
+                for r in 0..m {
+                    let src = shared.region(r, rank * s, (rank + 1) * s);
+                    for (a, &x) in acc.iter_mut().zip(src) {
+                        *a += x;
+                    }
                 }
             }
-        }
-        for a in acc.iter_mut() {
-            *a *= scale;
-        }
-        unsafe {
-            shared.region_mut(rank, rank * s, (rank + 1) * s).copy_from_slice(&acc);
-        }
+            for a in acc.iter_mut() {
+                *a *= scale;
+            }
+            unsafe {
+                shared.region_mut(rank, rank * s, (rank + 1) * s).copy_from_slice(&acc);
+            }
+        });
     });
     Ok(())
 }
@@ -208,10 +307,15 @@ fn rendezvous_reduce_scatter(
 /// background comm thread of `all_to_all_async` run the exact same
 /// algorithm (pure region copies — bit patterns are preserved, which the
 /// quantized collectives' packed int8 wire format relies on).
-fn rendezvous_all_to_all(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: usize) -> Result<()> {
+fn rendezvous_all_to_all(
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    min_parallel_elems: usize,
+    tm: Option<&RendezvousTiming>,
+) -> Result<()> {
     let m = bufs.len();
     if m <= 1 || s == 0 || m * m * s < min_parallel_elems {
-        return comm::all_to_all(bufs, s);
+        return timed(tm, false, || comm::all_to_all(bufs, s));
     }
     for b in bufs.iter() {
         if b.len() < m * s {
@@ -224,17 +328,17 @@ fn rendezvous_all_to_all(bufs: &mut [Vec<f32>], s: usize, min_parallel_elems: us
         // phase 1 (reads only): pull slot `rank` from every sender —
         // the incoming column of the transpose
         let mut incoming = vec![0.0f32; m * s];
-        unsafe {
+        timed(tm, false, || unsafe {
             for r in 0..m {
                 incoming[r * s..(r + 1) * s]
                     .copy_from_slice(shared.region(r, rank * s, (rank + 1) * s));
             }
-        }
-        barrier.wait();
+        });
+        timed(tm, true, || barrier.wait());
         // phase 2 (writes only): overwrite own buffer in place
-        unsafe {
+        timed(tm, false, || unsafe {
             shared.region_mut(rank, 0, m * s).copy_from_slice(&incoming);
-        }
+        });
     });
     Ok(())
 }
@@ -245,25 +349,36 @@ impl Communicator for ThreadedComm {
     }
 
     fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        ring_all_gather(bufs, s, self.min_parallel_elems)
+        let bytes = (bufs.len() * s * 4) as u64;
+        self.traced("all_gather", bytes, |tm| {
+            ring_all_gather(bufs, s, self.min_parallel_elems, tm)
+        })
     }
 
     fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
-        rendezvous_reduce_scatter(bufs, s, scale, self.min_parallel_elems)
+        let bytes = (bufs.len() * s * 4) as u64;
+        self.traced("reduce_scatter", bytes, |tm| {
+            rendezvous_reduce_scatter(bufs, s, scale, self.min_parallel_elems, tm)
+        })
     }
 
     fn all_gather_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
         // below the threading threshold a comm-thread spawn costs more
         // than the exchange itself — complete eagerly, same as the sync
-        // path's serial fallback (bit-identical either way)
+        // path's serial fallback (bit-identical either way; the sync
+        // method emits the transport span)
         let m = bufs.len();
         if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = ring_all_gather(&mut bufs, s, self.min_parallel_elems).map(|()| bufs);
+            let r = self.all_gather(&mut bufs, s).map(|()| bufs);
             return PendingOp::done(r);
         }
         let min = self.min_parallel_elems;
+        let tracer = self.tracer.clone();
+        let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            ring_all_gather(&mut bufs, s, min)?;
+            spawned_traced(&tracer, "all_gather", bytes, |tm| {
+                ring_all_gather(&mut bufs, s, min, tm)
+            })?;
             Ok(bufs)
         })
     }
@@ -271,67 +386,75 @@ impl Communicator for ThreadedComm {
     fn reduce_scatter_async(&self, mut bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
         let m = bufs.len();
         if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = rendezvous_reduce_scatter(&mut bufs, s, scale, self.min_parallel_elems)
-                .map(|()| bufs);
+            let r = self.reduce_scatter(&mut bufs, s, scale).map(|()| bufs);
             return PendingOp::done(r);
         }
         let min = self.min_parallel_elems;
+        let tracer = self.tracer.clone();
+        let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            rendezvous_reduce_scatter(&mut bufs, s, scale, min)?;
+            spawned_traced(&tracer, "reduce_scatter", bytes, |tm| {
+                rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
+            })?;
             Ok(bufs)
         })
     }
 
     fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
         let m = bufs.len();
-        if m <= 1 || self.serial_faster(m * bufs[0].len()) {
-            return comm::all_reduce(bufs, scale);
-        }
-        let n = bufs[0].len();
-        for b in bufs.iter() {
-            if b.len() != n {
-                bail!("all_reduce length mismatch");
+        let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
+        self.traced("all_reduce", bytes, |tm| {
+            if m <= 1 || self.serial_faster(m * bufs[0].len()) {
+                return timed(tm, false, || comm::all_reduce(bufs, scale));
             }
-        }
-        if n == 0 {
-            return Ok(());
-        }
-        let shared = SharedBufs::new(bufs);
-        let barrier = Barrier::new(m);
-        // balanced contiguous element ranges, one per rank (may be empty
-        // when n < m); per element the reduction order is rank 0..m, so
-        // any partition gives bit-identical results
-        let range = |k: usize| -> (usize, usize) {
-            let base = n / m;
-            let extra = n % m;
-            let lo = k * base + k.min(extra);
-            (lo, lo + base + usize::from(k < extra))
-        };
-        fan_out(m, |rank| {
-            // phase 1: reduce own range across all ranks (reads only)
-            let (lo, hi) = range(rank);
-            let mut acc = vec![0.0f32; hi - lo];
-            unsafe {
-                for r in 0..m {
-                    let src = shared.region(r, lo, hi);
-                    for (a, &x) in acc.iter_mut().zip(src) {
-                        *a += x;
+            let n = bufs[0].len();
+            for b in bufs.iter() {
+                if b.len() != n {
+                    bail!("all_reduce length mismatch");
+                }
+            }
+            if n == 0 {
+                return Ok(());
+            }
+            let shared = SharedBufs::new(bufs);
+            let barrier = Barrier::new(m);
+            // balanced contiguous element ranges, one per rank (may be
+            // empty when n < m); per element the reduction order is rank
+            // 0..m, so any partition gives bit-identical results
+            let range = |k: usize| -> (usize, usize) {
+                let base = n / m;
+                let extra = n % m;
+                let lo = k * base + k.min(extra);
+                (lo, lo + base + usize::from(k < extra))
+            };
+            fan_out(m, |rank| {
+                // phase 1: reduce own range across all ranks (reads only)
+                let (lo, hi) = range(rank);
+                let mut acc = vec![0.0f32; hi - lo];
+                timed(tm, false, || {
+                    unsafe {
+                        for r in 0..m {
+                            let src = shared.region(r, lo, hi);
+                            for (a, &x) in acc.iter_mut().zip(src) {
+                                *a += x;
+                            }
+                        }
                     }
-                }
-            }
-            for a in acc.iter_mut() {
-                *a *= scale;
-            }
-            barrier.wait();
-            // phase 2: publish own range into every buffer (writes only;
-            // unique writer per (buffer, range) pair)
-            unsafe {
-                for r in 0..m {
-                    shared.region_mut(r, lo, hi).copy_from_slice(&acc);
-                }
-            }
-        });
-        Ok(())
+                    for a in acc.iter_mut() {
+                        *a *= scale;
+                    }
+                });
+                timed(tm, true, || barrier.wait());
+                // phase 2: publish own range into every buffer (writes
+                // only; unique writer per (buffer, range) pair)
+                timed(tm, false, || unsafe {
+                    for r in 0..m {
+                        shared.region_mut(r, lo, hi).copy_from_slice(&acc);
+                    }
+                });
+            });
+            Ok(())
+        })
     }
 
     fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
@@ -339,42 +462,52 @@ impl Communicator for ThreadedComm {
         if root >= m {
             bail!("broadcast root {root} out of range");
         }
-        if m <= 1 || self.serial_faster(m * bufs[root].len()) {
-            return comm::broadcast(bufs, root);
-        }
-        let n = bufs[root].len();
-        for (k, b) in bufs.iter().enumerate() {
-            if b.len() != n {
-                bail!("broadcast length mismatch at rank {k}");
+        let bytes = (bufs[root].len() * m * 4) as u64;
+        self.traced("broadcast", bytes, |tm| {
+            if m <= 1 || self.serial_faster(m * bufs[root].len()) {
+                return timed(tm, false, || comm::broadcast(bufs, root));
             }
-        }
-        let shared = SharedBufs::new(bufs);
-        fan_out(m, |rank| {
-            // concurrent reads of root's buffer; each non-root rank is
-            // the unique writer of its own buffer
-            if rank != root {
-                unsafe {
-                    let src = shared.region(root, 0, n);
-                    shared.region_mut(rank, 0, n).copy_from_slice(src);
+            let n = bufs[root].len();
+            for (k, b) in bufs.iter().enumerate() {
+                if b.len() != n {
+                    bail!("broadcast length mismatch at rank {k}");
                 }
             }
-        });
-        Ok(())
+            let shared = SharedBufs::new(bufs);
+            fan_out(m, |rank| {
+                // concurrent reads of root's buffer; each non-root rank
+                // is the unique writer of its own buffer
+                if rank != root {
+                    timed(tm, false, || unsafe {
+                        let src = shared.region(root, 0, n);
+                        shared.region_mut(rank, 0, n).copy_from_slice(src);
+                    });
+                }
+            });
+            Ok(())
+        })
     }
 
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        rendezvous_all_to_all(bufs, s, self.min_parallel_elems)
+        let bytes = (bufs.len() * s * 4) as u64;
+        self.traced("all_to_all", bytes, |tm| {
+            rendezvous_all_to_all(bufs, s, self.min_parallel_elems, tm)
+        })
     }
 
     fn all_to_all_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
         let m = bufs.len();
         if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = rendezvous_all_to_all(&mut bufs, s, self.min_parallel_elems).map(|()| bufs);
+            let r = self.all_to_all(&mut bufs, s).map(|()| bufs);
             return PendingOp::done(r);
         }
         let min = self.min_parallel_elems;
+        let tracer = self.tracer.clone();
+        let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            rendezvous_all_to_all(&mut bufs, s, min)?;
+            spawned_traced(&tracer, "all_to_all", bytes, |tm| {
+                rendezvous_all_to_all(&mut bufs, s, min, tm)
+            })?;
             Ok(bufs)
         })
     }
@@ -521,6 +654,28 @@ mod tests {
         // errors surface at wait(), not at issue
         let bad = vec![vec![0.0f32; 2]; 4];
         assert!(comm.all_gather_async(bad, 6).wait().is_err());
+    }
+
+    #[test]
+    fn every_path_emits_one_transport_span() {
+        use crate::trace::{TraceLevel, Tracer};
+        let tracer = Tracer::new(TraceLevel::Comm, 4);
+        let mut c = ThreadedComm::with_tracer(tracer.clone());
+        c.min_parallel_elems = 0; // force the rendezvous algorithms
+        let (m, s) = (4usize, 3usize);
+        let mk = || dev_bufs(m, s);
+        // sync, eager-async (threshold), and background-async paths must
+        // each record exactly one span per collective call
+        let mut bufs = mk();
+        c.all_gather(&mut bufs, s).unwrap();
+        assert_eq!(tracer.span_count(), 1);
+        c.all_gather_async(mk(), s).wait().unwrap();
+        assert_eq!(tracer.span_count(), 2);
+        let eager = ThreadedComm::with_tracer(tracer.clone()); // default threshold -> eager
+        eager.all_gather_async(mk(), s).wait().unwrap();
+        assert_eq!(tracer.span_count(), 3);
+        let ids = tracer.span_identities();
+        assert!(ids.iter().all(|(name, _, bytes)| name == "all_gather" && *bytes > 0));
     }
 
     #[test]

@@ -181,6 +181,15 @@ impl ConfigFile {
                 "unknown comm_precision '{comm_precision}' (expected f32, bf16, or q8[:block])"
             );
         }
+        // `run.trace = "out.json"` or a `[trace]` section with out/level
+        let trace = self
+            .get("run.trace")
+            .or_else(|| self.get("trace.out"))
+            .map(str::to_string);
+        let trace_level = self.str_or("trace.level", &d.trace_level);
+        if crate::trace::TraceLevel::parse(&trace_level).is_none() {
+            bail!("unknown trace level '{trace_level}' (expected off, comm, or full)");
+        }
         Ok(TrainConfig {
             model: self.str_or("model.preset", &d.model),
             parallel: ParallelConfig {
@@ -200,6 +209,8 @@ impl ConfigFile {
             prefetch: self.usize_or("run.prefetch", d.prefetch),
             fabric,
             comm_precision,
+            trace,
+            trace_level,
             groups: self.group_overrides()?,
         })
     }

@@ -184,6 +184,11 @@ pub struct TrainConfig {
     /// Session-default wire precision (`run.comm_precision` /
     /// `--comm-precision`): f32 | bf16 | q8[:block].
     pub comm_precision: String,
+    /// Chrome-trace output path (`run.trace` / `[trace] out` / `--trace`).
+    /// `None` = tracing off.
+    pub trace: Option<String>,
+    /// Trace detail (`[trace] level` / `--trace-level`): off | comm | full.
+    pub trace_level: String,
     /// Per-group `[group.*]` overrides, applied on the layerwise wrapping.
     pub groups: Vec<GroupOverride>,
 }
@@ -205,6 +210,8 @@ impl Default for TrainConfig {
             prefetch: 0,
             fabric: "h800".into(),
             comm_precision: "f32".into(),
+            trace: None,
+            trace_level: "comm".into(),
             groups: Vec::new(),
         }
     }

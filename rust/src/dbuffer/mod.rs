@@ -39,6 +39,7 @@ use crate::memory::{BlockId, SharedAllocator};
 use crate::mesh::DeviceMesh;
 use crate::planner::Layout;
 use crate::quant::{self, CommPrecision};
+use crate::trace::{Cat, Span, Tracer};
 
 /// Per-bucket distributed buffer over an FSDP group of `m` devices.
 #[derive(Debug)]
@@ -66,6 +67,11 @@ pub struct DBuffer {
     /// A quantized (wire-encoded) gather is in flight: `full` stays home
     /// but must not be read until `finish_gather_prec` decodes into it.
     wire_inflight: bool,
+    /// Trace sink for quant-codec and allocator-wait spans (off by
+    /// default — every site then costs one untaken branch).
+    tracer: Tracer,
+    /// Bucket label attached to this buffer's spans.
+    label: String,
 }
 
 impl DBuffer {
@@ -82,7 +88,16 @@ impl DBuffer {
             full_block: None,
             wire_block: None,
             wire_inflight: false,
+            tracer: Tracer::off(),
+            label: String::new(),
         }
+    }
+
+    /// Attach a trace sink; this buffer's spans carry `label` as their
+    /// `bucket` attribute.
+    pub fn set_tracer(&mut self, tracer: Tracer, label: &str) {
+        self.tracer = tracer;
+        self.label = label.to_string();
     }
 
     /// Like [`DBuffer::new`], but every byte of storage is accounted
@@ -109,8 +124,12 @@ impl DBuffer {
     fn acquire_full(&mut self) -> Result<()> {
         if let Some(alloc) = &self.alloc {
             if self.full_block.is_none() {
-                self.full_block =
-                    Some(alloc.lock().unwrap().alloc(self.full_bytes().max(1))?);
+                let bytes = self.full_bytes().max(1);
+                let t = self.tracer.timer();
+                self.full_block = Some(alloc.lock().unwrap().alloc(bytes)?);
+                self.tracer.finish_with(t, Cat::Compute, || {
+                    Span::new("alloc_wait").bucket(&self.label).bytes(bytes)
+                });
             }
         }
         Ok(())
@@ -229,8 +248,12 @@ impl DBuffer {
     fn acquire_wire(&mut self, words: usize) -> Result<()> {
         if let Some(alloc) = &self.alloc {
             if self.wire_block.is_none() {
-                self.wire_block =
-                    Some(alloc.lock().unwrap().alloc(((words * 4) as u64).max(1))?);
+                let bytes = ((words * 4) as u64).max(1);
+                let t = self.tracer.timer();
+                self.wire_block = Some(alloc.lock().unwrap().alloc(bytes)?);
+                self.tracer.finish_with(t, Cat::Compute, || {
+                    Span::new("alloc_wait").bucket(&self.label).bytes(bytes)
+                });
             }
         }
         Ok(())
@@ -248,10 +271,17 @@ impl DBuffer {
     fn encode_shard_wire(&self, prec: CommPrecision) -> Vec<Vec<f32>> {
         let m = self.num_devices();
         let w = prec.wire_words(self.shard_elems());
+        let t = self.tracer.timer();
         let mut wire: Vec<Vec<f32>> = vec![vec![0.0; m * w]; m];
         for (rank, (wb, shard)) in wire.iter_mut().zip(&self.shards).enumerate() {
             quant::encode_slot(prec, shard, &mut wb[rank * w..(rank + 1) * w]);
         }
+        self.tracer.finish_with(t, Cat::Comm, || {
+            Span::new("quant_encode")
+                .bucket(&self.label)
+                .bytes((w * 4) as u64)
+                .attr("prec", prec.name())
+        });
         wire
     }
 
@@ -263,6 +293,7 @@ impl DBuffer {
         let m = self.num_devices();
         let s = self.shard_elems();
         let w = prec.wire_words(s);
+        let t = self.tracer.timer();
         for (rank, full) in self.full.iter_mut().enumerate() {
             for k in 0..m {
                 quant::decode_slot(
@@ -272,6 +303,12 @@ impl DBuffer {
                 );
             }
         }
+        self.tracer.finish_with(t, Cat::Comm, || {
+            Span::new("quant_decode")
+                .bucket(&self.label)
+                .bytes((m * w * 4) as u64)
+                .attr("prec", prec.name())
+        });
     }
 
     /// Precision-aware in-place parameter AllGather: `F32` is exactly

@@ -29,6 +29,7 @@ use crate::optim::group::{self as optim_group, GroupEnv};
 use crate::optim::{GroupOptimizer, Muon, ShardOptimizer};
 use crate::planner::{self, TensorDecl};
 use crate::quant::CommPrecision;
+use crate::trace::{Cat, Span, Tracer};
 use crate::util::lcm;
 
 use super::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
@@ -171,6 +172,9 @@ pub struct FsdpEngine {
     /// full buffers through it, so `memory_stats` reports a *measured*
     /// peak.
     pub alloc: SharedAllocator,
+    /// Trace sink shared by the executor, the buckets' DBuffers, and the
+    /// optimizer dispatch (off unless [`FsdpEngine::set_tracer`] ran).
+    pub tracer: Tracer,
     locs: Vec<ParamLoc>,
     m: usize,
 }
@@ -303,7 +307,26 @@ impl FsdpEngine {
         if !grad_sizes.is_empty() {
             let _grad_blocks = alloc.lock().unwrap().alloc_batch(&grad_sizes)?;
         }
-        Ok(FsdpEngine { mesh, fabric, comm, buckets, params, alloc, locs, m })
+        Ok(FsdpEngine {
+            mesh,
+            fabric,
+            comm,
+            buckets,
+            params,
+            alloc,
+            tracer: Tracer::off(),
+            locs,
+            m,
+        })
+    }
+
+    /// Attach a trace sink, propagated to every bucket's DBuffer (whose
+    /// quant-codec and allocator-wait spans then carry the bucket name).
+    pub fn set_tracer(&mut self, tracer: Tracer) {
+        for b in &mut self.buckets {
+            b.dbuffer.set_tracer(tracer.clone(), &b.name);
+        }
+        self.tracer = tracer;
     }
 
     pub fn num_devices(&self) -> usize {
@@ -446,7 +469,14 @@ impl FsdpEngine {
         }
         let comm = self.comm.clone();
         for (bucket, opt) in self.buckets.iter_mut().zip(opts.iter_mut()) {
+            let timer = self.tracer.timer();
             opt.step_group(bucket_env(bucket, comm.as_ref()), t)?;
+            self.tracer.finish_with(timer, Cat::Compute, || {
+                Span::new("optim")
+                    .lane_compute()
+                    .bucket(&bucket.name)
+                    .attr("opt", opt.name())
+            });
         }
         Ok(())
     }

@@ -47,6 +47,7 @@ use crate::memory::BlockId;
 use crate::quant;
 use crate::runtime::native::{self, LayerCache, LayerParams};
 use crate::runtime::{Engine as ComputeEngine, ModelCfg};
+use crate::trace::{Cat, Span};
 
 /// How the step loop drives buckets (`--prefetch` flag: 0 = sequential,
 /// N >= 1 = pipelined with at most N gathers in flight).
@@ -83,6 +84,13 @@ impl ExecMode {
     }
 }
 
+/// Total wire bytes one bucket's gather/reduce collective moves
+/// (per-rank encoded bytes x group size) at its wire precision.
+fn bucket_wire_bytes(b: &Bucket) -> u64 {
+    b.comm_precision.wire_volume(b.dbuffer.layout.shard_size).total()
+        * b.dbuffer.num_devices() as u64
+}
+
 /// Measured timeline of one executed step.
 #[derive(Debug, Clone, Default)]
 pub struct ExecReport {
@@ -90,6 +98,10 @@ pub struct ExecReport {
     pub wall_s: f64,
     /// Wall seconds the step spent *blocked* on collectives — the
     /// measured exposed-communication time (compute hid the rest).
+    /// Every contribution is the duration of one `exposed()` tracer span
+    /// ([`crate::trace::Tracer::finish_with`] returns the elapsed seconds
+    /// it records), so this figure *is* the sum of the step's exposed
+    /// comm spans — the accounting cannot drift from the trace.
     pub exposed_comm_s: f64,
     /// Fabric-model (simulated H800) comm seconds recorded this step.
     pub sim_comm_s: f64,
@@ -172,11 +184,16 @@ fn run_sequential(
     exposed: &mut f64,
 ) -> Result<Vec<f32>> {
     let m = engine.num_devices();
+    let tracer = engine.tracer.clone();
     // every collective in this schedule is exposed: nothing computes
-    // while the gathers / reductions run
-    let tg = Instant::now();
+    // while the gathers / reductions run. One logical "ag"/"rs" span
+    // covers all buckets (bucket "*"), bytes summed across them.
+    let ag_bytes: u64 = engine.buckets.iter().map(bucket_wire_bytes).sum();
+    let tg = tracer.timer();
     engine.gather_params()?;
-    *exposed += tg.elapsed().as_secs_f64();
+    *exposed += tracer.finish_with(tg, Cat::Comm, || {
+        Span::new("ag").exposed().bucket("*").bytes(ag_bytes).attr("phase", "sync")
+    });
     let mut losses = Vec::with_capacity(m);
     let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
     if engine.comm.backend() == CommBackend::Threaded && runtime.is_native() {
@@ -187,9 +204,14 @@ fn run_sequential(
         // inside Engine are not Sync.
         let eng = &*engine;
         let (outs, _) = Cluster::run_spmd(m, |rank, _ctx| {
+            let tc = tracer.timer();
             let params = eng.device_params(rank);
             let (tokens, targets) = &batches[rank];
-            native::train_step(cfg, &params, tokens, targets)
+            let out = native::train_step(cfg, &params, tokens, targets);
+            tracer.finish_with(tc, Cat::Compute, || {
+                Span::new("fwd_bwd").rank(rank).lane_compute()
+            });
+            out
         });
         for out in outs {
             let (loss, grads) = out?;
@@ -198,16 +220,23 @@ fn run_sequential(
         }
     } else {
         for (rank, (tokens, targets)) in batches.iter().enumerate() {
+            let tc = tracer.timer();
             let params = engine.device_params(rank);
             let (loss, grads) = runtime.train_step(config, &params, tokens, targets)?;
+            tracer.finish_with(tc, Cat::Compute, || {
+                Span::new("fwd_bwd").rank(rank).lane_compute()
+            });
             losses.push(loss);
             all_grads.push(grads);
         }
     }
     engine.release_params();
-    let tr = Instant::now();
+    let rs_bytes: u64 = engine.buckets.iter().map(bucket_wire_bytes).sum();
+    let tr = tracer.timer();
     engine.reduce_grads(&all_grads)?;
-    *exposed += tr.elapsed().as_secs_f64();
+    *exposed += tracer.finish_with(tr, Cat::Comm, || {
+        Span::new("rs").exposed().bucket("*").bytes(rs_bytes).attr("phase", "sync")
+    });
     Ok(losses)
 }
 
@@ -331,17 +360,25 @@ fn issue_gathers(
     cap: usize,
     exposed: &mut f64,
 ) -> Result<()> {
+    let tracer = engine.tracer.clone();
     while inflight.len() < cap {
         let Some(b) = order.next() else {
             return Ok(());
         };
         let comm = engine.comm.clone();
         let prec = engine.buckets[b].comm_precision;
-        let t0 = Instant::now();
+        let t0 = tracer.timer();
         // cast-before-comm: the encode (quant kernel) runs at issue time,
         // so it is charged as exposed alongside the issue cost
         let op = engine.buckets[b].dbuffer.begin_gather_prec(comm.as_ref(), prec)?;
-        *exposed += t0.elapsed().as_secs_f64();
+        *exposed += tracer.finish_with(t0, Cat::Comm, || {
+            Span::new("ag")
+                .exposed()
+                .bucket(&engine.buckets[b].name)
+                .bytes(bucket_wire_bytes(&engine.buckets[b]))
+                .attr("phase", "issue")
+                .attr("prec", prec.name())
+        });
         inflight.push_back((b, op));
     }
     Ok(())
@@ -359,8 +396,9 @@ fn wait_gather(
         return Ok(());
     }
     let comm = engine.comm.clone();
+    let tracer = engine.tracer.clone();
     while let Some((bucket, op)) = inflight.pop_front() {
-        let t0 = Instant::now();
+        let t0 = tracer.timer();
         // each bucket's collective is timed on its own (group-local)
         // fabric and decoded at its own wire precision; the dequant of an
         // earlier bucket overlaps later buckets' in-flight gathers
@@ -369,7 +407,14 @@ fn wait_gather(
         engine.buckets[bucket]
             .dbuffer
             .finish_gather_prec(op, comm.as_ref(), &fabric, prec)?;
-        *exposed += t0.elapsed().as_secs_f64();
+        *exposed += tracer.finish_with(t0, Cat::Comm, || {
+            Span::new("ag")
+                .exposed()
+                .bucket(&engine.buckets[bucket].name)
+                .bytes(bucket_wire_bytes(&engine.buckets[bucket]))
+                .attr("phase", "wait")
+                .attr("prec", prec.name())
+        });
         if bucket == b {
             return Ok(());
         }
@@ -419,10 +464,17 @@ fn begin_reduce(
     }
     let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.buckets[b].mesh);
     let prec = engine.buckets[b].comm_precision;
+    let tracer = engine.tracer.clone();
     if prec.is_f32() {
-        let t0 = Instant::now();
+        let t0 = tracer.timer();
         let op = engine.comm.reduce_scatter_async(bufs, s, scale);
-        *exposed += t0.elapsed().as_secs_f64();
+        *exposed += tracer.finish_with(t0, Cat::Comm, || {
+            Span::new("rs")
+                .exposed()
+                .bucket(&engine.buckets[b].name)
+                .bytes(bucket_wire_bytes(&engine.buckets[b]))
+                .attr("phase", "issue")
+        });
         return Ok(PendingReduce {
             bucket: b,
             op,
@@ -433,12 +485,24 @@ fn begin_reduce(
     }
     // cast-before-comm: the encode (quant kernel) and wire claim happen
     // at issue time and count as exposed, mirroring the gather path
-    let t0 = Instant::now();
+    let t0 = tracer.timer();
     let wire = quant::rs_inject_and_encode(prec, &mut bufs, s, &mut engine.buckets[b].ef)?;
     let w = prec.wire_words(s);
-    let wire_block = engine.alloc.lock().unwrap().alloc(((m * w * 4) as u64).max(1))?;
+    let wire_bytes = ((m * w * 4) as u64).max(1);
+    let ta = tracer.timer();
+    let wire_block = engine.alloc.lock().unwrap().alloc(wire_bytes)?;
+    tracer.finish_with(ta, Cat::Compute, || {
+        Span::new("alloc_wait").bucket(&engine.buckets[b].name).bytes(wire_bytes)
+    });
     let op = engine.comm.all_to_all_async(wire, w);
-    *exposed += t0.elapsed().as_secs_f64();
+    *exposed += tracer.finish_with(t0, Cat::Comm, || {
+        Span::new("rs")
+            .exposed()
+            .bucket(&engine.buckets[b].name)
+            .bytes(bucket_wire_bytes(&engine.buckets[b]))
+            .attr("phase", "issue")
+            .attr("prec", prec.name())
+    });
     Ok(PendingReduce {
         bucket: b,
         op,
@@ -456,9 +520,14 @@ fn begin_reduce(
 /// AllReduce) and release the staged gradient / wire buffers.
 fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut f64) -> Result<()> {
     let PendingReduce { bucket: b, op, staged, staged_block, wire_block } = pending;
-    let t0 = Instant::now();
+    let tracer = engine.tracer.clone();
+    let bname = engine.buckets[b].name.clone();
+    let bytes = bucket_wire_bytes(&engine.buckets[b]);
+    let t0 = tracer.timer();
     let returned = op.wait()?;
-    *exposed += t0.elapsed().as_secs_f64();
+    *exposed += tracer.finish_with(t0, Cat::Comm, || {
+        Span::new("rs").exposed().bucket(&bname).bytes(bytes).attr("phase", "wait")
+    });
     let comm = engine.comm.clone();
     let Bucket { dbuffer, grad_shards, mesh, fabric, comm_precision, ef, .. } =
         &mut engine.buckets[b];
@@ -469,11 +538,18 @@ fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut 
         Some(mut bufs) => {
             let s = dbuffer.shard_elems();
             let scale = dbuffer.reduce_scale(mesh);
+            let prec = *comm_precision;
             // the dequant-reduce is wall time the step cannot hide —
             // exposed, like finish_gather_prec's decode
-            let t1 = Instant::now();
-            quant::rs_decode_reduce(*comm_precision, &returned, &mut bufs, s, scale, ef)?;
-            *exposed += t1.elapsed().as_secs_f64();
+            let t1 = tracer.timer();
+            quant::rs_decode_reduce(prec, &returned, &mut bufs, s, scale, ef)?;
+            *exposed += tracer.finish_with(t1, Cat::Comm, || {
+                Span::new("quant_decode")
+                    .exposed()
+                    .bucket(&bname)
+                    .bytes(bytes)
+                    .attr("prec", prec.name())
+            });
             dbuffer.reduce_gradients_finish_prec(
                 &bufs,
                 grad_shards,
@@ -506,6 +582,7 @@ fn run_pipelined(
     let nl = cfg.n_layers;
     let threaded = engine.comm.backend() == CommBackend::Threaded
         && cfg.batch * cfg.seq * cfg.d_model >= MIN_PARALLEL_ACT_ELEMS;
+    let tracer = engine.tracer.clone();
     let mut states: Vec<RankState> = (0..m).map(|_| RankState::default()).collect();
 
     // ---- forward: prefetch AG(l+1..) under compute of bucket l ----
@@ -516,6 +593,7 @@ fn run_pipelined(
         wait_gather(engine, &mut inflight, l, exposed)?;
         issue_gathers(engine, &mut inflight, &mut fwd_order, prefetch, exposed)?;
         par_ranks(&mut states, threaded, |rank, st| {
+            let tc = tracer.timer();
             if l == 0 {
                 st.x = native::embed_fwd(cfg, engine.full_param_view(rank, 0), &batches[rank].0);
             } else if l <= nl {
@@ -531,6 +609,9 @@ fn run_pipelined(
                 st.loss = loss;
                 st.dlogits = dlogits;
             }
+            tracer.finish_with(tc, Cat::Compute, || {
+                Span::new("fwd").rank(rank).lane_compute().bucket(&engine.buckets[l].name)
+            });
         });
         // reshard-after-forward: drop the full bucket so backward
         // re-gathers it through the same prefetch window — unless the
@@ -556,6 +637,7 @@ fn run_pipelined(
         wait_gather(engine, &mut inflight, b, exposed)?;
         issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
         par_ranks(&mut states, threaded, |rank, st| {
+            let tc = tracer.timer();
             if b == nb - 1 {
                 let final_ln = engine.full_param_view(rank, 1 + 8 * nl);
                 let head = engine.full_param_view(rank, 2 + 8 * nl);
@@ -571,6 +653,9 @@ fn run_pipelined(
                 let d_embed = native::embed_bwd(cfg, &batches[rank].0, &st.dx);
                 st.bucket_grads = vec![d_embed];
             }
+            tracer.finish_with(tc, Cat::Compute, || {
+                Span::new("bwd").rank(rank).lane_compute().bucket(&engine.buckets[b].name)
+            });
         });
         engine.buckets[b].dbuffer.release_full();
         let pending = begin_reduce(engine, &mut states, b, exposed)?;

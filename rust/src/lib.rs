@@ -97,6 +97,25 @@
 //! Bf16 / Q8 wire volume and wall-clock across rank counts
 //! (`BENCH_quant.json`). `F32` bypasses the subsystem entirely —
 //! bit-identical to the pre-quantization engine (`tests/quant_comm.rs`).
+//!
+//! ## Observability
+//!
+//! The [`trace`] module is the always-compiled tracing + metrics layer:
+//! a per-rank [`trace::Tracer`] threaded through the executor, both
+//! communicator backends, the DBuffer gather/reduce paths, the quant
+//! codecs, and the per-group optimizer steps. `--trace out.json
+//! [--trace-level off|comm|full]` exports the merged rank-ordered spans
+//! as Chrome trace-event JSON (one pid per rank plus a `fabric` pid,
+//! compute vs comm lanes as tids — open in Perfetto) with allocator and
+//! wire-byte counter tracks, plus a [`trace::TraceSummary`]: per-bucket
+//! exposed-comm attribution, overlap efficiency (hidden/total comm),
+//! per-rank skew, and measured-vs-`fsdp::sim` time per collective.
+//! `ExecReport::exposed_comm_s` is *derived from* the exposed spans
+//! (one clock, one sink — the accounting cannot drift from the trace),
+//! and with `--trace-level off` each site reduces to the same
+//! `Instant` pair the old ad-hoc timers paid, so disabled tracing
+//! changes neither math (bit-identical losses) nor, materially,
+//! wall-clock (`tests/trace_validity.rs`).
 
 pub mod checkpoint;
 pub mod cluster;
@@ -114,5 +133,6 @@ pub mod planner;
 pub mod quant;
 pub mod runtime;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod util;

@@ -5,6 +5,7 @@
 //!                         [--backend serial|threaded] [--prefetch N]
 //!                         [--fabric h800|h100|a100]
 //!                         [--comm-precision f32|bf16|q8[:block]]
+//!                         [--trace out.json] [--trace-level off|comm|full]
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
 //!                          executor with up to N in-flight bucket collectives)
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
@@ -29,6 +30,7 @@ use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::planner::{plan, TensorDecl};
 use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::trace::TraceLevel;
 use vescale_fsdp::train::{save_log, TrainSession};
 use vescale_fsdp::util::args::Args;
 
@@ -80,6 +82,24 @@ fn cmd_train(args: &Args) -> Result<()> {
     let comm_precision = CommPrecision::parse(&prec_name).ok_or_else(|| {
         anyhow!("unknown --comm-precision '{prec_name}' (expected f32, bf16, or q8[:block])")
     })?;
+    // A bare trailing `--trace` parses as the value "true"; treat that as
+    // "trace to the default filename".
+    let trace_path: Option<String> = args
+        .get("trace")
+        .map(|p| if p == "true" { "trace.json" } else { p })
+        .map(str::to_string)
+        .or_else(|| base.trace.clone());
+    let level_name = args.str_or("trace-level", &base.trace_level);
+    let trace_level = TraceLevel::parse(&level_name).ok_or_else(|| {
+        anyhow!("unknown --trace-level '{level_name}' (expected off, comm, or full)")
+    })?;
+    // Tracing only arms when an output path is requested; otherwise the
+    // tracer stays Off and every span site is a single untaken branch.
+    let level = if trace_path.is_some() {
+        trace_level
+    } else {
+        TraceLevel::Off
+    };
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -107,6 +127,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .exec(exec)
         .fabric(fabric)
         .comm_precision(comm_precision)
+        .trace(level)
         .overrides(base.groups.clone())
         .build()?;
     println!("compute runtime: {}", trainer.runtime.backend_name());
@@ -144,6 +165,19 @@ fn cmd_train(args: &Args) -> Result<()> {
             last.wire_scale as f64 / 1e6,
             last.wire_pad as f64 / 1e6,
             comm_precision.name()
+        );
+    }
+    if let Some(out) = &trace_path {
+        trainer.write_trace(std::path::Path::new(out))?;
+        let s = trainer.trace_summary();
+        println!(
+            "trace: {out} ({} spans, level {}) — overlap efficiency {:.1}% \
+             (hidden {:.3}s of {:.3}s comm)",
+            trainer.tracer.span_count(),
+            level.name(),
+            100.0 * s.overlap_efficiency,
+            s.hidden_comm_s,
+            s.total_comm_s
         );
     }
     let path = save_log(

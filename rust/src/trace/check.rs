@@ -1,0 +1,173 @@
+//! Structural validator for exported Chrome trace-event JSON: schema of
+//! every event, strict nesting of duration spans per `(pid, tid)` lane,
+//! and required `bucket`/`bytes` attributes on collective spans. Shared
+//! by the `trace-check` CLI binary (CI runs it on the smoke traces) and
+//! `tests/trace_validity.rs`.
+
+use crate::util::json::Json;
+
+/// Collective spans that must carry both a `bucket` and a `bytes` arg.
+const LOGICAL_COLLECTIVES: [&str; 2] = ["ag", "rs"];
+/// Transport spans that must carry a `bytes` arg.
+const TRANSPORT_OPS: [&str; 5] =
+    ["all_gather", "reduce_scatter", "all_reduce", "broadcast", "all_to_all"];
+
+/// Validate a parsed trace document. Returns `Err(reason)` on the first
+/// structural violation.
+pub fn validate(doc: &Json) -> Result<(), String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or("missing traceEvents array")?;
+    if events.is_empty() {
+        return Err("traceEvents is empty".into());
+    }
+
+    // (pid, tid) -> [(ts, dur, name)]
+    let mut lanes: Vec<((u64, u64), Vec<(f64, f64, String)>)> = Vec::new();
+    for (i, e) in events.iter().enumerate() {
+        let ph = e
+            .get("ph")
+            .and_then(Json::as_str)
+            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        match ph {
+            "M" => {
+                if e.get("name").and_then(Json::as_str).is_none() {
+                    return Err(format!("event {i}: metadata without name"));
+                }
+            }
+            "C" => {
+                require_num(e, i, "ts")?;
+                let args =
+                    e.get("args").ok_or_else(|| format!("event {i}: counter without args"))?;
+                if args.get("value").and_then(Json::as_f64).is_none() {
+                    return Err(format!("event {i}: counter without args.value"));
+                }
+            }
+            "X" => {
+                let pid = require_num(e, i, "pid")? as u64;
+                let tid = require_num(e, i, "tid")? as u64;
+                let ts = require_num(e, i, "ts")?;
+                let dur = require_num(e, i, "dur")?;
+                let name = e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| format!("event {i}: span without name"))?;
+                if e.get("cat").and_then(Json::as_str).is_none() {
+                    return Err(format!("event {i}: span without cat"));
+                }
+                let args = e.get("args");
+                let has = |key: &str| args.and_then(|a| a.get(key)).is_some();
+                if LOGICAL_COLLECTIVES.contains(&name) && (!has("bucket") || !has("bytes")) {
+                    return Err(format!(
+                        "event {i}: collective span '{name}' missing bucket/bytes args"
+                    ));
+                }
+                if TRANSPORT_OPS.contains(&name) && !has("bytes") {
+                    return Err(format!(
+                        "event {i}: transport span '{name}' missing bytes arg"
+                    ));
+                }
+                let key = (pid, tid);
+                match lanes.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, v)) => v.push((ts, dur, name.to_string())),
+                    None => lanes.push((key, vec![(ts, dur, name.to_string())])),
+                }
+            }
+            other => return Err(format!("event {i}: unknown ph '{other}'")),
+        }
+    }
+
+    // Strict nesting per lane: after sorting by (start asc, dur desc),
+    // every span must be fully contained in (or disjoint from) the
+    // enclosing span on the stack.
+    const EPS: f64 = 1e-3; // microseconds; absorbs ns -> us rounding
+    for ((pid, tid), mut v) in lanes {
+        v.sort_by(|a, b| a.0.total_cmp(&b.0).then(b.1.total_cmp(&a.1)));
+        let mut stack: Vec<(f64, f64, String)> = Vec::new(); // (start, end, name)
+        for (ts, dur, name) in v {
+            let end = ts + dur;
+            while let Some(top) = stack.last() {
+                if top.1 <= ts + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(top) = stack.last() {
+                if end > top.1 + EPS {
+                    return Err(format!(
+                        "lane ({pid},{tid}): span '{name}' [{ts:.3},{end:.3}] \
+                         overlaps '{}' ending at {:.3} without nesting",
+                        top.2, top.1
+                    ));
+                }
+            }
+            stack.push((ts, end, name));
+        }
+    }
+    Ok(())
+}
+
+fn require_num(e: &Json, i: usize, key: &str) -> Result<f64, String> {
+    e.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("event {i}: missing numeric '{key}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(pid: u64, tid: u64, ts: f64, dur: f64, name: &str) -> Json {
+        Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("pid", Json::num(pid as f64)),
+            ("tid", Json::num(tid as f64)),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur)),
+            ("name", Json::str(name)),
+            ("cat", Json::str("comm")),
+            ("args", Json::obj(vec![("bytes", Json::num(8.0))])),
+        ])
+    }
+
+    fn doc(events: Vec<Json>) -> Json {
+        Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    #[test]
+    fn accepts_nested_and_sequential() {
+        let d = doc(vec![
+            span(0, 2, 0.0, 100.0, "outer"),
+            span(0, 2, 10.0, 20.0, "inner"),
+            span(0, 2, 200.0, 50.0, "later"),
+            span(1, 2, 5.0, 500.0, "other-lane"),
+        ]);
+        validate(&d).unwrap();
+    }
+
+    #[test]
+    fn rejects_partial_overlap() {
+        let d = doc(vec![
+            span(0, 2, 0.0, 100.0, "a"),
+            span(0, 2, 50.0, 100.0, "b"),
+        ]);
+        assert!(validate(&d).is_err());
+    }
+
+    #[test]
+    fn rejects_collective_without_bucket() {
+        let d = doc(vec![span(0, 2, 0.0, 1.0, "ag")]);
+        let err = validate(&d).unwrap_err();
+        assert!(err.contains("bucket"), "{err}");
+    }
+
+    #[test]
+    fn rejects_empty_and_malformed() {
+        assert!(validate(&doc(vec![])).is_err());
+        assert!(validate(&Json::obj(vec![])).is_err());
+        let no_ph = Json::obj(vec![("name", Json::str("x"))]);
+        assert!(validate(&doc(vec![no_ph])).is_err());
+    }
+}

@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::{make_comm, Cluster, CommBackend};
+use crate::cluster::{make_comm, make_comm_traced, Cluster, CommBackend};
 use crate::comm::{CommRecord, Fabric};
 use crate::config::{GroupOverride, OptimKind};
 use crate::fsdp::spec::{ModelSpec, OptimBinding, ShardGroupSpec};
@@ -27,6 +27,8 @@ use crate::mesh::DeviceMesh;
 use crate::optim::{Adam8bit, AdamHyper, AdamW, GroupOptimizer, Sgd, ShardOptimizer};
 use crate::quant::CommPrecision;
 use crate::runtime::Engine;
+use crate::trace::{TraceLevel, TraceSummary, Tracer};
+use crate::util::json::Json;
 use crate::util::Rng;
 
 /// Synthetic corpus with learnable structure: a deterministic successor
@@ -143,6 +145,11 @@ pub struct StepLog {
     pub wire_scale: u64,
     /// Word-packing pad bytes this step shipped.
     pub wire_pad: u64,
+    /// Allocator peak reserved bytes (cumulative over the run; 0 for the
+    /// DDP trainer, which bypasses the caching allocator).
+    pub peak_reserved: u64,
+    /// Allocator peak allocated bytes (cumulative; 0 for DDP).
+    pub peak_allocated: u64,
 }
 
 /// Legacy alias: the FSDP trainer is now [`TrainSession`]; every old
@@ -167,6 +174,10 @@ pub struct TrainSession {
     pub exec: ExecMode,
     /// Measured timeline of the most recent step.
     pub last_report: Option<ExecReport>,
+    /// The session's trace sink (off unless the builder enabled it) —
+    /// the same instance threaded through the engine, the DBuffers, and
+    /// the communicator backend.
+    pub tracer: Tracer,
     pub step: u64,
     pub log: Vec<StepLog>,
 }
@@ -205,6 +216,7 @@ pub struct SessionBuilder {
     exec: ExecMode,
     fabric: Fabric,
     comm_precision: CommPrecision,
+    trace: TraceLevel,
     groups: Vec<ShardGroupSpec>,
     spec: Option<ModelSpec>,
     overrides: Vec<GroupOverride>,
@@ -224,6 +236,7 @@ impl SessionBuilder {
             exec: ExecMode::Sequential,
             fabric: Fabric::h800(),
             comm_precision: CommPrecision::F32,
+            trace: TraceLevel::Off,
             groups: Vec::new(),
             spec: None,
             overrides: Vec::new(),
@@ -296,6 +309,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Tracing level (`--trace-level off|comm|full`): `Off` keeps every
+    /// instrumentation site down to a bare timer read, `Comm` records
+    /// collective + exposed-comm spans, `Full` adds per-rank compute
+    /// spans. Tracing never changes the math — trajectories are
+    /// bit-identical at every level.
+    pub fn trace(mut self, level: TraceLevel) -> Self {
+        self.trace = level;
+        self
+    }
+
     /// Append a custom wrap unit. The first `.group(..)` call switches
     /// the builder from the layerwise default to fully explicit wrapping
     /// — declare every group (declaration order = bucket order), each
@@ -363,13 +386,15 @@ impl SessionBuilder {
         } else {
             DeviceMesh::flat("fsdp", self.devices)
         };
+        let tracer = Tracer::new(self.trace, self.devices);
         let mut engine = FsdpEngine::from_spec(
             cfg.params.clone(),
             &spec,
             mesh,
             self.fabric.clone(),
-            make_comm(self.backend),
+            make_comm_traced(self.backend, tracer.clone()),
         )?;
+        engine.set_tracer(tracer.clone());
         engine.init_params(&init_full_params(&cfg.params, self.seed))?;
         let qblock = runtime.manifest.qblock;
         let m = engine.num_devices();
@@ -403,6 +428,7 @@ impl SessionBuilder {
             optimizers,
             exec,
             last_report: None,
+            tracer,
             step: 0,
             log: Vec::new(),
         })
@@ -534,6 +560,7 @@ impl TrainSession {
     /// by the executor schedule (`self.exec`).
     pub fn train_step(&mut self) -> Result<f32> {
         let t0 = std::time::Instant::now();
+        self.tracer.set_step(self.step + 1);
         let (batch, seq) = {
             let cfg = &self.runtime.manifest.configs[&self.config];
             (cfg.batch, cfg.seq)
@@ -559,6 +586,19 @@ impl TrainSession {
         self.engine.optimizer_step_groups(&mut self.optimizers, self.step)?;
         let loss = outcome.losses.iter().sum::<f32>() / m as f32;
         let wire_after = self.engine.comm.wire_totals();
+        if self.tracer.is_enabled() {
+            // counter tracks: allocator levels + cumulative wire bytes,
+            // sampled once per step at a fixed schedule point
+            let (reserved, allocated) = {
+                let a = self.engine.alloc.lock().unwrap();
+                (a.reserved, a.allocated)
+            };
+            self.tracer.counter("mem.reserved", reserved as f64);
+            self.tracer.counter("mem.allocated", allocated as f64);
+            self.tracer.counter("wire.payload", wire_after.0 as f64);
+            self.tracer.counter("wire.scale", wire_after.1 as f64);
+            self.tracer.counter("wire.pad", wire_after.2 as f64);
+        }
         self.log.push(StepLog {
             step: self.step,
             loss,
@@ -571,6 +611,8 @@ impl TrainSession {
             wire_payload: wire_after.0 - wire_before.0,
             wire_scale: wire_after.1 - wire_before.1,
             wire_pad: wire_after.2 - wire_before.2,
+            peak_reserved: outcome.report.peak_reserved,
+            peak_allocated: outcome.report.peak_allocated,
         });
         self.last_report = Some(outcome.report);
         Ok(loss)
@@ -581,6 +623,26 @@ impl TrainSession {
             self.train_step()?;
         }
         Ok(self.log.clone())
+    }
+
+    /// Machine-readable summary of the traced run: per-bucket exposed
+    /// comm, overlap efficiency, per-rank skew, measured-vs-simulated
+    /// time per collective.
+    pub fn trace_summary(&self) -> TraceSummary {
+        self.tracer.summary(&self.engine.comm.stats())
+    }
+
+    /// The full Chrome trace-event document for the traced run
+    /// (Perfetto / `chrome://tracing` loadable).
+    pub fn trace_json(&self) -> Json {
+        self.tracer.export(&self.engine.comm.stats())
+    }
+
+    /// Write the Chrome trace JSON to `path`.
+    pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.trace_json().to_string())
+            .with_context(|| format!("writing trace to {}", path.display()))?;
+        Ok(())
     }
 }
 
@@ -736,6 +798,8 @@ impl DdpTrainer {
             wire_payload: wire_after.0 - wire_before.0,
             wire_scale: wire_after.1 - wire_before.1,
             wire_pad: wire_after.2 - wire_before.2,
+            peak_reserved: 0,
+            peak_allocated: 0,
         });
         Ok(loss)
     }
@@ -754,11 +818,12 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
     let mut out = String::from(
-        "step,loss,comm_time,exposed_s,wall_s,fabric,wire_payload,wire_scale,wire_pad\n",
+        "step,loss,comm_time,exposed_s,wall_s,fabric,wire_payload,wire_scale,wire_pad,\
+         peak_reserved,peak_allocated\n",
     );
     for l in log {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{}\n",
             l.step,
             l.loss,
             l.comm_time,
@@ -767,7 +832,9 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
             l.fabric,
             l.wire_payload,
             l.wire_scale,
-            l.wire_pad
+            l.wire_pad,
+            l.peak_reserved,
+            l.peak_allocated
         ));
     }
     std::fs::write(&path, out)?;

@@ -1,0 +1,219 @@
+//! Trace validity: the Chrome trace export must parse, validate
+//! (strict per-lane nesting, bucket/bytes attribution on collective
+//! spans), agree across cluster backends, and never perturb training —
+//! tracing on vs off is bit-identical. Also the satellite invariant:
+//! `ExecReport::exposed_comm_s` *is* the sum of exposed-span durations.
+
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::trace::{check, TraceLevel};
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::json::Json;
+
+fn session(backend: CommBackend, exec: ExecMode, level: TraceLevel) -> TrainSession {
+    TrainSession::builder("tiny")
+        .devices(2)
+        .seed(11)
+        .backend(backend)
+        .exec(exec)
+        .trace(level)
+        .build()
+        .unwrap()
+}
+
+fn losses(s: &TrainSession) -> Vec<u32> {
+    s.log.iter().map(|l| l.loss.to_bits()).collect()
+}
+
+#[test]
+fn pipelined_trace_exports_valid_chrome_json() {
+    let mut s = session(
+        CommBackend::Threaded,
+        ExecMode::Pipelined { prefetch: 2 },
+        TraceLevel::Full,
+    );
+    s.run(2).unwrap();
+    // round-trip through text: what CI's trace-check sees is what we check
+    let text = s.trace_json().to_string();
+    let doc = Json::parse(&text).unwrap();
+    check::validate(&doc).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+
+    // one pid per rank plus the fabric pid
+    let pids: Vec<&str> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").and_then(Json::as_str) == Some("M")
+                && e.get("name").and_then(Json::as_str) == Some("process_name")
+        })
+        .map(|e| e.get("args").unwrap().get("name").unwrap().as_str().unwrap())
+        .collect();
+    assert!(pids.contains(&"rank0") && pids.contains(&"rank1"), "{pids:?}");
+    assert!(pids.contains(&"fabric"), "{pids:?}");
+
+    // counter tracks sampled each step
+    let counters: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("C"))
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["mem.reserved", "mem.allocated", "wire.payload"] {
+        assert!(counters.contains(&want), "missing counter {want}");
+    }
+
+    // the full schedule vocabulary shows up
+    let names: Vec<&str> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for want in ["ag", "rs", "fwd", "bwd", "optim", "all_gather", "reduce_scatter"] {
+        assert!(names.contains(&want), "missing span {want}");
+    }
+}
+
+#[test]
+fn collective_spans_carry_bucket_and_bytes() {
+    let mut s = session(
+        CommBackend::Serial,
+        ExecMode::Pipelined { prefetch: 1 },
+        TraceLevel::Comm,
+    );
+    s.run(1).unwrap();
+    let doc = s.trace_json();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let mut seen = 0;
+    for e in events {
+        let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+        if e.get("ph").and_then(Json::as_str) == Some("X") && (name == "ag" || name == "rs") {
+            let args = e.get("args").expect("collective span args");
+            let bucket = args.get("bucket").and_then(Json::as_str).expect("bucket");
+            assert!(!bucket.is_empty());
+            let bytes = args.get("bytes").and_then(Json::as_f64).expect("bytes");
+            assert!(bytes > 0.0, "span {name} bucket {bucket}: bytes {bytes}");
+            seen += 1;
+        }
+    }
+    // tiny = 4 buckets, each gathered in fwd + bwd and reduced once
+    assert!(seen >= 8, "only {seen} collective spans");
+}
+
+#[test]
+fn serial_and_threaded_traces_agree() {
+    let run = |backend| {
+        let mut s = session(backend, ExecMode::Pipelined { prefetch: 2 }, TraceLevel::Full);
+        s.run(2).unwrap();
+        (losses(&s), s.tracer.span_identities())
+    };
+    let (loss_ser, spans_ser) = run(CommBackend::Serial);
+    let (loss_thr, spans_thr) = run(CommBackend::Threaded);
+    assert_eq!(loss_ser, loss_thr, "backend changed the trajectory");
+    assert_eq!(
+        spans_ser.len(),
+        spans_thr.len(),
+        "backend changed the span count"
+    );
+    // identical multiset of (name, bucket, bytes): both backends ran the
+    // same schedule and shipped the same wire volume
+    assert_eq!(spans_ser, spans_thr);
+}
+
+#[test]
+fn tracing_is_bitwise_invisible() {
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 2 }),
+    ] {
+        let mut off = session(backend, exec, TraceLevel::Off);
+        off.run(2).unwrap();
+        let mut full = session(backend, exec, TraceLevel::Full);
+        full.run(2).unwrap();
+        assert_eq!(off.tracer.span_count(), 0);
+        assert!(full.tracer.span_count() > 0);
+        assert_eq!(
+            losses(&off),
+            losses(&full),
+            "{} {}: tracing perturbed the losses",
+            backend.name(),
+            exec.name()
+        );
+    }
+}
+
+#[test]
+fn exposed_comm_derives_from_spans() {
+    for exec in [ExecMode::Sequential, ExecMode::Pipelined { prefetch: 2 }] {
+        let mut s = session(CommBackend::Threaded, exec, TraceLevel::Comm);
+        s.run(2).unwrap();
+        let from_report: f64 = s.log.iter().map(|l| l.exposed_s).sum();
+        let from_spans = s.tracer.exposed_total_s();
+        assert!(from_report > 0.0, "{}: no exposed comm measured", exec.name());
+        assert!(
+            (from_report - from_spans).abs() < 1e-9,
+            "{}: report {from_report} != span sum {from_spans}",
+            exec.name()
+        );
+        // the summary agrees and stays on [0, 1]
+        let sum = s.trace_summary();
+        assert!((sum.exposed_comm_s - from_spans).abs() < 1e-9);
+        assert!((0.0..=1.0).contains(&sum.overlap_efficiency));
+        assert!(sum.total_comm_s > 0.0);
+    }
+}
+
+#[test]
+fn steplog_records_allocator_peaks() {
+    let mut s = session(
+        CommBackend::Serial,
+        ExecMode::Pipelined { prefetch: 1 },
+        TraceLevel::Off,
+    );
+    s.run(1).unwrap();
+    let l = &s.log[0];
+    assert!(l.peak_allocated > 0);
+    assert!(l.peak_reserved >= l.peak_allocated);
+}
+
+#[test]
+fn validator_rejects_partial_overlap_and_bad_spans() {
+    let xev = |name: &str, ts: f64, dur: f64| {
+        Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(2.0)),
+            ("ts", Json::num(ts)),
+            ("dur", Json::num(dur)),
+            ("name", Json::str(name)),
+            ("cat", Json::str("comm")),
+            (
+                "args",
+                Json::obj(vec![
+                    ("bucket", Json::str("b")),
+                    ("bytes", Json::num(8.0)),
+                ]),
+            ),
+        ])
+    };
+    let doc = |events| Json::obj(vec![("traceEvents", Json::Arr(events))]);
+    // partial overlap on one lane: neither contains the other
+    let bad = doc(vec![xev("ag", 0.0, 100.0), xev("rs", 50.0, 100.0)]);
+    assert!(check::validate(&bad).is_err());
+    // same intervals on different lanes are fine
+    let mut other = xev("rs", 50.0, 100.0);
+    if let Json::Obj(map) = &mut other {
+        map.insert("tid".into(), Json::num(3.0));
+    }
+    let ok = doc(vec![xev("ag", 0.0, 100.0), other]);
+    check::validate(&ok).unwrap();
+    // a collective span without attribution is rejected
+    let naked = Json::obj(vec![
+        ("ph", Json::str("X")),
+        ("pid", Json::num(0.0)),
+        ("tid", Json::num(2.0)),
+        ("ts", Json::num(0.0)),
+        ("dur", Json::num(1.0)),
+        ("name", Json::str("ag")),
+        ("cat", Json::str("comm")),
+    ]);
+    assert!(check::validate(&doc(vec![naked])).is_err());
+}
