@@ -3,14 +3,30 @@
 //!   (b) strong scaling at fixed 16M/120M-token global batches
 //!   (c) the same, normalized
 //!   (d) model scaling 400B->2.4T on 1K GPUs (MFU per GPU)
+//! plus the repo-specific hierarchy study: flat vs topology-aware
+//! collectives at 1K/8K/32K-rank meshes (sim-predicted per-tier comm
+//! seconds) and a measured 8-rank threaded wall for flat vs 2x4.
+//!
+//!     cargo bench --bench fig9_scaling [-- --steps 12 --warmup 1 --smoke]
+//!
+//! `--smoke` trims the measured runs and skips the fig-9 tables (the CI
+//! mode); the sim sweep is analytic and runs in full either way. Emits
+//! `BENCH_hierarchy.json` at the crate root.
 
 use vescale_fsdp::baselines;
-use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::{Fabric, Topology};
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
-use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
+use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec, StepReport};
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::args::Args;
+use vescale_fsdp::util::json::Json;
 use vescale_fsdp::util::table::{fmt_si, Table};
 
-fn main() {
+fn fig9_tables() {
     let fabric = Fabric::h800();
     let gpu = GpuSpec::h800();
     let ve = baselines::vescale(1);
@@ -107,4 +123,131 @@ fn main() {
     md.print();
     println!("expected shape (paper): near-linear weak scaling; 3.4x at 16M");
     println!("batch from 1K->8K; 2.4T trains on 1K GPUs with flat-to-rising MFU.");
+}
+
+/// Sim one 800B-MoE step at mesh `m` on `fabric`.
+fn sim_at(m: usize, fabric: &Fabric) -> StepReport {
+    simulate_step(
+        &presets::moe_internal(800.0),
+        &ParallelConfig { fsdp: m, replicas: 1, ep: 8 },
+        OptimKind::AdamW,
+        8192,
+        fabric,
+        &GpuSpec::h800(),
+        &baselines::vescale(1),
+    )
+    .unwrap()
+}
+
+/// Measured threaded-pipelined wall seconds per step on the tiny model.
+fn measure(m: usize, fabric: Fabric, warmup: usize, steps: usize) -> anyhow::Result<(f64, Vec<f32>)> {
+    let mut t = TrainSession::builder("tiny")
+        .devices(m)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .backend(CommBackend::Threaded)
+        .exec(ExecMode::Pipelined { prefetch: 2 })
+        .fabric(fabric)
+        .build()?;
+    for _ in 0..warmup {
+        t.train_step()?;
+    }
+    let mut losses = Vec::with_capacity(steps);
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        losses.push(t.train_step()?);
+    }
+    Ok((t0.elapsed().as_secs_f64() / steps as f64, losses))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.bool("smoke");
+    let (steps, warmup) = if smoke {
+        (args.usize_or("steps", 2), 0)
+    } else {
+        (args.usize_or("steps", 12), args.usize_or("warmup", 1))
+    };
+    if !smoke {
+        fig9_tables();
+    }
+
+    // ---- hierarchy study: sim-predicted per-tier comm, flat vs HxG ----
+    let mut ht = Table::new(
+        "Hierarchy — flat ring vs topology-aware (sim, 800B MoE, 8K tok/GPU)",
+        &["ranks", "layout", "step (s)", "comm (s)", "intra (s)", "inter (s)", "inter vs flat"],
+    );
+    let mut sim_rows = Vec::new();
+    let mut inter_shrinks_everywhere = true;
+    for m in [1024usize, 8192, 32768] {
+        let flat = sim_at(m, &Fabric::h800());
+        let topo = Topology { hosts: m / 8, gpus_per_host: 8, segments: 2 };
+        let hier = sim_at(m, &Fabric::h800().with_topology(topo));
+        let ratio = hier.inter_comm_s / flat.inter_comm_s.max(1e-12);
+        inter_shrinks_everywhere &= hier.inter_comm_s < flat.inter_comm_s;
+        let hier_label = format!("{}x8:2", m / 8);
+        for (layout, r, rs) in [
+            ("flat", &flat, "1.00x".to_string()),
+            (hier_label.as_str(), &hier, format!("{ratio:.2}x")),
+        ] {
+            ht.rowv(vec![
+                format!("{m}"),
+                layout.to_string(),
+                format!("{:.3}", r.step_time),
+                format!("{:.3}", r.comm_time),
+                format!("{:.3}", r.intra_comm_s),
+                format!("{:.3}", r.inter_comm_s),
+                rs,
+            ]);
+            sim_rows.push(Json::obj(vec![
+                ("ranks", Json::num(m as f64)),
+                ("layout", Json::str(layout)),
+                ("step_s", Json::num(r.step_time)),
+                ("comm_s", Json::num(r.comm_time)),
+                ("sim_intra_comm_s", Json::num(r.intra_comm_s)),
+                ("sim_inter_comm_s", Json::num(r.inter_comm_s)),
+                ("inter_vs_flat", Json::num(if layout == "flat" { 1.0 } else { ratio })),
+            ]));
+        }
+    }
+    ht.print();
+    println!(
+        "sim-predicted inter-host comm shrinks under hierarchy at every mesh: \
+         {inter_shrinks_everywhere}"
+    );
+
+    // ---- measured: 8-rank threaded wall, flat ring vs 2x4 hierarchy ----
+    let (flat_wall, flat_losses) = measure(8, Fabric::h800(), warmup, steps)?;
+    let (hier_wall, hier_losses) =
+        measure(8, Fabric::by_name("h800:2x4:2").unwrap(), warmup, steps)?;
+    let identical = flat_losses.len() == hier_losses.len()
+        && flat_losses
+            .iter()
+            .zip(&hier_losses)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    assert!(identical, "hierarchical trajectory diverged from flat");
+    println!(
+        "\nmeasured tiny/8 threaded pipelined: flat {:.4} s/step, 2x4 {:.4} s/step \
+         ({:.2}x) — losses bit-identical: {identical}",
+        flat_wall,
+        hier_wall,
+        flat_wall / hier_wall.max(1e-12)
+    );
+
+    let out = Json::obj(vec![
+        ("bench", Json::str("fig9_scaling_hierarchy")),
+        ("smoke", Json::Bool(smoke)),
+        ("steps", Json::num(steps as f64)),
+        ("sim_rows", Json::Arr(sim_rows)),
+        ("sim_inter_comm_shrinks", Json::Bool(inter_shrinks_everywhere)),
+        ("measured_flat_s_per_step", Json::num(flat_wall)),
+        ("measured_2x4_s_per_step", Json::num(hier_wall)),
+        ("measured_speedup_2x4_vs_flat", Json::num(flat_wall / hier_wall.max(1e-12))),
+        ("losses_bit_identical", Json::Bool(identical)),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/BENCH_hierarchy.json");
+    std::fs::write(path, out.to_string())?;
+    println!("wrote {path}");
+    Ok(())
 }

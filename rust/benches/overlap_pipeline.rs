@@ -17,7 +17,7 @@
 
 use vescale_fsdp::baselines;
 use vescale_fsdp::cluster::CommBackend;
-use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::comm::{Fabric, Topology};
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
 use vescale_fsdp::fsdp::spec::OptimBinding;
@@ -204,6 +204,31 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // ---- topology head-to-head: flat 8-rank ring vs 2x4 hierarchy ----
+    // same model, same pipelined schedule; only the collective algorithm
+    // changes, so the trajectories must stay bit-identical while the
+    // two-level exchange shortens the serialized inter-host ring
+    let hier_fabric = fabric
+        .clone()
+        .with_topology(Topology { hosts: 2, gpus_per_host: 4, segments: 2 });
+    let flat8 = run(&model, 8, ExecMode::Pipelined { prefetch: 2 }, &fabric, warmup, steps)?;
+    let hier8 = run(&model, 8, ExecMode::Pipelined { prefetch: 2 }, &hier_fabric, warmup, steps)?;
+    let hier_identical = flat8.losses.len() == hier8.losses.len()
+        && flat8
+            .losses
+            .iter()
+            .zip(&hier8.losses)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+    let hier_wins = hier8.wall_per_step < flat8.wall_per_step;
+    println!(
+        "\ntopology (8 ranks, pipelined-2): flat {:.4} s/step vs 2x4 {:.4} s/step \
+         ({:.2}x, {})  bit-identical: {hier_identical}",
+        flat8.wall_per_step,
+        hier8.wall_per_step,
+        flat8.wall_per_step / hier8.wall_per_step.max(1e-12),
+        if hier_wins { "hierarchy wins" } else { "flat wins on this host" }
+    );
+
     let out = Json::obj(vec![
         ("bench", Json::str("overlap_pipeline")),
         ("model", Json::str(&model)),
@@ -214,6 +239,20 @@ fn main() -> anyhow::Result<()> {
         ("rows", Json::Arr(rows)),
         ("pipelined_wins", Json::Bool(pipelined_wins)),
         ("speedup_best_pipelined", Json::num(speedup)),
+        (
+            "hierarchy",
+            Json::obj(vec![
+                ("topology", Json::str("2x4:2")),
+                ("flat_s_per_step", Json::num(flat8.wall_per_step)),
+                ("hier_s_per_step", Json::num(hier8.wall_per_step)),
+                (
+                    "speedup_hier_vs_flat",
+                    Json::num(flat8.wall_per_step / hier8.wall_per_step.max(1e-12)),
+                ),
+                ("hier_wins", Json::Bool(hier_wins)),
+                ("bit_identical", Json::Bool(hier_identical)),
+            ]),
+        ),
         (
             "sim_prediction",
             Json::obj(vec![

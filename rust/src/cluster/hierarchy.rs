@@ -1,0 +1,348 @@
+//! Topology-aware two-level collectives with intra-collective chunk
+//! pipelining.
+//!
+//! A [`Topology`](crate::comm::Topology) of `H` hosts × `g` ranks (rank
+//! `r` lives at host `r / g`, local index `l = r % g` — host-major) turns
+//! the flat single-ring algorithms of `cluster/threaded.rs` into
+//! two-tier ones:
+//!
+//! * **AllGather** — phase A: each host runs the chunked intra-host ring
+//!   over its own `g` chunks (`g-1` NVLink-tier hops). Phase B: a
+//!   *rail-aligned* inter-host ring — the `H` ranks sharing local index
+//!   `l` form rail `l` and exchange whole host *super-chunks* (`g`
+//!   chunks) in `H-1` IB-tier steps, every rail in parallel. Total
+//!   volume per rank is `(g-1) + (H-1)·g = m-1` chunks — identical to
+//!   the flat ring — but only `(H-1)·g` of them cross hosts and the
+//!   long-haul step count drops from `m-1` to `O(g + H)`.
+//! * **ReduceScatter** — a host-chained prefix fold: host 0 sums its `g`
+//!   contributions to chunk `k` (in rank order, starting from `0.0`),
+//!   hands the partial to host 1, which adds its `g` contributions, …;
+//!   host `H-1` applies the scale and writes chunk `k`'s owner region.
+//!   The chain performs *exactly* the serial reference's left-to-right
+//!   f32 additions (`comm::reduce_scatter`), so results are bit-identical
+//!   to the flat path by construction — while only one partial (not `g`)
+//!   per chunk crosses each host boundary: the intra-host pre-reduce
+//!   that shrinks inter-host volume `g`-fold.
+//!
+//! **Chunk pipelining**: each collective is split into `S` segments
+//! (`off(σ) = σ·s/S` sub-ranges of every chunk). AllGather interleaves
+//! phase B of segment `σ` with phase A of segment `σ+1` in a wave
+//! schedule; ReduceScatter staggers the host chain one wave per host, so
+//! host `h` folds segment `σ` while host `h-1` is already folding
+//! segment `σ+1`. Segment boundaries only re-slice pure copies and the
+//! exact same addition chain, so results are invariant in `S`.
+//!
+//! Safety model (same discipline as `threaded.rs`, arguments inline):
+//! disjoint `region`/`region_mut` slices per phase, with per-host
+//! barriers (`g` participants) ordering intra-host ring steps and
+//! per-rail barriers (`H` participants) ordering inter-host steps and
+//! the scratch handoff. Every rank executes the identical wave/barrier
+//! sequence, so the schedule cannot deadlock.
+
+use std::sync::Barrier;
+
+use anyhow::{bail, Result};
+
+use crate::comm::Topology;
+
+use super::threaded::{fan_out, timed, RendezvousTiming, SharedBufs};
+
+/// Hierarchical AllGather: intra-host ring + rail-aligned inter-host
+/// super-chunk ring, pipelined over `topo.segments` segments. Pure region
+/// copies — bit patterns are preserved, so the result is bit-identical to
+/// the flat ring (and to the serial reference) for any topology.
+///
+/// `tm_intra`/`tm_inter` accumulate the per-tier wait/copy split when
+/// tracing is on (`None` = no clock samples at all).
+pub(crate) fn hier_all_gather(
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    topo: Topology,
+    tm_intra: Option<&RendezvousTiming>,
+    tm_inter: Option<&RendezvousTiming>,
+) -> Result<()> {
+    let m = bufs.len();
+    let (hosts, g, segs) = (topo.hosts, topo.gpus_per_host, topo.segments.max(1));
+    if m != hosts * g || hosts < 2 {
+        bail!("hier_all_gather: {m} ranks don't fill topology {}", topo.label());
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("all_gather buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    if s == 0 {
+        return Ok(());
+    }
+    let shared = SharedBufs::new(bufs);
+    let host_barrier: Vec<Barrier> = (0..hosts).map(|_| Barrier::new(g)).collect();
+    let rail_barrier: Vec<Barrier> = (0..g).map(|_| Barrier::new(hosts)).collect();
+    let off = |sigma: usize| sigma * s / segs;
+    fan_out(m, |rank| {
+        let (h, l) = (rank / g, rank % g);
+        let left_local = h * g + (l + g - 1) % g;
+        let left_host = ((h + hosts - 1) % hosts) * g + l;
+        // Wave w: phase A gathers segment w inside the host while phase B
+        // relays the already-host-complete segment w-1 across the rail.
+        for wave in 0..=segs {
+            if wave < segs {
+                let (lo, hi) = (off(wave), off(wave + 1));
+                // Phase A — intra-host chunked ring over the host's own g
+                // chunks (global h·g..h·g+g), segment `wave` only. Step t:
+                // local rank l writes local chunk (l-1-t) mod g of its own
+                // buffer while its right neighbor reads a different chunk
+                // of it; the host barrier orders step t's writes before
+                // step t+1's reads (the flat ring's argument, per host).
+                for step in 0..g.saturating_sub(1) {
+                    let c = h * g + (l + g - 1 - step) % g;
+                    timed(tm_intra, false, || unsafe {
+                        let src = shared.region(left_local, c * s + lo, c * s + hi);
+                        shared.region_mut(rank, c * s + lo, c * s + hi).copy_from_slice(src);
+                    });
+                    timed(tm_intra, true, || host_barrier[h].wait());
+                }
+            }
+            // Orders phase A(w) writes on every host of the rail before
+            // phase B(w) reads them one wave later. Phase A touches only
+            // same-host buffers and phase B only rail-l buffers at
+            // other-host chunk regions, so cross-phase slices of the same
+            // wave never alias.
+            timed(tm_inter, true, || rail_barrier[l].wait());
+            if wave >= 1 {
+                let (lo, hi) = (off(wave - 1), off(wave));
+                // Phase B — inter-host ring along rail l over host
+                // super-chunks, segment `wave-1`. Step t: copy host
+                // (h-1-t) mod H's super-chunk (its g chunks' segment
+                // sub-ranges) from the rail-left neighbor. Writers and
+                // readers of one buffer always touch different
+                // super-chunks within a step (H >= 2), and rail barriers
+                // order consecutive steps.
+                for step in 0..hosts - 1 {
+                    let ch = (h + hosts - 1 - step) % hosts;
+                    timed(tm_inter, false, || unsafe {
+                        for c in ch * g..(ch + 1) * g {
+                            let src = shared.region(left_host, c * s + lo, c * s + hi);
+                            shared
+                                .region_mut(rank, c * s + lo, c * s + hi)
+                                .copy_from_slice(src);
+                        }
+                    });
+                    timed(tm_inter, true, || rail_barrier[l].wait());
+                }
+            }
+        }
+    });
+    Ok(())
+}
+
+/// Hierarchical ReduceScatter: host-chained prefix fold, pipelined by
+/// staggering hosts one wave apart. Chunk `k`'s fold step on host `h`
+/// runs on rank `(h, k mod g)`; the partial travels host 0 → 1 → … →
+/// H-1 through a shared per-chunk scratch buffer, accumulating every
+/// rank's contribution **in rank order 0..m** — the serial reference's
+/// exact f32 addition chain, so results are bit-identical to
+/// [`comm::reduce_scatter`](crate::comm::reduce_scatter) (and the flat
+/// threaded path) while only the folded partial crosses each host
+/// boundary.
+pub(crate) fn hier_reduce_scatter(
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    scale: f32,
+    topo: Topology,
+    tm_intra: Option<&RendezvousTiming>,
+    tm_inter: Option<&RendezvousTiming>,
+) -> Result<()> {
+    let m = bufs.len();
+    let (hosts, g, segs) = (topo.hosts, topo.gpus_per_host, topo.segments.max(1));
+    if m != hosts * g || hosts < 2 {
+        bail!("hier_reduce_scatter: {m} ranks don't fill topology {}", topo.label());
+    }
+    for b in bufs.iter() {
+        if b.len() < m * s {
+            bail!("reduce_scatter buffer too small: {} < {}", b.len(), m * s);
+        }
+    }
+    if s == 0 {
+        return Ok(());
+    }
+    // Per-chunk partial-sum handoff buffers (the simulated inter-host
+    // wire). scratch[k] segment σ is written by host h at wave h+σ and
+    // read by host h+1 at wave h+1+σ — always one rail barrier apart.
+    let mut scratch: Vec<Vec<f32>> = vec![vec![0.0f32; s]; m];
+    let hand_off = SharedBufs::new(&mut scratch);
+    let shared = SharedBufs::new(bufs);
+    let rail_barrier: Vec<Barrier> = (0..g).map(|_| Barrier::new(hosts)).collect();
+    let off = |sigma: usize| sigma * s / segs;
+    fan_out(m, |rank| {
+        let (h, l) = (rank / g, rank % g);
+        // Wave t: host h folds segment t-h of its chunks (when in
+        // range), so the chain pipelines — host h works on segment σ
+        // while host h-1 is already on σ+1. Every rank hits the rail
+        // barrier every wave, in or out of range: deadlock-free.
+        for wave in 0..hosts + segs - 1 {
+            if wave >= h && wave - h < segs {
+                let (lo, hi) = (off(wave - h), off(wave - h + 1));
+                // all chunks k ≡ l (mod g) — one fold thread per chunk
+                // per host, H chunks per thread
+                let mut k = l;
+                while k < m {
+                    // receive the prefix over hosts 0..h (inter tier;
+                    // host 0 starts the serial reference's 0.0 init)
+                    let mut acc: Vec<f32> = if h == 0 {
+                        vec![0.0f32; hi - lo]
+                    } else {
+                        timed(tm_inter, false, || unsafe {
+                            hand_off.region(k, lo, hi).to_vec()
+                        })
+                    };
+                    // add this host's g contributions in rank order
+                    // (reads of chunk-k regions only; the single write
+                    // below goes to a different chunk on every other
+                    // concurrent thread, so slices never alias)
+                    timed(tm_intra, false, || unsafe {
+                        for j in 0..g {
+                            let src = shared.region(h * g + j, k * s + lo, k * s + hi);
+                            for (a, &x) in acc.iter_mut().zip(src) {
+                                *a += x;
+                            }
+                        }
+                    });
+                    if h == hosts - 1 {
+                        // chain complete: scale once (the serial
+                        // reference's epilogue) and deliver to the owner
+                        timed(tm_intra, false, || unsafe {
+                            for a in acc.iter_mut() {
+                                *a *= scale;
+                            }
+                            shared
+                                .region_mut(k, k * s + lo, k * s + hi)
+                                .copy_from_slice(&acc);
+                        });
+                    } else {
+                        // forward the partial to the next host
+                        timed(tm_inter, false, || unsafe {
+                            hand_off.region_mut(k, lo, hi).copy_from_slice(&acc);
+                        });
+                    }
+                    k += g;
+                }
+            }
+            timed(tm_inter, true, || rail_barrier[l].wait());
+        }
+    });
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm;
+    use crate::util::Rng;
+
+    fn topo(h: usize, g: usize, s: usize) -> Topology {
+        Topology { hosts: h, gpus_per_host: g, segments: s }
+    }
+
+    /// Buffers with magnitudes spread over many exponents, so any change
+    /// in f32 summation order actually changes the bits.
+    fn wild_bufs(m: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = Rng::new(seed);
+        (0..m)
+            .map(|_| {
+                (0..len)
+                    .map(|_| rng.normal_f32() * 10f32.powi(rng.below(7) as i32 - 3))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hier_all_gather_replicates_all_shards() {
+        for (h, g) in [(2, 1), (2, 2), (2, 4), (4, 1), (4, 2), (2, 3)] {
+            let m = h * g;
+            for s in [1usize, 5, 8] {
+                for segs in [1usize, 2, 4] {
+                    let mut bufs: Vec<Vec<f32>> = (0..m)
+                        .map(|k| {
+                            let mut b = vec![0.0f32; m * s];
+                            for (i, x) in b[k * s..(k + 1) * s].iter_mut().enumerate() {
+                                *x = (k * 100 + i) as f32;
+                            }
+                            b
+                        })
+                        .collect();
+                    hier_all_gather(&mut bufs, s, topo(h, g, segs), None, None).unwrap();
+                    for buf in &bufs {
+                        for k in 0..m {
+                            for i in 0..s {
+                                assert_eq!(
+                                    buf[k * s + i],
+                                    (k * 100 + i) as f32,
+                                    "h={h} g={g} s={s} segs={segs}"
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hier_reduce_scatter_bitwise_matches_serial() {
+        for (h, g) in [(2, 1), (2, 2), (2, 4), (4, 2), (2, 3)] {
+            let m = h * g;
+            for s in [1usize, 7, 16] {
+                for segs in [1usize, 2, 4] {
+                    let mut a = wild_bufs(m, m * s, 11);
+                    let mut b = a.clone();
+                    comm::reduce_scatter(&mut a, s, 1.0 / m as f32).unwrap();
+                    hier_reduce_scatter(&mut b, s, 1.0 / m as f32, topo(h, g, segs), None, None)
+                        .unwrap();
+                    for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "h={h} g={g} s={s} segs={segs}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn segment_count_never_changes_bits() {
+        let (h, g, s) = (2, 4, 13);
+        let m = h * g;
+        let base = wild_bufs(m, m * s, 23);
+        let mut want_ag = base.clone();
+        hier_all_gather(&mut want_ag, s, topo(h, g, 1), None, None).unwrap();
+        let mut want_rs = base.clone();
+        hier_reduce_scatter(&mut want_rs, s, 0.125, topo(h, g, 1), None, None).unwrap();
+        // segment counts beyond the chunk size produce empty tail
+        // segments and still agree
+        for segs in [2usize, 4, 32] {
+            let mut ag = base.clone();
+            hier_all_gather(&mut ag, s, topo(h, g, segs), None, None).unwrap();
+            let mut rs = base.clone();
+            hier_reduce_scatter(&mut rs, s, 0.125, topo(h, g, segs), None, None).unwrap();
+            for (x, y) in want_ag.iter().flatten().zip(ag.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "AG segs={segs}");
+            }
+            for (x, y) in want_rs.iter().flatten().zip(rs.iter().flatten()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "RS segs={segs}");
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_mismatched_topology_and_sizes() {
+        let mut bufs = vec![vec![0.0f32; 8]; 4];
+        // 4 ranks on a 2x4 topology
+        assert!(hier_all_gather(&mut bufs, 2, topo(2, 4, 1), None, None).is_err());
+        assert!(hier_reduce_scatter(&mut bufs, 2, 1.0, topo(2, 4, 1), None, None).is_err());
+        // flat topology is not hierarchical
+        assert!(hier_all_gather(&mut bufs, 2, topo(1, 4, 1), None, None).is_err());
+        // short buffers
+        let mut small = vec![vec![0.0f32; 2]; 4];
+        assert!(hier_all_gather(&mut small, 2, topo(2, 2, 1), None, None).is_err());
+        assert!(hier_reduce_scatter(&mut small, 2, 1.0, topo(2, 2, 1), None, None).is_err());
+    }
+}

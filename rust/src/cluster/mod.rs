@@ -24,6 +24,7 @@
 //!
 //! Built on `std::thread` + `Barrier` only — no new dependencies.
 
+mod hierarchy;
 mod serial;
 mod threaded;
 
@@ -210,9 +211,24 @@ pub fn make_comm_traced(
     backend: CommBackend,
     tracer: crate::trace::Tracer,
 ) -> Arc<dyn Communicator> {
+    make_comm_topo(backend, tracer, crate::comm::Topology::flat())
+}
+
+/// Construct the communicator with a trace sink *and* a cluster
+/// topology. A hierarchical topology (`hosts > 1`) makes the threaded
+/// backend dispatch AllGather/ReduceScatter on groups that exactly fill
+/// it to the two-level pipelined algorithms of [`hierarchy`] — still
+/// bit-identical to the flat path — and makes both backends tag their
+/// transport spans with the `tier` the bytes predominantly crossed.
+/// `Topology::flat()` is byte-for-byte the legacy behavior.
+pub fn make_comm_topo(
+    backend: CommBackend,
+    tracer: crate::trace::Tracer,
+    topology: crate::comm::Topology,
+) -> Arc<dyn Communicator> {
     match backend {
-        CommBackend::Serial => Arc::new(SerialComm::with_tracer(tracer)),
-        CommBackend::Threaded => Arc::new(ThreadedComm::with_tracer(tracer)),
+        CommBackend::Serial => Arc::new(SerialComm::with_topology(tracer, topology)),
+        CommBackend::Threaded => Arc::new(ThreadedComm::with_topology(tracer, topology)),
     }
 }
 

@@ -6,7 +6,7 @@
 
 use anyhow::Result;
 
-use crate::comm::{self, CommRecord, CommStats, SharedStats};
+use crate::comm::{self, CommRecord, CommStats, SharedStats, Topology};
 use crate::trace::{Cat, Span, Tracer};
 
 use super::{CommBackend, Communicator};
@@ -15,6 +15,12 @@ use super::{CommBackend, Communicator};
 pub struct SerialComm {
     stats: SharedStats,
     tracer: Tracer,
+    /// Cluster shape. The serial backend always runs the flat loop
+    /// algorithms (it is the bit-identity oracle the hierarchical path
+    /// is validated against), but under a multi-host topology its
+    /// transport spans still carry the wire-tier attr so hierarchical
+    /// traces validate regardless of backend.
+    topology: Topology,
 }
 
 impl SerialComm {
@@ -24,7 +30,42 @@ impl SerialComm {
 
     /// Construct with a trace sink for per-collective transport spans.
     pub fn with_tracer(tracer: Tracer) -> SerialComm {
-        SerialComm { stats: SharedStats::default(), tracer }
+        SerialComm::with_topology(tracer, Topology::flat())
+    }
+
+    /// Construct with a trace sink and a cluster topology (tier-tags
+    /// transport spans when the topology is hierarchical).
+    pub fn with_topology(tracer: Tracer, topology: Topology) -> SerialComm {
+        SerialComm { stats: SharedStats::default(), tracer, topology }
+    }
+
+    /// Wire tier a `m`-rank group lands on; `None` on flat topologies.
+    fn tier_label(&self, m: usize) -> Option<&'static str> {
+        if !self.topology.is_hierarchical() {
+            return None;
+        }
+        Some(if m <= self.topology.gpus_per_host { "intra" } else { "inter" })
+    }
+
+    /// Bracket one loop collective with a (tier-tagged) transport span.
+    fn traced(
+        &self,
+        name: &'static str,
+        m: usize,
+        bytes: u64,
+        f: impl FnOnce() -> Result<()>,
+    ) -> Result<()> {
+        let tier = self.tier_label(m);
+        let t = self.tracer.timer();
+        let r = f();
+        self.tracer.finish_with(t, Cat::Comm, || {
+            let mut span = Span::new(name).fabric().bytes(bytes);
+            if let Some(tier) = tier {
+                span = span.attr("tier", tier);
+            }
+            span
+        });
+        r
     }
 }
 
@@ -34,48 +75,33 @@ impl Communicator for SerialComm {
     }
 
     fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        let t = self.tracer.timer();
-        let r = comm::all_gather(bufs, s);
-        self.tracer
-            .finish_with(t, Cat::Comm, || Span::new("all_gather").fabric().bytes(bytes));
-        r
+        let m = bufs.len();
+        let bytes = (m * s * 4) as u64;
+        self.traced("all_gather", m, bytes, || comm::all_gather(bufs, s))
     }
 
     fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        let t = self.tracer.timer();
-        let r = comm::reduce_scatter(bufs, s, scale);
-        self.tracer
-            .finish_with(t, Cat::Comm, || Span::new("reduce_scatter").fabric().bytes(bytes));
-        r
+        let m = bufs.len();
+        let bytes = (m * s * 4) as u64;
+        self.traced("reduce_scatter", m, bytes, || comm::reduce_scatter(bufs, s, scale))
     }
 
     fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
-        let bytes = (bufs.first().map_or(0, Vec::len) * bufs.len() * 4) as u64;
-        let t = self.tracer.timer();
-        let r = comm::all_reduce(bufs, scale);
-        self.tracer
-            .finish_with(t, Cat::Comm, || Span::new("all_reduce").fabric().bytes(bytes));
-        r
+        let m = bufs.len();
+        let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
+        self.traced("all_reduce", m, bytes, || comm::all_reduce(bufs, scale))
     }
 
     fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
-        let bytes = (bufs.first().map_or(0, Vec::len) * bufs.len() * 4) as u64;
-        let t = self.tracer.timer();
-        let r = comm::broadcast(bufs, root);
-        self.tracer
-            .finish_with(t, Cat::Comm, || Span::new("broadcast").fabric().bytes(bytes));
-        r
+        let m = bufs.len();
+        let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
+        self.traced("broadcast", m, bytes, || comm::broadcast(bufs, root))
     }
 
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        let t = self.tracer.timer();
-        let r = comm::all_to_all(bufs, s);
-        self.tracer
-            .finish_with(t, Cat::Comm, || Span::new("all_to_all").fabric().bytes(bytes));
-        r
+        let m = bufs.len();
+        let bytes = (m * s * 4) as u64;
+        self.traced("all_to_all", m, bytes, || comm::all_to_all(bufs, s))
     }
 
     fn record(&self, rec: CommRecord) {
@@ -122,6 +148,29 @@ mod tests {
         assert_eq!(c.stats().count("all_gather"), 1);
         c.reset_stats();
         assert_eq!(c.stats().records.len(), 0);
+    }
+
+    #[test]
+    fn hierarchical_topology_tier_tags_spans() {
+        use crate::util::json::Json;
+        let tracer = Tracer::new(TraceLevel::Comm, 8);
+        let c = SerialComm::with_topology(tracer.clone(), Topology::parse("2x4").unwrap());
+        // 8 ranks span both hosts -> inter tier
+        let mut bufs: Vec<Vec<f32>> = (0..8).map(|k| vec![k as f32; 16]).collect();
+        c.all_gather(&mut bufs, 2).unwrap();
+        // a 2-rank group fits inside one host -> intra tier
+        let mut pair: Vec<Vec<f32>> = (0..2).map(|k| vec![k as f32; 4]).collect();
+        c.all_reduce(&mut pair, 0.5).unwrap();
+        let json = tracer.export(&CommStats::default());
+        let events = json.get("traceEvents").unwrap().as_arr().unwrap();
+        let tiers: Vec<&str> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .filter_map(|e| {
+                e.get("args").and_then(|a| a.get("tier")).and_then(Json::as_str)
+            })
+            .collect();
+        assert_eq!(tiers, vec!["inter", "intra"]);
     }
 
     #[test]

@@ -31,9 +31,10 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::comm::{self, CommRecord, CommStats, SharedStats};
+use crate::comm::{self, CommRecord, CommStats, SharedStats, Topology};
 use crate::trace::{Cat, Span, Tracer};
 
+use super::hierarchy::{hier_all_gather, hier_reduce_scatter};
 use super::{CommBackend, Communicator, PendingOp};
 
 /// Below this many total elements a collective is cheaper single-threaded
@@ -47,6 +48,9 @@ pub struct ThreadedComm {
     /// Total-element threshold under which collectives run serially.
     min_parallel_elems: usize,
     tracer: Tracer,
+    /// Cluster shape: groups that exactly fill a multi-host topology
+    /// dispatch to the two-level algorithms in [`super::hierarchy`].
+    topology: Topology,
 }
 
 impl Default for ThreadedComm {
@@ -61,6 +65,7 @@ impl ThreadedComm {
             stats: SharedStats::default(),
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
             tracer: Tracer::off(),
+            topology: Topology::flat(),
         }
     }
 
@@ -69,10 +74,22 @@ impl ThreadedComm {
     /// the `fabric` timeline, with the rendezvous time split into
     /// `wait_s` (barrier waits) and `copy_s` (region transfers) attrs.
     pub fn with_tracer(tracer: Tracer) -> ThreadedComm {
+        ThreadedComm::with_topology(tracer, Topology::flat())
+    }
+
+    /// Construct with a trace sink and a cluster topology. With a
+    /// hierarchical topology, AllGather/ReduceScatter over groups that
+    /// span the whole cluster run the two-level pipelined algorithms
+    /// (bit-identical to the flat rings) and emit one transport span per
+    /// wire tier (`intra`/`inter`); all other collectives keep the flat
+    /// algorithms and tag their single span with the tier the group
+    /// lands on.
+    pub fn with_topology(tracer: Tracer, topology: Topology) -> ThreadedComm {
         ThreadedComm {
             stats: SharedStats::default(),
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
             tracer,
+            topology,
         }
     }
 
@@ -83,6 +100,7 @@ impl ThreadedComm {
             stats: SharedStats::default(),
             min_parallel_elems,
             tracer: Tracer::off(),
+            topology: Topology::flat(),
         }
     }
 
@@ -90,29 +108,112 @@ impl ThreadedComm {
         total_elems < self.min_parallel_elems
     }
 
+    /// Should this AllGather/ReduceScatter take the two-level path? Only
+    /// when the group exactly fills a multi-host topology and is big
+    /// enough for the rendezvous algorithms at all (the tiny-buffer
+    /// serial fallback is flat and bit-identical either way).
+    fn hier_eligible(&self, m: usize, s: usize) -> bool {
+        self.topology.is_hierarchical()
+            && m == self.topology.total()
+            && !(m <= 1 || s == 0 || m * m * s < self.min_parallel_elems)
+    }
+
+    /// Wire-tier label for a flat-algorithm collective under a
+    /// hierarchical topology: groups that fit inside one host ride
+    /// NVLink, anything wider crosses the IB tier. `None` on flat
+    /// topologies (spans stay exactly as before).
+    fn tier_label(&self, m: usize) -> Option<&'static str> {
+        if !self.topology.is_hierarchical() {
+            return None;
+        }
+        Some(if m <= self.topology.gpus_per_host { "intra" } else { "inter" })
+    }
+
     /// Bracket a collective with a transport span. When tracing is off
     /// this is a direct call with no timing state at all; when on, a
     /// [`RendezvousTiming`] is handed to the algorithm so barrier-wait
     /// vs region-copy time lands on the span as attributes.
-    fn traced<F>(&self, name: &'static str, bytes: u64, f: F) -> Result<()>
+    fn traced<F>(&self, name: &'static str, tier: Option<&'static str>, bytes: u64, f: F) -> Result<()>
     where
         F: FnOnce(Option<&RendezvousTiming>) -> Result<()>,
     {
-        spawned_traced(&self.tracer, name, bytes, f)
+        spawned_traced(&self.tracer, name, tier, bytes, f)
     }
+}
+
+/// Per-rank wire bytes each tier moves in a hierarchical collective
+/// (same attribution as `Fabric::tier_bytes`): the intra-host phase of
+/// an AllGather forwards `g-1` shards per rank, the rail ring forwards
+/// `H-1` host super-chunks of `g` shards; the ReduceScatter hand-off
+/// chain moves one partial per host hop.
+fn hier_span_bytes(is_gather: bool, topo: Topology, s: usize) -> (u64, u64) {
+    let b = (s * 4) as u64;
+    let (h, g) = (topo.hosts as u64, topo.gpus_per_host as u64);
+    if is_gather {
+        ((g - 1) * b, (h - 1) * g * b)
+    } else {
+        ((g - 1) * b, (h - 1) * b)
+    }
+}
+
+/// Bracket a hierarchically-dispatched collective: one measured wall
+/// interval, two adjacent transport spans — the interval is split
+/// between the `intra` and `inter` tiers in proportion to the time the
+/// rank threads actually spent in each tier's waits and copies, so the
+/// spans still sum to the measured wall time (`TraceSummary`'s
+/// `total_comm_s` is unchanged by the split).
+fn hier_traced<F>(
+    tracer: &Tracer,
+    name: &'static str,
+    tier_bytes: (u64, u64),
+    f: F,
+) -> Result<()>
+where
+    F: FnOnce(Option<&RendezvousTiming>, Option<&RendezvousTiming>) -> Result<()>,
+{
+    if !tracer.enabled(Cat::Comm) {
+        return f(None, None);
+    }
+    let tm_intra = RendezvousTiming::default();
+    let tm_inter = RendezvousTiming::default();
+    let t = tracer.timer();
+    let r = f(Some(&tm_intra), Some(&tm_inter));
+    let dur = t.elapsed_s();
+    let (wi, ci) = tm_intra.totals();
+    let (we, ce) = tm_inter.totals();
+    let (ti, te) = (wi + ci, we + ce);
+    let frac = if ti + te > 0.0 { ti / (ti + te) } else { 0.5 };
+    let intra_s = dur * frac;
+    tracer.push_window(&t, 0.0, intra_s, Cat::Comm, || {
+        Span::new(name)
+            .fabric()
+            .bytes(tier_bytes.0)
+            .attr("tier", "intra")
+            .attr("wait_s", format!("{wi:.9}"))
+            .attr("copy_s", format!("{ci:.9}"))
+    });
+    tracer.push_window(&t, intra_s, dur - intra_s, Cat::Comm, || {
+        Span::new(name)
+            .fabric()
+            .bytes(tier_bytes.1)
+            .attr("tier", "inter")
+            .attr("wait_s", format!("{we:.9}"))
+            .attr("copy_s", format!("{ce:.9}"))
+    });
+    r
 }
 
 /// Per-collective rendezvous time split, accumulated across rank threads
 /// (sums over ranks; an m-rank barrier wait therefore contributes up to
 /// m× the wall time it occupied).
 #[derive(Debug, Default)]
-struct RendezvousTiming {
+pub(crate) struct RendezvousTiming {
     wait_ns: AtomicU64,
     copy_ns: AtomicU64,
 }
 
 impl RendezvousTiming {
-    fn totals(&self) -> (f64, f64) {
+    pub(crate) fn totals(&self) -> (f64, f64) {
         (
             self.wait_ns.load(Ordering::Relaxed) as f64 / 1e9,
             self.copy_ns.load(Ordering::Relaxed) as f64 / 1e9,
@@ -123,7 +224,7 @@ impl RendezvousTiming {
 /// Run `f`, accumulating its duration into the wait or copy counter when
 /// timing is enabled. With `tm == None` this compiles down to the bare
 /// call — the disabled-tracing hot path takes no clock samples.
-fn timed<R>(tm: Option<&RendezvousTiming>, is_wait: bool, f: impl FnOnce() -> R) -> R {
+pub(crate) fn timed<R>(tm: Option<&RendezvousTiming>, is_wait: bool, f: impl FnOnce() -> R) -> R {
     match tm {
         None => f(),
         Some(tm) => {
@@ -140,7 +241,13 @@ fn timed<R>(tm: Option<&RendezvousTiming>, is_wait: bool, f: impl FnOnce() -> R)
 /// [`ThreadedComm::traced`] for the background comm thread: same span,
 /// recorded from inside the spawned closure so the span's wall time is
 /// the transfer itself, not the issue site.
-fn spawned_traced<F>(tracer: &Tracer, name: &'static str, bytes: u64, f: F) -> Result<()>
+fn spawned_traced<F>(
+    tracer: &Tracer,
+    name: &'static str,
+    tier: Option<&'static str>,
+    bytes: u64,
+    f: F,
+) -> Result<()>
 where
     F: FnOnce(Option<&RendezvousTiming>) -> Result<()>,
 {
@@ -152,11 +259,15 @@ where
     let r = f(Some(&tm));
     let (wait_s, copy_s) = tm.totals();
     tracer.finish_with(t, Cat::Comm, || {
-        Span::new(name)
+        let mut span = Span::new(name)
             .fabric()
             .bytes(bytes)
             .attr("wait_s", format!("{wait_s:.9}"))
-            .attr("copy_s", format!("{copy_s:.9}"))
+            .attr("copy_s", format!("{copy_s:.9}"));
+        if let Some(tier) = tier {
+            span = span.attr("tier", tier);
+        }
+        span
     });
     r
 }
@@ -172,7 +283,7 @@ impl ThreadedComm {
 /// Raw shared view of every rank's buffer for one rendezvous collective.
 /// The pointers stay valid for the whole call: the caller's `&mut [Vec]`
 /// is borrowed across the scoped threads, which all join before return.
-struct SharedBufs {
+pub(crate) struct SharedBufs {
     ptrs: Vec<*mut f32>,
     lens: Vec<usize>,
 }
@@ -181,7 +292,7 @@ unsafe impl Send for SharedBufs {}
 unsafe impl Sync for SharedBufs {}
 
 impl SharedBufs {
-    fn new(bufs: &mut [Vec<f32>]) -> SharedBufs {
+    pub(crate) fn new(bufs: &mut [Vec<f32>]) -> SharedBufs {
         SharedBufs {
             ptrs: bufs.iter_mut().map(|b| b.as_mut_ptr()).collect(),
             lens: bufs.iter().map(|b| b.len()).collect(),
@@ -192,7 +303,7 @@ impl SharedBufs {
     ///
     /// Safety: the range must be in bounds, and the protocol must
     /// guarantee no concurrent `region_mut` overlaps it in this phase.
-    unsafe fn region(&self, k: usize, lo: usize, hi: usize) -> &[f32] {
+    pub(crate) unsafe fn region(&self, k: usize, lo: usize, hi: usize) -> &[f32] {
         debug_assert!(hi <= self.lens[k]);
         std::slice::from_raw_parts(self.ptrs[k].add(lo), hi - lo)
     }
@@ -201,7 +312,7 @@ impl SharedBufs {
     ///
     /// Safety: in bounds, and this phase's unique writer for the range.
     #[allow(clippy::mut_from_ref)]
-    unsafe fn region_mut(&self, k: usize, lo: usize, hi: usize) -> &mut [f32] {
+    pub(crate) unsafe fn region_mut(&self, k: usize, lo: usize, hi: usize) -> &mut [f32] {
         debug_assert!(hi <= self.lens[k]);
         std::slice::from_raw_parts_mut(self.ptrs[k].add(lo), hi - lo)
     }
@@ -209,7 +320,7 @@ impl SharedBufs {
 
 /// Run `f(rank)` on `m` concurrent ranks; rank 0 runs on the caller's
 /// thread. Returns after every rank finished (scoped join).
-fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
+pub(crate) fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
     std::thread::scope(|s| {
         for rank in 1..m {
             let f = &f;
@@ -349,15 +460,37 @@ impl Communicator for ThreadedComm {
     }
 
     fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        self.traced("all_gather", bytes, |tm| {
+        let m = bufs.len();
+        if self.hier_eligible(m, s) {
+            let topo = self.topology;
+            return hier_traced(
+                &self.tracer,
+                "all_gather",
+                hier_span_bytes(true, topo, s),
+                |tm_intra, tm_inter| hier_all_gather(bufs, s, topo, tm_intra, tm_inter),
+            );
+        }
+        let bytes = (m * s * 4) as u64;
+        self.traced("all_gather", self.tier_label(m), bytes, |tm| {
             ring_all_gather(bufs, s, self.min_parallel_elems, tm)
         })
     }
 
     fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        self.traced("reduce_scatter", bytes, |tm| {
+        let m = bufs.len();
+        if self.hier_eligible(m, s) {
+            let topo = self.topology;
+            return hier_traced(
+                &self.tracer,
+                "reduce_scatter",
+                hier_span_bytes(false, topo, s),
+                |tm_intra, tm_inter| {
+                    hier_reduce_scatter(bufs, s, scale, topo, tm_intra, tm_inter)
+                },
+            );
+        }
+        let bytes = (m * s * 4) as u64;
+        self.traced("reduce_scatter", self.tier_label(m), bytes, |tm| {
             rendezvous_reduce_scatter(bufs, s, scale, self.min_parallel_elems, tm)
         })
     }
@@ -372,11 +505,25 @@ impl Communicator for ThreadedComm {
             let r = self.all_gather(&mut bufs, s).map(|()| bufs);
             return PendingOp::done(r);
         }
+        if self.hier_eligible(m, s) {
+            let topo = self.topology;
+            let tracer = self.tracer.clone();
+            return PendingOp::spawn(move || {
+                hier_traced(
+                    &tracer,
+                    "all_gather",
+                    hier_span_bytes(true, topo, s),
+                    |tm_intra, tm_inter| hier_all_gather(&mut bufs, s, topo, tm_intra, tm_inter),
+                )?;
+                Ok(bufs)
+            });
+        }
         let min = self.min_parallel_elems;
+        let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "all_gather", bytes, |tm| {
+            spawned_traced(&tracer, "all_gather", tier, bytes, |tm| {
                 ring_all_gather(&mut bufs, s, min, tm)
             })?;
             Ok(bufs)
@@ -389,11 +536,27 @@ impl Communicator for ThreadedComm {
             let r = self.reduce_scatter(&mut bufs, s, scale).map(|()| bufs);
             return PendingOp::done(r);
         }
+        if self.hier_eligible(m, s) {
+            let topo = self.topology;
+            let tracer = self.tracer.clone();
+            return PendingOp::spawn(move || {
+                hier_traced(
+                    &tracer,
+                    "reduce_scatter",
+                    hier_span_bytes(false, topo, s),
+                    |tm_intra, tm_inter| {
+                        hier_reduce_scatter(&mut bufs, s, scale, topo, tm_intra, tm_inter)
+                    },
+                )?;
+                Ok(bufs)
+            });
+        }
         let min = self.min_parallel_elems;
+        let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "reduce_scatter", bytes, |tm| {
+            spawned_traced(&tracer, "reduce_scatter", tier, bytes, |tm| {
                 rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
             })?;
             Ok(bufs)
@@ -403,7 +566,7 @@ impl Communicator for ThreadedComm {
     fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
         let m = bufs.len();
         let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
-        self.traced("all_reduce", bytes, |tm| {
+        self.traced("all_reduce", self.tier_label(m), bytes, |tm| {
             if m <= 1 || self.serial_faster(m * bufs[0].len()) {
                 return timed(tm, false, || comm::all_reduce(bufs, scale));
             }
@@ -463,7 +626,7 @@ impl Communicator for ThreadedComm {
             bail!("broadcast root {root} out of range");
         }
         let bytes = (bufs[root].len() * m * 4) as u64;
-        self.traced("broadcast", bytes, |tm| {
+        self.traced("broadcast", self.tier_label(m), bytes, |tm| {
             if m <= 1 || self.serial_faster(m * bufs[root].len()) {
                 return timed(tm, false, || comm::broadcast(bufs, root));
             }
@@ -490,7 +653,7 @@ impl Communicator for ThreadedComm {
 
     fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
         let bytes = (bufs.len() * s * 4) as u64;
-        self.traced("all_to_all", bytes, |tm| {
+        self.traced("all_to_all", self.tier_label(bufs.len()), bytes, |tm| {
             rendezvous_all_to_all(bufs, s, self.min_parallel_elems, tm)
         })
     }
@@ -502,10 +665,11 @@ impl Communicator for ThreadedComm {
             return PendingOp::done(r);
         }
         let min = self.min_parallel_elems;
+        let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "all_to_all", bytes, |tm| {
+            spawned_traced(&tracer, "all_to_all", tier, bytes, |tm| {
                 rendezvous_all_to_all(&mut bufs, s, min, tm)
             })?;
             Ok(bufs)
@@ -686,5 +850,81 @@ mod tests {
         assert!(c.broadcast(&mut bufs, 5).is_err());
         let mut uneven = vec![vec![0.0f32; 4], vec![0.0f32; 5]];
         assert!(c.all_reduce(&mut uneven, 1.0).is_err());
+    }
+
+    fn wild_bufs(m: usize, s: usize, seed: u64) -> Vec<Vec<f32>> {
+        let mut rng = crate::util::Rng::new(seed);
+        (0..m)
+            .map(|_| {
+                (0..m * s)
+                    .map(|_| rng.normal_f32() * 10f32.powi(rng.below(7) as i32 - 3))
+                    .collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn hierarchical_dispatch_bit_identical_to_flat() {
+        let (m, s) = (8usize, 6usize);
+        let topo = Topology::parse("2x4:2").unwrap();
+        let mut want_ag = wild_bufs(m, s, 11);
+        comm::all_gather(&mut want_ag, s).unwrap();
+        let mut want_rs = wild_bufs(m, s, 12);
+        comm::reduce_scatter(&mut want_rs, s, 0.125).unwrap();
+
+        let mut c = ThreadedComm::with_topology(Tracer::off(), topo);
+        c.min_parallel_elems = 0;
+        let mut got_ag = wild_bufs(m, s, 11);
+        c.all_gather(&mut got_ag, s).unwrap();
+        for (a, b) in want_ag.iter().flatten().zip(got_ag.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut got_rs = wild_bufs(m, s, 12);
+        c.reduce_scatter(&mut got_rs, s, 0.125).unwrap();
+        for (a, b) in want_rs.iter().flatten().zip(got_rs.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // the background comm thread dispatches hierarchically too
+        let async_ag = c.all_gather_async(wild_bufs(m, s, 11), s).wait().unwrap();
+        for (a, b) in want_ag.iter().flatten().zip(async_ag.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let async_rs =
+            c.reduce_scatter_async(wild_bufs(m, s, 12), s, 0.125).wait().unwrap();
+        for (a, b) in want_rs.iter().flatten().zip(async_rs.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn hierarchical_ops_emit_one_span_per_tier() {
+        use crate::trace::TraceLevel;
+        let (m, s) = (8usize, 3usize);
+        let tracer = Tracer::new(TraceLevel::Comm, m);
+        let mut c =
+            ThreadedComm::with_topology(tracer.clone(), Topology::parse("2x4:2").unwrap());
+        c.min_parallel_elems = 0;
+        let mut bufs = dev_bufs(m, s);
+        c.all_gather(&mut bufs, s).unwrap();
+        assert_eq!(tracer.span_count(), 2, "hier AG = intra span + inter span");
+        let mut bufs = wild_bufs(m, s, 3);
+        c.reduce_scatter(&mut bufs, s, 0.125).unwrap();
+        assert_eq!(tracer.span_count(), 4);
+        // a group that does not fill the topology keeps the flat ring
+        // and its single (tier-tagged) span
+        let mut small = dev_bufs(4, s);
+        c.all_gather(&mut small, s).unwrap();
+        assert_eq!(tracer.span_count(), 5);
+        // per-tier byte attribution: AG intra (g-1)·sb, inter (H-1)·g·sb;
+        // RS intra (g-1)·sb, inter (H-1)·sb
+        let sb = (s * 4) as u64;
+        let ids = tracer.span_identities();
+        let ag_bytes: Vec<u64> = ids
+            .iter()
+            .filter(|(n, _, _)| n == "all_gather")
+            .map(|(_, _, b)| *b)
+            .collect();
+        assert!(ag_bytes.contains(&(3 * sb)), "intra AG bytes: {ag_bytes:?}");
+        assert!(ag_bytes.contains(&(4 * sb)), "inter AG bytes: {ag_bytes:?}");
     }
 }

@@ -17,6 +17,69 @@
 //!   (FSDP2's Copy-In/Copy-Out, Table 1's Shard(1) column);
 //! * groups spanning nodes drop from NVLink to the IB tier.
 
+/// Physical cluster shape for hierarchical collectives: `hosts` nodes of
+/// `gpus_per_host` ranks each (rank r lives at host r / gpus_per_host —
+/// host-major order), plus the segment count S of the intra-collective
+/// chunk pipeline (inter-host transfers of segment s overlap intra-host
+/// work on segment s+1).
+///
+/// `hosts == 1` is the flat degenerate case: every collective runs the
+/// single-ring algorithms unchanged, so a flat `Topology` is free.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    /// Number of hosts (nodes).
+    pub hosts: usize,
+    /// Ranks per host.
+    pub gpus_per_host: usize,
+    /// Pipeline segments per collective (S >= 1).
+    pub segments: usize,
+}
+
+impl Default for Topology {
+    fn default() -> Topology {
+        Topology::flat()
+    }
+}
+
+impl Topology {
+    /// The flat single-tier default: one host, collectives run the
+    /// legacy ring algorithms.
+    pub fn flat() -> Topology {
+        Topology { hosts: 1, gpus_per_host: 8, segments: 1 }
+    }
+
+    /// Parse `"HxG"` or `"HxG:S"` (e.g. `2x4`, `4x8:2`). Hosts, GPUs and
+    /// segments must all be >= 1.
+    pub fn parse(s: &str) -> Option<Topology> {
+        let (shape, segs) = match s.split_once(':') {
+            Some((a, b)) => (a, b.trim().parse::<usize>().ok()?),
+            None => (s, 2),
+        };
+        let (h, g) = shape.trim().split_once('x')?;
+        let hosts = h.trim().parse::<usize>().ok()?;
+        let gpus = g.trim().parse::<usize>().ok()?;
+        if hosts == 0 || gpus == 0 || segs == 0 {
+            return None;
+        }
+        Some(Topology { hosts, gpus_per_host: gpus, segments: segs })
+    }
+
+    /// `"HxG"` display form (step logs, trace metadata, bench JSON).
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.hosts, self.gpus_per_host)
+    }
+
+    /// Total ranks the topology describes.
+    pub fn total(&self) -> usize {
+        self.hosts * self.gpus_per_host
+    }
+
+    /// More than one host => the two-level algorithms apply.
+    pub fn is_hierarchical(&self) -> bool {
+        self.hosts > 1
+    }
+}
+
 /// Device-local copy flavors (Table 1's three copy regimes).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CopyKind {
@@ -40,10 +103,18 @@ pub struct Fabric {
     pub inter_bw: f64,
     /// ReduceScatter bandwidth ratio vs AllGather (reduction cost).
     pub rs_factor: f64,
-    /// Per-collective launch latency (s).
+    /// Per-collective launch latency (s) for flat single-ring ops.
     pub launch: f64,
+    /// Launch latency of the intra-host (NVLink) phase of a hierarchical
+    /// collective.
+    pub intra_launch: f64,
+    /// Launch latency of the inter-host (IB) phase — NIC doorbells and
+    /// QP setup cost more than an NVLink kernel launch.
+    pub inter_launch: f64,
     /// GPUs per node.
     pub devices_per_node: usize,
+    /// Cluster shape for hierarchical dispatch (`hosts == 1` = flat).
+    pub topology: Topology,
     /// Bandwidth multiplier when buffers are not NCCL-aligned.
     pub misalign_factor: f64,
     /// Contiguous device-copy bandwidth (bytes/s).
@@ -64,7 +135,10 @@ impl Fabric {
             inter_bw: 145e9,
             rs_factor: 0.464,
             launch: 20e-6,
+            intra_launch: 10e-6,
+            inter_launch: 20e-6,
             devices_per_node: 8,
+            topology: Topology::flat(),
             // average-case penalty: NCCL#413 shows up to ~2x degradation
             // on pathological alignments; typical buffers lose ~20%
             misalign_factor: 0.8,
@@ -85,7 +159,10 @@ impl Fabric {
             inter_bw: 190e9,
             rs_factor: 0.464,
             launch: 20e-6,
+            intra_launch: 10e-6,
+            inter_launch: 20e-6,
             devices_per_node: 8,
+            topology: Topology::flat(),
             misalign_factor: 0.8,
             copy_bw: 1.35e12,
             interleave_rows_factor: 1.0,
@@ -103,7 +180,10 @@ impl Fabric {
             inter_bw: 90e9,
             rs_factor: 0.464,
             launch: 25e-6,
+            intra_launch: 12e-6,
+            inter_launch: 25e-6,
             devices_per_node: 8,
+            topology: Topology::flat(),
             misalign_factor: 0.8,
             copy_bw: 0.9e12,
             interleave_rows_factor: 1.0,
@@ -112,14 +192,30 @@ impl Fabric {
         }
     }
 
-    /// Look a fabric preset up by name (`--fabric h800|h100|a100`).
+    /// Look a fabric preset up by name (`--fabric h800|h100|a100`),
+    /// optionally suffixed with a topology: `"h800:2x4"` /
+    /// `"h800:2x4:2"` (hosts x gpus-per-host [: pipeline segments]).
     pub fn by_name(s: &str) -> Option<Fabric> {
-        Some(match s.to_ascii_lowercase().as_str() {
+        let (base, topo) = match s.split_once(':') {
+            Some((b, t)) => (b, Some(Topology::parse(t)?)),
+            None => (s, None),
+        };
+        let mut f = match base.to_ascii_lowercase().as_str() {
             "h800" => Fabric::h800(),
             "h100" => Fabric::h100(),
             "a100" => Fabric::a100(),
             _ => return None,
-        })
+        };
+        if let Some(t) = topo {
+            f.topology = t;
+        }
+        Some(f)
+    }
+
+    /// The same fabric with a different cluster topology attached.
+    pub fn with_topology(mut self, topology: Topology) -> Fabric {
+        self.topology = topology;
+        self
     }
 
     /// All preset names, for error messages.
@@ -141,24 +237,126 @@ impl Fabric {
         }
     }
 
+    /// Does a group of `m` ranks dispatch to the two-level algorithms?
+    /// (Hierarchical topology attached and the group fills it exactly —
+    /// smaller groups, e.g. the EP all-to-all or the HSDP replica
+    /// AllReduce, keep the flat model.)
+    pub fn is_hier(&self, m: usize) -> bool {
+        self.topology.is_hierarchical() && m == self.topology.total() && m > 1
+    }
+
+    fn tier_bws(&self, aligned: bool) -> (f64, f64) {
+        let k = if aligned { 1.0 } else { self.misalign_factor };
+        (self.intra_bw * k, self.inter_bw * k)
+    }
+
+    /// Hierarchical cost: both launches, the slower tier in full, and the
+    /// faster tier's tail — segment pipelining hides min(Ti, Te) up to
+    /// one 1/S-sized segment.
+    fn hier_time(&self, ti: f64, te: f64) -> f64 {
+        let s = self.topology.segments.max(1) as f64;
+        self.intra_launch + self.inter_launch + ti.max(te) + ti.min(te) / s
+    }
+
     /// Ring AllGather: each rank receives (m-1) shards of
-    /// `bytes_per_rank`.
+    /// `bytes_per_rank`. With a hierarchical topology covering the group,
+    /// the two-level algorithm pays (g-1) intra-host shard hops plus
+    /// (H-1)·g inter-host hops, overlapped by segment pipelining.
     pub fn all_gather_time(&self, m: usize, bytes_per_rank: u64, aligned: bool) -> f64 {
         if m <= 1 {
             return 0.0;
+        }
+        if self.is_hier(m) {
+            let (g, h) = (self.topology.gpus_per_host, self.topology.hosts);
+            let (bwi, bwe) = self.tier_bws(aligned);
+            let b = bytes_per_rank as f64;
+            let ti = b * (g - 1) as f64 / bwi;
+            let te = b * ((h - 1) * g) as f64 / bwe;
+            return self.hier_time(ti, te);
         }
         self.launch
             + bytes_per_rank as f64 * (m - 1) as f64 / self.coll_bw(m, aligned)
     }
 
     /// Ring ReduceScatter: same volume as AG, lower effective bandwidth.
+    /// Hierarchically, the intra-host pre-reduce collapses g contributions
+    /// before anything crosses the NIC, so the inter tier moves only
+    /// (H-1) shard hops — the g-fold volume reduction that makes
+    /// hierarchy win at scale.
     pub fn reduce_scatter_time(&self, m: usize, bytes_per_rank: u64, aligned: bool) -> f64 {
         if m <= 1 {
             return 0.0;
         }
+        if self.is_hier(m) {
+            let (g, h) = (self.topology.gpus_per_host, self.topology.hosts);
+            let (bwi, bwe) = self.tier_bws(aligned);
+            let b = bytes_per_rank as f64;
+            let ti = b * (g - 1) as f64 / (bwi * self.rs_factor);
+            let te = b * (h - 1) as f64 / (bwe * self.rs_factor);
+            return self.hier_time(ti, te);
+        }
         self.launch
             + bytes_per_rank as f64 * (m - 1) as f64
                 / (self.coll_bw(m, aligned) * self.rs_factor)
+    }
+
+    /// Per-tier wire bytes one rank moves for `op` at group size `m`
+    /// (`(intra, inter)`): the attribution half of the two-tier model.
+    /// Flat groups charge everything to whichever single tier they run
+    /// on; hierarchical AG/RS split by the two-level hop counts.
+    pub fn tier_bytes(&self, op: &str, m: usize, bytes_per_rank: u64) -> (u64, u64) {
+        if m <= 1 {
+            return (0, 0);
+        }
+        let b = bytes_per_rank;
+        if self.is_hier(m) && (op == "all_gather" || op == "reduce_scatter") {
+            let (g, h) = (self.topology.gpus_per_host as u64, self.topology.hosts as u64);
+            let inter = if op == "all_gather" { (h - 1) * g * b } else { (h - 1) * b };
+            return ((g - 1) * b, inter);
+        }
+        let vol = match op {
+            "all_gather" | "reduce_scatter" => (m as u64 - 1) * b,
+            "all_reduce" => 2 * (m as u64 - 1) * b,
+            "all_to_all" => (m as u64 - 1) * b / m as u64,
+            _ => b,
+        };
+        if m <= self.devices_per_node {
+            (vol, 0)
+        } else {
+            (0, vol)
+        }
+    }
+
+    /// Per-tier serialized seconds for `op` (`(intra, inter)`), each
+    /// including its tier's launch. These are attribution numbers — the
+    /// headline `*_time` overlaps the faster tier behind the slower one,
+    /// so the pair intentionally sums to more than the pipelined total.
+    pub fn tier_times(&self, op: &str, m: usize, bytes_per_rank: u64, aligned: bool) -> (f64, f64) {
+        if m <= 1 {
+            return (0.0, 0.0);
+        }
+        if self.is_hier(m) && (op == "all_gather" || op == "reduce_scatter") {
+            let (g, h) = (self.topology.gpus_per_host, self.topology.hosts);
+            let (bwi, bwe) = self.tier_bws(aligned);
+            let b = bytes_per_rank as f64;
+            let rs = if op == "reduce_scatter" { self.rs_factor } else { 1.0 };
+            let ti = self.intra_launch + b * (g - 1) as f64 / (bwi * rs);
+            let inter_hops = if op == "all_gather" { (h - 1) * g } else { h - 1 };
+            let te = self.inter_launch + b * inter_hops as f64 / (bwe * rs);
+            return (ti, te);
+        }
+        let t = match op {
+            "all_gather" => self.all_gather_time(m, bytes_per_rank, aligned),
+            "reduce_scatter" => self.reduce_scatter_time(m, bytes_per_rank, aligned),
+            "all_reduce" => self.all_reduce_time(m, bytes_per_rank, aligned),
+            "all_to_all" => self.all_to_all_time(m, bytes_per_rank),
+            _ => 0.0,
+        };
+        if m <= self.devices_per_node {
+            (t, 0.0)
+        } else {
+            (0.0, t)
+        }
     }
 
     /// AllReduce = RS + AG.
@@ -288,6 +486,90 @@ mod tests {
         }
         assert!(Fabric::by_name("H800").is_some(), "case-insensitive");
         assert!(Fabric::by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn topology_parse_roundtrip() {
+        let t = Topology::parse("2x4").unwrap();
+        assert_eq!((t.hosts, t.gpus_per_host, t.segments), (2, 4, 2));
+        assert_eq!(t.label(), "2x4");
+        assert_eq!(t.total(), 8);
+        assert!(t.is_hierarchical());
+        let t = Topology::parse("4x8:4").unwrap();
+        assert_eq!((t.hosts, t.gpus_per_host, t.segments), (4, 8, 4));
+        assert!(!Topology::flat().is_hierarchical());
+        for bad in ["", "2", "0x4", "2x0", "2x4:0", "ax4", "2x4:x"] {
+            assert!(Topology::parse(bad).is_none(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn fabric_topology_suffix_parses() {
+        let f = Fabric::by_name("h800:2x4").unwrap();
+        assert_eq!(f.name, "h800");
+        assert_eq!(f.topology.label(), "2x4");
+        assert_eq!(f.topology.segments, 2);
+        let f = Fabric::by_name("A100:4x8:1").unwrap();
+        assert_eq!(f.name, "a100");
+        assert_eq!(f.topology.segments, 1);
+        assert!(Fabric::by_name("h800:2y4").is_none());
+        assert!(Fabric::by_name("tpu:2x4").is_none());
+        // no-suffix presets stay flat
+        assert!(!Fabric::h800().topology.is_hierarchical());
+    }
+
+    #[test]
+    fn hierarchy_beats_flat_at_scale() {
+        // at 8k ranks, the intra-host pre-reduce keeps (g-1)/g of the RS
+        // volume off the NIC and the AG pipelines its tiers
+        let b = 64 << 20;
+        let flat = Fabric::h800();
+        let hier = Fabric::by_name("h800:1024x8:2").unwrap();
+        let m = 8192;
+        assert!(hier.reduce_scatter_time(m, b, true) < flat.reduce_scatter_time(m, b, true));
+        assert!(hier.all_gather_time(m, b, true) < flat.all_gather_time(m, b, true));
+    }
+
+    #[test]
+    fn hier_times_only_when_group_fills_topology() {
+        // an m=8 group on a 2x4 fabric is hierarchical; m=4 (EP subgroup)
+        // and m=16 fall back to the flat model
+        let f = Fabric::by_name("h800:2x4").unwrap();
+        assert!(f.is_hier(8));
+        assert!(!f.is_hier(4));
+        assert!(!f.is_hier(16));
+        assert_eq!(
+            f.all_gather_time(4, 1 << 20, true),
+            Fabric::h800().all_gather_time(4, 1 << 20, true)
+        );
+    }
+
+    #[test]
+    fn tier_bytes_attribution() {
+        let f = Fabric::by_name("h800:2x4").unwrap();
+        let b = 1024u64;
+        // hier AG: 3 intra hops + 1*4 inter hops of b each
+        assert_eq!(f.tier_bytes("all_gather", 8, b), (3 * b, 4 * b));
+        // hier RS: pre-reduce leaves one shard per host crossing the NIC
+        assert_eq!(f.tier_bytes("reduce_scatter", 8, b), (3 * b, b));
+        // flat fallback: small group all intra, large group all inter
+        let flat = Fabric::h800();
+        assert_eq!(flat.tier_bytes("all_gather", 8, b), (7 * b, 0));
+        assert_eq!(flat.tier_bytes("all_gather", 16, b), (0, 15 * b));
+        assert_eq!(flat.tier_bytes("all_gather", 1, b), (0, 0));
+    }
+
+    #[test]
+    fn segment_pipelining_hides_fast_tier() {
+        // more segments hide more of the faster tier's time
+        let b = 256 << 20;
+        let s1 = Fabric::by_name("h800:4x8:1").unwrap();
+        let s4 = Fabric::by_name("h800:4x8:4").unwrap();
+        let m = 32;
+        assert!(s4.all_gather_time(m, b, true) < s1.all_gather_time(m, b, true));
+        // and never below the slower tier alone
+        let (ti, te) = s4.tier_times("all_gather", m, b, true);
+        assert!(s4.all_gather_time(m, b, true) >= ti.max(te) - 1e-12);
     }
 
     #[test]

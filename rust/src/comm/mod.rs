@@ -20,7 +20,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
-pub use cost::{CopyKind, Fabric};
+pub use cost::{CopyKind, Fabric, Topology};
 
 /// Accounting record for one collective (or copy) on the simulated fabric.
 #[derive(Debug, Clone, PartialEq)]
@@ -38,10 +38,20 @@ pub struct CommRecord {
     pub group_size: usize,
     /// Simulated seconds on the modeled fabric.
     pub sim_time: f64,
+    /// Per-rank wire bytes attributed to the intra-host (NVLink) tier
+    /// (0/0 with `intra_s`/`inter_s` = unattributed legacy record).
+    pub intra_bytes: u64,
+    /// Per-rank wire bytes attributed to the inter-host (IB) tier.
+    pub inter_bytes: u64,
+    /// Simulated serialized seconds on the intra-host tier.
+    pub intra_s: f64,
+    /// Simulated serialized seconds on the inter-host tier.
+    pub inter_s: f64,
 }
 
 impl CommRecord {
-    /// A dense full-precision record: every wire byte is payload.
+    /// A dense full-precision record: every wire byte is payload, no
+    /// per-tier attribution.
     pub fn dense(
         op: &'static str,
         bytes_per_rank: u64,
@@ -55,7 +65,21 @@ impl CommRecord {
             scale_bytes: 0,
             group_size,
             sim_time,
+            intra_bytes: 0,
+            inter_bytes: 0,
+            intra_s: 0.0,
+            inter_s: 0.0,
         }
+    }
+
+    /// Attach the two-tier attribution a [`Fabric`] computed for this op
+    /// (`fabric.tier_bytes` / `fabric.tier_times`).
+    pub fn with_tiers(mut self, bytes: (u64, u64), times: (f64, f64)) -> CommRecord {
+        self.intra_bytes = bytes.0;
+        self.inter_bytes = bytes.1;
+        self.intra_s = times.0;
+        self.inter_s = times.1;
+        self
     }
 
     /// Word-packing pad bytes per rank (wire total minus payload+scales).
@@ -132,6 +156,24 @@ impl CommStats {
             .filter(|r| r.op == op)
             .map(|r| r.sim_time)
             .sum()
+    }
+
+    /// Simulated `(intra, inter)` seconds attributed to `op` (zeros for
+    /// legacy unattributed records).
+    pub fn tier_time_of(&self, op: &str) -> (f64, f64) {
+        self.records
+            .iter()
+            .filter(|r| r.op == op)
+            .fold((0.0, 0.0), |(i, e), r| (i + r.intra_s, e + r.inter_s))
+    }
+
+    /// Total `(intra, inter)` wire bytes across all records (per-rank
+    /// bytes × group size, matching [`CommStats::total_bytes`]).
+    pub fn tier_bytes_total(&self) -> (u64, u64) {
+        self.records.iter().fold((0, 0), |(i, e), r| {
+            let g = r.group_size as u64;
+            (i + r.intra_bytes * g, e + r.inter_bytes * g)
+        })
     }
 }
 
@@ -420,6 +462,10 @@ mod tests {
             scale_bytes: 4,
             group_size: 2,
             sim_time: 0.1,
+            intra_bytes: 0,
+            inter_bytes: 0,
+            intra_s: 0.0,
+            inter_s: 0.0,
         });
         assert_eq!(st.wire_breakdown(), (64, 8, 8));
         assert_eq!(st.total_bytes(), 80);
@@ -431,6 +477,33 @@ mod tests {
         st.clear();
         assert_eq!(st.wire_breakdown(), (0, 0, 0));
         assert!(st.records.is_empty());
+    }
+
+    #[test]
+    fn tier_attribution_accumulates() {
+        let f = Fabric::by_name("h800:2x4").unwrap();
+        let mut st = CommStats::default();
+        let b = 1024u64;
+        st.push(
+            CommRecord::dense("all_gather", b, 8, 0.5)
+                .with_tiers(f.tier_bytes("all_gather", 8, b), f.tier_times("all_gather", 8, b, true)),
+        );
+        st.push(
+            CommRecord::dense("reduce_scatter", b, 8, 0.25).with_tiers(
+                f.tier_bytes("reduce_scatter", 8, b),
+                f.tier_times("reduce_scatter", 8, b, true),
+            ),
+        );
+        let (ag_i, ag_e) = st.tier_time_of("all_gather");
+        assert!(ag_i > 0.0 && ag_e > 0.0);
+        let (bi, be) = st.tier_bytes_total();
+        // AG: (3b intra + 4b inter) * 8 ranks; RS: (3b + 1b) * 8
+        assert_eq!(bi, (3 + 3) * b * 8);
+        assert_eq!(be, (4 + 1) * b * 8);
+        // legacy dense records stay unattributed
+        let mut legacy = CommStats::default();
+        legacy.push(CommRecord::dense("all_reduce", b, 4, 0.1));
+        assert_eq!(legacy.tier_time_of("all_reduce"), (0.0, 0.0));
     }
 
     #[test]

@@ -25,7 +25,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::comm::Fabric;
+use crate::comm::{Fabric, Topology};
 use crate::fsdp::spec::OptimBinding;
 use crate::quant::CommPrecision;
 
@@ -181,6 +181,28 @@ impl ConfigFile {
                 "unknown comm_precision '{comm_precision}' (expected f32, bf16, or q8[:block])"
             );
         }
+        // `run.topology = "HxG[:S]"` or a `[topology]` section with
+        // shape = "HxG" and an optional segments = S
+        let topology = match self.get("run.topology").or_else(|| self.get("topology.shape")) {
+            Some(t) => {
+                let spec = if t.contains(':') {
+                    t.to_string()
+                } else {
+                    match self.get("topology.segments") {
+                        Some(s) => format!("{t}:{s}"),
+                        None => t.to_string(),
+                    }
+                };
+                if Topology::parse(&spec).is_none() {
+                    bail!(
+                        "bad topology '{spec}' (expected HxG or HxG:S, \
+                         e.g. 2x4 or 4x8:2, all parts >= 1)"
+                    );
+                }
+                spec
+            }
+            None => d.topology.clone(),
+        };
         // `run.trace = "out.json"` or a `[trace]` section with out/level
         let trace = self
             .get("run.trace")
@@ -208,6 +230,7 @@ impl ConfigFile {
             backend,
             prefetch: self.usize_or("run.prefetch", d.prefetch),
             fabric,
+            topology,
             comm_precision,
             trace,
             trace_level,
@@ -316,6 +339,20 @@ comm_precision = "q8:128"
         assert_eq!(tc.comm_precision, "bf16");
         assert_eq!(head.comm, Some(CommPrecision::Q8 { block: 128 }));
         assert!(tc.groups.iter().find(|o| o.which == "layers").unwrap().comm.is_none());
+    }
+
+    #[test]
+    fn topology_section_parses_and_validates() {
+        let c = ConfigFile::parse("[topology]\nshape = \"2x4\"\nsegments = 4").unwrap();
+        assert_eq!(c.train_config().unwrap().topology, "2x4:4");
+        let r = ConfigFile::parse("[run]\ntopology = \"4x8:2\"").unwrap();
+        assert_eq!(r.train_config().unwrap().topology, "4x8:2");
+        let bad = ConfigFile::parse("[topology]\nshape = \"0x4\"").unwrap();
+        assert!(bad.train_config().is_err());
+        let word = ConfigFile::parse("[run]\ntopology = \"ring\"").unwrap();
+        assert!(word.train_config().is_err());
+        // default stays flat (empty)
+        assert_eq!(ConfigFile::parse("").unwrap().train_config().unwrap().topology, "");
     }
 
     #[test]

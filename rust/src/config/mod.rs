@@ -181,6 +181,10 @@ pub struct TrainConfig {
     pub prefetch: usize,
     /// Fabric preset name (`run.fabric` / `--fabric`): h800 | h100 | a100.
     pub fabric: String,
+    /// Cluster topology (`run.topology` / `[topology]` / `--topology`):
+    /// `"HxG"` or `"HxG:S"` (hosts x gpus-per-host, S pipeline segments).
+    /// Empty = flat single-tier collectives.
+    pub topology: String,
     /// Session-default wire precision (`run.comm_precision` /
     /// `--comm-precision`): f32 | bf16 | q8[:block].
     pub comm_precision: String,
@@ -209,6 +213,7 @@ impl Default for TrainConfig {
             backend: CommBackend::Serial,
             prefetch: 0,
             fabric: "h800".into(),
+            topology: String::new(),
             comm_precision: "f32".into(),
             trace: None,
             trace_level: "comm".into(),

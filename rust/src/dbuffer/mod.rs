@@ -463,14 +463,21 @@ impl DBuffer {
     fn record_gather_prec(&self, comm: &dyn Communicator, fabric: &Fabric, prec: CommPrecision) {
         let vol = prec.wire_volume(self.layout.shard_size);
         let bytes = vol.total();
+        let m = self.num_devices();
         let aligned = fabric.is_aligned(0, self.shard_bytes());
+        let (ib, eb) = fabric.tier_bytes("all_gather", m, bytes);
+        let (is_, es) = fabric.tier_times("all_gather", m, bytes, aligned);
         comm.record(CommRecord {
             op: "all_gather",
             bytes_per_rank: bytes,
             payload_bytes: vol.payload,
             scale_bytes: vol.scale,
-            group_size: self.num_devices(),
-            sim_time: fabric.all_gather_time(self.num_devices(), bytes, aligned),
+            group_size: m,
+            sim_time: fabric.all_gather_time(m, bytes, aligned),
+            intra_bytes: ib,
+            inter_bytes: eb,
+            intra_s: is_,
+            inter_s: es,
         });
     }
 
@@ -633,6 +640,8 @@ impl DBuffer {
         let vol = prec.wire_volume(self.layout.shard_size);
         let bytes = vol.total();
         let aligned = fabric.is_aligned(0, self.shard_bytes());
+        let (ib, eb) = fabric.tier_bytes("reduce_scatter", m, bytes);
+        let (is_, es) = fabric.tier_times("reduce_scatter", m, bytes, aligned);
         comm.record(CommRecord {
             op: "reduce_scatter",
             bytes_per_rank: bytes,
@@ -640,6 +649,10 @@ impl DBuffer {
             scale_bytes: vol.scale,
             group_size: m,
             sim_time: fabric.reduce_scatter_time(m, bytes, aligned),
+            intra_bytes: ib,
+            inter_bytes: eb,
+            intra_s: is_,
+            inter_s: es,
         });
         let replicas = mesh.dim_size("replica").unwrap_or(1);
         if replicas > 1 {

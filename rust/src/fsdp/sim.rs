@@ -106,6 +106,14 @@ pub struct StepReport {
     pub compute_time: f64,
     /// Collective seconds, total (before overlap).
     pub comm_time: f64,
+    /// Serialized collective seconds attributed to the intra-host
+    /// (NVLink) tier. On hierarchical fabrics the two tiers pipeline, so
+    /// `intra + inter >= comm_time` by design; on flat fabrics every op
+    /// lands on exactly one tier and the pair partitions `comm_time`.
+    pub intra_comm_s: f64,
+    /// Serialized collective seconds attributed to the inter-host (IB)
+    /// tier — the term hierarchy shrinks g-fold for ReduceScatter.
+    pub inter_comm_s: f64,
     /// Comm seconds not hidden by compute.
     pub exposed_comm: f64,
     /// Copy seconds (interleaved copy-in/out, blocking copies).
@@ -194,6 +202,13 @@ pub fn simulate_step(
     // each expert (or a slice of experts) is its own fully_shard unit.
     // Cap the gathered working set per bucket.
     const MAX_BUCKET_ELEMS: u64 = 256 << 20; // 512 MiB bf16 gathered
+    // Hierarchical fabrics: a sub-bucket below this floor is inter-host
+    // launch-dominated (planner::latency_bucket_floor), so the splitter
+    // folds a trailing runt into its predecessor — the bucket may then
+    // exceed MAX_BUCKET_ELEMS by up to the floor, a deliberate trade of
+    // working set for one fewer NIC doorbell. Flat fabrics get floor 0
+    // and the historical split, bit-stable.
+    let latency_floor = planner::latency_bucket_floor(fabric, m);
     let mut groups: Vec<ParamGroup> = Vec::new();
     let mut compute_elems: Vec<u64> = Vec::new(); // pre-EP numel (FLOPs basis)
     for g in &preset.groups {
@@ -210,6 +225,7 @@ pub fn simulate_step(
             groups.push(g);
             continue;
         }
+        let split_start = groups.len();
         let mut cur = ParamGroup { name: g.name.clone(), params: Vec::new() };
         for p in g.params {
             if cur.numel() + p.numel() > MAX_BUCKET_ELEMS && !cur.params.is_empty() {
@@ -222,8 +238,15 @@ pub fn simulate_step(
             cur.params.push(p);
         }
         if !cur.params.is_empty() {
-            compute_elems.push((cur.numel() as f64 * comp_scale) as u64);
-            groups.push(cur);
+            let tail_elems = (cur.numel() as f64 * comp_scale) as u64;
+            if cur.numel() < latency_floor && groups.len() > split_start {
+                // launch-dominated tail: fold into the previous sub-bucket
+                groups.last_mut().unwrap().params.append(&mut cur.params);
+                *compute_elems.last_mut().unwrap() += tail_elems;
+            } else {
+                compute_elems.push(tail_elems);
+                groups.push(cur);
+            }
         }
     }
 
@@ -252,6 +275,8 @@ pub fn simulate_step(
     let mut fwd_compute = vec![0.0f64; n_groups];
     let mut copy_time = 0.0f64;
     let mut comm_time = 0.0f64;
+    let mut intra_comm_s = 0.0f64;
+    let mut inter_comm_s = 0.0f64;
 
     for (i, g) in groups.iter().enumerate() {
         // wire bytes follow the system's comm precision (payload + quant
@@ -272,6 +297,19 @@ pub fn simulate_step(
             )
         };
         comm_time += ag_t + rs_t;
+
+        // two-tier attribution of the same collectives (per-param systems
+        // pay the tier launches once per parameter, like their headline)
+        let (n_coll, per) = if sys.per_param_collectives {
+            let n = g.params.len().max(1) as u64;
+            (n as f64, bytes / n)
+        } else {
+            (1.0, bytes)
+        };
+        let (agi, age) = fabric.tier_times("all_gather", m, per, sys.aligned);
+        let (rsi, rse) = fabric.tier_times("reduce_scatter", m, per, sys.aligned);
+        intra_comm_s += n_coll * (agi + rsi);
+        inter_comm_s += n_coll * (age + rse);
 
         // copies
         let full_bytes = shard_elems[i] * m as u64 * 2;
@@ -311,6 +349,9 @@ pub fn simulate_step(
         let bytes = tokens_per_dev * d * 2 * topk;
         a2a_time = 4.0 * preset.n_layers as f64 * fabric.all_to_all_time(ep, bytes);
         comm_time += a2a_time;
+        let (a2a_i, a2a_e) = fabric.tier_times("all_to_all", ep, bytes, true);
+        intra_comm_s += 4.0 * preset.n_layers as f64 * a2a_i;
+        inter_comm_s += 4.0 * preset.n_layers as f64 * a2a_e;
     }
 
     // ---- overlap timeline ----
@@ -489,6 +530,8 @@ pub fn simulate_step(
         step_time,
         compute_time,
         comm_time,
+        intra_comm_s,
+        inter_comm_s,
         exposed_comm,
         copy_time,
         optim_time,
@@ -633,6 +676,39 @@ mod tests {
         // fewer scale bytes
         let q8_coarse = mk(CommPrecision::Q8 { block: 1024 });
         assert!(q8.comm_time > q8_coarse.comm_time);
+    }
+
+    #[test]
+    fn hierarchical_fabric_shrinks_inter_comm() {
+        let preset = presets::llama70b();
+        let run = |f: &Fabric| {
+            simulate_step(
+                &preset,
+                &ParallelConfig::fsdp_only(128),
+                OptimKind::AdamW,
+                4096,
+                f,
+                &GpuSpec::h800(),
+                &baselines::vescale(1),
+            )
+            .unwrap()
+        };
+        let rf = run(&Fabric::h800());
+        let rh = run(&Fabric::by_name("h800:16x8").unwrap());
+        // flat 128-rank groups charge every second to the inter tier
+        assert_eq!(rf.intra_comm_s, 0.0);
+        assert!(rf.inter_comm_s > 0.0);
+        // the intra-host pre-reduce collapses 8 contributions before the
+        // NIC, so hierarchy's inter-tier seconds shrink vs the flat ring
+        assert!(
+            rh.inter_comm_s < rf.inter_comm_s * 0.7,
+            "hier inter {} flat inter {}",
+            rh.inter_comm_s,
+            rf.inter_comm_s
+        );
+        assert!(rh.intra_comm_s > 0.0);
+        // and the headline step gets faster, not slower
+        assert!(rh.step_time <= rf.step_time * 1.001);
     }
 
     #[test]

@@ -3,13 +3,18 @@
 //!     vescale-fsdp train  [--config-file cfg.toml] [--model tiny] [--mesh 4]
 //!                         [--opt adamw|adam8bit|muon|sgd] [--steps 50]
 //!                         [--backend serial|threaded] [--prefetch N]
-//!                         [--fabric h800|h100|a100]
+//!                         [--fabric h800|h100|a100[:HxG[:S]]]
+//!                         [--topology HxG[:S]]
 //!                         [--comm-precision f32|bf16|q8[:block]]
 //!                         [--trace out.json] [--trace-level off|comm|full]
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
-//!                          executor with up to N in-flight bucket collectives)
+//!                          executor with up to N in-flight bucket collectives;
+//!                          --topology HxG dispatches whole-cluster collectives
+//!                          hierarchically: intra-host ring + rail-aligned
+//!                          inter-host exchange, S pipeline segments)
 //!     vescale-fsdp plan   [--preset gptoss120b] [--devices 64] [--rows 128]
 //!     vescale-fsdp sim    [--preset llama70b] [--system vescale] [--fsdp 128]
+//!                         [--topology HxG[:S]]
 //!     vescale-fsdp bench  (points at `cargo bench`)
 //!
 //! Config files additionally support `[group.<name>]` sections (per-group
@@ -21,7 +26,7 @@ use anyhow::{anyhow, Result};
 
 use vescale_fsdp::baselines;
 use vescale_fsdp::cluster::CommBackend;
-use vescale_fsdp::comm::Fabric;
+use vescale_fsdp::comm::{Fabric, Topology};
 use vescale_fsdp::config::file::ConfigFile;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig, System, TrainConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
@@ -78,6 +83,14 @@ fn cmd_train(args: &Args) -> Result<()> {
             Fabric::preset_names()
         )
     })?;
+    let topo_str = args.str_or("topology", &base.topology);
+    let fabric = if topo_str.is_empty() {
+        fabric
+    } else {
+        fabric.with_topology(Topology::parse(&topo_str).ok_or_else(|| {
+            anyhow!("bad --topology '{topo_str}' (expected HxG[:S], e.g. 2x4 or 4x8:2)")
+        })?)
+    };
     let prec_name = args.str_or("comm-precision", &base.comm_precision);
     let comm_precision = CommPrecision::parse(&prec_name).ok_or_else(|| {
         anyhow!("unknown --comm-precision '{prec_name}' (expected f32, bf16, or q8[:block])")
@@ -233,6 +246,13 @@ fn cmd_sim(args: &Args) -> Result<()> {
     let tokens = args.u64_or("tokens", preset.seq_default as u64);
     let fabric = Fabric::by_name(&args.str_or("fabric", "h800"))
         .ok_or_else(|| anyhow!("unknown --fabric"))?;
+    let fabric = match args.get("topology") {
+        Some(t) => fabric.with_topology(
+            Topology::parse(t)
+                .ok_or_else(|| anyhow!("bad --topology '{t}' (expected HxG[:S])"))?,
+        ),
+        None => fabric,
+    };
     let r = simulate_step(
         &preset,
         &parallel,

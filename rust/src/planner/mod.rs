@@ -35,6 +35,7 @@ pub mod exact;
 
 use anyhow::{bail, Result};
 
+use crate::comm::Fabric;
 use crate::util::{ceil_div, gcd, lcm};
 
 /// Planner input: one tensor to be placed in the grouped buffer.
@@ -452,6 +453,21 @@ pub fn split_blocks(layout: &Layout) -> u64 {
 
 pub use exact::solve_exact;
 
+/// Smallest bucket (f32 elements) worth shipping as its own collective on
+/// `fabric` when the `m`-rank group dispatches hierarchically: the size at
+/// which the inter-host wire time amortizes the inter-host launch latency
+/// to a <= 1% overhead (`bytes = 100 * inter_launch * inter_bw`). Below
+/// this floor a bucket's step time is launch-dominated, so the simulator's
+/// bucket splitter merges trailing sub-buckets up to it. Flat topologies
+/// return 0 — single-tier launch latency is already folded into the cost
+/// model, and flat bucket sizing must stay bit-stable.
+pub fn latency_bucket_floor(fabric: &Fabric, m: usize) -> u64 {
+    if m <= 1 || !fabric.topology.is_hierarchical() {
+        return 0;
+    }
+    (100.0 * fabric.inter_launch * fabric.inter_bw / 4.0) as u64
+}
+
 /// Helper: gcd over all granularities (alignment unit of a tensor set).
 pub fn granularity_gcd(tensors: &[TensorDecl]) -> u64 {
     tensors.iter().fold(0, |acc, t| gcd(acc, t.granularity))
@@ -610,6 +626,18 @@ mod tests {
         let l = plan(&[], 4, 1);
         assert!(l.is_ok());
         assert_eq!(l.unwrap().shard_size, 0);
+    }
+
+    #[test]
+    fn latency_floor_only_on_hierarchical_fabrics() {
+        let flat = Fabric::h800();
+        assert_eq!(latency_bucket_floor(&flat, 64), 0);
+        let hier = Fabric::by_name("h800:8x8").unwrap();
+        let floor = latency_bucket_floor(&hier, 64);
+        // h800: 100 * 20us * 145 GB/s / 4 B ≈ 72.5M elems
+        assert!(floor > 10_000_000, "floor {floor}");
+        // degenerate group sizes never impose a floor
+        assert_eq!(latency_bucket_floor(&hier, 1), 0);
     }
 
     #[test]

@@ -23,6 +23,15 @@ pub fn validate(doc: &Json) -> Result<(), String> {
         return Err("traceEvents is empty".into());
     }
 
+    // Hierarchical runs (`metadata.topology = "HxG"` with H > 1) must
+    // tag every transport span with its wire tier (`intra`/`inter`).
+    let hierarchical = doc
+        .get("metadata")
+        .and_then(|m| m.get("topology"))
+        .and_then(Json::as_str)
+        .and_then(|t| t.split('x').next().and_then(|h| h.parse::<u64>().ok()))
+        .map_or(false, |h| h > 1);
+
     // (pid, tid) -> [(ts, dur, name)]
     let mut lanes: Vec<((u64, u64), Vec<(f64, f64, String)>)> = Vec::new();
     for (i, e) in events.iter().enumerate() {
@@ -66,6 +75,12 @@ pub fn validate(doc: &Json) -> Result<(), String> {
                 if TRANSPORT_OPS.contains(&name) && !has("bytes") {
                     return Err(format!(
                         "event {i}: transport span '{name}' missing bytes arg"
+                    ));
+                }
+                if hierarchical && TRANSPORT_OPS.contains(&name) && !has("tier") {
+                    return Err(format!(
+                        "event {i}: transport span '{name}' missing tier arg \
+                         on hierarchical-topology run"
                     ));
                 }
                 let key = (pid, tid);
@@ -161,6 +176,48 @@ mod tests {
         let d = doc(vec![span(0, 2, 0.0, 1.0, "ag")]);
         let err = validate(&d).unwrap_err();
         assert!(err.contains("bucket"), "{err}");
+    }
+
+    #[test]
+    fn hierarchical_topology_demands_tier_attr() {
+        // The same untagged transport span passes on a flat doc...
+        let flat = doc(vec![span(0, 2, 0.0, 1.0, "all_gather")]);
+        validate(&flat).unwrap();
+        // ...but fails once metadata declares a multi-host topology.
+        let hier = Json::obj(vec![
+            ("traceEvents", Json::Arr(vec![span(0, 2, 0.0, 1.0, "all_gather")])),
+            ("metadata", Json::obj(vec![("topology", Json::str("2x4"))])),
+        ]);
+        let err = validate(&hier).unwrap_err();
+        assert!(err.contains("tier"), "{err}");
+        // A single-host topology ("1x8") stays exempt.
+        let single = Json::obj(vec![
+            ("traceEvents", Json::Arr(vec![span(0, 2, 0.0, 1.0, "all_gather")])),
+            ("metadata", Json::obj(vec![("topology", Json::str("1x8"))])),
+        ]);
+        validate(&single).unwrap();
+        // Tagged spans satisfy the hierarchical requirement.
+        let tagged = Json::obj(vec![
+            ("ph", Json::str("X")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num(2.0)),
+            ("ts", Json::num(0.0)),
+            ("dur", Json::num(1.0)),
+            ("name", Json::str("all_gather")),
+            ("cat", Json::str("comm")),
+            (
+                "args",
+                Json::obj(vec![
+                    ("bytes", Json::num(8.0)),
+                    ("tier", Json::str("intra")),
+                ]),
+            ),
+        ]);
+        let ok = Json::obj(vec![
+            ("traceEvents", Json::Arr(vec![tagged])),
+            ("metadata", Json::obj(vec![("topology", Json::str("2x4"))])),
+        ]);
+        validate(&ok).unwrap();
     }
 
     #[test]

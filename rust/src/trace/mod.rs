@@ -177,6 +177,13 @@ pub struct SpanTimer {
     t0: Instant,
 }
 
+impl SpanTimer {
+    /// Seconds since the timer started (does not consume the timer).
+    pub fn elapsed_s(&self) -> f64 {
+        self.t0.elapsed().as_secs_f64()
+    }
+}
+
 #[derive(Debug, Clone)]
 struct SpanEvent {
     name: &'static str,
@@ -208,6 +215,10 @@ struct TracerInner {
     step: AtomicU64,
     spans: Mutex<Vec<SpanEvent>>,
     counters: Mutex<Vec<CounterEvent>>,
+    /// `"{hosts}x{gpus_per_host}"` label when the run used hierarchical
+    /// collectives; recorded in the exported `metadata` block so
+    /// `trace::check` can demand per-tier span attribution.
+    topology: Mutex<Option<String>>,
 }
 
 /// Shared per-session trace sink. Cloning is an `Arc` bump; every layer
@@ -234,6 +245,7 @@ impl Tracer {
                 step: AtomicU64::new(0),
                 spans: Mutex::new(Vec::new()),
                 counters: Mutex::new(Vec::new()),
+                topology: Mutex::new(None),
             }),
         }
     }
@@ -265,6 +277,17 @@ impl Tracer {
         self.inner.step.store(step, Ordering::Relaxed);
     }
 
+    /// Record the device topology label (`"4x8"`) for the exported
+    /// `metadata` block. Sessions call this only for hierarchical
+    /// topologies; flat runs leave it unset.
+    pub fn set_topology(&self, label: &str) {
+        *self.inner.topology.lock().unwrap() = Some(label.to_string());
+    }
+
+    pub fn topology(&self) -> Option<String> {
+        self.inner.topology.lock().unwrap().clone()
+    }
+
     /// Start a span clock. Always cheap; pair with [`Tracer::finish_with`].
     pub fn timer(&self) -> SpanTimer {
         SpanTimer { t0: Instant::now() }
@@ -294,6 +317,40 @@ impl Tracer {
             self.inner.spans.lock().unwrap().push(ev);
         }
         dur.as_secs_f64()
+    }
+
+    /// Push a span covering an explicit sub-interval of a (still live)
+    /// timer: `[t0 + offset_s, t0 + offset_s + dur_s)`. The hierarchical
+    /// transport path uses this to split one measured rendezvous into
+    /// adjacent per-tier (`intra`/`inter`) spans that still sum to the
+    /// measured wall interval — `finish_with` can only stamp "now" as
+    /// the end, which would double-count the interval across two spans.
+    pub fn push_window<F: FnOnce() -> Span>(
+        &self,
+        timer: &SpanTimer,
+        offset_s: f64,
+        dur_s: f64,
+        cat: Cat,
+        f: F,
+    ) {
+        if self.enabled(cat) {
+            let span = f();
+            let base_ns = timer.t0.duration_since(self.inner.origin).as_nanos() as u64;
+            let ev = SpanEvent {
+                name: span.name,
+                cat,
+                scope: span.scope,
+                lane: span.lane,
+                t0_ns: base_ns + (offset_s.max(0.0) * 1e9) as u64,
+                dur_ns: (dur_s.max(0.0) * 1e9) as u64,
+                step: self.inner.step.load(Ordering::Relaxed),
+                exposed: span.exposed,
+                bucket: span.bucket,
+                bytes: span.bytes,
+                attrs: span.attrs,
+            };
+            self.inner.spans.lock().unwrap().push(ev);
+        }
     }
 
     /// Record a counter sample (rendered as a Perfetto counter track on
@@ -356,23 +413,44 @@ impl Tracer {
         // Fabric transport spans may genuinely overlap (async collectives
         // in flight on comm threads), so assign each an interval-disjoint
         // lane (tid) greedily; rank-pid spans keep the fixed lanes.
+        // Spans tagged with a `tier` attr (hierarchical runs) are packed
+        // into separate intra/inter lane blocks so the two wire tiers
+        // render as distinct thread groups in Perfetto.
         let mut fabric: Vec<&SpanEvent> =
             spans.iter().filter(|s| s.scope == RankScope::Fabric).collect();
         fabric.sort_by_key(|s| (s.t0_ns, u64::MAX - s.dur_ns));
-        let mut lane_end: Vec<u64> = Vec::new();
-        let mut fabric_tid: Vec<(u64, u64, usize)> = Vec::new(); // (t0, dur, tid)
+        let tier_group = |s: &SpanEvent| -> usize {
+            match s.attrs.iter().find(|(k, _)| *k == "tier").map(|(_, v)| v.as_str()) {
+                Some("intra") => 1,
+                Some("inter") => 2,
+                _ => 0,
+            }
+        };
+        let mut lane_end: [Vec<u64>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        let mut fabric_lane: Vec<(usize, usize)> = Vec::new(); // (tier group, lane)
         for s in &fabric {
-            let lane = match lane_end.iter().position(|&e| e <= s.t0_ns) {
+            let g = tier_group(s);
+            let ends = &mut lane_end[g];
+            let lane = match ends.iter().position(|&e| e <= s.t0_ns) {
                 Some(i) => i,
                 None => {
-                    lane_end.push(0);
-                    lane_end.len() - 1
+                    ends.push(0);
+                    ends.len() - 1
                 }
             };
-            lane_end[lane] = s.t0_ns + s.dur_ns;
-            fabric_tid.push((s.t0_ns, s.dur_ns, 2 + lane));
+            ends[lane] = s.t0_ns + s.dur_ns;
+            fabric_lane.push((g, lane));
         }
-        let fabric_lanes = lane_end.len().max(1);
+        // Untiered lanes claim tids from 2 (at least one, so an
+        // all-flat trace keeps its `wire0` thread), then the intra and
+        // inter blocks follow contiguously.
+        let group_lanes =
+            [lane_end[0].len().max(1), lane_end[1].len(), lane_end[2].len()];
+        let group_base = [
+            2usize,
+            2 + group_lanes[0],
+            2 + group_lanes[0] + group_lanes[1],
+        ];
 
         let mut events: Vec<Json> = Vec::new();
         // Process/thread metadata: pid 0..ranks are ranks, pid `ranks` is
@@ -383,22 +461,24 @@ impl Tracer {
             events.push(meta_event(pid, 2, "thread_name", "comm"));
         }
         events.push(meta_event(fabric_pid, 0, "process_name", "fabric"));
-        for lane in 0..fabric_lanes {
-            events.push(meta_event(
-                fabric_pid,
-                2 + lane,
-                "thread_name",
-                &format!("wire{lane}"),
-            ));
+        for (g, prefix) in [(0usize, "wire"), (1, "wire.intra"), (2, "wire.inter")] {
+            for lane in 0..group_lanes[g] {
+                events.push(meta_event(
+                    fabric_pid,
+                    group_base[g] + lane,
+                    "thread_name",
+                    &format!("{prefix}{lane}"),
+                ));
+            }
         }
 
         let mut fi = 0usize;
         // Emit in a stable order: fabric spans (already time-sorted),
         // then rank spans time-sorted.
         for s in &fabric {
-            let (_, _, tid) = fabric_tid[fi];
+            let (g, lane) = fabric_lane[fi];
             fi += 1;
-            events.push(span_event(s, fabric_pid, tid));
+            events.push(span_event(s, fabric_pid, group_base[g] + lane));
         }
         let mut rank_spans: Vec<&SpanEvent> =
             spans.iter().filter(|s| s.scope != RankScope::Fabric).collect();
@@ -435,16 +515,18 @@ impl Tracer {
             ]));
         }
 
+        let mut metadata = vec![
+            ("ranks", Json::num(ranks as f64)),
+            ("trace_level", Json::str(self.inner.level.name())),
+        ];
+        if let Some(topo) = self.topology() {
+            metadata.push(("topology", Json::str(&topo)));
+        }
+
         Json::obj(vec![
             ("traceEvents", Json::Arr(events)),
             ("displayTimeUnit", Json::str("ms")),
-            (
-                "metadata",
-                Json::obj(vec![
-                    ("ranks", Json::num(ranks as f64)),
-                    ("trace_level", Json::str(self.inner.level.name())),
-                ]),
-            ),
+            ("metadata", Json::obj(metadata)),
             ("summary", self.summary(stats).to_json()),
         ])
     }
@@ -507,26 +589,54 @@ impl Tracer {
         // point of reporting both.
         let mut per_op: Vec<OpTiming> = Vec::new();
         for s in spans.iter().filter(|s| s.scope == RankScope::Fabric) {
-            match per_op.iter_mut().find(|o| o.op == s.name) {
-                Some(o) => {
-                    o.measured_s += s.dur_ns as f64 / 1e9;
+            let dur_s = s.dur_ns as f64 / 1e9;
+            let tier = s.attrs.iter().find(|(k, _)| *k == "tier").map(|(_, v)| v.as_str());
+            let o = match per_op.iter_mut().position(|o| o.op == s.name) {
+                Some(i) => {
+                    let o = &mut per_op[i];
+                    o.measured_s += dur_s;
                     o.count += 1;
+                    o
                 }
-                None => per_op.push(OpTiming {
-                    op: s.name,
-                    measured_s: s.dur_ns as f64 / 1e9,
-                    sim_s: 0.0,
-                    count: 1,
-                }),
+                None => {
+                    per_op.push(OpTiming {
+                        op: s.name,
+                        measured_s: dur_s,
+                        sim_s: 0.0,
+                        measured_intra_s: 0.0,
+                        measured_inter_s: 0.0,
+                        sim_intra_s: 0.0,
+                        sim_inter_s: 0.0,
+                        count: 1,
+                    });
+                    per_op.last_mut().unwrap()
+                }
+            };
+            match tier {
+                Some("intra") => o.measured_intra_s += dur_s,
+                Some("inter") => o.measured_inter_s += dur_s,
+                _ => {}
             }
         }
         for op in ["all_gather", "reduce_scatter", "all_reduce", "broadcast", "all_to_all"] {
             let sim = stats.time_of(op);
+            let (sim_i, sim_e) = stats.tier_time_of(op);
             match per_op.iter_mut().find(|o| o.op == op) {
-                Some(o) => o.sim_s = sim,
-                None if sim > 0.0 => {
-                    per_op.push(OpTiming { op, measured_s: 0.0, sim_s: sim, count: 0 })
+                Some(o) => {
+                    o.sim_s = sim;
+                    o.sim_intra_s = sim_i;
+                    o.sim_inter_s = sim_e;
                 }
+                None if sim > 0.0 => per_op.push(OpTiming {
+                    op,
+                    measured_s: 0.0,
+                    sim_s: sim,
+                    measured_intra_s: 0.0,
+                    measured_inter_s: 0.0,
+                    sim_intra_s: sim_i,
+                    sim_inter_s: sim_e,
+                    count: 0,
+                }),
                 None => {}
             }
         }
@@ -589,6 +699,17 @@ pub struct OpTiming {
     pub measured_s: f64,
     /// `fsdp::sim` fabric-model seconds for the same record stream.
     pub sim_s: f64,
+    /// Measured seconds attributed to the intra-host (NVLink) tier —
+    /// the sum of fabric spans tagged `tier: intra`. Zero on flat runs.
+    pub measured_intra_s: f64,
+    /// Measured seconds attributed to the inter-host (IB) tier.
+    pub measured_inter_s: f64,
+    /// Cost-model seconds for the intra-host tier (serialized, with its
+    /// tier launch overhead — the two tiers overlap under pipelining,
+    /// so `sim_intra + sim_inter >= sim_s` by design).
+    pub sim_intra_s: f64,
+    /// Cost-model seconds for the inter-host tier.
+    pub sim_inter_s: f64,
     pub count: usize,
 }
 
@@ -647,6 +768,10 @@ impl TraceSummary {
                                 ("op", Json::str(o.op)),
                                 ("measured_s", Json::num(o.measured_s)),
                                 ("sim_s", Json::num(o.sim_s)),
+                                ("measured_intra_s", Json::num(o.measured_intra_s)),
+                                ("measured_inter_s", Json::num(o.measured_inter_s)),
+                                ("sim_intra_s", Json::num(o.sim_intra_s)),
+                                ("sim_inter_s", Json::num(o.sim_inter_s)),
                                 ("count", Json::num(o.count as f64)),
                             ])
                         })
@@ -746,6 +871,69 @@ mod tests {
             .collect();
         assert_eq!(tids.len(), 2);
         assert_ne!(tids[0], tids[1], "overlapping spans must not share a lane");
+    }
+
+    #[test]
+    fn tiered_spans_get_separate_wire_lanes_and_metadata() {
+        let t = Tracer::new(TraceLevel::Comm, 2);
+        t.set_topology("2x4");
+        let timer = t.timer();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let dur = timer.elapsed_s();
+        t.push_window(&timer, 0.0, dur * 0.5, Cat::Comm, || {
+            Span::new("all_gather").fabric().bytes(96).attr("tier", "intra")
+        });
+        t.push_window(&timer, dur * 0.5, dur * 0.5, Cat::Comm, || {
+            Span::new("all_gather").fabric().bytes(128).attr("tier", "inter")
+        });
+        let json = t.export(&CommStats::default());
+        check::validate(&json).unwrap();
+        let text = json.to_string();
+        assert!(text.contains("wire.intra0"), "missing intra wire lane: {text}");
+        assert!(text.contains("wire.inter0"), "missing inter wire lane: {text}");
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("metadata").unwrap().get("topology").and_then(Json::as_str),
+            Some("2x4")
+        );
+        // Tier groups own disjoint lane blocks, so the adjacent
+        // (non-overlapping) windows still land on different tids.
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let tids: Vec<usize> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .map(|e| e.get("tid").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(tids.len(), 2);
+        assert_ne!(tids[0], tids[1], "intra/inter spans must not share a lane");
+    }
+
+    #[test]
+    fn summary_splits_measured_time_by_tier() {
+        let t = Tracer::new(TraceLevel::Comm, 2);
+        for (t0, dur, tier) in
+            [(0u64, 3_000_000_000u64, "intra"), (3_000_000_000, 1_000_000_000, "inter")]
+        {
+            t.inner.spans.lock().unwrap().push(SpanEvent {
+                name: "all_gather",
+                cat: Cat::Comm,
+                scope: RankScope::Fabric,
+                lane: Lane::Comm,
+                t0_ns: t0,
+                dur_ns: dur,
+                step: 1,
+                exposed: false,
+                bucket: None,
+                bytes: Some(8),
+                attrs: vec![("tier", tier.to_string())],
+            });
+        }
+        let s = t.summary(&CommStats::default());
+        let ag = s.per_op.iter().find(|o| o.op == "all_gather").unwrap();
+        assert!((ag.measured_s - 4.0).abs() < 1e-9);
+        assert!((ag.measured_intra_s - 3.0).abs() < 1e-9);
+        assert!((ag.measured_inter_s - 1.0).abs() < 1e-9);
+        assert_eq!(ag.count, 2);
     }
 
     #[test]

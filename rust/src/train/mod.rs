@@ -18,7 +18,7 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::{make_comm, make_comm_traced, Cluster, CommBackend};
+use crate::cluster::{make_comm, make_comm_topo, Cluster, CommBackend};
 use crate::comm::{CommRecord, Fabric};
 use crate::config::{GroupOverride, OptimKind};
 use crate::fsdp::spec::{ModelSpec, OptimBinding, ShardGroupSpec};
@@ -137,6 +137,9 @@ pub struct StepLog {
     pub wall_s: f64,
     /// Session-default fabric preset this step was timed on.
     pub fabric: &'static str,
+    /// Cluster topology the collectives ran under: `"HxG"` for
+    /// hierarchical runs, `"flat"` otherwise.
+    pub topology: String,
     /// Measured wire bytes this step shipped carrying tensor data
     /// (summed over collectives x group size; int8/bf16 payload for
     /// quantized groups, full f32 otherwise).
@@ -387,12 +390,18 @@ impl SessionBuilder {
             DeviceMesh::flat("fsdp", self.devices)
         };
         let tracer = Tracer::new(self.trace, self.devices);
+        let topology = self.fabric.topology;
+        if topology.is_hierarchical() {
+            // stamps the exported trace metadata, which in turn makes
+            // `trace::check::validate` demand per-tier span attribution
+            tracer.set_topology(&topology.label());
+        }
         let mut engine = FsdpEngine::from_spec(
             cfg.params.clone(),
             &spec,
             mesh,
             self.fabric.clone(),
-            make_comm_traced(self.backend, tracer.clone()),
+            make_comm_topo(self.backend, tracer.clone(), topology),
         )?;
         engine.set_tracer(tracer.clone());
         engine.init_params(&init_full_params(&cfg.params, self.seed))?;
@@ -607,6 +616,7 @@ impl TrainSession {
             exposed_s: outcome.report.exposed_comm_s,
             wall_s: t0.elapsed().as_secs_f64(),
             fabric: self.engine.fabric.name,
+            topology: topology_column(&self.engine.fabric),
             // measured per-step wire volume (payload vs scales vs pad)
             wire_payload: wire_after.0 - wire_before.0,
             wire_scale: wire_after.1 - wire_before.1,
@@ -795,6 +805,7 @@ impl DdpTrainer {
             exposed_s: 0.0,
             wall_s: t0.elapsed().as_secs_f64(),
             fabric: self.fabric.name,
+            topology: topology_column(&self.fabric),
             wire_payload: wire_after.0 - wire_before.0,
             wire_scale: wire_after.1 - wire_before.1,
             wire_pad: wire_after.2 - wire_before.2,
@@ -812,24 +823,35 @@ impl DdpTrainer {
     }
 }
 
+/// StepLog/CSV form of a fabric's topology: `"HxG"` when hierarchical,
+/// `"flat"` for single-host runs.
+fn topology_column(fabric: &Fabric) -> String {
+    if fabric.topology.is_hierarchical() {
+        fabric.topology.label()
+    } else {
+        "flat".to_string()
+    }
+}
+
 /// Write a loss log as CSV under `runs/`.
 pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"));
     std::fs::create_dir_all(dir)?;
     let path = dir.join(format!("{name}.csv"));
     let mut out = String::from(
-        "step,loss,comm_time,exposed_s,wall_s,fabric,wire_payload,wire_scale,wire_pad,\
-         peak_reserved,peak_allocated\n",
+        "step,loss,comm_time,exposed_s,wall_s,fabric,topology,wire_payload,wire_scale,\
+         wire_pad,peak_reserved,peak_allocated\n",
     );
     for l in log {
         out.push_str(&format!(
-            "{},{},{},{},{},{},{},{},{},{},{}\n",
+            "{},{},{},{},{},{},{},{},{},{},{},{}\n",
             l.step,
             l.loss,
             l.comm_time,
             l.exposed_s,
             l.wall_s,
             l.fabric,
+            l.topology,
             l.wire_payload,
             l.wire_scale,
             l.wire_pad,

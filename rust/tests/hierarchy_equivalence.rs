@@ -1,0 +1,244 @@
+//! Hierarchy equivalence: the topology-aware two-level collectives must be
+//! **bit-identical** to the flat single-ring algorithms — property tests
+//! over ragged shard sizes × mesh sizes {2,4,8} × topologies
+//! {1×m, 2×(m/2), 4×(m/4)} × pipeline segment counts S ∈ {1,2,4}, on the
+//! sync and async dispatch paths, plus end-to-end training trajectories
+//! (losses and final parameters to the bit) across cluster backends,
+//! executor schedules, and wire precisions with a hierarchical fabric.
+
+use vescale_fsdp::cluster::{make_comm_topo, CommBackend, Communicator, SerialComm};
+use vescale_fsdp::comm::{Fabric, Topology};
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::trace::Tracer;
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::prop::check;
+use vescale_fsdp::util::Rng;
+
+const MESHES: [usize; 3] = [2, 4, 8];
+const SEGMENTS: [usize; 3] = [1, 2, 4];
+
+/// The threaded backend only engages the rendezvous (and hierarchical)
+/// algorithms above its serial-fallback threshold of 16 Ki total elements
+/// (`m * m * s`); sizes below it run the flat serial loop, which is
+/// trivially identical. Pick shard sizes just above the threshold so the
+/// two-level path actually executes.
+fn min_shard(m: usize) -> usize {
+    (16 * 1024).div_ceil(m * m)
+}
+
+/// Magnitudes spread over many exponents: any change in summation order
+/// would actually flip result bits.
+fn wild_bufs(rng: &mut Rng, m: usize, len: usize) -> Vec<Vec<f32>> {
+    (0..m)
+        .map(|_| {
+            (0..len)
+                .map(|_| rng.normal_f32() * 10f32.powi(rng.below(9) as i32 - 4))
+                .collect()
+        })
+        .collect()
+}
+
+/// All host layouts of `m` ranks the issue sweeps: the flat degenerate
+/// case plus every multi-host factorization with 2 or 4 hosts.
+fn topologies(m: usize, segments: usize) -> Vec<Topology> {
+    [1usize, 2, 4]
+        .into_iter()
+        .filter(|&hosts| m % hosts == 0 && m / hosts >= 1)
+        .map(|hosts| Topology { hosts, gpus_per_host: m / hosts, segments })
+        .collect()
+}
+
+fn assert_bits_equal(a: &[Vec<f32>], b: &[Vec<f32>], what: &str) -> Result<(), String> {
+    for (k, (x, y)) in a.iter().zip(b).enumerate() {
+        for (i, (u, v)) in x.iter().zip(y).enumerate() {
+            if u.to_bits() != v.to_bits() {
+                return Err(format!("{what}: rank {k} elem {i}: {u} vs {v}"));
+            }
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn hierarchical_all_gather_bit_identical_to_flat() {
+    check("hier-ag-equiv", 12, |case| {
+        let m = MESHES[case.rng.below(MESHES.len() as u64) as usize];
+        let s = min_shard(m) + case.rng.range(0, 37);
+        let seed = case.rng.below(u64::MAX / 2);
+        let mut want = wild_bufs(&mut Rng::new(seed), m, m * s);
+        SerialComm::new().all_gather(&mut want, s).map_err(|e| e.to_string())?;
+        for &segs in &SEGMENTS {
+            for topo in topologies(m, segs) {
+                let what = format!("ag m={m} s={s} topo={}:{segs}", topo.label());
+                let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+                let mut got = wild_bufs(&mut Rng::new(seed), m, m * s);
+                c.all_gather(&mut got, s).map_err(|e| e.to_string())?;
+                assert_bits_equal(&want, &got, &format!("{what} sync"))?;
+                let got = c
+                    .all_gather_async(wild_bufs(&mut Rng::new(seed), m, m * s), s)
+                    .wait()
+                    .map_err(|e| e.to_string())?;
+                assert_bits_equal(&want, &got, &format!("{what} async"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn hierarchical_reduce_scatter_bit_identical_to_flat() {
+    check("hier-rs-equiv", 12, |case| {
+        let m = MESHES[case.rng.below(MESHES.len() as u64) as usize];
+        let s = min_shard(m) + case.rng.range(0, 37);
+        let seed = case.rng.below(u64::MAX / 2);
+        let scale = 1.0 / m as f32;
+        let mut want = wild_bufs(&mut Rng::new(seed), m, m * s);
+        SerialComm::new()
+            .reduce_scatter(&mut want, s, scale)
+            .map_err(|e| e.to_string())?;
+        for &segs in &SEGMENTS {
+            for topo in topologies(m, segs) {
+                let what = format!("rs m={m} s={s} topo={}:{segs}", topo.label());
+                let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+                let mut got = wild_bufs(&mut Rng::new(seed), m, m * s);
+                c.reduce_scatter(&mut got, s, scale).map_err(|e| e.to_string())?;
+                assert_bits_equal(&want, &got, &format!("{what} sync"))?;
+                let got = c
+                    .reduce_scatter_async(wild_bufs(&mut Rng::new(seed), m, m * s), s, scale)
+                    .wait()
+                    .map_err(|e| e.to_string())?;
+                assert_bits_equal(&want, &got, &format!("{what} async"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn segment_count_never_changes_bits() {
+    // chunk pipelining is pure scheduling: S=1/2/4 must produce the exact
+    // same bytes, compared directly against each other (not just
+    // transitively through the oracle)
+    let (m, s) = (8usize, 300usize);
+    let mut rng = Rng::new(77);
+    let data = wild_bufs(&mut rng, m, m * s);
+    let run = |segments: usize, op_is_ag: bool| -> Vec<Vec<f32>> {
+        let topo = Topology { hosts: 2, gpus_per_host: 4, segments };
+        let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+        let mut bufs = data.clone();
+        if op_is_ag {
+            c.all_gather(&mut bufs, s).unwrap();
+        } else {
+            c.reduce_scatter(&mut bufs, s, 0.125).unwrap();
+        }
+        bufs
+    };
+    for op_is_ag in [true, false] {
+        let s1 = run(1, op_is_ag);
+        for segments in [2usize, 4] {
+            let sn = run(segments, op_is_ag);
+            assert_bits_equal(&s1, &sn, &format!("ag={op_is_ag} S={segments}")).unwrap();
+        }
+    }
+}
+
+// ---- end-to-end trajectories --------------------------------------------
+
+fn run_session(
+    backend: CommBackend,
+    exec: ExecMode,
+    prec: CommPrecision,
+    fabric: Fabric,
+    steps: usize,
+) -> (Vec<f32>, Vec<Vec<f32>>, String) {
+    let mut t = TrainSession::builder("tiny")
+        .devices(4)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(42)
+        .backend(backend)
+        .exec(exec)
+        .fabric(fabric)
+        .comm_precision(prec)
+        .build()
+        .unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..steps {
+        losses.push(t.train_step().unwrap());
+    }
+    let params = (0..t.engine.params.len())
+        .map(|i| t.engine.read_param(i))
+        .collect();
+    let topology_col = t.log.last().map(|l| l.topology.clone()).unwrap_or_default();
+    (losses, params, topology_col)
+}
+
+fn assert_trajectories_equal(
+    a: &(Vec<f32>, Vec<Vec<f32>>, String),
+    b: &(Vec<f32>, Vec<Vec<f32>>, String),
+    what: &str,
+) {
+    assert_eq!(a.0.len(), b.0.len(), "{what}: loss count");
+    for (step, (x, y)) in a.0.iter().zip(&b.0).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss {step}: {x} vs {y}");
+    }
+    for (i, (pa, pb)) in a.1.iter().zip(&b.1).enumerate() {
+        for (x, y) in pa.iter().zip(pb) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: param {i}");
+        }
+    }
+}
+
+#[test]
+fn hierarchical_training_bit_identical_across_backends_and_schedules() {
+    // a 2x2 topology exactly covers the 4-device mesh, so whole-cluster
+    // parameter/gradient collectives dispatch hierarchically on the
+    // threaded backend; the trajectory must not move by a single bit vs
+    // the flat serial-sequential reference — for every wire precision
+    for prec in [
+        CommPrecision::F32,
+        CommPrecision::Bf16,
+        CommPrecision::Q8 { block: 64 },
+    ] {
+        let reference = run_session(
+            CommBackend::Serial,
+            ExecMode::Sequential,
+            prec,
+            Fabric::h800(),
+            2,
+        );
+        assert_eq!(reference.2, "flat", "flat fabric logs topology=flat");
+        for (backend, exec) in [
+            (CommBackend::Serial, ExecMode::Sequential),
+            (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+            (CommBackend::Threaded, ExecMode::Sequential),
+            (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 1 }),
+        ] {
+            let hier = Fabric::by_name("h800:2x2:2").unwrap();
+            let r = run_session(backend, exec, prec, hier, 2);
+            assert_eq!(r.2, "2x2", "hierarchical fabric logs its topology");
+            assert_trajectories_equal(
+                &reference,
+                &r,
+                &format!("{} {} {}", prec.name(), backend.name(), exec.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn fabric_topology_suffix_parses_and_degenerates() {
+    // `--fabric h800:2x4:2` style suffixes attach a topology; hosts=1 is
+    // byte-for-byte the flat fabric
+    let f = Fabric::by_name("h800:2x4:2").unwrap();
+    assert_eq!(f.topology, Topology { hosts: 2, gpus_per_host: 4, segments: 2 });
+    assert!(f.is_hier(8));
+    assert!(!f.is_hier(4), "partial groups keep the flat model");
+    let flat = Fabric::by_name("h800:1x8").unwrap();
+    assert!(!flat.topology.is_hierarchical());
+    assert!(Fabric::by_name("h800:0x4").is_none());
+    assert!(Fabric::by_name("h800:ring").is_none());
+}
