@@ -1,0 +1,689 @@
+//! The static check suite over the elaborated IR.
+//!
+//! Five families, one per protocol the runtime relies on:
+//!
+//! * **SPMD conformance** (`FS001`) — every rank's collective sequence
+//!   identical in (op, bucket, mesh, tier) order. The barrier-phased
+//!   rendezvous of `ThreadedComm` completes iff all ranks arrive at the
+//!   same collective, so conformance proves deadlock-freedom of the
+//!   whole schedule by construction.
+//! * **Happens-before discipline** (`FS002`/`FS006`/`FS007`/`FS008`,
+//!   plus the in-flight `FS003` case) — a small state machine walks each
+//!   rank's stream: handles are awaited exactly once in FIFO order,
+//!   compute never reads a buffer before its AllGather lands, a bucket's
+//!   reduction never precedes its backward, and gather/reshard pairing
+//!   honors each group's `reshard_after_forward` choice.
+//! * **Allocator lifetime balance** (`FS003`/`FS009`) — rank 0's
+//!   claim/free stream replays through a real [`CachingAllocator`]
+//!   (same rounding, same segments, same OOM path as the engine's),
+//!   yielding the static peak-reserved/-allocated bounds and flagging
+//!   leaked or double-freed claims.
+//! * **Quant co-location** (`FS004`, `FS011`) — every Q8 group's shard
+//!   size holds a whole number of quant blocks (and the planner's
+//!   `lcm(4, block)` collective alignment), every tensor granularity
+//!   keeps device boundaries on block edges, and the layout verifies.
+//! * **Dispatch preconditions** (`FS005`, `FS010`) — hierarchical
+//!   topology shape (`total() == m`, segments >= 1) and, when the plan
+//!   binds to the native runtime, the pipelined executor's
+//!   embed|layer|head wrapping ABI.
+
+use std::collections::{HashMap, VecDeque};
+
+use crate::memory::{BlockId, CachingAllocator, FreePolicy};
+use crate::util::json::Json;
+use crate::util::lcm;
+
+use super::diag::{codes, Diagnostic, Severity};
+use super::ir::{
+    elaborate, ClaimId, CollEvent, CollOp, Event, ExpectedSpan, LintRequest, Phase, PlanModel,
+    Program,
+};
+
+/// Fraction of the device limit above which the peak bound draws a
+/// `FS009` warning even though the plan still fits.
+const PEAK_WARN_FRACTION: f64 = 0.8;
+
+/// The analyzer's output: plan identity, all findings, the statically
+/// derived memory bounds, and the expected trace spans for
+/// cross-validation against a live run.
+#[derive(Debug, Clone)]
+pub struct AnalysisReport {
+    pub model: String,
+    pub devices: usize,
+    pub replicas: usize,
+    pub backend: String,
+    pub exec: String,
+    pub topology: String,
+    pub diagnostics: Vec<Diagnostic>,
+    /// Static upper bound on allocator peak reserved bytes (>= any
+    /// measured `ExecReport::peak_reserved` of the same plan).
+    pub peak_reserved_bound: u64,
+    pub peak_allocated_bound: u64,
+    /// Collective events per rank per step (issue/wait pairs count 2).
+    pub collectives_per_rank: usize,
+    pub expected_spans: Vec<ExpectedSpan>,
+}
+
+impl AnalysisReport {
+    /// No error-severity findings (warnings allowed).
+    pub fn ok(&self) -> bool {
+        !self.diagnostics.iter().any(|d| d.severity == Severity::Error)
+    }
+
+    /// The statically predicted (bucket, bytes) subsequence of spans
+    /// with the given name and phase — compare against the tracer's
+    /// recorded subsequence for one step.
+    pub fn expected_subsequence(&self, name: &str, phase: &str) -> Vec<(String, u64)> {
+        self.expected_spans
+            .iter()
+            .filter(|s| s.name == name && s.phase == phase)
+            .map(|s| (s.bucket.clone(), s.bytes))
+            .collect()
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("devices", Json::num(self.devices as f64)),
+            ("replicas", Json::num(self.replicas as f64)),
+            ("backend", Json::str(&self.backend)),
+            ("exec", Json::str(&self.exec)),
+            ("topology", Json::str(&self.topology)),
+            ("collectives_per_rank", Json::num(self.collectives_per_rank as f64)),
+            ("peak_reserved_bound", Json::num(self.peak_reserved_bound as f64)),
+            ("peak_allocated_bound", Json::num(self.peak_allocated_bound as f64)),
+            (
+                "errors",
+                Json::num(
+                    self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+                        as f64,
+                ),
+            ),
+            (
+                "warnings",
+                Json::num(
+                    self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+                        as f64,
+                ),
+            ),
+            ("diagnostics", Json::arr(self.diagnostics.iter().map(Diagnostic::json))),
+        ])
+    }
+}
+
+/// Lint one plan end to end: mirror the engine's planning, elaborate the
+/// schedule, run every check. Never fails — planning errors come back as
+/// diagnostics in the report.
+pub fn lint(req: &LintRequest) -> AnalysisReport {
+    match PlanModel::build(req) {
+        Ok(pm) => {
+            let prog = elaborate(&pm);
+            run_checks(&pm, &prog)
+        }
+        Err(d) => AnalysisReport {
+            model: req.model.to_string(),
+            devices: req.devices,
+            replicas: req.replicas,
+            backend: req.backend.name().to_string(),
+            exec: req.exec.name(),
+            topology: topo_label(&req.topology),
+            diagnostics: vec![d],
+            peak_reserved_bound: 0,
+            peak_allocated_bound: 0,
+            collectives_per_rank: 0,
+            expected_spans: Vec::new(),
+        },
+    }
+}
+
+fn topo_label(t: &crate::comm::Topology) -> String {
+    if t.is_hierarchical() {
+        t.label()
+    } else {
+        "flat".to_string()
+    }
+}
+
+/// Run the full check suite over an already elaborated program (exposed
+/// separately so defect fixtures can mutate the program first).
+pub fn run_checks(pm: &PlanModel, prog: &Program) -> AnalysisReport {
+    let mut diags = Vec::new();
+    check_topology(pm, &mut diags);
+    check_quant(pm, &mut diags);
+    check_wrapping(pm, &mut diags);
+    check_spmd(pm, prog, &mut diags);
+    check_protocol(pm, prog, &mut diags);
+    let (peak_reserved, peak_allocated) = check_ledger(pm, prog, &mut diags);
+    AnalysisReport {
+        model: pm.model.clone(),
+        devices: pm.devices,
+        replicas: pm.replicas,
+        backend: pm.backend.name().to_string(),
+        exec: pm.exec.name(),
+        topology: topo_label(&pm.topology),
+        diagnostics: diags,
+        peak_reserved_bound: peak_reserved,
+        peak_allocated_bound: peak_allocated,
+        collectives_per_rank: prog.ranks.first().map_or(0, |r| {
+            r.iter().filter(|e| matches!(e, Event::Coll(_))).count()
+        }),
+        expected_spans: prog.expected_spans.clone(),
+    }
+}
+
+fn bucket_name(pm: &PlanModel, b: usize) -> String {
+    pm.groups.get(b).map_or_else(|| format!("bucket{b}"), |g| g.name.clone())
+}
+
+fn coll_tuple(pm: &PlanModel, c: &CollEvent) -> String {
+    format!(
+        "{}:{}({}, mesh {}, tier {}, {} B)",
+        c.op.name(),
+        c.phase.name(),
+        bucket_name(pm, c.bucket),
+        c.mesh,
+        c.tier.name(),
+        c.bytes
+    )
+}
+
+// ---- FS001: SPMD conformance -------------------------------------------
+
+/// All ranks must issue the identical collective sequence; any
+/// divergence stalls a barrier phase forever on the rendezvous backend.
+fn check_spmd(pm: &PlanModel, prog: &Program, diags: &mut Vec<Diagnostic>) {
+    let base = prog.collective_sequence(0);
+    for r in 1..prog.ranks.len() {
+        let seq = prog.collective_sequence(r);
+        let div = base
+            .iter()
+            .zip(&seq)
+            .position(|(a, b)| a != b)
+            .or_else(|| (base.len() != seq.len()).then_some(base.len().min(seq.len())));
+        if let Some(i) = div {
+            let what = |s: &[&CollEvent]| {
+                s.get(i).map_or("<end of sequence>".to_string(), |c| coll_tuple(pm, c))
+            };
+            diags.push(Diagnostic::error(
+                codes::SPMD_DIVERGENCE,
+                format!("rank {r}"),
+                format!(
+                    "collective sequence diverges from rank 0 at position {i}: \
+                     rank 0 issues {} but rank {r} issues {} — the rendezvous \
+                     barrier would never fill",
+                    what(&base),
+                    what(&seq)
+                ),
+            ));
+            return; // one witness suffices; later ranks repeat it
+        }
+    }
+}
+
+// ---- FS002/FS003/FS006/FS007/FS008: happens-before discipline ----------
+
+/// Per-rank protocol walk. Ranks are elaborated as clones, so identical
+/// findings collapse to one diagnostic annotated with the rank set;
+/// a fixture-mutated rank surfaces its own finding.
+fn check_protocol(pm: &PlanModel, prog: &Program, diags: &mut Vec<Diagnostic>) {
+    let mut merged: Vec<(Diagnostic, Vec<usize>)> = Vec::new();
+    for (rank, events) in prog.ranks.iter().enumerate() {
+        for d in walk_rank(pm, events) {
+            match merged.iter_mut().find(|(m, _)| *m == d) {
+                Some((_, ranks)) => ranks.push(rank),
+                None => merged.push((d, vec![rank])),
+            }
+        }
+    }
+    let m = prog.ranks.len();
+    for (mut d, ranks) in merged {
+        if ranks.len() < m {
+            let list =
+                ranks.iter().map(ToString::to_string).collect::<Vec<_>>().join(",");
+            d.message = format!("{} (rank {list})", d.message);
+        }
+        diags.push(d);
+    }
+}
+
+fn walk_rank(pm: &PlanModel, events: &[Event]) -> Vec<Diagnostic> {
+    let nb = pm.groups.len();
+    let mut out = Vec::new();
+    let mut gathered = vec![false; nb];
+    let mut bwd_done = vec![false; nb];
+    let mut gather_count = vec![0usize; nb];
+    let mut reshard_count = vec![0usize; nb];
+    let mut ag_inflight: VecDeque<usize> = VecDeque::new();
+    let mut rs_inflight: VecDeque<usize> = VecDeque::new();
+    for e in events {
+        match e {
+            Event::Coll(c) => match (c.op, c.phase) {
+                (CollOp::AllGather, Phase::Sync) | (CollOp::AllGather, Phase::Issue) => {
+                    if gathered[c.bucket] || ag_inflight.contains(&c.bucket) {
+                        out.push(Diagnostic::error(
+                            codes::HANDLE_DISCIPLINE,
+                            bucket_name(pm, c.bucket),
+                            "gather issued while the bucket is already gathered or in flight",
+                        ));
+                    }
+                    if c.phase == Phase::Issue {
+                        ag_inflight.push_back(c.bucket);
+                    } else {
+                        gathered[c.bucket] = true;
+                        gather_count[c.bucket] += 1;
+                    }
+                }
+                (CollOp::AllGather, Phase::Wait) => {
+                    if ag_inflight.front() == Some(&c.bucket) {
+                        ag_inflight.pop_front();
+                        gathered[c.bucket] = true;
+                        gather_count[c.bucket] += 1;
+                    } else if let Some(pos) =
+                        ag_inflight.iter().position(|&b| b == c.bucket)
+                    {
+                        out.push(Diagnostic::error(
+                            codes::HANDLE_DISCIPLINE,
+                            bucket_name(pm, c.bucket),
+                            format!(
+                                "gather waited out of issue order ({pos} earlier \
+                                 handles still pending)"
+                            ),
+                        ));
+                        let _ = ag_inflight.remove(pos);
+                        gathered[c.bucket] = true;
+                        gather_count[c.bucket] += 1;
+                    } else {
+                        out.push(Diagnostic::error(
+                            codes::HANDLE_DISCIPLINE,
+                            bucket_name(pm, c.bucket),
+                            "gather was never issued (stale handle wait)",
+                        ));
+                    }
+                }
+                (_, Phase::Sync) | (_, Phase::Issue) => {
+                    if !bwd_done[c.bucket] {
+                        out.push(Diagnostic::error(
+                            codes::REDUCE_BEFORE_BACKWARD,
+                            bucket_name(pm, c.bucket),
+                            "gradient reduction issued before the bucket's backward ran",
+                        ));
+                    }
+                    if c.phase == Phase::Issue {
+                        rs_inflight.push_back(c.bucket);
+                    }
+                }
+                (_, Phase::Wait) => {
+                    if rs_inflight.front() == Some(&c.bucket) {
+                        rs_inflight.pop_front();
+                    } else if let Some(pos) =
+                        rs_inflight.iter().position(|&b| b == c.bucket)
+                    {
+                        out.push(Diagnostic::error(
+                            codes::HANDLE_DISCIPLINE,
+                            bucket_name(pm, c.bucket),
+                            format!(
+                                "reduction waited out of issue order ({pos} earlier \
+                                 handles still pending)"
+                            ),
+                        ));
+                        let _ = rs_inflight.remove(pos);
+                    } else {
+                        out.push(Diagnostic::error(
+                            codes::HANDLE_DISCIPLINE,
+                            bucket_name(pm, c.bucket),
+                            "reduction was never issued (stale handle wait)",
+                        ));
+                    }
+                }
+            },
+            Event::Compute { bucket, phase } => match (bucket, *phase) {
+                (Some(b), "fwd") | (Some(b), "bwd") => {
+                    if !gathered[*b] {
+                        out.push(Diagnostic::error(
+                            codes::READ_BEFORE_GATHER,
+                            bucket_name(pm, *b),
+                            format!("{phase} compute reads the bucket before its AllGather completed"),
+                        ));
+                    }
+                    if *phase == "bwd" {
+                        bwd_done[*b] = true;
+                    }
+                }
+                (None, "fwd_bwd") => {
+                    if let Some(b) = (0..nb).find(|&b| !gathered[b]) {
+                        out.push(Diagnostic::error(
+                            codes::READ_BEFORE_GATHER,
+                            bucket_name(pm, b),
+                            "monolithic fwd/bwd runs before every bucket is gathered",
+                        ));
+                    }
+                    bwd_done.iter_mut().for_each(|d| *d = true);
+                }
+                _ => {}
+            },
+            Event::Free { id } => {
+                let b = id.bucket();
+                let in_gather = ag_inflight.contains(&b)
+                    && matches!(id, ClaimId::Full(_) | ClaimId::Wire(_));
+                let in_reduce = rs_inflight.contains(&b)
+                    && matches!(id, ClaimId::Staged(_) | ClaimId::RsWire(_));
+                if in_gather || in_reduce {
+                    out.push(Diagnostic::error(
+                        codes::LIFETIME_IMBALANCE,
+                        bucket_name(pm, b),
+                        format!(
+                            "{} buffer released while the bucket's collective is in flight",
+                            id.kind()
+                        ),
+                    ));
+                }
+            }
+            Event::Reshard { bucket } => {
+                gathered[*bucket] = false;
+                reshard_count[*bucket] += 1;
+            }
+            Event::Claim { .. } | Event::ClaimBatch { .. } => {}
+        }
+    }
+    for (q, what) in [(&ag_inflight, "gather"), (&rs_inflight, "reduction")] {
+        for &b in q.iter() {
+            out.push(Diagnostic::error(
+                codes::HANDLE_DISCIPLINE,
+                bucket_name(pm, b),
+                format!("{what} handle never awaited"),
+            ));
+        }
+    }
+    // ---- FS008: reshard-after-forward pairing ----
+    for b in 0..nb {
+        if gathered[b] {
+            out.push(Diagnostic::error(
+                codes::RESHARD_UNPAIRED,
+                bucket_name(pm, b),
+                "bucket still gathered at step end (transient full buffer kept)",
+            ));
+            continue;
+        }
+        if gather_count[b] != reshard_count[b] {
+            out.push(Diagnostic::error(
+                codes::RESHARD_UNPAIRED,
+                bucket_name(pm, b),
+                format!(
+                    "{} gathers but {} reshards in one step",
+                    gather_count[b], reshard_count[b]
+                ),
+            ));
+            continue;
+        }
+        let expect = match pm.exec {
+            crate::fsdp::ExecMode::Sequential => 1,
+            crate::fsdp::ExecMode::Pipelined { .. } => {
+                if pm.groups[b].reshard_after_forward {
+                    2
+                } else {
+                    1
+                }
+            }
+        };
+        if gather_count[b] != expect {
+            out.push(Diagnostic::error(
+                codes::RESHARD_UNPAIRED,
+                bucket_name(pm, b),
+                format!(
+                    "{} gather/reshard cycles per step, but reshard_after_forward={} \
+                     under the {} schedule implies {expect}",
+                    gather_count[b],
+                    pm.groups[b].reshard_after_forward,
+                    pm.exec.name()
+                ),
+            ));
+        }
+    }
+    out
+}
+
+// ---- FS003/FS009: allocator lifetime balance + peak bound ---------------
+
+/// Replay rank 0's claim stream through a real `CachingAllocator` (same
+/// rounding/segment/OOM behavior as the engine's) and return the static
+/// (peak_reserved, peak_allocated) bounds.
+fn check_ledger(pm: &PlanModel, prog: &Program, diags: &mut Vec<Diagnostic>) -> (u64, u64) {
+    let Some(events) = prog.ranks.first() else {
+        return (0, 0);
+    };
+    let mut alloc = CachingAllocator::new(FreePolicy::Deterministic, pm.mem_limit);
+    let mut live: HashMap<ClaimId, BlockId> = HashMap::new();
+    let mut oom = false;
+    for e in events {
+        match e {
+            Event::Claim { id, bytes } => match alloc.alloc(*bytes) {
+                Ok(block) => {
+                    live.insert(*id, block);
+                }
+                Err(err) => {
+                    diags.push(Diagnostic::error(
+                        codes::PEAK_OVER_LIMIT,
+                        bucket_name(pm, id.bucket()),
+                        format!("claiming the {} buffer fails: {err:#}", id.kind()),
+                    ));
+                    oom = true;
+                    break;
+                }
+            },
+            Event::ClaimBatch { ids, sizes } => match alloc.alloc_batch(sizes) {
+                Ok(blocks) => {
+                    for (id, block) in ids.iter().zip(blocks) {
+                        live.insert(*id, block);
+                    }
+                }
+                Err(err) => {
+                    diags.push(Diagnostic::error(
+                        codes::PEAK_OVER_LIMIT,
+                        pm.model.clone(),
+                        format!("persistent shard claims fail: {err:#}"),
+                    ));
+                    oom = true;
+                    break;
+                }
+            },
+            Event::Free { id } => match live.remove(id) {
+                Some(block) => {
+                    if let Err(err) = alloc.free(block) {
+                        diags.push(Diagnostic::error(
+                            codes::LIFETIME_IMBALANCE,
+                            bucket_name(pm, id.bucket()),
+                            format!("freeing the {} buffer fails: {err:#}", id.kind()),
+                        ));
+                    }
+                }
+                None => {
+                    diags.push(Diagnostic::error(
+                        codes::LIFETIME_IMBALANCE,
+                        bucket_name(pm, id.bucket()),
+                        format!(
+                            "{} buffer freed while not live (double free or never claimed)",
+                            id.kind()
+                        ),
+                    ));
+                }
+            },
+            _ => {}
+        }
+    }
+    if !oom {
+        for id in live.keys() {
+            if !prog.persistent.contains(id) {
+                diags.push(Diagnostic::error(
+                    codes::LIFETIME_IMBALANCE,
+                    bucket_name(pm, id.bucket()),
+                    format!(
+                        "transient {} buffer still claimed at step end (leaked \
+                         {} reshard)",
+                        id.kind(),
+                        bucket_name(pm, id.bucket())
+                    ),
+                ));
+            }
+        }
+        let frac = alloc.peak_reserved as f64 / pm.mem_limit.max(1) as f64;
+        if frac > PEAK_WARN_FRACTION {
+            diags.push(Diagnostic::warning(
+                codes::PEAK_OVER_LIMIT,
+                pm.model.clone(),
+                format!(
+                    "static peak-reserved bound {} B is {:.0}% of the {} B device \
+                     limit",
+                    alloc.peak_reserved,
+                    100.0 * frac,
+                    pm.mem_limit
+                ),
+            ));
+        }
+    }
+    (alloc.peak_reserved, alloc.peak_allocated)
+}
+
+// ---- FS004/FS011: quant co-location + layout validity -------------------
+
+fn check_quant(pm: &PlanModel, diags: &mut Vec<Diagnostic>) {
+    for g in &pm.groups {
+        if let Err(e) = g.layout.verify() {
+            diags.push(Diagnostic::error(
+                codes::LAYOUT_INVALID,
+                &g.name,
+                format!("planned layout fails verification: {e:#}"),
+            ));
+        }
+        let align = g.comm_precision.align_elems();
+        if align <= 1 {
+            continue;
+        }
+        let s = g.layout.shard_size;
+        if s % align != 0 {
+            diags.push(Diagnostic::error(
+                codes::QUANT_MISALIGNED,
+                &g.name,
+                format!(
+                    "shard size {s} is not a whole number of {align}-element quant \
+                     blocks — a block and its scale would straddle two devices"
+                ),
+            ));
+        }
+        let g_coll = lcm(4, align);
+        if s % g_coll != 0 {
+            diags.push(Diagnostic::error(
+                codes::QUANT_MISALIGNED,
+                &g.name,
+                format!(
+                    "shard size {s} breaks the planner's collective alignment \
+                     lcm(4, {align}) = {g_coll}"
+                ),
+            ));
+        }
+        for t in &g.layout.tensors {
+            if t.granularity % align != 0 && t.granularity != t.numel {
+                diags.push(Diagnostic::error(
+                    codes::QUANT_MISALIGNED,
+                    &g.name,
+                    format!(
+                        "tensor '{}' granularity {} is not block-aligned ({align}) — \
+                         a device boundary inside it could split a quant block",
+                        t.name, t.granularity
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+// ---- FS005: hierarchical-dispatch preconditions -------------------------
+
+fn check_topology(pm: &PlanModel, diags: &mut Vec<Diagnostic>) {
+    let t = &pm.topology;
+    if !t.is_hierarchical() {
+        return;
+    }
+    let subject = t.label();
+    if t.hosts == 0 || t.gpus_per_host == 0 {
+        diags.push(Diagnostic::error(
+            codes::BAD_TOPOLOGY,
+            subject,
+            "topology has zero hosts or zero GPUs per host",
+        ));
+        return;
+    }
+    if t.segments == 0 {
+        diags.push(Diagnostic::error(
+            codes::BAD_TOPOLOGY,
+            subject.clone(),
+            "hierarchical dispatch needs at least one pipeline segment",
+        ));
+    }
+    if t.total() != pm.devices {
+        diags.push(Diagnostic::error(
+            codes::BAD_TOPOLOGY,
+            subject,
+            format!(
+                "topology spans {} ranks but the fsdp group has {} — hierarchical \
+                 dispatch would silently fall back to the flat path",
+                t.total(),
+                pm.devices
+            ),
+        ));
+    }
+}
+
+// ---- FS010: pipelined wrapping ABI --------------------------------------
+
+/// Only checked when the plan is known to bind the native runtime
+/// (`native_layers` set) *and* the pipelined executor will drive it —
+/// raw preset plans carry no runtime ABI to violate.
+fn check_wrapping(pm: &PlanModel, diags: &mut Vec<Diagnostic>) {
+    let Some(nl) = pm.native_layers else { return };
+    if !matches!(pm.exec, crate::fsdp::ExecMode::Pipelined { .. }) {
+        return;
+    }
+    let nb = pm.groups.len();
+    if nb != nl + 2 {
+        diags.push(Diagnostic::error(
+            codes::WRAPPING_ABI,
+            pm.model.clone(),
+            format!(
+                "pipelined executor expects embed|layer|head wrapping: {nb} shard \
+                 groups for {nl} layers (want {})",
+                nl + 2
+            ),
+        ));
+        return;
+    }
+    if pm.n_params != 3 + 8 * nl {
+        diags.push(Diagnostic::error(
+            codes::WRAPPING_ABI,
+            pm.model.clone(),
+            format!("parameter ABI mismatch: {} params (want {})", pm.n_params, 3 + 8 * nl),
+        ));
+        return;
+    }
+    let mut expect = |i: usize, bucket: usize| {
+        if pm.group_of[i] != bucket {
+            diags.push(Diagnostic::error(
+                codes::WRAPPING_ABI,
+                bucket_name(pm, bucket),
+                format!(
+                    "param {i} assigned to group '{}' but the executor's ABI places \
+                     it in '{}'",
+                    bucket_name(pm, pm.group_of[i]),
+                    bucket_name(pm, bucket)
+                ),
+            ));
+        }
+    };
+    expect(0, 0);
+    for l in 0..nl {
+        for k in 0..8 {
+            expect(1 + 8 * l + k, 1 + l);
+        }
+    }
+    expect(1 + 8 * nl, nl + 1);
+    expect(2 + 8 * nl, nl + 1);
+}

@@ -1,0 +1,207 @@
+//! Shared diagnostic vocabulary for the static analyzer, the trace
+//! validator, and the runtime invariant checks.
+//!
+//! Every invariant the project enforces — statically in
+//! [`crate::analysis::checks`], structurally in [`crate::trace::check`],
+//! or dynamically via `bail!`/`debug_assert!` in the planner, the
+//! DBuffer, and the executor — names one stable code from the `FS`
+//! catalog below. A violation found by `fsdp-lint` before a run and the
+//! panic message the runtime would have produced mid-run therefore point
+//! at the same catalog entry, so CI logs, lint output, and trace-check
+//! findings can be correlated mechanically.
+//!
+//! `FS0xx` codes are plan/protocol invariants; `FS2xx` codes are
+//! structural properties of exported Chrome-trace documents.
+
+use std::fmt;
+
+use crate::util::json::Json;
+
+/// Stable diagnostic codes. Never renumber — tooling keys on them.
+pub mod codes {
+    /// Ranks disagree on the (op, bucket, mesh, tier) collective
+    /// sequence — the barrier-phased rendezvous would deadlock.
+    pub const SPMD_DIVERGENCE: &str = "FS001";
+    /// Async-handle discipline: a collective handle issued twice, waited
+    /// out of issue order, never issued, or never awaited.
+    pub const HANDLE_DISCIPLINE: &str = "FS002";
+    /// Allocator lifetime imbalance: a transient claim (gather buffer,
+    /// staged grads, wire buffer) leaks past step end, is freed twice,
+    /// or is released while its collective is still in flight.
+    pub const LIFETIME_IMBALANCE: &str = "FS003";
+    /// A quantization block (or its scale) straddles a device boundary,
+    /// or the shard size breaks the planner's collective-alignment lcm.
+    pub const QUANT_MISALIGNED: &str = "FS004";
+    /// Hierarchical-dispatch precondition: `topology.total()` must equal
+    /// the fsdp group size, and segment/host/GPU counts must be valid.
+    pub const BAD_TOPOLOGY: &str = "FS005";
+    /// Compute reads a gathered buffer before its AllGather completed.
+    pub const READ_BEFORE_GATHER: &str = "FS006";
+    /// A gradient ReduceScatter issued before that bucket's backward.
+    pub const REDUCE_BEFORE_BACKWARD: &str = "FS007";
+    /// Reshard-after-forward pairing violation: gather/reshard counts
+    /// disagree with the group's `reshard_after_forward` choice, or a
+    /// bucket is still gathered at step end.
+    pub const RESHARD_UNPAIRED: &str = "FS008";
+    /// The statically derived peak-reserved bound exceeds (or crowds)
+    /// the device memory limit — the run would OOM.
+    pub const PEAK_OVER_LIMIT: &str = "FS009";
+    /// Pipelined-executor wrapping ABI mismatch (embed|layer|head).
+    pub const WRAPPING_ABI: &str = "FS010";
+    /// The planner produced (or was asked to verify) an invalid layout:
+    /// overlap, out-of-buffer extent, or a granularity-block split.
+    pub const LAYOUT_INVALID: &str = "FS011";
+    /// Trace document malformed: missing/empty `traceEvents`, an event
+    /// without `ph`, or an unknown event kind.
+    pub const TRACE_MALFORMED: &str = "FS201";
+    /// A trace span is missing required args (`bucket`/`bytes`/`tier`).
+    pub const TRACE_SPAN_ARGS: &str = "FS202";
+    /// Two spans on one (pid, tid) lane partially overlap — the timeline
+    /// is not strictly nested.
+    pub const TRACE_OVERLAP: &str = "FS203";
+}
+
+/// `(code, title)` rows of the full catalog, in code order — rendered by
+/// the README table and `fsdp-lint --codes`.
+pub fn catalog() -> &'static [(&'static str, &'static str)] {
+    &[
+        (codes::SPMD_DIVERGENCE, "rank-divergent collective sequence (rendezvous deadlock)"),
+        (codes::HANDLE_DISCIPLINE, "async collective handle issued/awaited out of discipline"),
+        (codes::LIFETIME_IMBALANCE, "allocator claim leaked, double-freed, or freed in flight"),
+        (codes::QUANT_MISALIGNED, "quant block/scale not co-located on one device"),
+        (codes::BAD_TOPOLOGY, "hierarchical-dispatch precondition violated"),
+        (codes::READ_BEFORE_GATHER, "compute touches a bucket before its AllGather lands"),
+        (codes::REDUCE_BEFORE_BACKWARD, "ReduceScatter issued before the bucket's backward"),
+        (codes::RESHARD_UNPAIRED, "gather/reshard pairing violates the group's spec"),
+        (codes::PEAK_OVER_LIMIT, "static peak-memory bound exceeds the device limit"),
+        (codes::WRAPPING_ABI, "pipelined executor wrapping ABI mismatch"),
+        (codes::LAYOUT_INVALID, "planner layout invalid"),
+        (codes::TRACE_MALFORMED, "trace document malformed"),
+        (codes::TRACE_SPAN_ARGS, "trace span missing required args"),
+        (codes::TRACE_OVERLAP, "trace spans partially overlap without nesting"),
+    ]
+}
+
+/// Catalog title for a code, if it is a known code.
+pub fn title(code: &str) -> Option<&'static str> {
+    catalog().iter().find(|(c, _)| *c == code).map(|(_, t)| *t)
+}
+
+/// Prefix a runtime error/assert message with its diagnostic code, so
+/// dynamic violations and static findings correlate on the same catalog
+/// entry (`[FS002] bucket 3 gather was never issued`).
+pub fn rt(code: &'static str, msg: impl fmt::Display) -> String {
+    format!("[{code}] {msg}")
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Worth surfacing, but the plan can run.
+    Warning,
+    /// The plan violates an invariant; `fsdp-lint` exits nonzero and the
+    /// `--lint` pre-flight aborts the run.
+    Error,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One finding: a stable code, a severity, the offending subject
+/// (group/bucket/rank/span), and a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Diagnostic {
+    pub code: &'static str,
+    pub severity: Severity,
+    /// What the finding is about — a shard-group or bucket name, a rank,
+    /// or a trace-event locator.
+    pub subject: String,
+    pub message: String,
+}
+
+impl Diagnostic {
+    pub fn error(code: &'static str, subject: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Error, subject: subject.into(), message: message.into() }
+    }
+
+    pub fn warning(code: &'static str, subject: impl Into<String>, message: impl Into<String>) -> Diagnostic {
+        Diagnostic { code, severity: Severity::Warning, subject: subject.into(), message: message.into() }
+    }
+
+    pub fn json(&self) -> Json {
+        Json::obj(vec![
+            ("code", Json::str(self.code)),
+            ("severity", Json::str(self.severity.name())),
+            ("subject", Json::str(&self.subject)),
+            ("message", Json::str(&self.message)),
+        ])
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {} [{}]: {}",
+            self.code,
+            self.severity.name(),
+            self.subject,
+            self.message
+        )
+    }
+}
+
+/// JSON document for a diagnostic list (the `--json` artifact shape both
+/// `fsdp-lint` and `trace-check` emit).
+pub fn to_json(diags: &[Diagnostic]) -> Json {
+    Json::obj(vec![
+        ("errors", Json::num(diags.iter().filter(|d| d.severity == Severity::Error).count() as f64)),
+        ("warnings", Json::num(diags.iter().filter(|d| d.severity == Severity::Warning).count() as f64)),
+        ("diagnostics", Json::arr(diags.iter().map(Diagnostic::json))),
+    ])
+}
+
+/// Do any error-severity findings exist?
+pub fn has_errors(diags: &[Diagnostic]) -> bool {
+    diags.iter().any(|d| d.severity == Severity::Error)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn catalog_codes_unique_and_titled() {
+        let cat = catalog();
+        for (i, (code, t)) in cat.iter().enumerate() {
+            assert!(code.starts_with("FS"), "{code}");
+            assert!(!t.is_empty());
+            assert!(cat.iter().skip(i + 1).all(|(c, _)| c != code), "dup {code}");
+        }
+        assert_eq!(title(codes::SPMD_DIVERGENCE), Some(cat[0].1));
+        assert_eq!(title("FS999"), None);
+    }
+
+    #[test]
+    fn display_and_json_roundtrip() {
+        let d = Diagnostic::error(codes::QUANT_MISALIGNED, "layer0", "shard size 130 % block 64 != 0");
+        let s = d.to_string();
+        assert!(s.contains("FS004") && s.contains("layer0") && s.contains("error"), "{s}");
+        let j = to_json(&[d.clone(), Diagnostic::warning(codes::PEAK_OVER_LIMIT, "plan", "crowded")]);
+        assert_eq!(j.get("errors").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(j.get("warnings").and_then(Json::as_f64), Some(1.0));
+        let arr = j.get("diagnostics").and_then(Json::as_arr).unwrap();
+        assert_eq!(arr[0].get("code").and_then(Json::as_str), Some("FS004"));
+        assert!(has_errors(&[d]));
+    }
+
+    #[test]
+    fn rt_prefixes_code() {
+        assert_eq!(rt(codes::HANDLE_DISCIPLINE, "bucket 3 never issued"), "[FS002] bucket 3 never issued");
+    }
+}

@@ -1,0 +1,658 @@
+//! The checkable IR: a symbolic per-rank elaboration of one FSDP
+//! training step.
+//!
+//! [`PlanModel`] mirrors exactly the planning the engine performs in
+//! `FsdpEngine::from_spec` (same group assignment, same granularity
+//! lcm's, same `planner::plan` call), and [`elaborate`] unrolls the
+//! step schedule the executor would run — [`crate::fsdp::exec`]'s
+//! sequential or bucket-pipelined loop — into typed [`Event`] streams:
+//! collectives with (op, bucket, mesh, tier, bytes), compute slots, and
+//! every allocator claim/free the DBuffer and staging paths would make,
+//! in program order. No tensors are touched and no threads spawn; the
+//! result is a finite object `analysis::checks` can verify exhaustively.
+//!
+//! Claim/free placement follows the runtime paths line by line:
+//! construction claims each group's shard block then one batched
+//! grad-shard segment; a gather claims the full buffer (plus an encoded
+//! wire buffer for `Bf16`/`Q8`, freed at decode); a reduction claims the
+//! staged full-size gradient buffer (plus a wire buffer on encoded
+//! precisions) and frees both when the collective retires. The pipelined
+//! elaboration retires in-flight reductions *lazily* (only when the
+//! `prefetch` window overflows, never opportunistically), so its peak
+//! derived by `checks::check_ledger` is an upper bound for both comm
+//! backends.
+
+use std::collections::VecDeque;
+
+use crate::cluster::{CommBackend, DEFAULT_MIN_PARALLEL_ELEMS};
+use crate::comm::Topology;
+use crate::fsdp::spec::ModelSpec;
+use crate::fsdp::ExecMode;
+use crate::planner::{self, Layout, TensorDecl};
+use crate::quant::CommPrecision;
+use crate::util::lcm;
+
+use super::diag::{codes, Diagnostic};
+
+/// A real backend collective (record-only ops such as the HSDP replica
+/// AllReduce are excluded: they rendezvous nothing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum CollOp {
+    /// Parameter gather (dense or encoded wire).
+    AllGather,
+    /// Dense f32 gradient ReduceScatter.
+    ReduceScatter,
+    /// Encoded (`Bf16`/`Q8`) gradient exchange.
+    AllToAll,
+}
+
+impl CollOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollOp::AllGather => "all_gather",
+            CollOp::ReduceScatter => "reduce_scatter",
+            CollOp::AllToAll => "all_to_all",
+        }
+    }
+
+    /// Logical span name the executor's tracer records for this op.
+    pub fn span_name(&self) -> &'static str {
+        match self {
+            CollOp::AllGather => "ag",
+            _ => "rs",
+        }
+    }
+}
+
+/// Blocking shape of one collective event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// Blocking call (the sequential schedule).
+    Sync,
+    /// Nonblocking issue returning a handle.
+    Issue,
+    /// Wait on a previously issued handle.
+    Wait,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Sync => "sync",
+            Phase::Issue => "issue",
+            Phase::Wait => "wait",
+        }
+    }
+}
+
+/// Which rendezvous tier the threaded backend would dispatch this
+/// collective on (the same decision `ThreadedComm::hier_eligible` /
+/// `tier_label` make at run time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Tier {
+    /// Flat topology: the plain single-tier rendezvous.
+    Flat,
+    /// Hierarchical topology, group fits inside one host.
+    Intra,
+    /// Hierarchical topology, flat algorithm across hosts.
+    Inter,
+    /// Two-level dispatch: intra-host ring + rail-aligned inter-host.
+    TwoLevel,
+}
+
+impl Tier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Flat => "flat",
+            Tier::Intra => "intra",
+            Tier::Inter => "inter",
+            Tier::TwoLevel => "two-level",
+        }
+    }
+}
+
+/// Identity of one allocator claim, stable across ranks and steps so the
+/// ledger can pair claims with frees and name leaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum ClaimId {
+    /// Bucket `b`'s persistent parameter-shard block.
+    Shard(usize),
+    /// Bucket `b`'s persistent gradient-shard block (batched segment).
+    GradShard(usize),
+    /// Bucket `b`'s transient full (gathered) buffer.
+    Full(usize),
+    /// Bucket `b`'s transient encoded gather wire buffer.
+    Wire(usize),
+    /// Bucket `b`'s transient staged-gradient buffer.
+    Staged(usize),
+    /// Bucket `b`'s transient encoded reduce wire buffer.
+    RsWire(usize),
+}
+
+impl ClaimId {
+    pub fn bucket(&self) -> usize {
+        match self {
+            ClaimId::Shard(b)
+            | ClaimId::GradShard(b)
+            | ClaimId::Full(b)
+            | ClaimId::Wire(b)
+            | ClaimId::Staged(b)
+            | ClaimId::RsWire(b) => *b,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ClaimId::Shard(_) => "shard",
+            ClaimId::GradShard(_) => "grad-shard",
+            ClaimId::Full(_) => "full",
+            ClaimId::Wire(_) => "gather-wire",
+            ClaimId::Staged(_) => "staged-grads",
+            ClaimId::RsWire(_) => "reduce-wire",
+        }
+    }
+
+    /// Claims that live for the whole session (made at construction).
+    pub fn is_persistent(&self) -> bool {
+        matches!(self, ClaimId::Shard(_) | ClaimId::GradShard(_))
+    }
+}
+
+/// One collective in a rank's event stream. SPMD conformance compares
+/// these tuples in order across ranks.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CollEvent {
+    pub op: CollOp,
+    pub phase: Phase,
+    pub bucket: usize,
+    /// Logical wire bytes of the whole collective (payload + scales +
+    /// packing pad, summed across ranks) — the executor's span bytes.
+    pub bytes: u64,
+    /// Label of the group-local mesh the collective runs on.
+    pub mesh: String,
+    pub tier: Tier,
+}
+
+/// One event in a rank's elaborated stream.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Event {
+    Coll(CollEvent),
+    /// A compute slot. `bucket: None` is the monolithic fwd/bwd (reads
+    /// every gathered buffer); `Some(b)` reads bucket `b` only. Phases
+    /// `fwd` / `bwd` / `fwd_bwd` require the buffer gathered; `optim`
+    /// runs on shards and requires nothing.
+    Compute {
+        bucket: Option<usize>,
+        phase: &'static str,
+    },
+    /// `CachingAllocator::alloc(bytes)`.
+    Claim { id: ClaimId, bytes: u64 },
+    /// `CachingAllocator::alloc_batch(sizes)` — one segment, no
+    /// inter-claim fragmentation.
+    ClaimBatch { ids: Vec<ClaimId>, sizes: Vec<u64> },
+    /// `CachingAllocator::free` of a previous claim.
+    Free { id: ClaimId },
+    /// The bucket's full buffer is dropped back to shard-only residency.
+    Reshard { bucket: usize },
+}
+
+/// One logical collective span the executor's tracer is expected to
+/// record for this plan (name `ag`/`rs`, attr `phase`, bucket label,
+/// wire bytes) — the static side of the trace cross-validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ExpectedSpan {
+    pub name: &'static str,
+    pub phase: &'static str,
+    /// Bucket (group) name, or `"*"` for the sequential all-bucket span.
+    pub bucket: String,
+    pub bytes: u64,
+}
+
+/// The elaborated program: one event stream per fsdp rank (construction
+/// claims, one steady-state step, optimizer), the set of claims that
+/// legitimately outlive the step, and one step's expected trace spans.
+#[derive(Debug, Clone)]
+pub struct Program {
+    pub ranks: Vec<Vec<Event>>,
+    pub persistent: Vec<ClaimId>,
+    pub expected_spans: Vec<ExpectedSpan>,
+}
+
+impl Program {
+    /// The (op, bucket, mesh, tier) collective sequence of one rank —
+    /// the object SPMD conformance compares.
+    pub fn collective_sequence(&self, rank: usize) -> Vec<&CollEvent> {
+        self.ranks[rank]
+            .iter()
+            .filter_map(|e| match e {
+                Event::Coll(c) => Some(c),
+                _ => None,
+            })
+            .collect()
+    }
+}
+
+/// One shard group's planned layout plus the spec choices that shape its
+/// schedule (the static mirror of `fsdp::engine::Bucket`).
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    pub name: String,
+    pub layout: Layout,
+    pub comm_precision: CommPrecision,
+    pub reshard_after_forward: bool,
+    /// Group-local mesh label (collectives rendezvous per mesh).
+    pub mesh: String,
+    pub optim: &'static str,
+}
+
+impl GroupPlan {
+    pub fn shard_elems(&self) -> u64 {
+        self.layout.shard_size
+    }
+
+    pub fn shard_bytes(&self) -> u64 {
+        self.layout.shard_size * 4
+    }
+
+    pub fn full_bytes(&self) -> u64 {
+        self.layout.shard_size * self.layout.num_devices as u64 * 4
+    }
+
+    /// f32 words one rank's encoded shard occupies on the wire.
+    pub fn wire_words(&self) -> usize {
+        self.comm_precision.wire_words(self.layout.shard_size as usize)
+    }
+
+    /// Transient wire-buffer bytes a gather or encoded reduce claims.
+    pub fn wire_claim_bytes(&self) -> u64 {
+        ((self.layout.num_devices * self.wire_words() * 4) as u64).max(1)
+    }
+
+    /// Logical wire bytes of one collective on this bucket — identical
+    /// to the executor's `bucket_wire_bytes` span accounting.
+    pub fn coll_bytes(&self) -> u64 {
+        self.comm_precision.wire_volume(self.layout.shard_size).total()
+            * self.layout.num_devices as u64
+    }
+}
+
+/// Everything the analyzer needs to elaborate a plan — the same inputs
+/// `FsdpEngine::from_spec` + `fsdp::exec::run_step` would consume.
+pub struct LintRequest<'a> {
+    /// Model or preset name (for report labeling only).
+    pub model: &'a str,
+    /// The full parameter table, model order.
+    pub params: &'a [(String, Vec<usize>)],
+    pub spec: &'a ModelSpec,
+    /// fsdp group size m.
+    pub devices: usize,
+    pub replicas: usize,
+    pub backend: CommBackend,
+    pub exec: ExecMode,
+    pub topology: Topology,
+    /// `Some(n_layers)` when the plan will drive the native runtime's
+    /// embed|layer|head ABI (enables the wrapping check); `None` for raw
+    /// preset plans with no runtime binding.
+    pub native_layers: Option<usize>,
+    /// Device memory limit the ledger checks the peak bound against.
+    pub mem_limit: u64,
+}
+
+/// The static mirror of a fully planned engine: per-group layouts plus
+/// the session-level execution choices.
+#[derive(Debug, Clone)]
+pub struct PlanModel {
+    pub model: String,
+    /// fsdp group size m.
+    pub devices: usize,
+    pub replicas: usize,
+    pub backend: CommBackend,
+    pub exec: ExecMode,
+    pub topology: Topology,
+    pub groups: Vec<GroupPlan>,
+    /// Parameter index -> group index (the spec's wrap assignment).
+    pub group_of: Vec<usize>,
+    pub n_params: usize,
+    pub native_layers: Option<usize>,
+    pub mem_limit: u64,
+}
+
+impl PlanModel {
+    /// Plan every shard group exactly the way `FsdpEngine::from_spec`
+    /// would: same assignment, same granularity lcm with the group's
+    /// wire precision, same `planner::plan` collective alignment. Any
+    /// planning failure comes back as a typed diagnostic instead of an
+    /// error, so `lint` can always produce a report.
+    pub fn build(req: &LintRequest) -> Result<PlanModel, Diagnostic> {
+        let m = req.devices;
+        let group_of = req.spec.assign(req.params).map_err(|e| {
+            Diagnostic::error(codes::LAYOUT_INVALID, req.model, format!("spec assignment failed: {e:#}"))
+        })?;
+        let session_mesh = mesh_label(req.replicas, m);
+        let mut groups = Vec::with_capacity(req.spec.groups.len());
+        for (b, g) in req.spec.groups.iter().enumerate() {
+            let mesh = match &g.mesh {
+                Some(gm) => {
+                    if gm.dim_size("fsdp") != Some(m) {
+                        return Err(Diagnostic::error(
+                            codes::BAD_TOPOLOGY,
+                            &g.name,
+                            format!(
+                                "group mesh fsdp dim {:?} must match the session's fsdp dim {m}",
+                                gm.dim_size("fsdp")
+                            ),
+                        ));
+                    }
+                    gm.dim_names()
+                        .iter()
+                        .zip(gm.sizes())
+                        .map(|(n, s)| format!("{n}{s}"))
+                        .collect::<Vec<_>>()
+                        .join("x")
+                }
+                None => session_mesh.clone(),
+            };
+            let prec_align = g.comm_precision.align_elems();
+            let decls: Vec<TensorDecl> = (0..req.params.len())
+                .filter(|&i| group_of[i] == b)
+                .map(|i| {
+                    let (name, shape) = &req.params[i];
+                    let numel: u64 = shape.iter().map(|&s| s as u64).product();
+                    let base = g.policy.granularity_of(name, shape).max(1);
+                    let gran = lcm(base, prec_align).min(numel).max(1);
+                    TensorDecl::new(name, numel, gran)
+                })
+                .collect();
+            let layout = planner::plan(&decls, m, lcm(4, prec_align)).map_err(|e| {
+                Diagnostic::error(
+                    codes::LAYOUT_INVALID,
+                    &g.name,
+                    format!("planning shard group failed: {e:#}"),
+                )
+            })?;
+            groups.push(GroupPlan {
+                name: g.name.clone(),
+                layout,
+                comm_precision: g.comm_precision,
+                reshard_after_forward: g.reshard_after_forward,
+                mesh,
+                optim: g.optim.name(),
+            });
+        }
+        Ok(PlanModel {
+            model: req.model.to_string(),
+            devices: m,
+            replicas: req.replicas,
+            backend: req.backend,
+            exec: req.exec,
+            topology: req.topology,
+            groups,
+            group_of,
+            n_params: req.params.len(),
+            native_layers: req.native_layers,
+            mem_limit: req.mem_limit,
+        })
+    }
+
+    /// Tier the threaded backend would dispatch one collective on
+    /// (mirrors `ThreadedComm::{hier_eligible, tier_label}`; the serial
+    /// backend is tierless but modelled identically — tier only has to
+    /// be rank-consistent, and fixtures perturb it to model divergence).
+    fn tier_for(&self, op: CollOp, comm_elems: usize) -> Tier {
+        if !self.topology.is_hierarchical() {
+            return Tier::Flat;
+        }
+        let m = self.devices;
+        let two_level = self.backend == CommBackend::Threaded
+            && matches!(op, CollOp::AllGather | CollOp::ReduceScatter)
+            && m == self.topology.total()
+            && !(m <= 1 || comm_elems == 0 || m * m * comm_elems < DEFAULT_MIN_PARALLEL_ELEMS);
+        if two_level {
+            Tier::TwoLevel
+        } else if m <= self.topology.gpus_per_host {
+            Tier::Intra
+        } else {
+            Tier::Inter
+        }
+    }
+
+    fn coll(&self, op: CollOp, phase: Phase, b: usize) -> Event {
+        let g = &self.groups[b];
+        // tier eligibility sees the element count the backend call sees:
+        // shard elems for dense f32, wire words for encoded precisions
+        let comm_elems = if g.comm_precision.is_f32() {
+            g.shard_elems() as usize
+        } else {
+            g.wire_words()
+        };
+        Event::Coll(CollEvent {
+            op,
+            phase,
+            bucket: b,
+            bytes: g.coll_bytes(),
+            mesh: g.mesh.clone(),
+            tier: self.tier_for(op, comm_elems),
+        })
+    }
+
+    /// The op a gradient reduction uses on bucket `b`: the dense
+    /// ReduceScatter for f32, the encoded all-to-all otherwise.
+    fn reduce_op(&self, b: usize) -> CollOp {
+        if self.groups[b].comm_precision.is_f32() {
+            CollOp::ReduceScatter
+        } else {
+            CollOp::AllToAll
+        }
+    }
+}
+
+fn mesh_label(replicas: usize, m: usize) -> String {
+    if replicas > 1 {
+        format!("replica{replicas}xfsdp{m}")
+    } else {
+        format!("fsdp{m}")
+    }
+}
+
+/// Elaborate one rank's template stream (construction + one step +
+/// optimizer), then clone it per rank: the schedule is SPMD by
+/// construction, so the template *is* every rank's stream. Defect
+/// fixtures mutate individual ranks afterwards.
+pub fn elaborate(pm: &PlanModel) -> Program {
+    let nb = pm.groups.len();
+    let mut ev: Vec<Event> = Vec::new();
+    let mut persistent = Vec::new();
+
+    // ---- construction: FsdpEngine::from_spec's claims ----
+    for (b, g) in pm.groups.iter().enumerate() {
+        ev.push(Event::ClaimBatch {
+            ids: vec![ClaimId::Shard(b)],
+            sizes: vec![g.shard_bytes().max(1)],
+        });
+        persistent.push(ClaimId::Shard(b));
+    }
+    if nb > 0 {
+        let ids: Vec<ClaimId> = (0..nb).map(ClaimId::GradShard).collect();
+        let sizes: Vec<u64> = pm.groups.iter().map(|g| g.shard_bytes().max(1)).collect();
+        ev.push(Event::ClaimBatch { ids, sizes });
+        persistent.extend((0..nb).map(ClaimId::GradShard));
+    }
+
+    // ---- one steady-state step ----
+    match pm.exec {
+        ExecMode::Sequential => elaborate_sequential(pm, &mut ev),
+        ExecMode::Pipelined { prefetch } => {
+            elaborate_pipelined(pm, prefetch.max(1), &mut ev)
+        }
+    }
+
+    // ---- per-group optimizer step (shard-local, no allocator traffic) ----
+    for b in 0..nb {
+        ev.push(Event::Compute { bucket: Some(b), phase: "optim" });
+    }
+
+    let expected_spans = expected_spans(pm, &ev);
+    Program {
+        ranks: vec![ev; pm.devices],
+        persistent,
+        expected_spans,
+    }
+}
+
+/// The sequential schedule (`fsdp::exec::run_sequential` +
+/// `FsdpEngine::{gather_params, release_params, reduce_grads}`).
+fn elaborate_sequential(pm: &PlanModel, ev: &mut Vec<Event>) {
+    let nb = pm.groups.len();
+    // gather_params: per bucket, blocking all_gather_params_prec
+    for (b, g) in pm.groups.iter().enumerate() {
+        ev.push(Event::Claim { id: ClaimId::Full(b), bytes: g.full_bytes().max(1) });
+        if !g.comm_precision.is_f32() {
+            ev.push(Event::Claim { id: ClaimId::Wire(b), bytes: g.wire_claim_bytes() });
+        }
+        ev.push(pm.coll(CollOp::AllGather, Phase::Sync, b));
+        if !g.comm_precision.is_f32() {
+            ev.push(Event::Free { id: ClaimId::Wire(b) });
+        }
+    }
+    // monolithic fwd/bwd over every gathered bucket
+    ev.push(Event::Compute { bucket: None, phase: "fwd_bwd" });
+    // release_params before the reductions
+    for b in 0..nb {
+        ev.push(Event::Free { id: ClaimId::Full(b) });
+        ev.push(Event::Reshard { bucket: b });
+    }
+    // reduce_grads: per bucket, stage -> blocking reduce -> unstage
+    for (b, g) in pm.groups.iter().enumerate() {
+        ev.push(Event::Claim {
+            id: ClaimId::Staged(b),
+            bytes: g.full_bytes().max(1),
+        });
+        if g.comm_precision.is_f32() {
+            ev.push(pm.coll(CollOp::ReduceScatter, Phase::Sync, b));
+        } else {
+            ev.push(Event::Claim { id: ClaimId::RsWire(b), bytes: g.wire_claim_bytes() });
+            ev.push(pm.coll(CollOp::AllToAll, Phase::Sync, b));
+            ev.push(Event::Free { id: ClaimId::RsWire(b) });
+        }
+        ev.push(Event::Free { id: ClaimId::Staged(b) });
+    }
+}
+
+/// The bucket-pipelined schedule (`fsdp::exec::run_pipelined`), with
+/// in-flight reductions retired lazily (only when the window overflows)
+/// so the derived peak upper-bounds both comm backends.
+fn elaborate_pipelined(pm: &PlanModel, prefetch: usize, ev: &mut Vec<Event>) {
+    let nb = pm.groups.len();
+    let mut gathered = vec![false; nb];
+    let mut inflight: VecDeque<usize> = VecDeque::new();
+
+    let issue = |ev: &mut Vec<Event>,
+                 inflight: &mut VecDeque<usize>,
+                 order: &mut VecDeque<usize>| {
+        while inflight.len() < prefetch {
+            let Some(b) = order.pop_front() else { return };
+            let g = &pm.groups[b];
+            ev.push(Event::Claim { id: ClaimId::Full(b), bytes: g.full_bytes().max(1) });
+            if !g.comm_precision.is_f32() {
+                ev.push(Event::Claim { id: ClaimId::Wire(b), bytes: g.wire_claim_bytes() });
+            }
+            ev.push(pm.coll(CollOp::AllGather, Phase::Issue, b));
+            inflight.push_back(b);
+        }
+    };
+    let wait = |ev: &mut Vec<Event>,
+                inflight: &mut VecDeque<usize>,
+                gathered: &mut Vec<bool>,
+                b: usize| {
+        if gathered[b] {
+            return;
+        }
+        while let Some(x) = inflight.pop_front() {
+            ev.push(pm.coll(CollOp::AllGather, Phase::Wait, x));
+            if !pm.groups[x].comm_precision.is_f32() {
+                ev.push(Event::Free { id: ClaimId::Wire(x) });
+            }
+            gathered[x] = true;
+            if x == b {
+                return;
+            }
+        }
+    };
+
+    // ---- forward: prefetch AG(l+1..) under compute of bucket l ----
+    let mut fwd_order: VecDeque<usize> = (0..nb).collect();
+    for l in 0..nb {
+        issue(ev, &mut inflight, &mut fwd_order);
+        wait(ev, &mut inflight, &mut gathered, l);
+        issue(ev, &mut inflight, &mut fwd_order);
+        ev.push(Event::Compute { bucket: Some(l), phase: "fwd" });
+        if pm.groups[l].reshard_after_forward {
+            ev.push(Event::Free { id: ClaimId::Full(l) });
+            ev.push(Event::Reshard { bucket: l });
+            gathered[l] = false;
+        }
+    }
+
+    // ---- backward: re-gather in reverse; RS overlaps earlier backward ----
+    let mut bwd_order: VecDeque<usize> = (0..nb).rev().filter(|&b| !gathered[b]).collect();
+    let mut rs_pending: VecDeque<usize> = VecDeque::new();
+    let retire = |ev: &mut Vec<Event>, b: usize| {
+        ev.push(pm.coll(pm.reduce_op(b), Phase::Wait, b));
+        ev.push(Event::Free { id: ClaimId::Staged(b) });
+        if !pm.groups[b].comm_precision.is_f32() {
+            ev.push(Event::Free { id: ClaimId::RsWire(b) });
+        }
+    };
+    for b in (0..nb).rev() {
+        issue(ev, &mut inflight, &mut bwd_order);
+        wait(ev, &mut inflight, &mut gathered, b);
+        issue(ev, &mut inflight, &mut bwd_order);
+        ev.push(Event::Compute { bucket: Some(b), phase: "bwd" });
+        ev.push(Event::Free { id: ClaimId::Full(b) });
+        ev.push(Event::Reshard { bucket: b });
+        gathered[b] = false;
+        // begin_reduce: stage, (encode + wire claim), issue
+        let g = &pm.groups[b];
+        ev.push(Event::Claim { id: ClaimId::Staged(b), bytes: g.full_bytes().max(1) });
+        if !g.comm_precision.is_f32() {
+            ev.push(Event::Claim { id: ClaimId::RsWire(b), bytes: g.wire_claim_bytes() });
+        }
+        ev.push(pm.coll(pm.reduce_op(b), Phase::Issue, b));
+        rs_pending.push_back(b);
+        while rs_pending.len() > prefetch {
+            let x = rs_pending.pop_front().unwrap();
+            retire(ev, x);
+        }
+    }
+    while let Some(x) = rs_pending.pop_front() {
+        retire(ev, x);
+    }
+}
+
+/// Project the logical `ag`/`rs` spans the executor's tracer would
+/// record for one step of this plan: the sequential schedule collapses
+/// each direction to a single all-bucket span; the pipelined schedule
+/// records per-bucket issue/wait spans in schedule order.
+fn expected_spans(pm: &PlanModel, ev: &[Event]) -> Vec<ExpectedSpan> {
+    match pm.exec {
+        ExecMode::Sequential => {
+            let total: u64 = pm.groups.iter().map(GroupPlan::coll_bytes).sum();
+            vec![
+                ExpectedSpan { name: "ag", phase: "sync", bucket: "*".into(), bytes: total },
+                ExpectedSpan { name: "rs", phase: "sync", bucket: "*".into(), bytes: total },
+            ]
+        }
+        ExecMode::Pipelined { .. } => ev
+            .iter()
+            .filter_map(|e| match e {
+                Event::Coll(c) => Some(ExpectedSpan {
+                    name: c.op.span_name(),
+                    phase: c.phase.name(),
+                    bucket: pm.groups[c.bucket].name.clone(),
+                    bytes: c.bytes,
+                }),
+                _ => None,
+            })
+            .collect(),
+    }
+}

@@ -1,0 +1,40 @@
+//! Static plan & protocol verification (`fsdp-lint`).
+//!
+//! veScale-FSDP's correctness rests on invariants that are otherwise
+//! only enforced mid-run: every rank must issue the same collective
+//! sequence (or the barrier-phased `ThreadedComm` rendezvous deadlocks),
+//! every Q8 quant block and its scale must land on one device, every
+//! transient gather/staging buffer must be freed at reshard, and the
+//! pipelined schedule must never touch a bucket before its AllGather
+//! lands. This module checks all of that *before any thread spawns*:
+//!
+//! 1. [`ir::PlanModel`] mirrors `FsdpEngine::from_spec`'s planning
+//!    (same group assignment, granularity lcm's, and `planner::plan`
+//!    collective alignment) without allocating a single tensor;
+//! 2. [`ir::elaborate`] unrolls the exact schedule `fsdp::exec` would
+//!    run — sequential or bucket-pipelined — into a typed per-rank
+//!    [`ir::Event`] stream: collectives with (op, bucket, mesh, tier,
+//!    bytes), compute slots, and every allocator claim/free;
+//! 3. [`checks::run_checks`] verifies SPMD conformance (deadlock
+//!    freedom by construction), async-handle discipline, happens-before
+//!    ordering, allocator lifetime balance with a statically derived
+//!    peak-memory bound (replayed through a real `CachingAllocator`),
+//!    quant-block co-location, hierarchical-dispatch preconditions, and
+//!    the pipelined executor's wrapping ABI.
+//!
+//! Findings are [`diag::Diagnostic`]s with stable `FS0xx` codes shared
+//! with the runtime's own invariant checks and with the trace validator
+//! (`trace::check`, `FS2xx`). Entry points: the `fsdp-lint` binary, the
+//! `--lint` pre-flight on `vescale-fsdp train`, and
+//! `train::SessionBuilder::analyze`. The report also carries the
+//! statically predicted `ag`/`rs` span sequence, which
+//! `tests/static_vs_trace.rs` cross-validates against the tracer's
+//! recorded spans on live runs.
+
+pub mod checks;
+pub mod diag;
+pub mod ir;
+
+pub use checks::{lint, run_checks, AnalysisReport};
+pub use diag::{catalog, Diagnostic, Severity};
+pub use ir::{elaborate, Event, ExpectedSpan, LintRequest, PlanModel, Program};

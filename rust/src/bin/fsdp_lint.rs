@@ -1,0 +1,310 @@
+//! fsdp-lint: static plan & protocol verifier.
+//!
+//!     fsdp-lint --preset llama70b [--devices 8] [--replicas 1]
+//!               [--prefetch N] [--backend serial|threaded]
+//!               [--topology HxG[:S]] [--comm-precision f32|bf16|q8[:block]]
+//!               [--mem-limit BYTES] [--json out.json]
+//!     fsdp-lint --model tiny   (same flags; lints a trainable manifest
+//!                               config through `SessionBuilder::analyze`,
+//!                               wrap-ABI check included)
+//!     fsdp-lint --matrix [--json out.json]
+//!               (every shipped preset x backend x exec x precision x
+//!                topology combo; the CI `plan-lint` job runs this)
+//!     fsdp-lint --codes        (print the diagnostic-code catalog)
+//!
+//! Elaborates the full per-rank FSDP schedule — gathers, computes,
+//! reductions, reshards, allocator claims — into the `analysis` IR
+//! without running any compute, then checks SPMD conformance, async
+//! handle discipline, allocator lifetime balance, quant-block layout,
+//! and hierarchical-dispatch preconditions. Exit code: 0 clean,
+//! 1 diagnostics found, 2 usage error.
+
+use std::process::ExitCode;
+
+use vescale_fsdp::analysis::{catalog, lint, AnalysisReport, LintRequest};
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::Topology;
+use vescale_fsdp::config::presets;
+use vescale_fsdp::fsdp::{ExecMode, DEVICE_MEM_LIMIT};
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::args::Args;
+use vescale_fsdp::util::json::Json;
+
+fn usage() -> ExitCode {
+    eprintln!(
+        "usage: fsdp-lint (--preset NAME | --model NAME | --matrix | --codes)\n\
+         \x20      [--devices M] [--replicas R] [--prefetch N]\n\
+         \x20      [--backend serial|threaded] [--topology HxG[:S]]\n\
+         \x20      [--comm-precision f32|bf16|q8[:block]] [--mem-limit BYTES]\n\
+         \x20      [--json out.json]"
+    );
+    ExitCode::from(2)
+}
+
+fn print_report(r: &AnalysisReport) {
+    println!(
+        "lint: {} devices={} replicas={} backend={} exec={} topology={} — \
+         {} collectives/rank, peak bound {:.2} MB reserved",
+        r.model,
+        r.devices,
+        r.replicas,
+        r.backend,
+        r.exec,
+        r.topology,
+        r.collectives_per_rank,
+        r.peak_reserved_bound as f64 / 1e6
+    );
+    for d in &r.diagnostics {
+        println!("  {d}");
+    }
+    if r.diagnostics.is_empty() {
+        println!("  clean");
+    }
+}
+
+/// Lint one raw preset (no manifest/runtime needed): the preset's wrap
+/// units become the spec, the uniform wire precision is applied to every
+/// group, and the wrap-ABI check stays disabled (`native_layers: None` —
+/// presets are planning artifacts, not trainable configs).
+#[allow(clippy::too_many_arguments)]
+fn lint_preset(
+    name: &str,
+    devices: usize,
+    replicas: usize,
+    backend: CommBackend,
+    exec: ExecMode,
+    topology: Topology,
+    prec: CommPrecision,
+    mem_limit: u64,
+) -> Option<AnalysisReport> {
+    let preset = presets::by_name(name)?;
+    let params = preset.param_table();
+    let mut spec = preset.shard_spec();
+    for g in spec.groups.iter_mut() {
+        g.comm_precision = prec;
+    }
+    Some(lint(&LintRequest {
+        model: name,
+        params: &params,
+        spec: &spec,
+        devices,
+        replicas,
+        backend,
+        exec,
+        topology,
+        native_layers: None,
+        mem_limit,
+    }))
+}
+
+/// Mesh size for one matrix entry: the smallest power-of-two device
+/// count (>= 8) whose persistent per-rank footprint — param + grad
+/// shards, 8 bytes per parameter spread over the mesh — stays within a
+/// quarter of the simulated device budget, leaving the rest for
+/// transient gather/staging buffers. Mirrors how the presets deploy in
+/// practice: a 2.4T model never runs on an 8-GPU mesh.
+fn matrix_devices(total_params: u64) -> usize {
+    let mut devices = 8usize;
+    while total_params.saturating_mul(8) / devices as u64 > DEVICE_MEM_LIMIT / 4 {
+        devices *= 2;
+    }
+    devices
+}
+
+/// The shipped combo matrix the CI `plan-lint` job sweeps. The mesh is
+/// sized to the preset by [`matrix_devices`], and sequential mode —
+/// which gathers every bucket at once regardless of mesh size — is
+/// linted only where the full parameters fit half the device budget;
+/// each skip is reported, never silent.
+fn run_matrix(json_out: Option<&str>) -> ExitCode {
+    const PRESETS: [&str; 9] = [
+        "tiny", "small", "llama70b", "gptoss120b", "dsv3_671b", "moe400b", "moe800b",
+        "moe1200b", "moe2400b",
+    ];
+    const BACKENDS: [CommBackend; 2] = [CommBackend::Serial, CommBackend::Threaded];
+    const PRECS: [&str; 3] = ["f32", "bf16", "q8"];
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut combos = 0usize;
+    let mut dirty = 0usize;
+    let mut skipped_seq = 0usize;
+    for preset_name in PRESETS {
+        let Some(preset) = presets::by_name(preset_name) else {
+            eprintln!("error: preset '{preset_name}' disappeared from the registry");
+            return ExitCode::from(2);
+        };
+        let devices = matrix_devices(preset.total_params());
+        let topos: [(String, Topology); 2] = [
+            ("flat".to_string(), Topology::flat()),
+            (
+                format!("{}x4:2", devices / 4),
+                Topology { hosts: devices / 4, gpus_per_host: 4, segments: 2 },
+            ),
+        ];
+        // full-gather footprint of the sequential schedule (all buckets
+        // resident at once) vs the simulated per-device budget
+        let full_bytes = preset.total_params().saturating_mul(4);
+        let seq_fits = full_bytes < DEVICE_MEM_LIMIT / 2;
+        if !seq_fits {
+            skipped_seq += 1;
+            println!(
+                "skip: {preset_name} sequential (full gather {:.1} GB exceeds the \
+                 {:.0} GB device budget; pipelined combos still linted)",
+                full_bytes as f64 / 1e9,
+                DEVICE_MEM_LIMIT as f64 / 1e9
+            );
+        }
+        for backend in BACKENDS {
+            for prefetch in [0usize, 2] {
+                if prefetch == 0 && !seq_fits {
+                    continue;
+                }
+                let exec = ExecMode::from_prefetch(prefetch);
+                for prec_name in PRECS {
+                    let prec = CommPrecision::parse(prec_name).expect("shipped precision");
+                    for (topo_name, topo) in &topos {
+                        let Some(report) = lint_preset(
+                            preset_name,
+                            devices,
+                            1,
+                            backend,
+                            exec,
+                            *topo,
+                            prec,
+                            DEVICE_MEM_LIMIT,
+                        ) else {
+                            return ExitCode::from(2);
+                        };
+                        combos += 1;
+                        let clean = report.diagnostics.is_empty();
+                        if !clean {
+                            dirty += 1;
+                            println!(
+                                "DIRTY: {preset_name} devices={devices} backend={} \
+                                 exec={} prec={prec_name} topo={topo_name}",
+                                backend.name(),
+                                exec.name()
+                            );
+                            for d in &report.diagnostics {
+                                println!("  {d}");
+                            }
+                        }
+                        rows.push(report.json());
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "matrix: {combos} combos linted, {dirty} with diagnostics, \
+         {skipped_seq} sequential presets skipped"
+    );
+    if let Some(out) = json_out {
+        let doc = Json::obj(vec![
+            ("combos", Json::num(combos as f64)),
+            ("dirty", Json::num(dirty as f64)),
+            ("reports", Json::Arr(rows)),
+        ]);
+        if let Err(e) = std::fs::write(out, doc.to_string()) {
+            eprintln!("error: failed to write {out}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("wrote {combos} reports to {out}");
+    }
+    if dirty > 0 {
+        ExitCode::FAILURE
+    } else {
+        ExitCode::SUCCESS
+    }
+}
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    if args.bool("codes") {
+        println!("{:<6} title", "code");
+        for (code, title) in catalog() {
+            println!("{code:<6} {title}");
+        }
+        return ExitCode::SUCCESS;
+    }
+    let json_out = args.get("json").map(str::to_string);
+    if args.bool("matrix") {
+        return run_matrix(json_out.as_deref());
+    }
+
+    let devices = args.usize_or("devices", 8);
+    let replicas = args.usize_or("replicas", 1);
+    let exec = ExecMode::from_prefetch(args.usize_or("prefetch", 0));
+    let backend = match args.get("backend") {
+        None => CommBackend::Serial,
+        Some(s) => match CommBackend::parse(s) {
+            Some(b) => b,
+            None => {
+                eprintln!("error: unknown --backend '{s}'");
+                return usage();
+            }
+        },
+    };
+    let topology = match args.get("topology") {
+        None => Topology::flat(),
+        Some(t) => match Topology::parse(t) {
+            Some(t) => t,
+            None => {
+                eprintln!("error: bad --topology '{t}' (expected HxG[:S])");
+                return usage();
+            }
+        },
+    };
+    let prec_name = args.str_or("comm-precision", "f32");
+    let Some(prec) = CommPrecision::parse(&prec_name) else {
+        eprintln!("error: unknown --comm-precision '{prec_name}'");
+        return usage();
+    };
+    let mem_limit = args.u64_or("mem-limit", DEVICE_MEM_LIMIT);
+
+    let report = if let Some(name) = args.get("preset") {
+        match lint_preset(name, devices, replicas, backend, exec, topology, prec, mem_limit)
+        {
+            Some(r) => r,
+            None => {
+                eprintln!("error: unknown preset '{name}'");
+                return usage();
+            }
+        }
+    } else if let Some(model) = args.get("model") {
+        let mut fabric = vescale_fsdp::comm::Fabric::h800();
+        fabric = fabric.with_topology(topology);
+        match TrainSession::builder(model)
+            .devices(devices)
+            .replicas(replicas)
+            .backend(backend)
+            .exec(exec)
+            .fabric(fabric)
+            .comm_precision(prec)
+            .analyze()
+        {
+            Ok(r) => r,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                return ExitCode::from(2);
+            }
+        }
+    } else {
+        return usage();
+    };
+
+    print_report(&report);
+    if let Some(out) = &json_out {
+        if let Err(e) = std::fs::write(out, report.json().to_string()) {
+            eprintln!("error: failed to write {out}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("wrote report to {out}");
+    }
+    if report.diagnostics.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

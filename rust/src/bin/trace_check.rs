@@ -1,44 +1,83 @@
 //! Chrome-trace validator CLI (CI gate for `--trace` output).
 //!
-//!     trace-check trace_a.json trace_b.json ...
+//!     trace-check [--json out.json] trace_a.json trace_b.json ...
 //!
-//! Each file must parse as JSON and pass `trace::check::validate`:
+//! Each file must parse as JSON and pass `trace::check::diagnostics`:
 //! non-empty `traceEvents`, bucket + byte attribution on collective
-//! spans, and strict per-lane span nesting. Exits non-zero if any file
-//! fails, printing one line per file.
+//! spans, and strict per-lane span nesting. Findings print one line per
+//! diagnostic (`FS2xx` codes from the shared `analysis::diag` catalog);
+//! `--json` additionally writes all findings to a machine-readable
+//! artifact. Exit code: 0 all clean, 1 diagnostics found, 2 usage error.
 
 use std::process::ExitCode;
 
-use vescale_fsdp::trace::check::validate;
+use vescale_fsdp::analysis::diag::{self, Diagnostic};
+use vescale_fsdp::trace::check::diagnostics;
 use vescale_fsdp::util::json::Json;
 
-fn check_file(path: &str) -> Result<(), String> {
+fn check_file(path: &str) -> Result<Vec<Diagnostic>, String> {
     let text = std::fs::read_to_string(path).map_err(|e| format!("read failed: {e}"))?;
     let doc = Json::parse(&text).map_err(|e| format!("JSON parse failed: {e}"))?;
-    validate(&doc)?;
-    let n = doc
-        .get("traceEvents")
-        .and_then(|e| e.as_arr())
-        .map(|a| a.len())
-        .unwrap_or(0);
-    println!("ok: {path} ({n} events)");
-    Ok(())
+    let ds = diagnostics(&doc);
+    if ds.is_empty() {
+        let n = doc
+            .get("traceEvents")
+            .and_then(|e| e.as_arr())
+            .map(|a| a.len())
+            .unwrap_or(0);
+        println!("ok: {path} ({n} events)");
+    }
+    Ok(ds)
 }
 
 fn main() -> ExitCode {
-    let files: Vec<String> = std::env::args().skip(1).collect();
-    if files.is_empty() {
-        eprintln!("usage: trace-check <trace.json> [more.json ...]");
-        return ExitCode::from(2);
-    }
-    let mut failed = false;
-    for path in &files {
-        if let Err(e) = check_file(path) {
-            eprintln!("FAIL: {path}: {e}");
-            failed = true;
+    let mut json_out: Option<String> = None;
+    let mut files: Vec<String> = Vec::new();
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => match args.next() {
+                Some(p) => json_out = Some(p),
+                None => {
+                    eprintln!("error: --json requires an output path");
+                    return ExitCode::from(2);
+                }
+            },
+            other => files.push(other.to_string()),
         }
     }
-    if failed {
+    if files.is_empty() {
+        eprintln!("usage: trace-check [--json out.json] <trace.json> [more.json ...]");
+        return ExitCode::from(2);
+    }
+
+    let mut all: Vec<Diagnostic> = Vec::new();
+    let mut io_failed = false;
+    for path in &files {
+        match check_file(path) {
+            Ok(ds) => {
+                for d in &ds {
+                    eprintln!("FAIL: {path}: {d}");
+                }
+                all.extend(ds);
+            }
+            Err(e) => {
+                eprintln!("FAIL: {path}: {e}");
+                io_failed = true;
+            }
+        }
+    }
+
+    if let Some(out) = &json_out {
+        let doc = diag::to_json(&all);
+        if let Err(e) = std::fs::write(out, doc.to_string()) {
+            eprintln!("error: failed to write {out}: {e}");
+            return ExitCode::from(2);
+        }
+        println!("wrote {} diagnostics to {out}", all.len());
+    }
+
+    if io_failed || !all.is_empty() {
         ExitCode::FAILURE
     } else {
         ExitCode::SUCCESS

@@ -36,7 +36,7 @@ use anyhow::Result;
 use crate::comm::{CommRecord, CommStats};
 
 pub use serial::SerialComm;
-pub use threaded::ThreadedComm;
+pub use threaded::{set_arrival_stagger, ThreadedComm, DEFAULT_MIN_PARALLEL_ELEMS};
 
 /// A waitable in-flight collective. Returned by the nonblocking
 /// `*_async` methods of [`Communicator`]: the operation owns its buffers

@@ -40,7 +40,7 @@ use super::{CommBackend, Communicator, PendingOp};
 /// Below this many total elements a collective is cheaper single-threaded
 /// than the ~tens-of-microseconds per OS thread spawn; the serial path is
 /// bit-identical, so falling back never changes results.
-const DEFAULT_MIN_PARALLEL_ELEMS: usize = 16 * 1024;
+pub const DEFAULT_MIN_PARALLEL_ELEMS: usize = 16 * 1024;
 
 #[derive(Debug)]
 pub struct ThreadedComm {
@@ -318,14 +318,49 @@ impl SharedBufs {
     }
 }
 
+thread_local! {
+    /// Test-only rendezvous fault injection: per-rank arrival delays in
+    /// microseconds, applied by [`fan_out`] before each rank enters the
+    /// collective body. Empty (the default) is a no-op on every hot path
+    /// beyond one thread-local read per collective.
+    static ARRIVAL_STAGGER: std::cell::RefCell<Vec<u64>> =
+        std::cell::RefCell::new(Vec::new());
+}
+
+/// Stagger rank arrival into subsequent *blocking* collectives issued
+/// from the calling thread: rank `r` sleeps `delays_us[r]` microseconds
+/// before entering each collective's rendezvous. The rendezvous protocol
+/// must produce bit-identical results under any arrival permutation and
+/// must never deadlock — `tests/threaded_stress.rs` drives seeded
+/// permutations through this hook to prove it. Thread-local: it does not
+/// reach collectives issued from background comm threads (async
+/// begin/finish pairs), and `set_arrival_stagger(&[])` clears it.
+pub fn set_arrival_stagger(delays_us: &[u64]) {
+    ARRIVAL_STAGGER.with(|s| *s.borrow_mut() = delays_us.to_vec());
+}
+
 /// Run `f(rank)` on `m` concurrent ranks; rank 0 runs on the caller's
-/// thread. Returns after every rank finished (scoped join).
+/// thread. Returns after every rank finished (scoped join). Honors the
+/// caller thread's [`set_arrival_stagger`] delays.
 pub(crate) fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
+    let stagger = ARRIVAL_STAGGER.with(|s| s.borrow().clone());
+    let delay = |rank: usize| {
+        if let Some(&us) = stagger.get(rank) {
+            if us > 0 {
+                std::thread::sleep(std::time::Duration::from_micros(us));
+            }
+        }
+    };
     std::thread::scope(|s| {
         for rank in 1..m {
             let f = &f;
-            s.spawn(move || f(rank));
+            let delay = &delay;
+            s.spawn(move || {
+                delay(rank);
+                f(rank)
+            });
         }
+        delay(0);
         f(0);
     });
 }

@@ -33,6 +33,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::analysis::diag::{codes, rt};
 use crate::cluster::{Communicator, PendingOp};
 use crate::comm::{CommRecord, Fabric};
 use crate::memory::{BlockId, SharedAllocator};
@@ -209,7 +210,11 @@ impl DBuffer {
     /// full buffer (valid after `all_gather_params`). This is the paper's
     /// zero-copy claim: the tensor is contiguous at a planner-known offset.
     pub fn full_view(&self, rank: usize, idx: usize) -> &[f32] {
-        debug_assert!(self.gathered, "full buffer not gathered");
+        debug_assert!(
+            self.gathered,
+            "{}",
+            rt(codes::READ_BEFORE_GATHER, "full buffer not gathered")
+        );
         let off = self.layout.offsets[idx] as usize;
         let n = self.layout.tensors[idx].numel as usize;
         &self.full[rank][off..off + n]
@@ -356,10 +361,10 @@ impl DBuffer {
             return self.begin_gather(comm);
         }
         if self.gathered {
-            bail!("begin_gather_prec: buffer already gathered");
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather_prec: buffer already gathered"));
         }
         if self.wire_inflight {
-            bail!("begin_gather_prec: a gather is already in flight");
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather_prec: a gather is already in flight"));
         }
         self.acquire_full()?;
         let w = prec.wire_words(self.shard_elems());
@@ -384,7 +389,7 @@ impl DBuffer {
             return self.finish_gather(op, comm, fabric);
         }
         if !self.wire_inflight {
-            bail!("finish_gather_prec: no encoded gather in flight");
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "finish_gather_prec: no encoded gather in flight"));
         }
         self.wire_inflight = false;
         match op.wait() {
@@ -412,10 +417,10 @@ impl DBuffer {
     /// `gathered` is false.
     pub fn begin_gather(&mut self, comm: &dyn Communicator) -> Result<PendingOp> {
         if self.gathered {
-            bail!("begin_gather: buffer already gathered");
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather: buffer already gathered"));
         }
         if self.full.len() != self.num_devices() {
-            bail!("begin_gather: a gather is already in flight");
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather: a gather is already in flight"));
         }
         self.acquire_full()?;
         let s = self.shard_elems();
@@ -490,13 +495,21 @@ impl DBuffer {
         if self.wire_inflight {
             // an encoded gather still owns the wire storage — keep the
             // claims; finish_gather_prec (or its error path) releases them
-            debug_assert!(false, "release_full during in-flight encoded gather");
+            debug_assert!(
+                false,
+                "{}",
+                rt(codes::LIFETIME_IMBALANCE, "release_full during in-flight encoded gather")
+            );
             return;
         }
         if self.full.len() != self.num_devices() {
             // an async gather still owns the storage — keep the allocator
             // claim; finish_gather (or its error path) releases it
-            debug_assert!(false, "release_full during in-flight gather");
+            debug_assert!(
+                false,
+                "{}",
+                rt(codes::LIFETIME_IMBALANCE, "release_full during in-flight gather")
+            );
             return;
         }
         if let (Some(alloc), Some(id)) = (&self.alloc, self.full_block.take()) {

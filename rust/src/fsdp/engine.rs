@@ -20,6 +20,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use crate::analysis::diag::{codes, rt};
 use crate::cluster::{Communicator, SerialComm};
 use crate::comm::{CommStats, Fabric};
 use crate::dbuffer::DBuffer;
@@ -36,8 +37,10 @@ use super::spec::{GroupFilter, ModelSpec, ShardGroupSpec};
 
 /// Simulated per-device memory limit for the engine's allocator account
 /// (generous: the numeric models are tiny; the limit only exists so the
-/// allocator's pressure path stays reachable in tests).
-const DEVICE_MEM_LIMIT: u64 = 1 << 40;
+/// allocator's pressure path stays reachable in tests). Public so the
+/// static analyzer (`analysis::lint`) checks its replayed claim ledger
+/// against the same budget the live engine runs under.
+pub const DEVICE_MEM_LIMIT: u64 = 1 << 40;
 
 /// Per-parameter sharding granularity policy (`orig_param_policy`).
 #[derive(Debug, Clone)]
@@ -249,10 +252,16 @@ impl FsdpEngine {
                 Some(gm) => {
                     if gm.dim_size("fsdp") != Some(m) {
                         bail!(
-                            "shard group '{}': mesh fsdp dim {:?} must match the \
-                             session's fsdp dim {m}",
-                            g.name,
-                            gm.dim_size("fsdp")
+                            "{}",
+                            rt(
+                                codes::BAD_TOPOLOGY,
+                                format_args!(
+                                    "shard group '{}': mesh fsdp dim {:?} must match the \
+                                     session's fsdp dim {m}",
+                                    g.name,
+                                    gm.dim_size("fsdp")
+                                )
+                            )
                         );
                     }
                     gm.clone()

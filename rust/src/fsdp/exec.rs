@@ -40,6 +40,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::analysis::diag::{codes, rt};
 use crate::cluster::{Cluster, CommBackend, PendingOp};
 use crate::fsdp::engine::Bucket;
 use crate::fsdp::FsdpEngine;
@@ -265,18 +266,36 @@ fn check_wrapping(engine: &FsdpEngine, cfg: &ModelCfg) -> Result<()> {
     let nl = cfg.n_layers;
     if engine.buckets.len() != nl + 2 {
         bail!(
-            "pipelined executor expects embed|layer|head wrapping: \
-             {} buckets for {} layers",
-            engine.buckets.len(),
-            nl
+            "{}",
+            rt(
+                codes::WRAPPING_ABI,
+                format_args!(
+                    "pipelined executor expects embed|layer|head wrapping: \
+                     {} buckets for {} layers",
+                    engine.buckets.len(),
+                    nl
+                )
+            )
         );
     }
     if engine.params.len() != 3 + 8 * nl {
-        bail!("parameter ABI mismatch: {} params", engine.params.len());
+        bail!(
+            "{}",
+            rt(
+                codes::WRAPPING_ABI,
+                format_args!("parameter ABI mismatch: {} params", engine.params.len())
+            )
+        );
     }
     let expect = |i: usize, bucket: usize| -> Result<()> {
         if engine.param_loc(i).bucket != bucket {
-            bail!("param {i} not in bucket {bucket} — custom wrapping unsupported");
+            bail!(
+                "{}",
+                rt(
+                    codes::WRAPPING_ABI,
+                    format_args!("param {i} not in bucket {bucket} — custom wrapping unsupported")
+                )
+            );
         }
         Ok(())
     };
@@ -419,7 +438,7 @@ fn wait_gather(
             return Ok(());
         }
     }
-    bail!("bucket {b} gather was never issued");
+    bail!("{}", rt(codes::HANDLE_DISCIPLINE, format_args!("bucket {b} gather was never issued")));
 }
 
 /// One in-flight gradient reduction. For the dense (F32) path the staged

@@ -28,7 +28,7 @@ pub mod exec;
 pub mod sim;
 pub mod spec;
 
-pub use engine::{FsdpEngine, ShardingPolicy};
+pub use engine::{FsdpEngine, ShardingPolicy, DEVICE_MEM_LIMIT};
 pub use exec::{ExecMode, ExecReport, StepOutcome};
 pub use sim::{simulate_step, GpuSpec, ShardingFormat, StepReport, SystemBehavior};
 pub use spec::{GroupFilter, ModelSpec, OptimBinding, ShardGroupSpec};

@@ -117,6 +117,7 @@
 //! changes neither math (bit-identical losses) nor, materially,
 //! wall-clock (`tests/trace_validity.rs`).
 
+pub mod analysis;
 pub mod checkpoint;
 pub mod cluster;
 pub mod comm;

@@ -7,6 +7,8 @@
 //!                         [--topology HxG[:S]]
 //!                         [--comm-precision f32|bf16|q8[:block]]
 //!                         [--trace out.json] [--trace-level off|comm|full]
+//!                         [--lint]  (static schedule pre-flight: abort on
+//!                          any `fsdp-lint` diagnostic before training)
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
 //!                          executor with up to N in-flight bucket collectives;
 //!                          --topology HxG dispatches whole-cluster collectives
@@ -129,7 +131,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         fabric.name,
         comm_precision.name()
     );
-    let mut trainer = TrainSession::builder(&model)
+    let builder = TrainSession::builder(&model)
         .devices(mesh)
         .replicas(base.parallel.replicas)
         .optimizer(OptimBinding::from_kind(opt))
@@ -141,8 +143,27 @@ fn cmd_train(args: &Args) -> Result<()> {
         .fabric(fabric)
         .comm_precision(comm_precision)
         .trace(level)
-        .overrides(base.groups.clone())
-        .build()?;
+        .overrides(base.groups.clone());
+    if args.bool("lint") {
+        // static pre-flight: elaborate the full per-rank schedule and run
+        // every analyzer check before touching any shard memory
+        let report = builder.analyze()?;
+        for d in &report.diagnostics {
+            eprintln!("lint: {d}");
+        }
+        if !report.diagnostics.is_empty() {
+            anyhow::bail!(
+                "--lint found {} diagnostic(s); aborting before training",
+                report.diagnostics.len()
+            );
+        }
+        println!(
+            "lint: clean ({} collectives/rank, peak bound {:.2} MB reserved)",
+            report.collectives_per_rank,
+            report.peak_reserved_bound as f64 / 1e6
+        );
+    }
+    let mut trainer = builder.build()?;
     println!("compute runtime: {}", trainer.runtime.backend_name());
     println!(
         "shard groups: {}",

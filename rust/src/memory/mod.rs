@@ -25,6 +25,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Result};
 
+use crate::analysis::diag::{codes, rt};
+
 /// Shared handle to one device's allocator: the FSDP engine and every
 /// DBuffer it owns account their storage against the same simulated
 /// device (rank 0's HBM view), so peak reserved/allocated bytes are
@@ -138,10 +140,14 @@ impl CachingAllocator {
             self.empty_cache();
             if self.reserved + seg_size > self.limit {
                 bail!(
-                    "OOM: reserved {} + segment {} exceeds limit {}",
-                    self.reserved,
-                    seg_size,
-                    self.limit
+                    "{}",
+                    rt(
+                        codes::PEAK_OVER_LIMIT,
+                        format_args!(
+                            "OOM: reserved {} + segment {} exceeds limit {}",
+                            self.reserved, seg_size, self.limit
+                        )
+                    )
                 );
             }
         }

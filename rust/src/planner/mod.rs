@@ -35,6 +35,7 @@ pub mod exact;
 
 use anyhow::{bail, Result};
 
+use crate::analysis::diag::{codes, rt};
 use crate::comm::Fabric;
 use crate::util::{ceil_div, gcd, lcm};
 
@@ -197,7 +198,11 @@ impl Layout {
 ///            (s - o) % g == 0;
 ///   case 3 — contains >= 1 full shard: s % g == 0 and o % g == 0.
 fn min_start(p: u64, s: u64, e: u64, g: u64) -> Option<u64> {
-    debug_assert!(e > 0 && g > 0 && s > 0);
+    debug_assert!(
+        e > 0 && g > 0 && s > 0,
+        "{}",
+        rt(codes::LAYOUT_INVALID, format_args!("degenerate extent (e={e} g={g} s={s})"))
+    );
     let mut best: Option<u64> = None;
     let mut consider = |q: u64| {
         if best.map(|b| q < b).unwrap_or(true) {
@@ -380,7 +385,11 @@ pub fn plan_with_ordering(
         perm,
         ordering: ord,
     };
-    debug_assert!(layout.verify().is_ok(), "{:?}", layout.verify());
+    debug_assert!(
+        layout.verify().is_ok(),
+        "{}",
+        rt(codes::LAYOUT_INVALID, format_args!("{:?}", layout.verify()))
+    );
     Ok(layout)
 }
 

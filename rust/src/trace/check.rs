@@ -3,7 +3,14 @@
 //! and required `bucket`/`bytes` attributes on collective spans. Shared
 //! by the `trace-check` CLI binary (CI runs it on the smoke traces) and
 //! `tests/trace_validity.rs`.
+//!
+//! Findings are [`Diagnostic`]s on the shared `analysis::diag` catalog:
+//! `FS201` (malformed document), `FS202` (span missing required args),
+//! `FS203` (partial overlap without nesting). [`validate`] remains the
+//! fail-fast `Result` façade; [`diagnostics`] accumulates every finding
+//! for the `--json` artifact path.
 
+use crate::analysis::diag::{codes, Diagnostic};
 use crate::util::json::Json;
 
 /// Collective spans that must carry both a `bucket` and a `bytes` arg.
@@ -13,14 +20,34 @@ const TRANSPORT_OPS: [&str; 5] =
     ["all_gather", "reduce_scatter", "all_reduce", "broadcast", "all_to_all"];
 
 /// Validate a parsed trace document. Returns `Err(reason)` on the first
-/// structural violation.
+/// structural violation (thin façade over [`diagnostics`]).
 pub fn validate(doc: &Json) -> Result<(), String> {
-    let events = doc
-        .get("traceEvents")
-        .and_then(Json::as_arr)
-        .ok_or("missing traceEvents array")?;
+    match diagnostics(doc).into_iter().next() {
+        None => Ok(()),
+        Some(d) => Err(d.message),
+    }
+}
+
+/// Validate a parsed trace document, accumulating every structural
+/// violation as a typed diagnostic. A malformed document (`FS201`)
+/// short-circuits — nothing after it is trustworthy.
+pub fn diagnostics(doc: &Json) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let Some(events) = doc.get("traceEvents").and_then(Json::as_arr) else {
+        out.push(Diagnostic::error(
+            codes::TRACE_MALFORMED,
+            "document",
+            "missing traceEvents array",
+        ));
+        return out;
+    };
     if events.is_empty() {
-        return Err("traceEvents is empty".into());
+        out.push(Diagnostic::error(
+            codes::TRACE_MALFORMED,
+            "document",
+            "traceEvents is empty",
+        ));
+        return out;
     }
 
     // Hierarchical runs (`metadata.topology = "HxG"` with H > 1) must
@@ -30,57 +57,105 @@ pub fn validate(doc: &Json) -> Result<(), String> {
         .and_then(|m| m.get("topology"))
         .and_then(Json::as_str)
         .and_then(|t| t.split('x').next().and_then(|h| h.parse::<u64>().ok()))
-        .map_or(false, |h| h > 1);
+        .is_some_and(|h| h > 1);
 
     // (pid, tid) -> [(ts, dur, name)]
     let mut lanes: Vec<((u64, u64), Vec<(f64, f64, String)>)> = Vec::new();
     for (i, e) in events.iter().enumerate() {
-        let ph = e
-            .get("ph")
-            .and_then(Json::as_str)
-            .ok_or_else(|| format!("event {i}: missing ph"))?;
+        let subject = format!("event {i}");
+        let Some(ph) = e.get("ph").and_then(Json::as_str) else {
+            out.push(Diagnostic::error(
+                codes::TRACE_MALFORMED,
+                subject,
+                format!("event {i}: missing ph"),
+            ));
+            return out;
+        };
         match ph {
             "M" => {
                 if e.get("name").and_then(Json::as_str).is_none() {
-                    return Err(format!("event {i}: metadata without name"));
+                    out.push(Diagnostic::error(
+                        codes::TRACE_MALFORMED,
+                        subject,
+                        format!("event {i}: metadata without name"),
+                    ));
+                    return out;
                 }
             }
             "C" => {
-                require_num(e, i, "ts")?;
-                let args =
-                    e.get("args").ok_or_else(|| format!("event {i}: counter without args"))?;
-                if args.get("value").and_then(Json::as_f64).is_none() {
-                    return Err(format!("event {i}: counter without args.value"));
+                if let Err(d) = require_num(e, i, "ts") {
+                    out.push(d);
+                    return out;
+                }
+                let value = e
+                    .get("args")
+                    .and_then(|a| a.get("value"))
+                    .and_then(Json::as_f64);
+                if value.is_none() {
+                    out.push(Diagnostic::error(
+                        codes::TRACE_MALFORMED,
+                        subject,
+                        format!("event {i}: counter without args.value"),
+                    ));
+                    return out;
                 }
             }
             "X" => {
-                let pid = require_num(e, i, "pid")? as u64;
-                let tid = require_num(e, i, "tid")? as u64;
-                let ts = require_num(e, i, "ts")?;
-                let dur = require_num(e, i, "dur")?;
-                let name = e
-                    .get("name")
-                    .and_then(Json::as_str)
-                    .ok_or_else(|| format!("event {i}: span without name"))?;
+                let nums = (
+                    require_num(e, i, "pid"),
+                    require_num(e, i, "tid"),
+                    require_num(e, i, "ts"),
+                    require_num(e, i, "dur"),
+                );
+                let (pid, tid, ts, dur) = match nums {
+                    (Ok(p), Ok(t), Ok(ts), Ok(d)) => (p as u64, t as u64, ts, d),
+                    (Err(d), ..) | (_, Err(d), ..) | (_, _, Err(d), _) | (.., Err(d)) => {
+                        out.push(d);
+                        return out;
+                    }
+                };
+                let Some(name) = e.get("name").and_then(Json::as_str) else {
+                    out.push(Diagnostic::error(
+                        codes::TRACE_MALFORMED,
+                        subject,
+                        format!("event {i}: span without name"),
+                    ));
+                    return out;
+                };
                 if e.get("cat").and_then(Json::as_str).is_none() {
-                    return Err(format!("event {i}: span without cat"));
+                    out.push(Diagnostic::error(
+                        codes::TRACE_MALFORMED,
+                        subject,
+                        format!("event {i}: span without cat"),
+                    ));
+                    return out;
                 }
                 let args = e.get("args");
                 let has = |key: &str| args.and_then(|a| a.get(key)).is_some();
                 if LOGICAL_COLLECTIVES.contains(&name) && (!has("bucket") || !has("bytes")) {
-                    return Err(format!(
-                        "event {i}: collective span '{name}' missing bucket/bytes args"
+                    out.push(Diagnostic::error(
+                        codes::TRACE_SPAN_ARGS,
+                        name,
+                        format!(
+                            "event {i}: collective span '{name}' missing bucket/bytes args"
+                        ),
                     ));
                 }
                 if TRANSPORT_OPS.contains(&name) && !has("bytes") {
-                    return Err(format!(
-                        "event {i}: transport span '{name}' missing bytes arg"
+                    out.push(Diagnostic::error(
+                        codes::TRACE_SPAN_ARGS,
+                        name,
+                        format!("event {i}: transport span '{name}' missing bytes arg"),
                     ));
                 }
                 if hierarchical && TRANSPORT_OPS.contains(&name) && !has("tier") {
-                    return Err(format!(
-                        "event {i}: transport span '{name}' missing tier arg \
-                         on hierarchical-topology run"
+                    out.push(Diagnostic::error(
+                        codes::TRACE_SPAN_ARGS,
+                        name,
+                        format!(
+                            "event {i}: transport span '{name}' missing tier arg \
+                             on hierarchical-topology run"
+                        ),
                     ));
                 }
                 let key = (pid, tid);
@@ -89,7 +164,14 @@ pub fn validate(doc: &Json) -> Result<(), String> {
                     None => lanes.push((key, vec![(ts, dur, name.to_string())])),
                 }
             }
-            other => return Err(format!("event {i}: unknown ph '{other}'")),
+            other => {
+                out.push(Diagnostic::error(
+                    codes::TRACE_MALFORMED,
+                    subject,
+                    format!("event {i}: unknown ph '{other}'"),
+                ));
+                return out;
+            }
         }
     }
 
@@ -111,23 +193,31 @@ pub fn validate(doc: &Json) -> Result<(), String> {
             }
             if let Some(top) = stack.last() {
                 if end > top.1 + EPS {
-                    return Err(format!(
-                        "lane ({pid},{tid}): span '{name}' [{ts:.3},{end:.3}] \
-                         overlaps '{}' ending at {:.3} without nesting",
-                        top.2, top.1
+                    out.push(Diagnostic::error(
+                        codes::TRACE_OVERLAP,
+                        format!("lane ({pid},{tid})"),
+                        format!(
+                            "lane ({pid},{tid}): span '{name}' [{ts:.3},{end:.3}] \
+                             overlaps '{}' ending at {:.3} without nesting",
+                            top.2, top.1
+                        ),
                     ));
                 }
             }
             stack.push((ts, end, name));
         }
     }
-    Ok(())
+    out
 }
 
-fn require_num(e: &Json, i: usize, key: &str) -> Result<f64, String> {
-    e.get(key)
-        .and_then(Json::as_f64)
-        .ok_or_else(|| format!("event {i}: missing numeric '{key}'"))
+fn require_num(e: &Json, i: usize, key: &str) -> Result<f64, Diagnostic> {
+    e.get(key).and_then(Json::as_f64).ok_or_else(|| {
+        Diagnostic::error(
+            codes::TRACE_MALFORMED,
+            format!("event {i}"),
+            format!("event {i}: missing numeric '{key}'"),
+        )
+    })
 }
 
 #[cfg(test)]
@@ -160,6 +250,7 @@ mod tests {
             span(1, 2, 5.0, 500.0, "other-lane"),
         ]);
         validate(&d).unwrap();
+        assert!(diagnostics(&d).is_empty());
     }
 
     #[test]
@@ -169,6 +260,9 @@ mod tests {
             span(0, 2, 50.0, 100.0, "b"),
         ]);
         assert!(validate(&d).is_err());
+        let ds = diagnostics(&d);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].code, codes::TRACE_OVERLAP);
     }
 
     #[test]
@@ -176,6 +270,7 @@ mod tests {
         let d = doc(vec![span(0, 2, 0.0, 1.0, "ag")]);
         let err = validate(&d).unwrap_err();
         assert!(err.contains("bucket"), "{err}");
+        assert_eq!(diagnostics(&d)[0].code, codes::TRACE_SPAN_ARGS);
     }
 
     #[test]
@@ -190,6 +285,7 @@ mod tests {
         ]);
         let err = validate(&hier).unwrap_err();
         assert!(err.contains("tier"), "{err}");
+        assert_eq!(diagnostics(&hier)[0].code, codes::TRACE_SPAN_ARGS);
         // A single-host topology ("1x8") stays exempt.
         let single = Json::obj(vec![
             ("traceEvents", Json::Arr(vec![span(0, 2, 0.0, 1.0, "all_gather")])),
@@ -226,5 +322,8 @@ mod tests {
         assert!(validate(&Json::obj(vec![])).is_err());
         let no_ph = Json::obj(vec![("name", Json::str("x"))]);
         assert!(validate(&doc(vec![no_ph])).is_err());
+        for d in [doc(vec![]), Json::obj(vec![])] {
+            assert_eq!(diagnostics(&d)[0].code, codes::TRACE_MALFORMED);
+        }
     }
 }

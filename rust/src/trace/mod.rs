@@ -391,6 +391,34 @@ impl Tracer {
         out
     }
 
+    /// The recorded logical collective spans in push order:
+    /// `(step, name, bucket, phase, bytes)` for every `ag`/`rs` span.
+    /// This is the dynamic side of the static/trace cross-validation —
+    /// `analysis::AnalysisReport::expected_subsequence` predicts the
+    /// per-(name, phase) subsequences this must contain for each step.
+    pub fn collective_sequence(&self) -> Vec<(u64, String, String, String, u64)> {
+        let spans = self.inner.spans.lock().unwrap();
+        spans
+            .iter()
+            .filter(|s| s.name == "ag" || s.name == "rs")
+            .map(|s| {
+                let phase = s
+                    .attrs
+                    .iter()
+                    .find(|(k, _)| *k == "phase")
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_default();
+                (
+                    s.step,
+                    s.name.to_string(),
+                    s.bucket.clone().unwrap_or_default(),
+                    phase,
+                    s.bytes.unwrap_or(0),
+                )
+            })
+            .collect()
+    }
+
     /// Sum of exposed-flagged span durations in seconds (the span-side
     /// view of `ExecReport::exposed_comm_s`).
     pub fn exposed_total_s(&self) -> f64 {

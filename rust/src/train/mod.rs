@@ -367,6 +367,43 @@ impl SessionBuilder {
         }
     }
 
+    /// Statically lint the session this builder would construct, without
+    /// building it: resolve the wrap spec exactly as [`SessionBuilder::build`]
+    /// does (config manifest, overrides, PJRT executor fallback), then
+    /// elaborate the full per-rank schedule into the analysis IR and run
+    /// every check. This is the `--lint` pre-flight on `train` and the
+    /// `fsdp-lint --model` path; it performs no compute and allocates no
+    /// shards.
+    pub fn analyze(&self) -> Result<crate::analysis::AnalysisReport> {
+        let runtime = Engine::load_default().context("loading compute runtime")?;
+        let cfg = runtime
+            .manifest
+            .configs
+            .get(&self.config)
+            .ok_or_else(|| anyhow!("config '{}' not in manifest", self.config))?
+            .clone();
+        let mut spec = self.resolve_spec(cfg.n_layers);
+        let (blanket, specific): (Vec<&GroupOverride>, Vec<&GroupOverride>) =
+            self.overrides.iter().partition(|o| o.which == "layers");
+        for o in blanket.into_iter().chain(specific) {
+            apply_group_override(&mut spec, o, self.hyper)?;
+        }
+        // mirror build(): PJRT can only drive the sequential schedule
+        let exec = if runtime.is_native() { self.exec } else { ExecMode::Sequential };
+        Ok(crate::analysis::lint(&crate::analysis::LintRequest {
+            model: &self.config,
+            params: &cfg.params,
+            spec: &spec,
+            devices: self.devices,
+            replicas: self.replicas,
+            backend: self.backend,
+            exec,
+            topology: self.fabric.topology,
+            native_layers: Some(cfg.n_layers),
+            mem_limit: crate::fsdp::DEVICE_MEM_LIMIT,
+        }))
+    }
+
     pub fn build(self) -> Result<TrainSession> {
         let runtime = Engine::load_default().context("loading compute runtime")?;
         let cfg = runtime

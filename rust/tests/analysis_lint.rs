@@ -1,0 +1,312 @@
+//! Seeded-defect fixtures for the static analyzer: each fixture plants
+//! exactly one protocol defect into an otherwise-clean elaborated
+//! program (or plan) and asserts the analyzer reports exactly the
+//! expected diagnostic code — no false positives from the untouched
+//! checks, no misclassification. The closing property test sweeps every
+//! shipped preset x backend x exec-mode x precision x topology combo
+//! (the same matrix the CI `plan-lint` job runs via `fsdp-lint
+//! --matrix`) and demands a clean report for all of them.
+
+use vescale_fsdp::analysis::diag::codes;
+use vescale_fsdp::analysis::ir::{ClaimId, CollOp, Phase};
+use vescale_fsdp::analysis::{
+    elaborate, lint, run_checks, AnalysisReport, Event, LintRequest, PlanModel,
+};
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::Topology;
+use vescale_fsdp::config::presets;
+use vescale_fsdp::fsdp::{ExecMode, DEVICE_MEM_LIMIT};
+use vescale_fsdp::quant::CommPrecision;
+
+/// Build the clean base plan every fixture mutates: the `tiny` preset
+/// on an 8-rank flat mesh.
+fn tiny_plan(exec: ExecMode, prec: CommPrecision, mem_limit: u64) -> PlanModel {
+    let preset = presets::by_name("tiny").expect("tiny preset shipped");
+    let params = preset.param_table();
+    let mut spec = preset.shard_spec();
+    for g in spec.groups.iter_mut() {
+        g.comm_precision = prec;
+    }
+    PlanModel::build(&LintRequest {
+        model: "tiny",
+        params: &params,
+        spec: &spec,
+        devices: 8,
+        replicas: 1,
+        backend: CommBackend::Serial,
+        exec,
+        topology: Topology::flat(),
+        native_layers: None,
+        mem_limit,
+    })
+    .unwrap_or_else(|d| panic!("tiny plan should build: {d}"))
+}
+
+/// The fixture contract: at least one diagnostic, and every diagnostic
+/// carries the planted defect's code.
+fn assert_only_code(report: &AnalysisReport, code: &str, fixture: &str) {
+    assert!(
+        !report.diagnostics.is_empty(),
+        "{fixture}: expected {code} but the report is clean"
+    );
+    for d in &report.diagnostics {
+        assert_eq!(d.code, code, "{fixture}: expected only {code}, got: {d}");
+    }
+}
+
+#[test]
+fn clean_base_plans_lint_clean() {
+    for exec in [ExecMode::Sequential, ExecMode::Pipelined { prefetch: 2 }] {
+        for prec in [CommPrecision::F32, CommPrecision::Q8 { block: 64 }] {
+            let pm = tiny_plan(exec, prec, DEVICE_MEM_LIMIT);
+            let prog = elaborate(&pm);
+            let report = run_checks(&pm, &prog);
+            assert!(
+                report.diagnostics.is_empty(),
+                "clean base plan ({} / {}) reported: {}",
+                report.exec,
+                prec.name(),
+                report.diagnostics[0]
+            );
+            assert!(report.ok());
+            assert!(report.collectives_per_rank > 0);
+            assert!(report.peak_reserved_bound > 0);
+        }
+    }
+}
+
+/// FS001: one rank's collective payload diverges from rank 0's — the
+/// rendezvous barrier would hang. Only the SPMD check may fire (the
+/// per-rank protocol walk is order-based and ignores bytes).
+#[test]
+fn fixture_rank_divergent_schedule_is_fs001() {
+    let pm = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+    let mut prog = elaborate(&pm);
+    for e in prog.ranks[1].iter_mut() {
+        if let Event::Coll(c) = e {
+            c.bytes += 1;
+            break;
+        }
+    }
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::SPMD_DIVERGENCE, "rank-divergent schedule");
+    assert!(
+        report.diagnostics[0].message.contains("diverges from rank 0"),
+        "unexpected FS001 message: {}",
+        report.diagnostics[0]
+    );
+}
+
+/// FS002: a wait on an async-gather handle that was never issued (a
+/// stale handle kept across a reshard). Planted identically on every
+/// rank so SPMD conformance stays intact.
+#[test]
+fn fixture_stale_async_handle_is_fs002() {
+    let pm = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+    let mut prog = elaborate(&pm);
+    let mut stale = prog.ranks[0]
+        .iter()
+        .find_map(|e| match e {
+            Event::Coll(c) if c.op == CollOp::AllGather => Some(c.clone()),
+            _ => None,
+        })
+        .expect("program elaborates at least one gather");
+    stale.phase = Phase::Wait;
+    for rank in prog.ranks.iter_mut() {
+        rank.push(Event::Coll(stale.clone()));
+    }
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::HANDLE_DISCIPLINE, "stale async handle");
+    assert!(
+        report.diagnostics.iter().any(|d| d.message.contains("never issued")),
+        "expected a stale-handle message, got: {}",
+        report.diagnostics[0]
+    );
+}
+
+/// FS003: a transient full buffer whose free was dropped — the ledger
+/// replay finds it still claimed at step end. The paired `Reshard`
+/// marker stays, so the reshard-pairing check (FS008) must not fire.
+#[test]
+fn fixture_leaked_full_buffer_is_fs003() {
+    let pm = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+    let mut prog = elaborate(&pm);
+    for rank in prog.ranks.iter_mut() {
+        let pos = rank
+            .iter()
+            .position(|e| matches!(e, Event::Free { id: ClaimId::Full(_) }))
+            .expect("program frees a full buffer");
+        rank.remove(pos);
+    }
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::LIFETIME_IMBALANCE, "leaked full buffer");
+    assert!(
+        report.diagnostics.iter().any(|d| d.message.contains("still claimed at step end")),
+        "expected a leak message, got: {}",
+        report.diagnostics[0]
+    );
+}
+
+/// FS008: a bucket gathered but never resharded (unbalanced
+/// gather/reshard cycle). The buffer free stays, so the allocator
+/// ledger (FS003) must not fire.
+#[test]
+fn fixture_unbalanced_reshard_is_fs008() {
+    let pm = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+    let mut prog = elaborate(&pm);
+    for rank in prog.ranks.iter_mut() {
+        let pos = rank
+            .iter()
+            .position(|e| matches!(e, Event::Reshard { .. }))
+            .expect("program reshards");
+        rank.remove(pos);
+    }
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::RESHARD_UNPAIRED, "unbalanced reshard");
+    assert!(
+        report.diagnostics.iter().any(|d| d.message.contains("still gathered at step end")),
+        "expected an unpaired-reshard message, got: {}",
+        report.diagnostics[0]
+    );
+}
+
+/// FS004: a quant block size that cannot tile the planned shard — a
+/// block and its scale would straddle two devices. The layout itself is
+/// untouched (FS011 must not fire).
+#[test]
+fn fixture_misaligned_quant_block_is_fs004() {
+    let mut pm = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+    let s = pm.groups[0].layout.shard_size;
+    assert!(s > 0, "tiny embed group shards to a nonzero size");
+    // block = shard + 1 divides no shard of this layout
+    pm.groups[0].comm_precision = CommPrecision::Q8 { block: (s + 1) as usize };
+    let prog = elaborate(&pm);
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::QUANT_MISALIGNED, "misaligned quant block");
+}
+
+/// FS005: hierarchical topologies that cannot dispatch — zero pipeline
+/// segments, or a host grid that does not span the fsdp mesh.
+#[test]
+fn fixture_bad_topology_is_fs005() {
+    let base = tiny_plan(ExecMode::Sequential, CommPrecision::F32, DEVICE_MEM_LIMIT);
+
+    let mut pm = base.clone();
+    pm.topology = Topology { hosts: 2, gpus_per_host: 4, segments: 0 };
+    let prog = elaborate(&pm);
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::BAD_TOPOLOGY, "zero-segment topology");
+
+    let mut pm = base;
+    pm.topology = Topology { hosts: 2, gpus_per_host: 2, segments: 2 };
+    let prog = elaborate(&pm);
+    let report = run_checks(&pm, &prog);
+    assert_only_code(&report, codes::BAD_TOPOLOGY, "mesh/topology span mismatch");
+    assert!(
+        report.diagnostics.iter().any(|d| d.message.contains("spans 4 ranks")),
+        "expected a span-mismatch message, got: {}",
+        report.diagnostics[0]
+    );
+}
+
+/// FS009: the statically derived footprint cannot fit the device
+/// budget — the ledger replay OOMs on the persistent shard claims.
+#[test]
+fn fixture_over_budget_plan_is_fs009() {
+    let preset = presets::by_name("tiny").expect("tiny preset shipped");
+    let params = preset.param_table();
+    let spec = preset.shard_spec();
+    let report = lint(&LintRequest {
+        model: "tiny",
+        params: &params,
+        spec: &spec,
+        devices: 8,
+        replicas: 1,
+        backend: CommBackend::Serial,
+        exec: ExecMode::Sequential,
+        topology: Topology::flat(),
+        native_layers: None,
+        mem_limit: 1, // one byte of device memory
+    });
+    assert_only_code(&report, codes::PEAK_OVER_LIMIT, "over-budget plan");
+}
+
+/// Mesh sizing rule shared with `fsdp-lint --matrix`: smallest
+/// power-of-two device count (>= 8) keeping the persistent shard+grad
+/// footprint within a quarter of the device budget.
+fn matrix_devices(total_params: u64) -> usize {
+    let mut devices = 8usize;
+    while total_params.saturating_mul(8) / devices as u64 > DEVICE_MEM_LIMIT / 4 {
+        devices *= 2;
+    }
+    devices
+}
+
+/// Property: every shipped preset x backend x exec-mode x precision x
+/// topology combo lints clean — the static analyzer accepts everything
+/// the engine actually ships. Sequential mode is skipped where the full
+/// parameters exceed half the device budget (same rule as the CI
+/// matrix: the sequential schedule gathers every bucket at once).
+#[test]
+fn shipped_matrix_lints_clean() {
+    let preset_names = [
+        "tiny", "small", "llama70b", "gptoss120b", "dsv3_671b", "moe400b", "moe800b",
+        "moe1200b", "moe2400b",
+    ];
+    for name in preset_names {
+        let preset = presets::by_name(name).expect("shipped preset");
+        let devices = matrix_devices(preset.total_params());
+        let seq_fits = preset.total_params().saturating_mul(4) < DEVICE_MEM_LIMIT / 2;
+        let params = preset.param_table();
+        let topos = [
+            Topology::flat(),
+            Topology { hosts: devices / 4, gpus_per_host: 4, segments: 2 },
+        ];
+        for backend in [CommBackend::Serial, CommBackend::Threaded] {
+            for prefetch in [0usize, 2] {
+                if prefetch == 0 && !seq_fits {
+                    continue;
+                }
+                for prec_name in ["f32", "bf16", "q8"] {
+                    let prec = CommPrecision::parse(prec_name).expect("shipped precision");
+                    let mut spec = preset.shard_spec();
+                    for g in spec.groups.iter_mut() {
+                        g.comm_precision = prec;
+                    }
+                    for topology in topos {
+                        let report = lint(&LintRequest {
+                            model: name,
+                            params: &params,
+                            spec: &spec,
+                            devices,
+                            replicas: 1,
+                            backend,
+                            exec: ExecMode::from_prefetch(prefetch),
+                            topology,
+                            native_layers: None,
+                            mem_limit: DEVICE_MEM_LIMIT,
+                        });
+                        assert!(
+                            report.diagnostics.is_empty(),
+                            "{name} devices={devices} backend={} exec={} prec={prec_name} \
+                             topo={}: {}",
+                            backend.name(),
+                            report.exec,
+                            report.topology,
+                            report
+                                .diagnostics
+                                .iter()
+                                .map(ToString::to_string)
+                                .collect::<Vec<_>>()
+                                .join("; ")
+                        );
+                        assert!(
+                            report.collectives_per_rank > 0,
+                            "{name}: no collectives elaborated"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,119 @@
+//! Static/dynamic cross-validation: the analyzer's symbolic elaboration
+//! (`SessionBuilder::analyze`) predicts, before any thread spawns, the
+//! exact per-(span, phase) collective subsequences the tracer will
+//! record on a live run — and an allocator peak that upper-bounds the
+//! measured one. Runs the `tiny` config for two steps across
+//! {serial, threaded} x {sequential, pipelined} x {flat, 2x4:2} and
+//! compares span-for-span.
+
+use vescale_fsdp::analysis::AnalysisReport;
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::{Fabric, Topology};
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::trace::TraceLevel;
+use vescale_fsdp::train::TrainSession;
+
+/// Every (name, phase) lane a logical collective span can occupy.
+const LANES: [(&str, &str); 6] = [
+    ("ag", "sync"),
+    ("rs", "sync"),
+    ("ag", "issue"),
+    ("ag", "wait"),
+    ("rs", "issue"),
+    ("rs", "wait"),
+];
+
+/// The traced `ag`/`rs` spans of each step must match the static
+/// prediction: same count, and per (name, phase) the identical
+/// (bucket, bytes) sequence.
+fn assert_sequences(
+    report: &AnalysisReport,
+    traced: &[(u64, String, String, String, u64)],
+    label: &str,
+) {
+    let mut steps: Vec<u64> = traced.iter().map(|s| s.0).collect();
+    steps.dedup();
+    assert_eq!(steps.len(), 2, "{label}: expected spans from 2 steps, got {steps:?}");
+    for &step in &steps {
+        let spans: Vec<_> = traced.iter().filter(|s| s.0 == step).collect();
+        assert_eq!(
+            spans.len(),
+            report.expected_spans.len(),
+            "{label} step {step}: traced {} collective spans, static predicts {}",
+            spans.len(),
+            report.expected_spans.len()
+        );
+        for (name, phase) in LANES {
+            let expected = report.expected_subsequence(name, phase);
+            let got: Vec<(String, u64)> = spans
+                .iter()
+                .filter(|s| s.1 == name && s.3 == phase)
+                .map(|s| (s.2.clone(), s.4))
+                .collect();
+            assert_eq!(
+                got, expected,
+                "{label} step {step}: {name}/{phase} (bucket, bytes) sequence diverges \
+                 from the static prediction"
+            );
+        }
+    }
+}
+
+#[test]
+fn static_schedule_matches_traced_run() {
+    let hier = Topology { hosts: 2, gpus_per_host: 4, segments: 2 };
+    for backend in [CommBackend::Serial, CommBackend::Threaded] {
+        for exec in [ExecMode::Sequential, ExecMode::Pipelined { prefetch: 2 }] {
+            for topology in [None, Some(hier)] {
+                let label = format!(
+                    "tiny backend={} exec={} topo={}",
+                    backend.name(),
+                    exec.name(),
+                    topology.map_or("flat".to_string(), |t| t.label())
+                );
+                let mut builder = TrainSession::builder("tiny")
+                    .devices(8)
+                    .seed(7)
+                    .backend(backend)
+                    .exec(exec)
+                    .trace(TraceLevel::Comm);
+                if let Some(t) = topology {
+                    builder = builder.fabric(Fabric::h800().with_topology(t));
+                }
+
+                // static pre-flight on the exact session configuration
+                let report = builder.analyze().unwrap_or_else(|e| {
+                    panic!("{label}: analyze failed: {e:#}");
+                });
+                assert!(
+                    report.diagnostics.is_empty(),
+                    "{label}: shipped config must lint clean, got: {}",
+                    report.diagnostics[0]
+                );
+                assert!(!report.expected_spans.is_empty(), "{label}: empty prediction");
+
+                // live run on the same builder
+                let mut session = builder.build().unwrap();
+                session.run(2).unwrap();
+
+                assert_sequences(&report, &session.tracer.collective_sequence(), &label);
+
+                // the statically derived peak bounds the measured one
+                let last = session.log.last().expect("two steps logged");
+                assert!(last.peak_reserved > 0, "{label}: no allocator activity");
+                assert!(
+                    last.peak_reserved <= report.peak_reserved_bound,
+                    "{label}: measured peak reserved {} exceeds static bound {}",
+                    last.peak_reserved,
+                    report.peak_reserved_bound
+                );
+                assert!(
+                    last.peak_allocated <= report.peak_allocated_bound,
+                    "{label}: measured peak allocated {} exceeds static bound {}",
+                    last.peak_allocated,
+                    report.peak_allocated_bound
+                );
+            }
+        }
+    }
+}

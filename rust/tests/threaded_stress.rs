@@ -1,0 +1,166 @@
+//! Seeded-interleaving stress test for the ThreadedComm rendezvous
+//! protocol: `cluster::set_arrival_stagger` delays each rank's entry
+//! into every collective by a seeded permutation of arrival order, so
+//! barrier phases are exercised under adversarial thread schedules. The
+//! properties under test are exactly the two the static analyzer proves
+//! on the schedule level (`analysis::checks::check_spmd`): every
+//! collective terminates regardless of arrival order (rendezvous
+//! deadlock-freedom), and the results stay bit-identical to the serial
+//! backend (the protocol's disjointness argument holds under any
+//! interleaving).
+
+use vescale_fsdp::cluster::{
+    make_comm, make_comm_topo, set_arrival_stagger, CommBackend, Communicator, ThreadedComm,
+};
+use vescale_fsdp::comm::Topology;
+use vescale_fsdp::trace::Tracer;
+use vescale_fsdp::util::Rng;
+
+/// Seeded per-rank buffers, identical for every backend under test.
+fn seeded_bufs(m: usize, len: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..m)
+        .map(|_| (0..len).map(|_| rng.normal_f32()).collect())
+        .collect()
+}
+
+/// Arrival delays realizing a seeded permutation of rank arrival order:
+/// the rank drawn first enters immediately, the next 100us later, etc.
+fn stagger_for(m: usize, rng: &mut Rng) -> Vec<u64> {
+    let mut order: Vec<usize> = (0..m).collect();
+    rng.shuffle(&mut order);
+    let mut delays = vec![0u64; m];
+    for (slot, &rank) in order.iter().enumerate() {
+        delays[rank] = 100 * slot as u64;
+    }
+    delays
+}
+
+/// Run every collective on both backends from identical inputs and
+/// demand bit-identical outputs. `s` is the shard size; AllGather inputs
+/// only populate each rank's own shard (the gather contract).
+fn assert_collectives_match(threaded: &dyn Communicator, m: usize, s: usize, seed: u64) {
+    let serial = make_comm(CommBackend::Serial);
+
+    // AllGather: rank k owns bufs[k][k*s..(k+1)*s]
+    let mut a = seeded_bufs(m, m * s, seed);
+    for (k, b) in a.iter_mut().enumerate() {
+        for (i, x) in b.iter_mut().enumerate() {
+            if i / s != k {
+                *x = 0.0;
+            }
+        }
+    }
+    let mut b = a.clone();
+    threaded.all_gather(&mut a, s).unwrap();
+    serial.all_gather(&mut b, s).unwrap();
+    assert_eq!(a, b, "all_gather diverged (m={m} s={s})");
+
+    // ReduceScatter (sum, scaled)
+    let mut a = seeded_bufs(m, m * s, seed ^ 1);
+    let mut b = a.clone();
+    threaded.reduce_scatter(&mut a, s, 1.0 / m as f32).unwrap();
+    serial.reduce_scatter(&mut b, s, 1.0 / m as f32).unwrap();
+    assert_eq!(a, b, "reduce_scatter diverged (m={m} s={s})");
+
+    // AllReduce over whole buffers
+    let mut a = seeded_bufs(m, m * s, seed ^ 2);
+    let mut b = a.clone();
+    threaded.all_reduce(&mut a, 0.5).unwrap();
+    serial.all_reduce(&mut b, 0.5).unwrap();
+    assert_eq!(a, b, "all_reduce diverged (m={m} s={s})");
+
+    // Broadcast from a seed-dependent root
+    let mut a = seeded_bufs(m, m * s, seed ^ 3);
+    let mut b = a.clone();
+    let root = (seed as usize) % m;
+    threaded.broadcast(&mut a, root).unwrap();
+    serial.broadcast(&mut b, root).unwrap();
+    assert_eq!(a, b, "broadcast diverged (m={m} root={root})");
+
+    // All-to-all slot exchange
+    let mut a = seeded_bufs(m, m * s, seed ^ 4);
+    let mut b = a.clone();
+    threaded.all_to_all(&mut a, s).unwrap();
+    serial.all_to_all(&mut b, s).unwrap();
+    assert_eq!(a, b, "all_to_all diverged (m={m} s={s})");
+}
+
+fn stress_flat(m: usize, trials: u64) {
+    // threshold 0 forces the rendezvous algorithms even for tiny buffers
+    // (the serial fallback would dodge the very races under test)
+    let threaded = ThreadedComm::with_min_parallel_elems(0);
+    let mut rng = Rng::new(0xC0FFEE ^ m as u64);
+    for trial in 0..trials {
+        let delays = stagger_for(m, &mut rng);
+        set_arrival_stagger(&delays);
+        // odd shard size: chunk boundaries land mid-cacheline, and the
+        // ring steps move unaligned regions
+        assert_collectives_match(&threaded, m, 33, trial);
+    }
+    set_arrival_stagger(&[]);
+}
+
+#[test]
+fn rendezvous_survives_arrival_permutations_m4() {
+    stress_flat(4, 12);
+}
+
+#[test]
+fn rendezvous_survives_arrival_permutations_m8() {
+    stress_flat(8, 12);
+}
+
+#[test]
+fn hierarchical_rendezvous_survives_stagger() {
+    // 2 hosts x 4 GPUs, 2 pipeline segments: whole-cluster AG/RS take the
+    // two-level path (s large enough to clear the serial-fallback
+    // threshold), still bit-identical to serial under staggered arrival.
+    let topo = Topology { hosts: 2, gpus_per_host: 4, segments: 2 };
+    let threaded = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+    let m = topo.total();
+    let s = 512;
+    let serial = make_comm(CommBackend::Serial);
+    let mut rng = Rng::new(0xD15C0);
+    for trial in 0..8u64 {
+        let delays = stagger_for(m, &mut rng);
+        set_arrival_stagger(&delays);
+
+        let mut a = seeded_bufs(m, m * s, trial);
+        for (k, b) in a.iter_mut().enumerate() {
+            for (i, x) in b.iter_mut().enumerate() {
+                if i / s != k {
+                    *x = 0.0;
+                }
+            }
+        }
+        let mut b = a.clone();
+        threaded.all_gather(&mut a, s).unwrap();
+        serial.all_gather(&mut b, s).unwrap();
+        assert_eq!(a, b, "hierarchical all_gather diverged (trial {trial})");
+
+        let mut a = seeded_bufs(m, m * s, trial ^ 0xAB);
+        let mut b = a.clone();
+        threaded.reduce_scatter(&mut a, s, 1.0 / m as f32).unwrap();
+        serial.reduce_scatter(&mut b, s, 1.0 / m as f32).unwrap();
+        assert_eq!(a, b, "hierarchical reduce_scatter diverged (trial {trial})");
+    }
+    set_arrival_stagger(&[]);
+}
+
+#[test]
+fn stagger_hook_is_scoped_to_the_setting_thread() {
+    // another thread's collectives must not observe this thread's delays
+    set_arrival_stagger(&[200_000; 4]);
+    let t0 = std::time::Instant::now();
+    std::thread::spawn(|| {
+        let threaded = ThreadedComm::with_min_parallel_elems(0);
+        let mut bufs = seeded_bufs(4, 4 * 16, 9);
+        threaded.all_reduce(&mut bufs, 1.0).unwrap();
+    })
+    .join()
+    .unwrap();
+    // a leak would add >= 200ms of concurrent sleeps to every fan-out
+    assert!(t0.elapsed().as_millis() < 150, "stagger leaked across threads");
+    set_arrival_stagger(&[]);
+}
