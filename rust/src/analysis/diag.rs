@@ -11,7 +11,9 @@
 //! findings can be correlated mechanically.
 //!
 //! `FS0xx` codes are plan/protocol invariants; `FS2xx` codes are
-//! structural properties of exported Chrome-trace documents.
+//! structural properties of exported Chrome-trace documents and runtime
+//! health findings from the [`crate::obs`] monitor (watchdog stalls,
+//! counter-track violations, metric regressions, artifact I/O).
 
 use std::fmt;
 
@@ -59,6 +61,17 @@ pub mod codes {
     /// Two spans on one (pid, tid) lane partially overlap — the timeline
     /// is not strictly nested.
     pub const TRACE_OVERLAP: &str = "FS203";
+    /// A rank heartbeat sat inside one rendezvous past the watchdog
+    /// deadline — the collective watchdog's stalled-rank finding.
+    pub const WATCHDOG_STALL: &str = "FS204";
+    /// A counter track violates its value invariant: a cumulative
+    /// (`wire.*`) series decreased, or a memory sample went negative.
+    pub const COUNTER_TRACK: &str = "FS205";
+    /// A metric series regressed beyond the rolling-window (or
+    /// `fsdp-report`) tolerance.
+    pub const METRIC_REGRESSION: &str = "FS206";
+    /// A trace/metrics/postmortem artifact could not be written.
+    pub const EXPORT_IO: &str = "FS207";
 }
 
 /// `(code, title)` rows of the full catalog, in code order — rendered by
@@ -79,6 +92,10 @@ pub fn catalog() -> &'static [(&'static str, &'static str)] {
         (codes::TRACE_MALFORMED, "trace document malformed"),
         (codes::TRACE_SPAN_ARGS, "trace span missing required args"),
         (codes::TRACE_OVERLAP, "trace spans partially overlap without nesting"),
+        (codes::WATCHDOG_STALL, "rank stalled in a rendezvous past the watchdog deadline"),
+        (codes::COUNTER_TRACK, "counter track non-monotonic or negative"),
+        (codes::METRIC_REGRESSION, "metric series regressed beyond tolerance"),
+        (codes::EXPORT_IO, "trace/metrics artifact could not be written"),
     ]
 }
 

@@ -1,0 +1,328 @@
+//! `fsdp-report`: the CI perf gate over metrics snapshots.
+//!
+//!     fsdp-report baseline.json current.json [--tolerance 0.1] [--list]
+//!     fsdp-report --self-check file [file ...]
+//!
+//! Compares two `fsdp-metrics-v1` (or any numeric JSON, e.g. BENCH
+//! snapshot) documents: every numeric leaf is flattened to a dotted
+//! path (arrays of numbers collapse to their mean), and paths whose
+//! names imply a direction are gated —
+//!
+//! * **lower is better**: names containing `time`, `seconds`, `_s`,
+//!   `bytes`, `exposed`, or `skew` — flagged when current exceeds
+//!   baseline by more than `--tolerance` (fraction, default 0.1);
+//! * **higher is better**: names containing `efficiency`, `overlap`,
+//!   `hidden`, or `throughput` — flagged when current undercuts
+//!   baseline by more than the tolerance;
+//! * everything else is informational.
+//!
+//! Exit code 0 = within tolerance, 1 = regression(s) found (each
+//! printed as a `[FS206]` diagnostic), 2 = usage / IO / parse error.
+//!
+//! `--self-check` instead validates each file in place: `.prom` files
+//! must be well-formed Prometheus text exposition with at least one
+//! sample; anything else must parse as JSON with at least one numeric
+//! leaf. Exit 0 = all valid, 2 = any invalid.
+
+use std::process::ExitCode;
+
+use vescale_fsdp::analysis::diag::{codes, rt};
+use vescale_fsdp::util::args::Args;
+use vescale_fsdp::util::json::Json;
+
+fn main() -> ExitCode {
+    let args = Args::from_env();
+    if args.bool("self-check") {
+        return self_check(&args.positional);
+    }
+    let [base_path, cur_path] = args.positional.as_slice() else {
+        eprintln!("usage: fsdp-report <baseline.json> <current.json> [--tolerance 0.1]");
+        eprintln!("       fsdp-report --self-check <file> [file ...]");
+        return ExitCode::from(2);
+    };
+    let tolerance = args.f64_or("tolerance", 0.1);
+    let (base, cur) = match (load_json(base_path), load_json(cur_path)) {
+        (Ok(b), Ok(c)) => (b, c),
+        (Err(e), _) | (_, Err(e)) => {
+            eprintln!("{e}");
+            return ExitCode::from(2);
+        }
+    };
+    let report = compare(&base, &cur, tolerance);
+    for line in &report.regressions {
+        eprintln!("{line}");
+    }
+    if args.bool("list") {
+        for (path, b, c) in &report.compared {
+            println!("{path}: {b} -> {c}");
+        }
+    }
+    println!(
+        "fsdp-report: {} metrics compared ({} gated), {} regression(s) at {:.0}% tolerance",
+        report.compared.len(),
+        report.gated,
+        report.regressions.len(),
+        tolerance * 100.0
+    );
+    if report.regressions.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(1)
+    }
+}
+
+fn load_json(path: &str) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| rt(codes::EXPORT_IO, format!("reading {path}: {e}")))?;
+    Json::parse(&text).map_err(|e| rt(codes::EXPORT_IO, format!("parsing {path}: {e}")))
+}
+
+struct Report {
+    /// (path, baseline, current) for every shared numeric leaf.
+    compared: Vec<(String, f64, f64)>,
+    /// How many compared paths had a gating direction.
+    gated: usize,
+    /// One rendered `[FS206]` line per out-of-tolerance gated path.
+    regressions: Vec<String>,
+}
+
+/// Direction a metric name implies: `Some(true)` = lower is better,
+/// `Some(false)` = higher is better, `None` = informational only.
+fn direction(path: &str) -> Option<bool> {
+    let p = path.to_ascii_lowercase();
+    let higher = ["efficiency", "overlap", "hidden", "throughput"];
+    if higher.iter().any(|k| p.contains(k)) {
+        return Some(false);
+    }
+    let lower = ["time", "seconds", "_s", "bytes", "exposed", "skew"];
+    if lower.iter().any(|k| p.contains(k)) {
+        return Some(true);
+    }
+    None
+}
+
+/// Flatten every numeric leaf of `j` into `out` as a dotted path.
+/// Arrays of numbers collapse to their mean (a series' shape, not its
+/// length, is what the gate cares about); bookkeeping keys that would
+/// gate nonsense (`steps`, `bounds`, `counts`) are skipped.
+fn flatten(j: &Json, prefix: &str, out: &mut Vec<(String, f64)>) {
+    match j {
+        Json::Num(n) => out.push((prefix.to_string(), *n)),
+        Json::Arr(v) => {
+            let nums: Vec<f64> = v.iter().filter_map(Json::as_f64).collect();
+            if !nums.is_empty() && nums.len() == v.len() {
+                out.push((prefix.to_string(), nums.iter().sum::<f64>() / nums.len() as f64));
+            } else {
+                for (i, x) in v.iter().enumerate() {
+                    flatten(x, &format!("{prefix}.{i}"), out);
+                }
+            }
+        }
+        Json::Obj(m) => {
+            for (k, v) in m {
+                if matches!(k.as_str(), "steps" | "bounds" | "counts") {
+                    continue;
+                }
+                let p = if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                flatten(v, &p, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+fn compare(base: &Json, cur: &Json, tolerance: f64) -> Report {
+    let mut b = Vec::new();
+    let mut c = Vec::new();
+    flatten(base, "", &mut b);
+    flatten(cur, "", &mut c);
+    let mut compared = Vec::new();
+    let mut gated = 0;
+    let mut regressions = Vec::new();
+    for (path, bv) in &b {
+        let Some((_, cv)) = c.iter().find(|(p, _)| p == path) else {
+            continue;
+        };
+        compared.push((path.clone(), *bv, *cv));
+        let Some(lower_is_better) = direction(path) else {
+            continue;
+        };
+        gated += 1;
+        // a zero baseline cannot anchor a relative gate
+        if bv.abs() < 1e-12 {
+            continue;
+        }
+        let rel = (cv - bv) / bv.abs();
+        let bad = if lower_is_better { rel > tolerance } else { rel < -tolerance };
+        if bad {
+            regressions.push(rt(
+                codes::METRIC_REGRESSION,
+                format!(
+                    "{path}: {cv:.6} vs baseline {bv:.6} ({:+.1}%, tolerance {:.0}%)",
+                    rel * 100.0,
+                    tolerance * 100.0
+                ),
+            ));
+        }
+    }
+    Report { compared, gated, regressions }
+}
+
+// ---- --self-check -------------------------------------------------------
+
+fn self_check(files: &[String]) -> ExitCode {
+    if files.is_empty() {
+        eprintln!("usage: fsdp-report --self-check <file> [file ...]");
+        return ExitCode::from(2);
+    }
+    let mut ok = true;
+    for path in files {
+        match check_file(path) {
+            Ok(desc) => println!("fsdp-report: {path}: ok ({desc})"),
+            Err(e) => {
+                eprintln!("fsdp-report: {path}: {e}");
+                ok = false;
+            }
+        }
+    }
+    if ok {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::from(2)
+    }
+}
+
+fn check_file(path: &str) -> Result<String, String> {
+    if path.ends_with(".prom") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| rt(codes::EXPORT_IO, format!("reading: {e}")))?;
+        let samples = check_prometheus(&text)?;
+        Ok(format!("prometheus text, {samples} samples"))
+    } else {
+        let j = load_json(path)?;
+        let mut leaves = Vec::new();
+        flatten(&j, "", &mut leaves);
+        if leaves.is_empty() {
+            return Err(rt(codes::EXPORT_IO, "no numeric leaves".to_string()));
+        }
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("untyped json");
+        Ok(format!("{schema}, {} numeric leaves", leaves.len()))
+    }
+}
+
+/// Validate Prometheus text exposition: every non-comment line must be
+/// `name[{labels}] value` with a finite numeric value. Returns the
+/// sample count (must be >= 1).
+fn check_prometheus(text: &str) -> Result<usize, String> {
+    let mut samples = 0;
+    for (ln, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let Some((name, value)) = line.rsplit_once(' ') else {
+            return Err(format!("line {}: expected 'name value'", ln + 1));
+        };
+        if name.is_empty() || name.starts_with(|c: char| c.is_ascii_digit()) {
+            return Err(format!("line {}: bad metric name '{name}'", ln + 1));
+        }
+        let v: f64 = value
+            .parse()
+            .map_err(|_| format!("line {}: bad sample value '{value}'", ln + 1))?;
+        if !v.is_finite() {
+            return Err(format!("line {}: non-finite sample", ln + 1));
+        }
+        samples += 1;
+    }
+    if samples == 0 {
+        return Err("no samples".to_string());
+    }
+    Ok(samples)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(step_time: f64, overlap: f64) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str("fsdp-metrics-v1")),
+            ("counters", Json::obj(vec![("wire.bytes", Json::num(1024))])),
+            (
+                "series",
+                Json::obj(vec![
+                    (
+                        "step_time_s",
+                        Json::obj(vec![
+                            ("steps", Json::arr(vec![Json::num(1), Json::num(2)])),
+                            (
+                                "values",
+                                Json::arr(vec![Json::num(step_time), Json::num(step_time)]),
+                            ),
+                        ]),
+                    ),
+                    (
+                        "overlap_efficiency",
+                        Json::obj(vec![
+                            ("steps", Json::arr(vec![Json::num(1), Json::num(2)])),
+                            ("values", Json::arr(vec![Json::num(overlap), Json::num(overlap)])),
+                        ]),
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn identical_snapshots_pass() {
+        let a = metrics(0.01, 0.9);
+        let r = compare(&a, &a, 0.05);
+        assert!(r.regressions.is_empty(), "{:?}", r.regressions);
+        assert!(r.gated >= 3); // step_time, overlap, wire.bytes
+    }
+
+    #[test]
+    fn slower_steps_and_lost_overlap_are_regressions() {
+        let base = metrics(0.01, 0.9);
+        let cur = metrics(0.02, 0.5);
+        let r = compare(&base, &cur, 0.1);
+        assert_eq!(r.regressions.len(), 2, "{:?}", r.regressions);
+        assert!(r.regressions.iter().all(|m| m.contains(codes::METRIC_REGRESSION)));
+        assert!(r.regressions.iter().any(|m| m.contains("step_time_s")));
+        assert!(r.regressions.iter().any(|m| m.contains("overlap_efficiency")));
+    }
+
+    #[test]
+    fn improvements_never_flag() {
+        let base = metrics(0.01, 0.5);
+        let cur = metrics(0.002, 0.95);
+        assert!(compare(&base, &cur, 0.1).regressions.is_empty());
+    }
+
+    #[test]
+    fn direction_table() {
+        assert_eq!(direction("series.step_time_s.values"), Some(true));
+        assert_eq!(direction("counters.wire.bytes"), Some(true));
+        assert_eq!(direction("series.overlap_efficiency.values"), Some(false));
+        assert_eq!(direction("health.ranks"), None);
+    }
+
+    #[test]
+    fn flatten_skips_bookkeeping_and_means_arrays() {
+        let j = metrics(0.01, 0.9);
+        let mut out = Vec::new();
+        flatten(&j, "", &mut out);
+        assert!(out.iter().all(|(p, _)| !p.contains("steps")));
+        let st = out.iter().find(|(p, _)| p == "series.step_time_s.values").unwrap();
+        assert!((st.1 - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prometheus_checker() {
+        let good = "# HELP x y\n# TYPE x counter\nfsdp_x_total 12\nfsdp_b{le=\"0.1\"} 3\n";
+        assert_eq!(check_prometheus(good), Ok(2));
+        assert!(check_prometheus("").is_err());
+        assert!(check_prometheus("just words with no numeric tail at all?").is_err());
+        assert!(check_prometheus("name nan_is_fine nan").is_err());
+    }
+}

@@ -226,9 +226,25 @@ pub fn make_comm_topo(
     tracer: crate::trace::Tracer,
     topology: crate::comm::Topology,
 ) -> Arc<dyn Communicator> {
+    make_comm_obs(backend, tracer, topology, crate::obs::Observer::off())
+}
+
+/// [`make_comm_topo`] plus a health-monitor handle: every collective on
+/// either backend — blocking, eager-async, or background comm thread —
+/// publishes per-rank heartbeats into the observer's
+/// [`crate::obs::HealthBoard`] and records into its flight rings. A
+/// disarmed observer ([`crate::obs::Observer::off`]) adds exactly one
+/// branch per collective, so this is byte-for-byte the
+/// [`make_comm_topo`] behavior when monitoring is off.
+pub fn make_comm_obs(
+    backend: CommBackend,
+    tracer: crate::trace::Tracer,
+    topology: crate::comm::Topology,
+    obs: crate::obs::Observer,
+) -> Arc<dyn Communicator> {
     match backend {
-        CommBackend::Serial => Arc::new(SerialComm::with_topology(tracer, topology)),
-        CommBackend::Threaded => Arc::new(ThreadedComm::with_topology(tracer, topology)),
+        CommBackend::Serial => Arc::new(SerialComm::with_obs(tracer, topology, obs)),
+        CommBackend::Threaded => Arc::new(ThreadedComm::with_obs(tracer, topology, obs)),
     }
 }
 

@@ -7,6 +7,7 @@
 use anyhow::Result;
 
 use crate::comm::{self, CommRecord, CommStats, SharedStats, Topology};
+use crate::obs::Observer;
 use crate::trace::{Cat, Span, Tracer};
 
 use super::{CommBackend, Communicator};
@@ -21,6 +22,11 @@ pub struct SerialComm {
     /// transport spans still carry the wire-tier attr so hierarchical
     /// traces validate regardless of backend.
     topology: Topology,
+    /// Health monitor handle. Disarmed (the default) this costs one
+    /// branch per collective; armed, every simulated rank's heartbeat is
+    /// published around the loop-collective body so health artifacts
+    /// have the same shape on both backends.
+    obs: Observer,
 }
 
 impl SerialComm {
@@ -36,7 +42,17 @@ impl SerialComm {
     /// Construct with a trace sink and a cluster topology (tier-tags
     /// transport spans when the topology is hierarchical).
     pub fn with_topology(tracer: Tracer, topology: Topology) -> SerialComm {
-        SerialComm { stats: SharedStats::default(), tracer, topology }
+        SerialComm::with_obs(tracer, topology, Observer::off())
+    }
+
+    /// [`SerialComm::with_topology`] plus a health-monitor handle: every
+    /// simulated rank publishes a heartbeat for the duration of each
+    /// loop collective, so flight-recorder rings and board snapshots
+    /// look the same as the threaded backend's (the loop body cannot
+    /// stall mid-rendezvous, but a pathologically slow collective still
+    /// trips the watchdog's exit-path deadline check).
+    pub fn with_obs(tracer: Tracer, topology: Topology, obs: Observer) -> SerialComm {
+        SerialComm { stats: SharedStats::default(), tracer, topology, obs }
     }
 
     /// Wire tier a `m`-rank group lands on; `None` on flat topologies.
@@ -47,7 +63,8 @@ impl SerialComm {
         Some(if m <= self.topology.gpus_per_host { "intra" } else { "inter" })
     }
 
-    /// Bracket one loop collective with a (tier-tagged) transport span.
+    /// Bracket one loop collective with a (tier-tagged) transport span
+    /// and, when the observer is armed, with per-rank heartbeats.
     fn traced(
         &self,
         name: &'static str,
@@ -57,7 +74,18 @@ impl SerialComm {
     ) -> Result<()> {
         let tier = self.tier_label(m);
         let t = self.tracer.timer();
+        let armed = self.obs.armed();
+        if armed {
+            for rank in 0..m.min(self.obs.ranks()) {
+                self.obs.rank_enter(rank, name);
+            }
+        }
         let r = f();
+        if armed {
+            for rank in 0..m.min(self.obs.ranks()) {
+                self.obs.rank_exit(rank);
+            }
+        }
         self.tracer.finish_with(t, Cat::Comm, || {
             let mut span = Span::new(name).fabric().bytes(bytes);
             if let Some(tier) = tier {

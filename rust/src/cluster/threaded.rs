@@ -32,6 +32,7 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::comm::{self, CommRecord, CommStats, SharedStats, Topology};
+use crate::obs::Observer;
 use crate::trace::{Cat, Span, Tracer};
 
 use super::hierarchy::{hier_all_gather, hier_reduce_scatter};
@@ -51,6 +52,11 @@ pub struct ThreadedComm {
     /// Cluster shape: groups that exactly fill a multi-host topology
     /// dispatch to the two-level algorithms in [`super::hierarchy`].
     topology: Topology,
+    /// Health monitor handle. Disarmed (the default) this costs one
+    /// branch per collective; armed, every rank thread publishes
+    /// heartbeats into the shared [`crate::obs::HealthBoard`] around its
+    /// rendezvous body.
+    obs: Observer,
 }
 
 impl Default for ThreadedComm {
@@ -66,6 +72,7 @@ impl ThreadedComm {
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
             tracer: Tracer::off(),
             topology: Topology::flat(),
+            obs: Observer::off(),
         }
     }
 
@@ -85,11 +92,22 @@ impl ThreadedComm {
     /// algorithms and tag their single span with the tier the group
     /// lands on.
     pub fn with_topology(tracer: Tracer, topology: Topology) -> ThreadedComm {
+        ThreadedComm::with_obs(tracer, topology, Observer::off())
+    }
+
+    /// [`ThreadedComm::with_topology`] plus a health-monitor handle:
+    /// every rank thread entering a rendezvous collective publishes a
+    /// lock-free heartbeat (collective, bucket, entry time) into the
+    /// observer's board and clears it on exit — on both the blocking
+    /// path and the background comm threads — so the collective watchdog
+    /// can name exactly which rank is stuck where.
+    pub fn with_obs(tracer: Tracer, topology: Topology, obs: Observer) -> ThreadedComm {
         ThreadedComm {
             stats: SharedStats::default(),
             min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
             tracer,
             topology,
+            obs,
         }
     }
 
@@ -101,6 +119,7 @@ impl ThreadedComm {
             min_parallel_elems,
             tracer: Tracer::off(),
             topology: Topology::flat(),
+            obs: Observer::off(),
         }
     }
 
@@ -137,8 +156,38 @@ impl ThreadedComm {
     where
         F: FnOnce(Option<&RendezvousTiming>) -> Result<()>,
     {
-        spawned_traced(&self.tracer, name, tier, bytes, f)
+        obs_scoped(&self.obs, name, || spawned_traced(&self.tracer, name, tier, bytes, f))
     }
+}
+
+thread_local! {
+    /// The observer + collective name [`fan_out`] should publish
+    /// heartbeats under, scoped to the current collective call by
+    /// [`obs_scoped`]. `None` (the default, and always when the observer
+    /// is disarmed) keeps `fan_out` on its plain path.
+    static OBS_CTX: std::cell::RefCell<Option<(Observer, &'static str)>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// Run `f` with [`OBS_CTX`] naming this collective, so every
+/// [`fan_out`] it performs — directly or via the hierarchical
+/// algorithms — brackets each rank body with heartbeat enter/exit.
+/// Disarmed observers skip the thread-local entirely (one branch).
+fn obs_scoped<R>(obs: &Observer, op: &'static str, f: impl FnOnce() -> R) -> R {
+    if !obs.armed() {
+        return f();
+    }
+    OBS_CTX.with(|c| *c.borrow_mut() = Some((obs.clone(), op)));
+    // clear on unwind too: a panicking collective must not leave a stale
+    // observer attached to this thread's later collectives
+    struct ClearCtx;
+    impl Drop for ClearCtx {
+        fn drop(&mut self) {
+            OBS_CTX.with(|c| *c.borrow_mut() = None);
+        }
+    }
+    let _clear = ClearCtx;
+    f()
 }
 
 /// Per-rank wire bytes each tier moves in a hierarchical collective
@@ -341,9 +390,14 @@ pub fn set_arrival_stagger(delays_us: &[u64]) {
 
 /// Run `f(rank)` on `m` concurrent ranks; rank 0 runs on the caller's
 /// thread. Returns after every rank finished (scoped join). Honors the
-/// caller thread's [`set_arrival_stagger`] delays.
+/// caller thread's [`set_arrival_stagger`] delays, and — when the
+/// enclosing collective ran under [`obs_scoped`] — publishes each rank's
+/// heartbeat around its body, *after* the injected arrival delay, so a
+/// staggered straggler shows up on the health board exactly as the
+/// waiting ranks it starves do.
 pub(crate) fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
     let stagger = ARRIVAL_STAGGER.with(|s| s.borrow().clone());
+    let obs_ctx = OBS_CTX.with(|c| c.borrow().clone());
     let delay = |rank: usize| {
         if let Some(&us) = stagger.get(rank) {
             if us > 0 {
@@ -351,17 +405,26 @@ pub(crate) fn fan_out<F: Fn(usize) + Sync>(m: usize, f: F) {
             }
         }
     };
+    let run = |rank: usize| {
+        if let Some((obs, op)) = &obs_ctx {
+            obs.rank_enter(rank, *op);
+            f(rank);
+            obs.rank_exit(rank);
+        } else {
+            f(rank);
+        }
+    };
     std::thread::scope(|s| {
         for rank in 1..m {
-            let f = &f;
             let delay = &delay;
+            let run = &run;
             s.spawn(move || {
                 delay(rank);
-                f(rank)
+                run(rank)
             });
         }
         delay(0);
-        f(0);
+        run(0);
     });
 }
 
@@ -498,12 +561,14 @@ impl Communicator for ThreadedComm {
         let m = bufs.len();
         if self.hier_eligible(m, s) {
             let topo = self.topology;
-            return hier_traced(
-                &self.tracer,
-                "all_gather",
-                hier_span_bytes(true, topo, s),
-                |tm_intra, tm_inter| hier_all_gather(bufs, s, topo, tm_intra, tm_inter),
-            );
+            return obs_scoped(&self.obs, "all_gather", || {
+                hier_traced(
+                    &self.tracer,
+                    "all_gather",
+                    hier_span_bytes(true, topo, s),
+                    |tm_intra, tm_inter| hier_all_gather(bufs, s, topo, tm_intra, tm_inter),
+                )
+            });
         }
         let bytes = (m * s * 4) as u64;
         self.traced("all_gather", self.tier_label(m), bytes, |tm| {
@@ -515,14 +580,16 @@ impl Communicator for ThreadedComm {
         let m = bufs.len();
         if self.hier_eligible(m, s) {
             let topo = self.topology;
-            return hier_traced(
-                &self.tracer,
-                "reduce_scatter",
-                hier_span_bytes(false, topo, s),
-                |tm_intra, tm_inter| {
-                    hier_reduce_scatter(bufs, s, scale, topo, tm_intra, tm_inter)
-                },
-            );
+            return obs_scoped(&self.obs, "reduce_scatter", || {
+                hier_traced(
+                    &self.tracer,
+                    "reduce_scatter",
+                    hier_span_bytes(false, topo, s),
+                    |tm_intra, tm_inter| {
+                        hier_reduce_scatter(bufs, s, scale, topo, tm_intra, tm_inter)
+                    },
+                )
+            });
         }
         let bytes = (m * s * 4) as u64;
         self.traced("reduce_scatter", self.tier_label(m), bytes, |tm| {
@@ -543,23 +610,31 @@ impl Communicator for ThreadedComm {
         if self.hier_eligible(m, s) {
             let topo = self.topology;
             let tracer = self.tracer.clone();
+            let obs = self.obs.clone();
             return PendingOp::spawn(move || {
-                hier_traced(
-                    &tracer,
-                    "all_gather",
-                    hier_span_bytes(true, topo, s),
-                    |tm_intra, tm_inter| hier_all_gather(&mut bufs, s, topo, tm_intra, tm_inter),
-                )?;
+                obs_scoped(&obs, "all_gather", || {
+                    hier_traced(
+                        &tracer,
+                        "all_gather",
+                        hier_span_bytes(true, topo, s),
+                        |tm_intra, tm_inter| {
+                            hier_all_gather(&mut bufs, s, topo, tm_intra, tm_inter)
+                        },
+                    )
+                })?;
                 Ok(bufs)
             });
         }
         let min = self.min_parallel_elems;
         let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
+        let obs = self.obs.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "all_gather", tier, bytes, |tm| {
-                ring_all_gather(&mut bufs, s, min, tm)
+            obs_scoped(&obs, "all_gather", || {
+                spawned_traced(&tracer, "all_gather", tier, bytes, |tm| {
+                    ring_all_gather(&mut bufs, s, min, tm)
+                })
             })?;
             Ok(bufs)
         })
@@ -574,25 +649,31 @@ impl Communicator for ThreadedComm {
         if self.hier_eligible(m, s) {
             let topo = self.topology;
             let tracer = self.tracer.clone();
+            let obs = self.obs.clone();
             return PendingOp::spawn(move || {
-                hier_traced(
-                    &tracer,
-                    "reduce_scatter",
-                    hier_span_bytes(false, topo, s),
-                    |tm_intra, tm_inter| {
-                        hier_reduce_scatter(&mut bufs, s, scale, topo, tm_intra, tm_inter)
-                    },
-                )?;
+                obs_scoped(&obs, "reduce_scatter", || {
+                    hier_traced(
+                        &tracer,
+                        "reduce_scatter",
+                        hier_span_bytes(false, topo, s),
+                        |tm_intra, tm_inter| {
+                            hier_reduce_scatter(&mut bufs, s, scale, topo, tm_intra, tm_inter)
+                        },
+                    )
+                })?;
                 Ok(bufs)
             });
         }
         let min = self.min_parallel_elems;
         let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
+        let obs = self.obs.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "reduce_scatter", tier, bytes, |tm| {
-                rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
+            obs_scoped(&obs, "reduce_scatter", || {
+                spawned_traced(&tracer, "reduce_scatter", tier, bytes, |tm| {
+                    rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
+                })
             })?;
             Ok(bufs)
         })
@@ -702,10 +783,13 @@ impl Communicator for ThreadedComm {
         let min = self.min_parallel_elems;
         let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
+        let obs = self.obs.clone();
         let bytes = (m * s * 4) as u64;
         PendingOp::spawn(move || {
-            spawned_traced(&tracer, "all_to_all", tier, bytes, |tm| {
-                rendezvous_all_to_all(&mut bufs, s, min, tm)
+            obs_scoped(&obs, "all_to_all", || {
+                spawned_traced(&tracer, "all_to_all", tier, bytes, |tm| {
+                    rendezvous_all_to_all(&mut bufs, s, min, tm)
+                })
             })?;
             Ok(bufs)
         })

@@ -150,6 +150,41 @@ impl ConfigFile {
         Ok(by_name.into_values().collect())
     }
 
+    /// Read the `[obs]` section (runtime health-monitor knobs) as
+    /// `(watchdog_ms, metrics path, postmortem-on-exit)`. Unknown fields
+    /// are errors, mirroring `[group.*]` — a typo in a monitoring config
+    /// must not silently train unmonitored.
+    pub fn obs_overrides(&self) -> Result<(u64, Option<String>, bool)> {
+        let mut watchdog_ms = 0u64;
+        let mut metrics = None;
+        let mut postmortem = false;
+        for (key, val) in &self.values {
+            let Some(field) = key.strip_prefix("obs.") else {
+                continue;
+            };
+            match field {
+                "watchdog_ms" => {
+                    watchdog_ms = val.parse().map_err(|_| {
+                        anyhow::anyhow!("[obs]: watchdog_ms = '{val}' is not an integer")
+                    })?;
+                }
+                "metrics" => metrics = Some(val.to_string()),
+                "postmortem" => {
+                    postmortem = match val.to_ascii_lowercase().as_str() {
+                        "true" | "1" | "yes" => true,
+                        "false" | "0" | "no" => false,
+                        _ => bail!("[obs]: postmortem = '{val}' is not a bool"),
+                    };
+                }
+                _ => bail!(
+                    "[obs]: unknown field '{field}' (expected watchdog_ms, metrics, \
+                     or postmortem)"
+                ),
+            }
+        }
+        Ok((watchdog_ms, metrics, postmortem))
+    }
+
     /// Materialize a TrainConfig (missing keys fall back to defaults).
     pub fn train_config(&self) -> Result<TrainConfig> {
         let d = TrainConfig::default();
@@ -212,6 +247,7 @@ impl ConfigFile {
         if crate::trace::TraceLevel::parse(&trace_level).is_none() {
             bail!("unknown trace level '{trace_level}' (expected off, comm, or full)");
         }
+        let (watchdog_ms, metrics, postmortem) = self.obs_overrides()?;
         Ok(TrainConfig {
             model: self.str_or("model.preset", &d.model),
             parallel: ParallelConfig {
@@ -234,6 +270,9 @@ impl ConfigFile {
             comm_precision,
             trace,
             trace_level,
+            watchdog_ms,
+            metrics,
+            postmortem,
             groups: self.group_overrides()?,
         })
     }
@@ -353,6 +392,30 @@ comm_precision = "q8:128"
         assert!(word.train_config().is_err());
         // default stays flat (empty)
         assert_eq!(ConfigFile::parse("").unwrap().train_config().unwrap().topology, "");
+    }
+
+    #[test]
+    fn obs_section_parses_and_rejects_typos() {
+        let c = ConfigFile::parse(
+            "[obs]\nwatchdog_ms = 250\nmetrics = \"m.prom\"\npostmortem = true",
+        )
+        .unwrap();
+        let tc = c.train_config().unwrap();
+        assert_eq!(tc.watchdog_ms, 250);
+        assert_eq!(tc.metrics.as_deref(), Some("m.prom"));
+        assert!(tc.postmortem);
+        // defaults: monitor fully off
+        let d = ConfigFile::parse("").unwrap().train_config().unwrap();
+        assert_eq!(d.watchdog_ms, 0);
+        assert!(d.metrics.is_none());
+        assert!(!d.postmortem);
+        // typos and bad values are errors
+        let bad_field = ConfigFile::parse("[obs]\nwatchdog = 250").unwrap();
+        assert!(bad_field.train_config().is_err());
+        let bad_ms = ConfigFile::parse("[obs]\nwatchdog_ms = \"soon\"").unwrap();
+        assert!(bad_ms.train_config().is_err());
+        let bad_pm = ConfigFile::parse("[obs]\npostmortem = \"maybe\"").unwrap();
+        assert!(bad_pm.train_config().is_err());
     }
 
     #[test]

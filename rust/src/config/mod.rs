@@ -193,6 +193,17 @@ pub struct TrainConfig {
     pub trace: Option<String>,
     /// Trace detail (`[trace] level` / `--trace-level`): off | comm | full.
     pub trace_level: String,
+    /// Collective-watchdog deadline in milliseconds (`[obs] watchdog_ms`
+    /// / `--watchdog-ms`); 0 keeps the watchdog off. Any nonzero value
+    /// (or `metrics` / `postmortem` below) arms the health monitor.
+    pub watchdog_ms: u64,
+    /// Metrics snapshot path (`[obs] metrics` / `--metrics`): a `.prom`
+    /// extension writes Prometheus text format, anything else the
+    /// `fsdp-metrics-v1` JSON. `None` = no export.
+    pub metrics: Option<String>,
+    /// Write a postmortem JSON on exit, watchdog firing, or panic
+    /// (`[obs] postmortem` / `--postmortem-on-exit`).
+    pub postmortem: bool,
     /// Per-group `[group.*]` overrides, applied on the layerwise wrapping.
     pub groups: Vec<GroupOverride>,
 }
@@ -217,6 +228,9 @@ impl Default for TrainConfig {
             comm_precision: "f32".into(),
             trace: None,
             trace_level: "comm".into(),
+            watchdog_ms: 0,
+            metrics: None,
+            postmortem: false,
             groups: Vec::new(),
         }
     }

@@ -178,6 +178,9 @@ pub struct FsdpEngine {
     /// Trace sink shared by the executor, the buckets' DBuffers, and the
     /// optimizer dispatch (off unless [`FsdpEngine::set_tracer`] ran).
     pub tracer: Tracer,
+    /// Health monitor shared with the executor (off — one branch per
+    /// event — unless [`FsdpEngine::set_observer`] ran).
+    pub obs: crate::obs::Observer,
     locs: Vec<ParamLoc>,
     m: usize,
 }
@@ -324,6 +327,7 @@ impl FsdpEngine {
             params,
             alloc,
             tracer: Tracer::off(),
+            obs: crate::obs::Observer::off(),
             locs,
             m,
         })
@@ -336,6 +340,14 @@ impl FsdpEngine {
             b.dbuffer.set_tracer(tracer.clone(), &b.name);
         }
         self.tracer = tracer;
+    }
+
+    /// Attach a health monitor: the executor publishes step phases,
+    /// bucket context, and flight-recorder events through it. The comm
+    /// backend carries its own clone (see `cluster::make_comm_obs`), so
+    /// call this with the same observer the communicator was built with.
+    pub fn set_observer(&mut self, obs: crate::obs::Observer) {
+        self.obs = obs;
     }
 
     pub fn num_devices(&self) -> usize {

@@ -186,15 +186,18 @@ fn run_sequential(
 ) -> Result<Vec<f32>> {
     let m = engine.num_devices();
     let tracer = engine.tracer.clone();
+    let obs = engine.obs.clone();
     // every collective in this schedule is exposed: nothing computes
     // while the gathers / reductions run. One logical "ag"/"rs" span
     // covers all buckets (bucket "*"), bytes summed across them.
     let ag_bytes: u64 = engine.buckets.iter().map(bucket_wire_bytes).sum();
     let tg = tracer.timer();
+    obs.set_phase("gather");
     engine.gather_params()?;
     *exposed += tracer.finish_with(tg, Cat::Comm, || {
         Span::new("ag").exposed().bucket("*").bytes(ag_bytes).attr("phase", "sync")
     });
+    obs.set_phase("compute");
     let mut losses = Vec::with_capacity(m);
     let mut all_grads: Vec<Vec<Vec<f32>>> = Vec::with_capacity(m);
     if engine.comm.backend() == CommBackend::Threaded && runtime.is_native() {
@@ -234,10 +237,12 @@ fn run_sequential(
     engine.release_params();
     let rs_bytes: u64 = engine.buckets.iter().map(bucket_wire_bytes).sum();
     let tr = tracer.timer();
+    obs.set_phase("reduce");
     engine.reduce_grads(&all_grads)?;
     *exposed += tracer.finish_with(tr, Cat::Comm, || {
         Span::new("rs").exposed().bucket("*").bytes(rs_bytes).attr("phase", "sync")
     });
+    obs.set_phase("idle");
     Ok(losses)
 }
 
@@ -380,10 +385,13 @@ fn issue_gathers(
     exposed: &mut f64,
 ) -> Result<()> {
     let tracer = engine.tracer.clone();
+    let obs = engine.obs.clone();
     while inflight.len() < cap {
         let Some(b) = order.next() else {
             return Ok(());
         };
+        obs.set_bucket(&engine.buckets[b].name);
+        obs.flight_all("sched", "ag_issue", b as u64, inflight.len() as u64);
         let comm = engine.comm.clone();
         let prec = engine.buckets[b].comm_precision;
         let t0 = tracer.timer();
@@ -416,7 +424,10 @@ fn wait_gather(
     }
     let comm = engine.comm.clone();
     let tracer = engine.tracer.clone();
+    let obs = engine.obs.clone();
     while let Some((bucket, op)) = inflight.pop_front() {
+        obs.set_bucket(&engine.buckets[bucket].name);
+        obs.flight_all("sched", "ag_wait", bucket as u64, inflight.len() as u64);
         let t0 = tracer.timer();
         // each bucket's collective is timed on its own (group-local)
         // fabric and decoded at its own wire precision; the dequant of an
@@ -472,12 +483,16 @@ fn begin_reduce(
 ) -> Result<PendingReduce> {
     let m = engine.num_devices();
     let s = engine.buckets[b].dbuffer.shard_elems();
+    let obs = engine.obs.clone();
+    obs.set_phase("reduce");
+    obs.set_bucket(&engine.buckets[b].name);
     let (mut bufs, block) = crate::fsdp::engine::stage_bucket_grads(
         &engine.buckets[b],
         m,
         &engine.alloc,
         &|rank, pos| &states[rank].bucket_grads[pos][..],
     )?;
+    obs.flight_all("alloc", "staged_grads", b as u64, (m * s * 4) as u64);
     for st in states.iter_mut() {
         st.bucket_grads.clear();
     }
@@ -486,6 +501,7 @@ fn begin_reduce(
     let tracer = engine.tracer.clone();
     if prec.is_f32() {
         let t0 = tracer.timer();
+        obs.flight_all("sched", "rs_issue", b as u64, 0);
         let op = engine.comm.reduce_scatter_async(bufs, s, scale);
         *exposed += tracer.finish_with(t0, Cat::Comm, || {
             Span::new("rs")
@@ -513,6 +529,8 @@ fn begin_reduce(
     tracer.finish_with(ta, Cat::Compute, || {
         Span::new("alloc_wait").bucket(&engine.buckets[b].name).bytes(wire_bytes)
     });
+    obs.flight_all("alloc", "wire", b as u64, wire_bytes);
+    obs.flight_all("sched", "rs_issue", b as u64, 0);
     let op = engine.comm.all_to_all_async(wire, w);
     *exposed += tracer.finish_with(t0, Cat::Comm, || {
         Span::new("rs")
@@ -540,8 +558,11 @@ fn begin_reduce(
 fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut f64) -> Result<()> {
     let PendingReduce { bucket: b, op, staged, staged_block, wire_block } = pending;
     let tracer = engine.tracer.clone();
+    let obs = engine.obs.clone();
     let bname = engine.buckets[b].name.clone();
     let bytes = bucket_wire_bytes(&engine.buckets[b]);
+    obs.set_bucket(&bname);
+    obs.flight_all("sched", "rs_wait", b as u64, 0);
     let t0 = tracer.timer();
     let returned = op.wait()?;
     *exposed += tracer.finish_with(t0, Cat::Comm, || {
@@ -584,6 +605,8 @@ fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut 
     if let Some(wb) = wire_block {
         alloc.free(wb)?;
     }
+    drop(alloc);
+    obs.flight_all("alloc", "free_staged", b as u64, 0);
     Ok(())
 }
 
@@ -602,15 +625,19 @@ fn run_pipelined(
     let threaded = engine.comm.backend() == CommBackend::Threaded
         && cfg.batch * cfg.seq * cfg.d_model >= MIN_PARALLEL_ACT_ELEMS;
     let tracer = engine.tracer.clone();
+    let obs = engine.obs.clone();
     let mut states: Vec<RankState> = (0..m).map(|_| RankState::default()).collect();
 
     // ---- forward: prefetch AG(l+1..) under compute of bucket l ----
     let mut inflight: VecDeque<(usize, PendingOp)> = VecDeque::new();
     let mut fwd_order = 0..nb;
     for l in 0..nb {
+        obs.set_phase("gather");
         issue_gathers(engine, &mut inflight, &mut fwd_order, prefetch, exposed)?;
         wait_gather(engine, &mut inflight, l, exposed)?;
         issue_gathers(engine, &mut inflight, &mut fwd_order, prefetch, exposed)?;
+        obs.set_phase("compute");
+        obs.set_bucket(&engine.buckets[l].name);
         par_ranks(&mut states, threaded, |rank, st| {
             let tc = tracer.timer();
             if l == 0 {
@@ -652,9 +679,12 @@ fn run_pipelined(
     let mut bwd_order = bwd_regather.into_iter();
     let mut rs_pending: VecDeque<PendingReduce> = VecDeque::new();
     for b in (0..nb).rev() {
+        obs.set_phase("gather");
         issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
         wait_gather(engine, &mut inflight, b, exposed)?;
         issue_gathers(engine, &mut inflight, &mut bwd_order, prefetch, exposed)?;
+        obs.set_phase("compute");
+        obs.set_bucket(&engine.buckets[b].name);
         par_ranks(&mut states, threaded, |rank, st| {
             let tc = tracer.timer();
             if b == nb - 1 {
@@ -693,5 +723,7 @@ fn run_pipelined(
     while let Some(p) = rs_pending.pop_front() {
         finish_reduce(engine, p, exposed)?;
     }
+    obs.set_phase("idle");
+    obs.clear_bucket();
     Ok(states.iter().map(|s| s.loss).collect())
 }

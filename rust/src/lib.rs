@@ -116,6 +116,22 @@
 //! `Instant` pair the old ad-hoc timers paid, so disabled tracing
 //! changes neither math (bit-identical losses) nor, materially,
 //! wall-clock (`tests/trace_validity.rs`).
+//!
+//! ## Runtime health
+//!
+//! Where [`trace`] explains runs after the fact, the [`obs`] module
+//! watches them live: rank threads publish lock-free heartbeats into a
+//! shared [`obs::HealthBoard`]; a collective watchdog (`--watchdog-ms`)
+//! reports ranks stalled in a rendezvous as typed `FS204` diagnostics
+//! naming the rank, collective, and bucket; a bounded per-rank flight
+//! recorder dumps the last events per rank as a structured postmortem
+//! JSON on panic, watchdog firing, or `--postmortem-on-exit`; and an
+//! [`obs::MetricsRegistry`] exports per-step step-time / exposed-comm /
+//! overlap / wire-byte / peak-memory series as Prometheus text or JSON
+//! (`--metrics out.prom|out.json`), with a rolling-window anomaly pass
+//! and the `fsdp-report` bin as a CI regression gate. Disarmed (the
+//! default), the observer costs one branch per event and training is
+//! bit-identical to monitor-on (`tests/health_monitor.rs`).
 
 pub mod analysis;
 pub mod checkpoint;
@@ -128,6 +144,7 @@ pub mod dbuffer;
 pub mod dtensor;
 pub mod fsdp;
 pub mod mesh;
+pub mod obs;
 pub mod optim;
 pub mod placement;
 pub mod planner;

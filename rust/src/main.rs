@@ -7,6 +7,11 @@
 //!                         [--topology HxG[:S]]
 //!                         [--comm-precision f32|bf16|q8[:block]]
 //!                         [--trace out.json] [--trace-level off|comm|full]
+//!                         [--watchdog-ms N] [--metrics out.prom|out.json]
+//!                         [--postmortem-on-exit [path]]
+//!                         [--inject-stall us[,us...]]  (testing: stagger
+//!                          rank arrivals into rendezvous collectives so the
+//!                          watchdog has something to catch)
 //!                         [--lint]  (static schedule pre-flight: abort on
 //!                          any `fsdp-lint` diagnostic before training)
 //!                         (N=0: sequential step loop; N>=1: bucket-pipelined
@@ -26,14 +31,16 @@
 
 use anyhow::{anyhow, Result};
 
+use vescale_fsdp::analysis::diag::{codes, rt};
 use vescale_fsdp::baselines;
-use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::cluster::{set_arrival_stagger, CommBackend};
 use vescale_fsdp::comm::{Fabric, Topology};
 use vescale_fsdp::config::file::ConfigFile;
 use vescale_fsdp::config::{presets, OptimKind, ParallelConfig, System, TrainConfig};
 use vescale_fsdp::fsdp::sim::{simulate_step, GpuSpec};
 use vescale_fsdp::fsdp::spec::OptimBinding;
 use vescale_fsdp::fsdp::{ExecMode, ShardingPolicy};
+use vescale_fsdp::obs::ObsConfig;
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::planner::{plan, TensorDecl};
 use vescale_fsdp::quant::CommPrecision;
@@ -115,6 +122,21 @@ fn cmd_train(args: &Args) -> Result<()> {
     } else {
         TraceLevel::Off
     };
+    // Health monitor: any of --watchdog-ms / --metrics /
+    // --postmortem-on-exit (or the [obs] config section) arms it;
+    // otherwise every instrumentation site is a single untaken branch.
+    let watchdog_ms = args.u64_or("watchdog-ms", base.watchdog_ms);
+    let metrics_path: Option<String> = args
+        .get("metrics")
+        .map(|p| if p == "true" { "metrics.json" } else { p })
+        .map(str::to_string)
+        .or_else(|| base.metrics.clone());
+    let postmortem_path: Option<String> = match args.get("postmortem-on-exit") {
+        Some("true") | Some("1") | Some("yes") => Some("postmortem.json".to_string()),
+        Some(p) => Some(p.to_string()),
+        None => base.postmortem.then(|| "postmortem.json".to_string()),
+    };
+    let monitor_on = watchdog_ms > 0 || metrics_path.is_some() || postmortem_path.is_some();
     let policy = if opt == OptimKind::Adam8bit {
         ShardingPolicy::uniform_rows(32)
     } else if base.granularity > 1 {
@@ -131,7 +153,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         fabric.name,
         comm_precision.name()
     );
-    let builder = TrainSession::builder(&model)
+    let mut builder = TrainSession::builder(&model)
         .devices(mesh)
         .replicas(base.parallel.replicas)
         .optimizer(OptimBinding::from_kind(opt))
@@ -144,6 +166,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         .comm_precision(comm_precision)
         .trace(level)
         .overrides(base.groups.clone());
+    if monitor_on {
+        builder = builder.observer(ObsConfig {
+            watchdog_ms,
+            postmortem_path: postmortem_path.clone(),
+            ..ObsConfig::default()
+        });
+    }
     if args.bool("lint") {
         // static pre-flight: elaborate the full per-rank schedule and run
         // every analyzer check before touching any shard memory
@@ -164,6 +193,17 @@ fn cmd_train(args: &Args) -> Result<()> {
         );
     }
     let mut trainer = builder.build()?;
+    if let Some(spec) = args.get("inject-stall") {
+        // deterministic fault injection: delay rank k's arrival into every
+        // rendezvous collective by delays[k] microseconds (testing only)
+        let delays: Vec<u64> = spec
+            .split(',')
+            .map(|s| s.trim().parse::<u64>())
+            .collect::<Result<_, _>>()
+            .map_err(|_| anyhow!("bad --inject-stall '{spec}' (expected us[,us...])"))?;
+        eprintln!("fault injection: arrival stagger {delays:?} us");
+        set_arrival_stagger(&delays);
+    }
     println!("compute runtime: {}", trainer.runtime.backend_name());
     println!(
         "shard groups: {}",
@@ -213,6 +253,29 @@ fn cmd_train(args: &Args) -> Result<()> {
             s.hidden_comm_s,
             s.total_comm_s
         );
+    }
+    if trainer.obs.armed() {
+        for d in trainer.obs.diagnostics() {
+            eprintln!("health: {d}");
+        }
+        if let Some(out) = &metrics_path {
+            if let Some(m) = trainer.obs.metrics() {
+                let body = if out.ends_with(".prom") {
+                    m.prometheus()
+                } else {
+                    format!("{}\n", m.json())
+                };
+                std::fs::write(out, body).map_err(|e| {
+                    anyhow!("{}", rt(codes::EXPORT_IO, format_args!("writing metrics {out}: {e}")))
+                })?;
+                println!("metrics: {out}");
+            }
+        }
+        if let Some(out) = &postmortem_path {
+            trainer.obs.write_postmortem(out).map_err(|e| anyhow!(e))?;
+            println!("postmortem: {out}");
+        }
+        trainer.obs.shutdown();
     }
     let path = save_log(
         &format!("train_{model}_{}_{}", opt.name(), backend.name()),

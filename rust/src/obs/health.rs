@@ -1,0 +1,243 @@
+//! Lock-free heartbeat board: one packed atomic slot per rank, scanned
+//! by the watchdog for ranks sitting inside a rendezvous too long.
+//!
+//! A rank thread publishes "I entered collective `op` at `t`" with two
+//! relaxed atomic stores and clears it with one; the watchdog (or the
+//! exit-path deadline check) reads the slot without taking any lock. The
+//! packing keeps the whole heartbeat in one word — `busy` flag, op id,
+//! and bucket intern id — so a torn read can at worst misreport for one
+//! poll tick, never corrupt state. Stall findings are deduplicated per
+//! incident via a compare-and-swap on the entry timestamp, so the
+//! monitor thread and the synchronous exit check never double-report.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Collective-op name table; heartbeat slots store indices into it.
+/// Index 0 is the idle sentinel.
+pub const OPS: [&str; 6] =
+    ["idle", "all_gather", "reduce_scatter", "all_reduce", "broadcast", "all_to_all"];
+
+/// Phase name table for the board's step-schedule phase gauge.
+pub const PHASES: [&str; 6] = ["idle", "gather", "compute", "reduce", "optim", "step"];
+
+/// Index of `name` in [`OPS`] (0 — idle — when unknown).
+pub fn op_id(name: &str) -> u64 {
+    OPS.iter().position(|&o| o == name).unwrap_or(0) as u64
+}
+
+/// Index of `name` in [`PHASES`] (0 when unknown).
+pub fn phase_id(name: &str) -> u64 {
+    PHASES.iter().position(|&p| p == name).unwrap_or(0) as u64
+}
+
+const BUSY: u64 = 1 << 63;
+const OP_SHIFT: u32 = 32;
+const BUCKET_MASK: u64 = (1 << 32) - 1;
+
+/// One rank's heartbeat slot.
+///
+/// `state` packs `busy(1) | op(8) | bucket_id+1(32)`; `since_ns` is the
+/// collective entry time (nanoseconds on the observer clock);
+/// `reported_ns` is the entry time of the last incident a stall
+/// diagnostic was emitted for (the dedup token).
+#[derive(Debug, Default)]
+struct RankSlot {
+    state: AtomicU64,
+    since_ns: AtomicU64,
+    reported_ns: AtomicU64,
+}
+
+/// A stalled-rank finding from one board scan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Stall {
+    pub rank: usize,
+    /// Index into [`OPS`].
+    pub op: u64,
+    /// Bucket intern id + 1 (0 = no bucket context).
+    pub bucket: u64,
+    pub for_ns: u64,
+}
+
+/// One rank's decoded heartbeat for postmortem snapshots.
+#[derive(Debug, Clone, Copy)]
+pub struct RankHealth {
+    pub rank: usize,
+    pub busy: bool,
+    /// Index into [`OPS`].
+    pub op: u64,
+    /// Bucket intern id + 1 (0 = none).
+    pub bucket: u64,
+    /// How long the rank has been in its current collective.
+    pub in_op_ns: u64,
+}
+
+/// The shared health board: per-rank heartbeat slots plus the schedule
+/// gauges (current step / phase / bucket) the executor publishes.
+#[derive(Debug)]
+pub struct HealthBoard {
+    slots: Vec<RankSlot>,
+    /// Current (1-based) training step.
+    pub step: AtomicU64,
+    /// Index into [`PHASES`].
+    pub phase: AtomicU64,
+    /// Bucket intern id + 1 the schedule is currently driving (0 = none).
+    pub bucket: AtomicU64,
+}
+
+impl HealthBoard {
+    pub fn new(ranks: usize) -> HealthBoard {
+        HealthBoard {
+            slots: (0..ranks).map(|_| RankSlot::default()).collect(),
+            step: AtomicU64::new(0),
+            phase: AtomicU64::new(0),
+            bucket: AtomicU64::new(0),
+        }
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Rank `rank` entered collective `op` at `now_ns`. Lock-free; two
+    /// relaxed stores.
+    pub fn enter(&self, rank: usize, op: u64, now_ns: u64) {
+        let Some(slot) = self.slots.get(rank) else { return };
+        let bucket = self.bucket.load(Ordering::Relaxed) & BUCKET_MASK;
+        slot.since_ns.store(now_ns, Ordering::Relaxed);
+        slot.state.store(BUSY | (op << OP_SHIFT) | bucket, Ordering::Release);
+    }
+
+    /// Rank `rank` left its collective at `now_ns`. Returns the decoded
+    /// heartbeat it held (op, bucket, dwell time) so the caller can
+    /// account per-rank wait and run the exit-path deadline check.
+    pub fn exit(&self, rank: usize, now_ns: u64) -> Option<RankHealth> {
+        let slot = self.slots.get(rank)?;
+        let state = slot.state.load(Ordering::Acquire);
+        let since = slot.since_ns.load(Ordering::Relaxed);
+        slot.state.store(0, Ordering::Release);
+        if state & BUSY == 0 {
+            return None;
+        }
+        Some(RankHealth {
+            rank,
+            busy: false,
+            op: (state >> OP_SHIFT) & 0xff,
+            bucket: state & BUCKET_MASK,
+            in_op_ns: now_ns.saturating_sub(since),
+        })
+    }
+
+    /// Claim the right to report a stall that began at `since_ns` on
+    /// `rank`. Returns true exactly once per (rank, incident) — the CAS
+    /// dedup between the monitor thread and the exit-path check.
+    pub fn try_claim_report(&self, rank: usize, since_ns: u64) -> bool {
+        let Some(slot) = self.slots.get(rank) else { return false };
+        let prev = slot.reported_ns.load(Ordering::Relaxed);
+        prev != since_ns
+            && slot
+                .reported_ns
+                .compare_exchange(prev, since_ns, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+    }
+
+    /// Scan for ranks that have been inside one rendezvous longer than
+    /// `deadline_ns` as of `now_ns`. Each incident is yielded once
+    /// (claimed via [`HealthBoard::try_claim_report`]).
+    pub fn stalls(&self, now_ns: u64, deadline_ns: u64) -> Vec<Stall> {
+        let mut out = Vec::new();
+        for (rank, slot) in self.slots.iter().enumerate() {
+            let state = slot.state.load(Ordering::Acquire);
+            if state & BUSY == 0 {
+                continue;
+            }
+            let since = slot.since_ns.load(Ordering::Relaxed);
+            // re-read: if the slot changed underneath us the rank moved
+            // on — skip it this tick rather than report a torn pair
+            if slot.state.load(Ordering::Acquire) != state {
+                continue;
+            }
+            let dwell = now_ns.saturating_sub(since);
+            if dwell >= deadline_ns && self.try_claim_report(rank, since) {
+                out.push(Stall {
+                    rank,
+                    op: (state >> OP_SHIFT) & 0xff,
+                    bucket: state & BUCKET_MASK,
+                    for_ns: dwell,
+                });
+            }
+        }
+        out
+    }
+
+    /// Decode every rank's current heartbeat (postmortem snapshot).
+    pub fn snapshot(&self, now_ns: u64) -> Vec<RankHealth> {
+        self.slots
+            .iter()
+            .enumerate()
+            .map(|(rank, slot)| {
+                let state = slot.state.load(Ordering::Acquire);
+                let since = slot.since_ns.load(Ordering::Relaxed);
+                let busy = state & BUSY != 0;
+                RankHealth {
+                    rank,
+                    busy,
+                    op: (state >> OP_SHIFT) & 0xff,
+                    bucket: state & BUCKET_MASK,
+                    in_op_ns: if busy { now_ns.saturating_sub(since) } else { 0 },
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn op_and_phase_tables_roundtrip() {
+        for (i, op) in OPS.iter().enumerate() {
+            assert_eq!(op_id(op), i as u64);
+        }
+        assert_eq!(op_id("nope"), 0);
+        assert_eq!(phase_id("reduce"), 3);
+    }
+
+    #[test]
+    fn enter_exit_roundtrips_heartbeat() {
+        let b = HealthBoard::new(2);
+        b.bucket.store(7, Ordering::Relaxed);
+        b.enter(1, op_id("all_gather"), 1_000);
+        let snap = b.snapshot(5_000);
+        assert!(snap[1].busy && !snap[0].busy);
+        assert_eq!(snap[1].op, op_id("all_gather"));
+        assert_eq!(snap[1].bucket, 7);
+        assert_eq!(snap[1].in_op_ns, 4_000);
+        let h = b.exit(1, 6_000).unwrap();
+        assert_eq!(h.in_op_ns, 5_000);
+        assert_eq!(h.bucket, 7);
+        assert!(!b.snapshot(7_000)[1].busy);
+        // exit on an idle slot is a no-op
+        assert!(b.exit(0, 7_000).is_none());
+        // out-of-range ranks never panic
+        b.enter(9, 1, 0);
+        assert!(b.exit(9, 0).is_none());
+    }
+
+    #[test]
+    fn stall_scan_detects_and_dedups() {
+        let b = HealthBoard::new(3);
+        b.enter(2, op_id("reduce_scatter"), 0);
+        assert!(b.stalls(500, 1_000).is_empty(), "before the deadline");
+        let s = b.stalls(2_000, 1_000);
+        assert_eq!(s.len(), 1);
+        assert_eq!((s[0].rank, s[0].op), (2, op_id("reduce_scatter")));
+        assert_eq!(s[0].for_ns, 2_000);
+        // same incident never reported twice
+        assert!(b.stalls(3_000, 1_000).is_empty());
+        // a new incident (new entry timestamp) reports again
+        b.exit(2, 3_000);
+        b.enter(2, op_id("all_gather"), 4_000);
+        assert_eq!(b.stalls(6_000, 1_000).len(), 1);
+    }
+}

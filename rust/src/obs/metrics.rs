@@ -1,0 +1,323 @@
+//! Metrics registry: counters, gauges, histograms, and per-step series
+//! with Prometheus text-format and JSON snapshot exporters.
+//!
+//! This promotes the PR 5 Chrome-trace counter machinery into a proper
+//! registry the monitor can export live: the train session feeds one
+//! sample per step (via [`crate::obs::Observer::observe_step`]) and the
+//! registry keeps the
+//! step-time / exposed-comm / overlap-efficiency / wire-byte /
+//! peak-memory series the anomaly pass and `fsdp-report` consume.
+//! Metric names are registered as `&'static str`, so the hot path never
+//! allocates name strings; series and histogram storage grows by a few
+//! machine words per step.
+
+use std::sync::Mutex;
+
+use crate::analysis::diag::{codes, Diagnostic};
+use crate::util::json::Json;
+
+/// Default histogram bucket bounds for second-valued observations
+/// (1 ms … 60 s, roughly ×2.5 per step).
+pub const SECONDS_BOUNDS: [f64; 12] =
+    [0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 5.0, 60.0];
+
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bounds: &'static [f64],
+    pub counts: Vec<u64>,
+    pub sum: f64,
+    pub count: u64,
+}
+
+impl Histogram {
+    fn new(bounds: &'static [f64]) -> Histogram {
+        Histogram { bounds, counts: vec![0; bounds.len() + 1], sum: 0.0, count: 0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let i = self.bounds.iter().position(|&b| v <= b).unwrap_or(self.bounds.len());
+        self.counts[i] += 1;
+        self.sum += v;
+        self.count += 1;
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+struct Series {
+    steps: Vec<u64>,
+    values: Vec<f64>,
+}
+
+#[derive(Debug, Default)]
+struct Reg {
+    counters: Vec<(&'static str, f64)>,
+    gauges: Vec<(&'static str, f64)>,
+    histograms: Vec<(&'static str, Histogram)>,
+    series: Vec<(&'static str, Series)>,
+}
+
+fn slot<'a, T>(list: &'a mut Vec<(&'static str, T)>, name: &'static str, init: impl FnOnce() -> T) -> &'a mut T {
+    if let Some(i) = list.iter().position(|(n, _)| *n == name) {
+        return &mut list[i].1;
+    }
+    list.push((name, init()));
+    &mut list.last_mut().unwrap().1
+}
+
+/// Thread-safe metrics registry. Insertion order of first touch is the
+/// export order, so snapshots are deterministic.
+#[derive(Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Mutex<Reg>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `v` to a monotonically increasing counter.
+    pub fn counter_add(&self, name: &'static str, v: f64) {
+        *slot(&mut relock(&self.inner).counters, name, || 0.0) += v;
+    }
+
+    /// Set a gauge to its latest value.
+    pub fn gauge_set(&self, name: &'static str, v: f64) {
+        *slot(&mut relock(&self.inner).gauges, name, || 0.0) = v;
+    }
+
+    /// Record one observation into a seconds histogram.
+    pub fn observe(&self, name: &'static str, v: f64) {
+        slot(&mut relock(&self.inner).histograms, name, || Histogram::new(&SECONDS_BOUNDS))
+            .observe(v);
+    }
+
+    /// Append one per-step sample to a named series.
+    pub fn series_push(&self, name: &'static str, step: u64, v: f64) {
+        let mut g = relock(&self.inner);
+        let s = slot(&mut g.series, name, Series::default);
+        s.steps.push(step);
+        s.values.push(v);
+    }
+
+    /// Latest values of a series (test/report helper).
+    pub fn series(&self, name: &str) -> Vec<f64> {
+        relock(&self.inner)
+            .series
+            .iter()
+            .find(|(n, _)| *n == name)
+            .map(|(_, s)| s.values.clone())
+            .unwrap_or_default()
+    }
+
+    /// Rolling-window anomaly pass: flag step-time samples that exceed,
+    /// and overlap-efficiency samples that undercut, the median of the
+    /// preceding `window` samples by more than `pct` (fraction, e.g.
+    /// 0.5 = 50%). Returns [`codes::METRIC_REGRESSION`] warnings.
+    pub fn anomalies(&self, window: usize, pct: f64) -> Vec<Diagnostic> {
+        let g = relock(&self.inner);
+        let mut out = Vec::new();
+        for (name, lower_is_better) in [("step_time_s", true), ("overlap_efficiency", false)] {
+            let Some((_, s)) = g.series.iter().find(|(n, _)| *n == name) else { continue };
+            for i in window..s.values.len() {
+                let base = median(&s.values[i - window..i]);
+                let v = s.values[i];
+                let bad = if lower_is_better {
+                    base > 0.0 && v > base * (1.0 + pct)
+                } else {
+                    base > 0.0 && v < base * (1.0 - pct)
+                };
+                if bad {
+                    out.push(Diagnostic::warning(
+                        codes::METRIC_REGRESSION,
+                        format!("step {}", s.steps[i]),
+                        format!(
+                            "{name} {v:.6} vs rolling median {base:.6} \
+                             (window {window}, tolerance {:.0}%)",
+                            pct * 100.0
+                        ),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Prometheus text exposition format (`fsdp_` prefix, `.` → `_`;
+    /// series export their latest value with a `step` label-free gauge).
+    pub fn prometheus(&self) -> String {
+        let g = relock(&self.inner);
+        let mut out = String::new();
+        for (name, v) in &g.counters {
+            let n = prom_name(name);
+            out.push_str(&format!(
+                "# HELP {n}_total cumulative {name}\n# TYPE {n}_total counter\n{n}_total {v}\n"
+            ));
+        }
+        for (name, v) in &g.gauges {
+            let n = prom_name(name);
+            out.push_str(&format!("# HELP {n} latest {name}\n# TYPE {n} gauge\n{n} {v}\n"));
+        }
+        for (name, h) in &g.histograms {
+            let n = prom_name(name);
+            out.push_str(&format!("# HELP {n} {name} distribution\n# TYPE {n} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.counts[i];
+                out.push_str(&format!("{n}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            out.push_str(&format!(
+                "{n}_bucket{{le=\"+Inf\"}} {}\n{n}_sum {}\n{n}_count {}\n",
+                h.count, h.sum, h.count
+            ));
+        }
+        for (name, s) in &g.series {
+            let n = prom_name(name);
+            if let Some(v) = s.values.last() {
+                out.push_str(&format!(
+                    "# HELP {n} latest per-step {name}\n# TYPE {n} gauge\n{n} {v}\n"
+                ));
+            }
+        }
+        out
+    }
+
+    /// `fsdp-metrics-v1` JSON snapshot (the `fsdp-report` input shape).
+    pub fn json(&self) -> Json {
+        let g = relock(&self.inner);
+        Json::obj(vec![
+            ("schema", Json::str("fsdp-metrics-v1")),
+            (
+                "counters",
+                Json::obj(g.counters.iter().map(|(n, v)| (*n, Json::num(*v))).collect()),
+            ),
+            ("gauges", Json::obj(g.gauges.iter().map(|(n, v)| (*n, Json::num(*v))).collect())),
+            (
+                "histograms",
+                Json::obj(
+                    g.histograms
+                        .iter()
+                        .map(|(n, h)| {
+                            (
+                                *n,
+                                Json::obj(vec![
+                                    ("sum", Json::num(h.sum)),
+                                    ("count", Json::num(h.count as f64)),
+                                    (
+                                        "bounds",
+                                        Json::arr(h.bounds.iter().map(|b| Json::num(*b))),
+                                    ),
+                                    (
+                                        "counts",
+                                        Json::arr(h.counts.iter().map(|c| Json::num(*c as f64))),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "series",
+                Json::obj(
+                    g.series
+                        .iter()
+                        .map(|(n, s)| {
+                            (
+                                *n,
+                                Json::obj(vec![
+                                    (
+                                        "steps",
+                                        Json::arr(s.steps.iter().map(|x| Json::num(*x as f64))),
+                                    ),
+                                    (
+                                        "values",
+                                        Json::arr(s.values.iter().map(|v| Json::num(*v))),
+                                    ),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn prom_name(name: &str) -> String {
+    let mut n = String::with_capacity(name.len() + 5);
+    n.push_str("fsdp_");
+    n.extend(name.chars().map(|c| if c.is_ascii_alphanumeric() { c } else { '_' }));
+    n
+}
+
+/// Median of a non-empty slice (0.0 when empty).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+    let mid = v.len() / 2;
+    if v.len() % 2 == 1 {
+        v[mid]
+    } else {
+        (v[mid - 1] + v[mid]) / 2.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_gauges_histograms_export() {
+        let m = MetricsRegistry::new();
+        m.counter_add("wire.bytes", 100.0);
+        m.counter_add("wire.bytes", 28.0);
+        m.gauge_set("mem.peak_reserved", 4096.0);
+        m.observe("step_time_s", 0.002);
+        m.observe("step_time_s", 0.2);
+        let prom = m.prometheus();
+        assert!(prom.contains("fsdp_wire_bytes_total 128"), "{prom}");
+        assert!(prom.contains("fsdp_mem_peak_reserved 4096"), "{prom}");
+        assert!(prom.contains("fsdp_step_time_s_count 2"), "{prom}");
+        assert!(prom.contains("fsdp_step_time_s_bucket{le=\"0.0025\"} 1"), "{prom}");
+        let j = m.json();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some("fsdp-metrics-v1"));
+        assert_eq!(
+            j.get("counters").and_then(|c| c.get("wire.bytes")).and_then(Json::as_f64),
+            Some(128.0)
+        );
+        // snapshot parses back (fsdp-report round-trip)
+        assert!(Json::parse(&j.to_string()).is_ok());
+    }
+
+    #[test]
+    fn series_and_anomaly_pass() {
+        let m = MetricsRegistry::new();
+        for step in 0..8 {
+            m.series_push("step_time_s", step, 0.01);
+            m.series_push("overlap_efficiency", step, 0.9);
+        }
+        assert!(m.anomalies(4, 0.5).is_empty());
+        m.series_push("step_time_s", 8, 0.05); // 5x the median
+        m.series_push("overlap_efficiency", 8, 0.2); // collapsed overlap
+        let diags = m.anomalies(4, 0.5);
+        assert_eq!(diags.len(), 2, "{diags:?}");
+        assert!(diags.iter().all(|d| d.code == codes::METRIC_REGRESSION));
+        assert!(diags[0].subject.contains("step 8"));
+    }
+
+    #[test]
+    fn median_behaves() {
+        assert_eq!(median(&[]), 0.0);
+        assert_eq!(median(&[3.0]), 3.0);
+        assert_eq!(median(&[1.0, 3.0]), 2.0);
+        assert_eq!(median(&[5.0, 1.0, 3.0]), 3.0);
+    }
+}

@@ -1,0 +1,639 @@
+//! Live runtime health monitor: heartbeats, collective watchdog, flight
+//! recorder, and metrics export.
+//!
+//! The [`Observer`] is the single handle the cluster backends, the
+//! executor, and the train session share. It is cheap to clone (an
+//! `Option<Arc>`), and **when disarmed it costs at most one branch per
+//! event**: every recording method starts with a single
+//! `Option::is_none` check and returns immediately — no locks, no
+//! atomics, no allocation, no clock reads. Monitoring is also *pure*:
+//! armed or not, it never touches training state, so loss trajectories
+//! are bit-identical with the monitor on and off (enforced by
+//! `tests/health_monitor.rs`).
+//!
+//! Armed, the observer provides four surfaces:
+//!
+//! 1. **Heartbeats + watchdog** ([`health`]): rank threads publish
+//!    lock-free heartbeats (step, phase, collective, bucket) into a
+//!    shared [`HealthBoard`]; a monitor thread — plus a synchronous
+//!    check on every collective exit, so detection does not depend on
+//!    scheduler timing — reports ranks stalled in one rendezvous past
+//!    `watchdog_ms` as [`codes::WATCHDOG_STALL`] diagnostics naming the
+//!    rank, collective, and bucket. Rendezvous dwell times also feed
+//!    per-step straggler attribution (max/median rank skew).
+//! 2. **Flight recorder** ([`recorder`]): a bounded per-rank ring of
+//!    recent events (collectives, allocator claims, step boundaries) —
+//!    O(1) per event, allocation-free in steady state — dumped as an
+//!    `fsdp-postmortem-v1` JSON on panic, watchdog firing, or
+//!    `train --postmortem-on-exit`.
+//! 3. **Metrics** ([`metrics`]): a [`MetricsRegistry`] of counters,
+//!    gauges, histograms, and per-step series with Prometheus and JSON
+//!    exporters plus a rolling-window anomaly pass
+//!    ([`codes::METRIC_REGRESSION`]).
+//! 4. **Postmortems**: [`Observer::postmortem`] assembles ring
+//!    contents, a health-board snapshot, memory peaks, diagnostics, and
+//!    the metrics snapshot into one structured document.
+
+pub mod health;
+pub mod metrics;
+pub mod recorder;
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once, Weak};
+use std::time::{Duration, Instant};
+
+use crate::analysis::diag::{codes, rt, Diagnostic};
+use crate::util::json::Json;
+pub use health::{HealthBoard, RankHealth, Stall, OPS, PHASES};
+pub use metrics::MetricsRegistry;
+pub use recorder::{FlightEvent, FlightRing, NO_BUCKET};
+
+/// Observer knobs (the `[obs]` config section / `--watchdog-ms` family).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ObsConfig {
+    /// Watchdog deadline in milliseconds; 0 disables the watchdog (the
+    /// board and recorder still run when the observer is armed).
+    pub watchdog_ms: u64,
+    /// Flight-recorder capacity per rank (events).
+    pub ring_capacity: usize,
+    /// Rolling-window length for the metric anomaly pass.
+    pub anomaly_window: usize,
+    /// Regression tolerance for the anomaly pass (fraction, 0.5 = 50%).
+    pub anomaly_pct: f64,
+    /// Where to write the postmortem JSON when the watchdog fires or the
+    /// process panics (`None` = only on explicit request).
+    pub postmortem_path: Option<String>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            watchdog_ms: 0,
+            ring_capacity: 64,
+            anomaly_window: 8,
+            anomaly_pct: 0.5,
+            postmortem_path: None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct ObsInner {
+    cfg: ObsConfig,
+    origin: Instant,
+    board: HealthBoard,
+    rings: Vec<Mutex<FlightRing>>,
+    /// Bucket-name intern table; ring events store `index + 1`.
+    buckets: Mutex<Vec<String>>,
+    /// Per-rank rendezvous dwell this step (ns), reset by `observe_step`.
+    wait_ns: Vec<AtomicU64>,
+    metrics: MetricsRegistry,
+    diags: Mutex<Vec<Diagnostic>>,
+    peak_reserved: AtomicU64,
+    peak_allocated: AtomicU64,
+    stop: AtomicBool,
+    monitor: Mutex<Option<std::thread::JoinHandle<()>>>,
+}
+
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Shared handle to the runtime health monitor. `Observer::off()` (the
+/// `Default`) is a true no-op: one branch per recording call.
+#[derive(Debug, Clone, Default)]
+pub struct Observer {
+    inner: Option<Arc<ObsInner>>,
+}
+
+impl Observer {
+    /// The disarmed observer — every method is a single-branch no-op.
+    pub fn off() -> Observer {
+        Observer { inner: None }
+    }
+
+    /// Arm the monitor for `ranks` rank threads. Spawns the watchdog
+    /// monitor thread when `cfg.watchdog_ms > 0`.
+    pub fn new(cfg: ObsConfig, ranks: usize) -> Observer {
+        let ranks = ranks.max(1);
+        let watchdog_ms = cfg.watchdog_ms;
+        let inner = Arc::new(ObsInner {
+            board: HealthBoard::new(ranks),
+            rings: (0..ranks).map(|_| Mutex::new(FlightRing::new(cfg.ring_capacity))).collect(),
+            buckets: Mutex::new(Vec::new()),
+            wait_ns: (0..ranks).map(|_| AtomicU64::new(0)).collect(),
+            metrics: MetricsRegistry::new(),
+            diags: Mutex::new(Vec::new()),
+            peak_reserved: AtomicU64::new(0),
+            peak_allocated: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            monitor: Mutex::new(None),
+            origin: Instant::now(),
+            cfg,
+        });
+        if watchdog_ms > 0 {
+            let weak: Weak<ObsInner> = Arc::downgrade(&inner);
+            let poll = Duration::from_millis((watchdog_ms / 4).max(1));
+            // Sleep in short ticks between scans so `shutdown` joins
+            // promptly even under a multi-second watchdog deadline.
+            let tick = poll.min(Duration::from_millis(25));
+            let handle = std::thread::Builder::new()
+                .name("fsdp-watchdog".into())
+                .spawn(move || {
+                    let mut since_scan = Duration::ZERO;
+                    loop {
+                        std::thread::sleep(tick);
+                        let Some(inner) = weak.upgrade() else { break };
+                        if inner.stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        since_scan += tick;
+                        if since_scan >= poll {
+                            since_scan = Duration::ZERO;
+                            ObsInner::scan(&inner);
+                        }
+                    }
+                })
+                .ok();
+            *relock(&inner.monitor) = handle;
+        }
+        Observer { inner: Some(inner) }
+    }
+
+    /// Is the monitor armed? The off path of every recording method is
+    /// exactly this branch.
+    pub fn armed(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.inner.as_ref().map(|i| i.board.ranks()).unwrap_or(0)
+    }
+
+    pub fn config(&self) -> Option<&ObsConfig> {
+        self.inner.as_deref().map(|i| &i.cfg)
+    }
+
+    /// The metrics registry, when armed.
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        self.inner.as_deref().map(|i| &i.metrics)
+    }
+
+    // ---- schedule context (executor / session side) ----------------------
+
+    /// Publish the current (1-based) training step and record the step
+    /// boundary on every rank's ring.
+    pub fn set_step(&self, step: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.board.step.store(step, Ordering::Relaxed);
+        inner.flight_all("step", "begin", step, 0);
+    }
+
+    /// Publish the executor phase (`"gather"`, `"compute"`, …).
+    pub fn set_phase(&self, phase: &'static str) {
+        let Some(inner) = &self.inner else { return };
+        inner.board.phase.store(health::phase_id(phase), Ordering::Relaxed);
+    }
+
+    /// Publish the bucket the schedule is currently driving; heartbeats
+    /// and ring events record its intern id until the next call.
+    pub fn set_bucket(&self, name: &str) {
+        let Some(inner) = &self.inner else { return };
+        let id = inner.intern(name);
+        inner.board.bucket.store(id, Ordering::Relaxed);
+    }
+
+    /// Clear the bucket context (between buckets / at step end).
+    pub fn clear_bucket(&self) {
+        let Some(inner) = &self.inner else { return };
+        inner.board.bucket.store(NO_BUCKET, Ordering::Relaxed);
+    }
+
+    // ---- heartbeats (cluster backend side) -------------------------------
+
+    /// Rank `rank` entered collective `op` (a [`health::OPS`] name).
+    pub fn rank_enter(&self, rank: usize, op: &'static str) {
+        let Some(inner) = &self.inner else { return };
+        let now = inner.now_ns();
+        inner.board.enter(rank, health::op_id(op), now);
+        inner.flight(rank, "coll", op, rank as u64, 0);
+    }
+
+    /// Rank `rank` left its collective. Accounts the dwell toward the
+    /// step's straggler attribution and runs the synchronous watchdog
+    /// deadline check, so an injected stall is detected deterministically
+    /// even if the monitor thread never got scheduled.
+    pub fn rank_exit(&self, rank: usize) {
+        let Some(inner) = &self.inner else { return };
+        let now = inner.now_ns();
+        let Some(h) = inner.board.exit(rank, now) else { return };
+        if let Some(w) = inner.wait_ns.get(rank) {
+            w.fetch_add(h.in_op_ns, Ordering::Relaxed);
+        }
+        let deadline_ns = inner.cfg.watchdog_ms.saturating_mul(1_000_000);
+        if deadline_ns > 0 && h.in_op_ns >= deadline_ns {
+            let since = now.saturating_sub(h.in_op_ns);
+            if inner.board.try_claim_report(rank, since) {
+                ObsInner::report_stall(
+                    inner,
+                    Stall { rank, op: h.op, bucket: h.bucket, for_ns: h.in_op_ns },
+                );
+            }
+        }
+    }
+
+    // ---- flight recorder -------------------------------------------------
+
+    /// Record one event on `rank`'s ring (O(1), no steady-state alloc).
+    pub fn flight(&self, rank: usize, kind: &'static str, what: &'static str, a: u64, b: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.flight(rank, kind, what, a, b);
+    }
+
+    /// Record one schedule-wide event on every rank's ring.
+    pub fn flight_all(&self, kind: &'static str, what: &'static str, a: u64, b: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.flight_all(kind, what, a, b);
+    }
+
+    // ---- metrics ---------------------------------------------------------
+
+    /// Track allocator peaks for the postmortem memory section.
+    pub fn note_memory(&self, peak_reserved: u64, peak_allocated: u64) {
+        let Some(inner) = &self.inner else { return };
+        inner.peak_reserved.fetch_max(peak_reserved, Ordering::Relaxed);
+        inner.peak_allocated.fetch_max(peak_allocated, Ordering::Relaxed);
+    }
+
+    /// Feed one finished step into the registry: step-time / exposed /
+    /// overlap / wire-byte / peak-memory series plus max-median rank
+    /// skew derived from the rendezvous dwell accumulated since the last
+    /// call. `wire_bytes` is this step's delta.
+    #[allow(clippy::too_many_arguments)]
+    pub fn observe_step(
+        &self,
+        step: u64,
+        wall_s: f64,
+        exposed_comm_s: f64,
+        overlap_efficiency: f64,
+        wire_bytes: u64,
+        peak_reserved: u64,
+        peak_allocated: u64,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        let m = &inner.metrics;
+        m.series_push("step_time_s", step, wall_s);
+        m.series_push("exposed_comm_s", step, exposed_comm_s);
+        m.series_push("overlap_efficiency", step, overlap_efficiency);
+        m.series_push("wire_bytes", step, wire_bytes as f64);
+        m.series_push("peak_reserved_bytes", step, peak_reserved as f64);
+        m.series_push("peak_allocated_bytes", step, peak_allocated as f64);
+        m.observe("step_time_s", wall_s);
+        m.counter_add("wire.bytes", wire_bytes as f64);
+        m.gauge_set("mem.peak_reserved", peak_reserved as f64);
+        m.gauge_set("mem.peak_allocated", peak_allocated as f64);
+        let waits: Vec<f64> = inner
+            .wait_ns
+            .iter()
+            .map(|w| w.swap(0, Ordering::Relaxed) as f64 / 1e9)
+            .collect();
+        let max = waits.iter().cloned().fold(0.0_f64, f64::max);
+        let skew = (max - metrics::median(&waits)).max(0.0);
+        m.series_push("rank_skew_s", step, skew);
+        self.note_memory(peak_reserved, peak_allocated);
+        inner.flight_all("step", "end", step, 0);
+    }
+
+    // ---- findings & dumps ------------------------------------------------
+
+    /// All findings so far: watchdog stalls plus the metric anomaly pass.
+    pub fn diagnostics(&self) -> Vec<Diagnostic> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        let mut out = relock(&inner.diags).clone();
+        out.extend(inner.metrics.anomalies(inner.cfg.anomaly_window, inner.cfg.anomaly_pct));
+        out
+    }
+
+    /// Did the collective watchdog report at least one stalled rank?
+    pub fn watchdog_fired(&self) -> bool {
+        let Some(inner) = &self.inner else { return false };
+        relock(&inner.diags).iter().any(|d| d.code == codes::WATCHDOG_STALL)
+    }
+
+    /// Assemble the `fsdp-postmortem-v1` document: last-N events per
+    /// rank, health-board snapshot, memory peaks, diagnostics, and the
+    /// metrics snapshot.
+    pub fn postmortem(&self) -> Json {
+        let Some(inner) = &self.inner else {
+            return Json::obj(vec![("schema", Json::str("fsdp-postmortem-v1"))]);
+        };
+        let now = inner.now_ns();
+        let buckets = relock(&inner.buckets).clone();
+        let health = inner.board.snapshot(now);
+        let bucket_name = |id: u64| -> Json {
+            if id == NO_BUCKET {
+                Json::Null
+            } else {
+                Json::str(buckets.get((id - 1) as usize).map(|s| s.as_str()).unwrap_or("?"))
+            }
+        };
+        Json::obj(vec![
+            ("schema", Json::str("fsdp-postmortem-v1")),
+            ("ranks", Json::num(inner.board.ranks() as f64)),
+            ("t_us", Json::num((now / 1_000) as f64)),
+            (
+                "health",
+                Json::obj(vec![
+                    ("step", Json::num(inner.board.step.load(Ordering::Relaxed) as f64)),
+                    (
+                        "phase",
+                        Json::str(
+                            PHASES
+                                .get(inner.board.phase.load(Ordering::Relaxed) as usize)
+                                .unwrap_or(&"idle"),
+                        ),
+                    ),
+                    ("bucket", bucket_name(inner.board.bucket.load(Ordering::Relaxed))),
+                    (
+                        "ranks",
+                        Json::arr(health.iter().map(|h| {
+                            Json::obj(vec![
+                                ("rank", Json::num(h.rank as f64)),
+                                ("busy", Json::Bool(h.busy)),
+                                ("op", Json::str(OPS.get(h.op as usize).unwrap_or(&"idle"))),
+                                ("bucket", bucket_name(h.bucket)),
+                                ("in_op_ms", Json::num(h.in_op_ns as f64 / 1e6)),
+                            ])
+                        })),
+                    ),
+                ]),
+            ),
+            (
+                "events",
+                Json::arr(inner.rings.iter().map(|r| relock(r).json(&buckets))),
+            ),
+            (
+                "memory",
+                Json::obj(vec![
+                    (
+                        "peak_reserved",
+                        Json::num(inner.peak_reserved.load(Ordering::Relaxed) as f64),
+                    ),
+                    (
+                        "peak_allocated",
+                        Json::num(inner.peak_allocated.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            ("diagnostics", Json::arr(self.diagnostics().iter().map(Diagnostic::json))),
+            ("metrics", inner.metrics.json()),
+        ])
+    }
+
+    /// Write the postmortem JSON to `path` ([`codes::EXPORT_IO`] on
+    /// failure).
+    pub fn write_postmortem(&self, path: &str) -> Result<(), String> {
+        std::fs::write(path, format!("{}\n", self.postmortem()))
+            .map_err(|e| rt(codes::EXPORT_IO, format!("writing postmortem {path}: {e}")))
+    }
+
+    /// Stop and join the monitor thread (idempotent; dropping the last
+    /// clone also ends it at its next poll tick).
+    pub fn shutdown(&self) {
+        let Some(inner) = &self.inner else { return };
+        inner.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = relock(&inner.monitor).take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl ObsInner {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+
+    fn intern(&self, name: &str) -> u64 {
+        let mut b = relock(&self.buckets);
+        if let Some(i) = b.iter().position(|n| n == name) {
+            return (i + 1) as u64;
+        }
+        b.push(name.to_string());
+        b.len() as u64
+    }
+
+    fn flight(&self, rank: usize, kind: &'static str, what: &'static str, a: u64, b: u64) {
+        let Some(ring) = self.rings.get(rank) else { return };
+        let ev = FlightEvent {
+            t_us: self.now_ns() / 1_000,
+            step: self.board.step.load(Ordering::Relaxed),
+            kind,
+            what,
+            bucket: self.board.bucket.load(Ordering::Relaxed),
+            a,
+            b,
+        };
+        relock(ring).push(ev);
+    }
+
+    fn flight_all(&self, kind: &'static str, what: &'static str, a: u64, b: u64) {
+        for rank in 0..self.rings.len() {
+            self.flight(rank, kind, what, a, b);
+        }
+    }
+
+    /// One watchdog poll: report every newly stalled rank.
+    fn scan(inner: &Arc<ObsInner>) {
+        let deadline_ns = inner.cfg.watchdog_ms.saturating_mul(1_000_000);
+        if deadline_ns == 0 {
+            return;
+        }
+        for stall in inner.board.stalls(inner.now_ns(), deadline_ns) {
+            ObsInner::report_stall(inner, stall);
+        }
+    }
+
+    fn report_stall(inner: &Arc<ObsInner>, stall: Stall) {
+        let op = OPS.get(stall.op as usize).unwrap_or(&"idle");
+        let bucket = if stall.bucket == NO_BUCKET {
+            "<none>".to_string()
+        } else {
+            relock(&inner.buckets)
+                .get((stall.bucket - 1) as usize)
+                .cloned()
+                .unwrap_or_else(|| "?".to_string())
+        };
+        let d = Diagnostic::error(
+            codes::WATCHDOG_STALL,
+            format!("rank {}", stall.rank),
+            format!(
+                "rank {} stalled in {} (bucket {}) for {:.1} ms — watchdog deadline {} ms, step {}",
+                stall.rank,
+                op,
+                bucket,
+                stall.for_ns as f64 / 1e6,
+                inner.cfg.watchdog_ms,
+                inner.board.step.load(Ordering::Relaxed),
+            ),
+        );
+        eprintln!("{d}");
+        inner.flight(stall.rank, "watchdog", "stall", stall.rank as u64, stall.for_ns / 1_000);
+        relock(&inner.diags).push(d);
+        if let Some(path) = inner.cfg.postmortem_path.clone() {
+            let obs = Observer { inner: Some(inner.clone()) };
+            match obs.write_postmortem(&path) {
+                Ok(()) => eprintln!("[obs] postmortem written to {path}"),
+                Err(e) => eprintln!("[obs] {e}"),
+            }
+        }
+    }
+}
+
+static PANIC_DUMP: Mutex<Option<Observer>> = Mutex::new(None);
+static PANIC_HOOK: Once = Once::new();
+
+/// Register `obs` as the panic-time postmortem target. The (chained)
+/// hook is installed once per process; the most recently registered
+/// armed observer with a `postmortem_path` wins.
+pub fn install_panic_hook(obs: &Observer) {
+    if obs.config().and_then(|c| c.postmortem_path.as_ref()).is_none() {
+        return;
+    }
+    *relock(&PANIC_DUMP) = Some(obs.clone());
+    PANIC_HOOK.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            prev(info);
+            let obs = relock(&PANIC_DUMP).clone();
+            if let Some(obs) = obs {
+                if let Some(path) =
+                    obs.config().and_then(|c| c.postmortem_path.clone())
+                {
+                    match obs.write_postmortem(&path) {
+                        Ok(()) => eprintln!("[obs] postmortem written to {path}"),
+                        Err(e) => eprintln!("[obs] {e}"),
+                    }
+                }
+            }
+        }));
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_observer_is_inert() {
+        let obs = Observer::off();
+        assert!(!obs.armed());
+        assert_eq!(obs.ranks(), 0);
+        obs.set_step(3);
+        obs.set_phase("compute");
+        obs.set_bucket("layer0");
+        obs.rank_enter(0, "all_gather");
+        obs.rank_exit(0);
+        obs.flight(0, "alloc", "staged", 1, 2);
+        obs.observe_step(1, 0.1, 0.01, 0.9, 100, 10, 5);
+        assert!(obs.diagnostics().is_empty());
+        assert!(!obs.watchdog_fired());
+        assert!(obs.metrics().is_none());
+        assert_eq!(
+            obs.postmortem().get("schema").and_then(Json::as_str),
+            Some("fsdp-postmortem-v1")
+        );
+        obs.shutdown();
+    }
+
+    #[test]
+    fn armed_observer_records_and_dumps() {
+        let obs = Observer::new(ObsConfig::default(), 2);
+        obs.set_step(1);
+        obs.set_phase("gather");
+        obs.set_bucket("embed");
+        obs.rank_enter(0, "all_gather");
+        obs.rank_enter(1, "all_gather");
+        obs.rank_exit(0);
+        obs.rank_exit(1);
+        obs.clear_bucket();
+        obs.observe_step(1, 0.01, 0.002, 0.8, 4096, 1 << 20, 1 << 19);
+        let pm = obs.postmortem();
+        assert_eq!(pm.get("schema").and_then(Json::as_str), Some("fsdp-postmortem-v1"));
+        assert_eq!(pm.get("ranks").and_then(Json::as_f64), Some(2.0));
+        let events = pm.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(events.len(), 2);
+        // each rank saw: step begin, its collective, step end
+        for ring in events {
+            let evs = ring.as_arr().unwrap();
+            assert!(evs.len() >= 3, "{evs:?}");
+            assert!(evs.iter().all(|e| {
+                e.get("t_us").is_some() && e.get("kind").is_some() && e.get("what").is_some()
+            }));
+            assert!(evs
+                .iter()
+                .any(|e| e.get("kind").and_then(Json::as_str) == Some("coll")
+                    && e.get("bucket").and_then(Json::as_str) == Some("embed")));
+        }
+        assert_eq!(
+            pm.get("metrics").and_then(|m| m.get("schema")).and_then(Json::as_str),
+            Some("fsdp-metrics-v1")
+        );
+        // parses back as strict JSON
+        assert!(Json::parse(&pm.to_string()).is_ok());
+        assert!(obs.diagnostics().is_empty());
+        obs.shutdown();
+    }
+
+    #[test]
+    fn exit_path_deadline_check_reports_stall() {
+        let cfg = ObsConfig { watchdog_ms: 5, ..ObsConfig::default() };
+        let obs = Observer::new(cfg, 2);
+        obs.set_bucket("head");
+        obs.rank_enter(1, "reduce_scatter");
+        std::thread::sleep(Duration::from_millis(20));
+        obs.rank_exit(1);
+        assert!(obs.watchdog_fired());
+        let diags = obs.diagnostics();
+        let stall = diags.iter().find(|d| d.code == codes::WATCHDOG_STALL).unwrap();
+        assert!(stall.message.contains("rank 1"), "{}", stall.message);
+        assert!(stall.message.contains("reduce_scatter"), "{}", stall.message);
+        assert!(stall.message.contains("head"), "{}", stall.message);
+        obs.shutdown();
+    }
+
+    #[test]
+    fn monitor_thread_detects_live_stall() {
+        let cfg = ObsConfig { watchdog_ms: 4, ..ObsConfig::default() };
+        let obs = Observer::new(cfg, 1);
+        obs.rank_enter(0, "all_to_all");
+        // never exits: only the monitor thread can see this one
+        let mut fired = false;
+        for _ in 0..200 {
+            std::thread::sleep(Duration::from_millis(2));
+            if obs.watchdog_fired() {
+                fired = true;
+                break;
+            }
+        }
+        assert!(fired, "monitor thread never reported the stall");
+        obs.shutdown();
+    }
+
+    #[test]
+    fn rank_skew_attribution() {
+        let obs = Observer::new(ObsConfig::default(), 4);
+        // simulate dwell: rank 3 waited much longer than the others
+        let inner = obs.inner.as_ref().unwrap();
+        for (rank, ns) in [(0usize, 1_000_000u64), (1, 1_200_000), (2, 900_000), (3, 9_000_000)] {
+            inner.wait_ns[rank].store(ns, Ordering::Relaxed);
+        }
+        obs.observe_step(1, 0.05, 0.01, 0.7, 0, 0, 0);
+        let skew = obs.metrics().unwrap().series("rank_skew_s");
+        assert_eq!(skew.len(), 1);
+        assert!((skew[0] - (0.009 - 0.0011)).abs() < 1e-9, "{skew:?}");
+        // accumulators reset after the step
+        obs.observe_step(2, 0.05, 0.01, 0.7, 0, 0, 0);
+        assert_eq!(obs.metrics().unwrap().series("rank_skew_s")[1], 0.0);
+        obs.shutdown();
+    }
+}

@@ -1,0 +1,151 @@
+//! Flight recorder: a bounded per-rank ring of recent runtime events.
+//!
+//! Always on once the observer is armed, O(1) per push, and — after the
+//! ring warms up to capacity — zero allocation in steady state: events
+//! carry only `Copy` fields (`&'static str` kinds/labels, integer
+//! payloads, bucket *intern ids* instead of owned names). The postmortem
+//! dump resolves intern ids back to bucket names and serializes the last
+//! N events per rank as `fsdp-postmortem-v1` JSON.
+
+use crate::util::json::Json;
+
+/// Bucket intern id sentinel: "no bucket context".
+pub const NO_BUCKET: u64 = 0;
+
+/// One recorded event. All fields are `Copy` so pushing never allocates.
+#[derive(Debug, Clone, Copy)]
+pub struct FlightEvent {
+    /// Microseconds since the observer's origin instant.
+    pub t_us: u64,
+    /// Training step the event happened in.
+    pub step: u64,
+    /// Event class: `"coll"`, `"sched"`, `"alloc"`, `"step"`, `"watchdog"`.
+    pub kind: &'static str,
+    /// What happened within the class (`"all_gather"`, `"ag_issue"`, …).
+    pub what: &'static str,
+    /// Bucket intern id + 1 ([`NO_BUCKET`] = none).
+    pub bucket: u64,
+    /// Event payload (bytes, rank, elapsed µs — kind-specific).
+    pub a: u64,
+    /// Second payload slot.
+    pub b: u64,
+}
+
+/// Fixed-capacity ring buffer of [`FlightEvent`]s.
+#[derive(Debug)]
+pub struct FlightRing {
+    buf: Vec<FlightEvent>,
+    next: usize,
+    /// Total events ever pushed (so the dump can say how many were lost).
+    total: u64,
+}
+
+impl FlightRing {
+    pub fn new(capacity: usize) -> FlightRing {
+        FlightRing { buf: Vec::with_capacity(capacity.max(1)), next: 0, total: 0 }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Record one event: O(1), and allocation-free once the ring has
+    /// warmed to capacity (the backing `Vec` is pre-reserved, so even
+    /// warm-up pushes never reallocate).
+    pub fn push(&mut self, ev: FlightEvent) {
+        if self.buf.len() < self.buf.capacity() {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+        }
+        self.next = (self.next + 1) % self.buf.capacity();
+        self.total += 1;
+    }
+
+    /// Events oldest → newest (allocates — dump path only).
+    pub fn events(&self) -> Vec<FlightEvent> {
+        if self.buf.len() < self.buf.capacity() {
+            return self.buf.clone();
+        }
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.next..]);
+        out.extend_from_slice(&self.buf[..self.next]);
+        out
+    }
+
+    /// JSON array of this ring's events, resolving bucket intern ids
+    /// against `bucket_names` (id 1 → `bucket_names[0]`, …).
+    pub fn json(&self, bucket_names: &[String]) -> Json {
+        Json::arr(self.events().iter().map(|e| {
+            let mut pairs = vec![
+                ("t_us", Json::num(e.t_us as f64)),
+                ("step", Json::num(e.step as f64)),
+                ("kind", Json::str(e.kind)),
+                ("what", Json::str(e.what)),
+                ("a", Json::num(e.a as f64)),
+                ("b", Json::num(e.b as f64)),
+            ];
+            if e.bucket != NO_BUCKET {
+                let name = bucket_names
+                    .get((e.bucket - 1) as usize)
+                    .map(|s| s.as_str())
+                    .unwrap_or("?");
+                pairs.push(("bucket", Json::str(name)));
+            }
+            Json::obj(pairs)
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: u64) -> FlightEvent {
+        FlightEvent { t_us: t, step: 1, kind: "coll", what: "all_gather", bucket: 0, a: t, b: 0 }
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_newest() {
+        let mut r = FlightRing::new(4);
+        for t in 0..10 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.total(), 10);
+        let ts: Vec<u64> = r.events().iter().map(|e| e.t_us).collect();
+        assert_eq!(ts, vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn ring_never_grows_past_capacity() {
+        let mut r = FlightRing::new(8);
+        let cap = r.capacity();
+        for t in 0..1000 {
+            r.push(ev(t));
+        }
+        assert_eq!(r.capacity(), cap, "steady state must not reallocate");
+        assert_eq!(r.events().len(), cap);
+    }
+
+    #[test]
+    fn json_resolves_bucket_names() {
+        let mut r = FlightRing::new(4);
+        let mut e = ev(5);
+        e.bucket = 1;
+        r.push(e);
+        let names = vec!["layer0".to_string()];
+        let j = r.json(&names);
+        let first = j.idx(0).unwrap();
+        assert_eq!(first.get("bucket").and_then(Json::as_str), Some("layer0"));
+        assert_eq!(first.get("t_us").and_then(Json::as_f64), Some(5.0));
+        // unknown intern ids degrade to "?" rather than panic
+        let mut r2 = FlightRing::new(2);
+        e.bucket = 9;
+        r2.push(e);
+        assert_eq!(r2.json(&names).idx(0).unwrap().get("bucket").and_then(Json::as_str), Some("?"));
+    }
+}

@@ -6,9 +6,12 @@
 //!
 //! Findings are [`Diagnostic`]s on the shared `analysis::diag` catalog:
 //! `FS201` (malformed document), `FS202` (span missing required args),
-//! `FS203` (partial overlap without nesting). [`validate`] remains the
-//! fail-fast `Result` façade; [`diagnostics`] accumulates every finding
-//! for the `--json` artifact path.
+//! `FS203` (partial overlap without nesting), `FS205` (counter-track
+//! invariant: cumulative `wire.*` tracks must be non-decreasing over
+//! time, and `mem.reserved`/`mem.allocated` samples must never go
+//! negative). [`validate`] remains the fail-fast `Result` façade;
+//! [`diagnostics`] accumulates every finding for the `--json` artifact
+//! path.
 
 use crate::analysis::diag::{codes, Diagnostic};
 use crate::util::json::Json;
@@ -61,6 +64,8 @@ pub fn diagnostics(doc: &Json) -> Vec<Diagnostic> {
 
     // (pid, tid) -> [(ts, dur, name)]
     let mut lanes: Vec<((u64, u64), Vec<(f64, f64, String)>)> = Vec::new();
+    // (pid, counter name) -> [(ts, value)]
+    let mut tracks: Vec<((u64, String), Vec<(f64, f64)>)> = Vec::new();
     for (i, e) in events.iter().enumerate() {
         let subject = format!("event {i}");
         let Some(ph) = e.get("ph").and_then(Json::as_str) else {
@@ -83,21 +88,48 @@ pub fn diagnostics(doc: &Json) -> Vec<Diagnostic> {
                 }
             }
             "C" => {
-                if let Err(d) = require_num(e, i, "ts") {
-                    out.push(d);
-                    return out;
-                }
-                let value = e
+                let ts = match require_num(e, i, "ts") {
+                    Ok(t) => t,
+                    Err(d) => {
+                        out.push(d);
+                        return out;
+                    }
+                };
+                let Some(value) = e
                     .get("args")
                     .and_then(|a| a.get("value"))
-                    .and_then(Json::as_f64);
-                if value.is_none() {
+                    .and_then(Json::as_f64)
+                else {
                     out.push(Diagnostic::error(
                         codes::TRACE_MALFORMED,
                         subject,
                         format!("event {i}: counter without args.value"),
                     ));
                     return out;
+                };
+                let Some(name) = e.get("name").and_then(Json::as_str) else {
+                    out.push(Diagnostic::error(
+                        codes::TRACE_MALFORMED,
+                        subject,
+                        format!("event {i}: counter without name"),
+                    ));
+                    return out;
+                };
+                if matches!(name, "mem.reserved" | "mem.allocated") && value < 0.0 {
+                    out.push(Diagnostic::error(
+                        codes::COUNTER_TRACK,
+                        name,
+                        format!(
+                            "event {i}: counter '{name}' sample {value} is negative"
+                        ),
+                    ));
+                }
+                let pid =
+                    e.get("pid").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                let key = (pid, name.to_string());
+                match tracks.iter_mut().find(|(k, _)| *k == key) {
+                    Some((_, v)) => v.push((ts, value)),
+                    None => tracks.push((key, vec![(ts, value)])),
                 }
             }
             "X" => {
@@ -175,6 +207,31 @@ pub fn diagnostics(doc: &Json) -> Vec<Diagnostic> {
         }
     }
 
+    // Cumulative counter tracks (`wire.*` running byte totals) must be
+    // non-decreasing over time; a drop means samples were lost,
+    // reordered across the shared clock, or double-reset.
+    for ((pid, name), mut samples) in tracks {
+        if !name.starts_with("wire.") {
+            continue;
+        }
+        samples.sort_by(|a, b| a.0.total_cmp(&b.0));
+        for w in samples.windows(2) {
+            if w[1].1 < w[0].1 {
+                out.push(Diagnostic::error(
+                    codes::COUNTER_TRACK,
+                    name.clone(),
+                    format!(
+                        "counter '{name}' (pid {pid}): value {} at ts {:.3} \
+                         drops below {} — cumulative tracks must be \
+                         non-decreasing",
+                        w[1].1, w[1].0, w[0].1
+                    ),
+                ));
+                break;
+            }
+        }
+    }
+
     // Strict nesting per lane: after sorting by (start asc, dur desc),
     // every span must be fully contained in (or disjoint from) the
     // enclosing span on the stack.
@@ -239,6 +296,17 @@ mod tests {
 
     fn doc(events: Vec<Json>) -> Json {
         Json::obj(vec![("traceEvents", Json::Arr(events))])
+    }
+
+    fn counter(ts: f64, name: &str, value: f64) -> Json {
+        Json::obj(vec![
+            ("ph", Json::str("C")),
+            ("pid", Json::num(4.0)),
+            ("tid", Json::num(0.0)),
+            ("ts", Json::num(ts)),
+            ("name", Json::str(name)),
+            ("args", Json::obj(vec![("value", Json::num(value))])),
+        ])
     }
 
     #[test]
@@ -314,6 +382,62 @@ mod tests {
             ("metadata", Json::obj(vec![("topology", Json::str("2x4"))])),
         ]);
         validate(&ok).unwrap();
+    }
+
+    #[test]
+    fn accepts_monotonic_wire_and_shrinking_memory() {
+        // wire.* totals climb; mem gauges may shrink (frees) but not
+        // go negative.
+        let d = doc(vec![
+            counter(0.0, "wire.payload", 0.0),
+            counter(10.0, "wire.payload", 1024.0),
+            counter(20.0, "wire.payload", 1024.0),
+            counter(0.0, "mem.reserved", 4096.0),
+            counter(10.0, "mem.reserved", 512.0),
+        ]);
+        validate(&d).unwrap();
+        assert!(diagnostics(&d).is_empty());
+    }
+
+    #[test]
+    fn rejects_nonmonotonic_wire_counter() {
+        // Samples arrive out of value order even after ts sorting.
+        let d = doc(vec![
+            counter(0.0, "wire.payload", 2048.0),
+            counter(10.0, "wire.payload", 1024.0),
+        ]);
+        let err = validate(&d).unwrap_err();
+        assert!(err.contains("non-decreasing"), "{err}");
+        let ds = diagnostics(&d);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].code, codes::COUNTER_TRACK);
+        // Tracks on different pids are independent: the same values on
+        // two pids are two (trivially monotonic) one-sample tracks.
+        let split = doc(vec![
+            Json::obj(vec![
+                ("ph", Json::str("C")),
+                ("pid", Json::num(0.0)),
+                ("tid", Json::num(0.0)),
+                ("ts", Json::num(0.0)),
+                ("name", Json::str("wire.payload")),
+                ("args", Json::obj(vec![("value", Json::num(2048.0))])),
+            ]),
+            counter(10.0, "wire.payload", 1024.0),
+        ]);
+        validate(&split).unwrap();
+    }
+
+    #[test]
+    fn rejects_negative_memory_sample() {
+        let d = doc(vec![
+            counter(0.0, "mem.reserved", 1024.0),
+            counter(10.0, "mem.allocated", -64.0),
+        ]);
+        let err = validate(&d).unwrap_err();
+        assert!(err.contains("negative"), "{err}");
+        let ds = diagnostics(&d);
+        assert_eq!(ds.len(), 1);
+        assert_eq!(ds[0].code, codes::COUNTER_TRACK);
     }
 
     #[test]

@@ -221,6 +221,15 @@ struct TracerInner {
     topology: Mutex<Option<String>>,
 }
 
+/// Lock a tracer mutex even when a panicking thread poisoned it. The
+/// panic-hook postmortem dump and exit-path exports still need to read
+/// the sink after a worker died; the protected data is a plain record
+/// vector with no cross-field invariant a mid-push panic could break,
+/// so recovering the guard is safe.
+fn relock<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 /// Shared per-session trace sink. Cloning is an `Arc` bump; every layer
 /// (engine, DBuffers, communicators, executor) holds a clone of the same
 /// tracer so all spans land on one clock.
@@ -281,11 +290,11 @@ impl Tracer {
     /// `metadata` block. Sessions call this only for hierarchical
     /// topologies; flat runs leave it unset.
     pub fn set_topology(&self, label: &str) {
-        *self.inner.topology.lock().unwrap() = Some(label.to_string());
+        *relock(&self.inner.topology) = Some(label.to_string());
     }
 
     pub fn topology(&self) -> Option<String> {
-        self.inner.topology.lock().unwrap().clone()
+        relock(&self.inner.topology).clone()
     }
 
     /// Start a span clock. Always cheap; pair with [`Tracer::finish_with`].
@@ -314,7 +323,7 @@ impl Tracer {
                 bytes: span.bytes,
                 attrs: span.attrs,
             };
-            self.inner.spans.lock().unwrap().push(ev);
+            relock(&self.inner.spans).push(ev);
         }
         dur.as_secs_f64()
     }
@@ -349,7 +358,7 @@ impl Tracer {
                 bytes: span.bytes,
                 attrs: span.attrs,
             };
-            self.inner.spans.lock().unwrap().push(ev);
+            relock(&self.inner.spans).push(ev);
         }
     }
 
@@ -365,18 +374,18 @@ impl Tracer {
             step: self.inner.step.load(Ordering::Relaxed),
             value,
         };
-        self.inner.counters.lock().unwrap().push(ev);
+        relock(&self.inner.counters).push(ev);
     }
 
     /// Number of recorded spans (test/diagnostic hook).
     pub fn span_count(&self) -> usize {
-        self.inner.spans.lock().unwrap().len()
+        relock(&self.inner.spans).len()
     }
 
     /// Multiset of `(name, bucket, bytes)` identities of recorded spans,
     /// sorted — used to check backend-independent span parity.
     pub fn span_identities(&self) -> Vec<(String, String, u64)> {
-        let spans = self.inner.spans.lock().unwrap();
+        let spans = relock(&self.inner.spans);
         let mut out: Vec<(String, String, u64)> = spans
             .iter()
             .map(|s| {
@@ -397,7 +406,7 @@ impl Tracer {
     /// `analysis::AnalysisReport::expected_subsequence` predicts the
     /// per-(name, phase) subsequences this must contain for each step.
     pub fn collective_sequence(&self) -> Vec<(u64, String, String, String, u64)> {
-        let spans = self.inner.spans.lock().unwrap();
+        let spans = relock(&self.inner.spans);
         spans
             .iter()
             .filter(|s| s.name == "ag" || s.name == "rs")
@@ -422,7 +431,7 @@ impl Tracer {
     /// Sum of exposed-flagged span durations in seconds (the span-side
     /// view of `ExecReport::exposed_comm_s`).
     pub fn exposed_total_s(&self) -> f64 {
-        let spans = self.inner.spans.lock().unwrap();
+        let spans = relock(&self.inner.spans);
         spans.iter().filter(|s| s.exposed).map(|s| s.dur_ns as f64 / 1e9).sum()
     }
 
@@ -433,8 +442,8 @@ impl Tracer {
     /// Merge all recorded spans/counters, rank-ordered, into a Chrome
     /// trace-event JSON document (plus a `summary` key Perfetto ignores).
     pub fn export(&self, stats: &CommStats) -> Json {
-        let spans = self.inner.spans.lock().unwrap().clone();
-        let counters = self.inner.counters.lock().unwrap().clone();
+        let spans = relock(&self.inner.spans).clone();
+        let counters = relock(&self.inner.counters).clone();
         let ranks = self.inner.ranks.max(1);
         let fabric_pid = ranks;
 
@@ -561,7 +570,7 @@ impl Tracer {
 
     /// Aggregate the recorded spans into the machine-readable summary.
     pub fn summary(&self, stats: &CommStats) -> TraceSummary {
-        let spans = self.inner.spans.lock().unwrap();
+        let spans = relock(&self.inner.spans);
         let ranks = self.inner.ranks.max(1);
 
         let total_comm_s: f64 = spans
@@ -865,6 +874,25 @@ mod tests {
             .filter(|e| e.get("name").and_then(Json::as_str) == Some("ag"))
             .count();
         assert_eq!(ag_events, 2);
+    }
+
+    #[test]
+    fn poisoned_sink_still_exports() {
+        let t = Tracer::new(TraceLevel::Comm, 1);
+        let timer = t.timer();
+        t.finish_with(timer, Cat::Comm, || Span::new("ag").bucket("b").bytes(4));
+        // Poison the span mutex the way a crashed worker would: panic
+        // while holding it. Exit-path exports must keep working.
+        let t2 = t.clone();
+        let _ = std::thread::spawn(move || {
+            let _guard = t2.inner.spans.lock().unwrap();
+            panic!("poison the sink");
+        })
+        .join();
+        assert!(t.inner.spans.is_poisoned());
+        assert_eq!(t.span_count(), 1);
+        let json = t.export(&CommStats::default());
+        check::validate(&json).unwrap();
     }
 
     #[test]

@@ -18,9 +18,11 @@ use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::cluster::{make_comm, make_comm_topo, Cluster, CommBackend};
+use crate::analysis::diag::{codes, rt};
+use crate::cluster::{make_comm, make_comm_obs, Cluster, CommBackend};
 use crate::comm::{CommRecord, Fabric};
 use crate::config::{GroupOverride, OptimKind};
+use crate::obs::{ObsConfig, Observer};
 use crate::fsdp::spec::{ModelSpec, OptimBinding, ShardGroupSpec};
 use crate::fsdp::{exec, ExecMode, ExecReport, FsdpEngine, ShardingPolicy};
 use crate::mesh::DeviceMesh;
@@ -181,6 +183,10 @@ pub struct TrainSession {
     /// the same instance threaded through the engine, the DBuffers, and
     /// the communicator backend.
     pub tracer: Tracer,
+    /// Runtime health monitor (disarmed unless the builder enabled it) —
+    /// the same handle the communicator backend and the executor publish
+    /// heartbeats and flight-recorder events through.
+    pub obs: Observer,
     pub step: u64,
     pub log: Vec<StepLog>,
 }
@@ -220,6 +226,7 @@ pub struct SessionBuilder {
     fabric: Fabric,
     comm_precision: CommPrecision,
     trace: TraceLevel,
+    obs: Option<ObsConfig>,
     groups: Vec<ShardGroupSpec>,
     spec: Option<ModelSpec>,
     overrides: Vec<GroupOverride>,
@@ -240,6 +247,7 @@ impl SessionBuilder {
             fabric: Fabric::h800(),
             comm_precision: CommPrecision::F32,
             trace: TraceLevel::Off,
+            obs: None,
             groups: Vec::new(),
             spec: None,
             overrides: Vec::new(),
@@ -319,6 +327,26 @@ impl SessionBuilder {
     /// bit-identical at every level.
     pub fn trace(mut self, level: TraceLevel) -> Self {
         self.trace = level;
+        self
+    }
+
+    /// Arm the runtime health monitor (heartbeats, collective watchdog,
+    /// flight recorder, metrics) with the given [`ObsConfig`]. Disarmed
+    /// by default — the off path costs at most one branch per event, and
+    /// monitoring never changes the math (trajectories stay bit-identical,
+    /// enforced by `tests/health_monitor.rs`).
+    pub fn observer(mut self, cfg: ObsConfig) -> Self {
+        self.obs = Some(cfg);
+        self
+    }
+
+    /// Shorthand for [`SessionBuilder::observer`]: arm the monitor with
+    /// default knobs and this watchdog deadline (`--watchdog-ms`; 0 keeps
+    /// the watchdog off while still recording heartbeats and metrics).
+    pub fn watchdog_ms(mut self, ms: u64) -> Self {
+        let mut cfg = self.obs.take().unwrap_or_default();
+        cfg.watchdog_ms = ms;
+        self.obs = Some(cfg);
         self
     }
 
@@ -433,14 +461,20 @@ impl SessionBuilder {
             // `trace::check::validate` demand per-tier span attribution
             tracer.set_topology(&topology.label());
         }
+        let obs = match &self.obs {
+            Some(c) => Observer::new(c.clone(), self.devices),
+            None => Observer::off(),
+        };
+        crate::obs::install_panic_hook(&obs);
         let mut engine = FsdpEngine::from_spec(
             cfg.params.clone(),
             &spec,
             mesh,
             self.fabric.clone(),
-            make_comm_topo(self.backend, tracer.clone(), topology),
+            make_comm_obs(self.backend, tracer.clone(), topology, obs.clone()),
         )?;
         engine.set_tracer(tracer.clone());
+        engine.set_observer(obs.clone());
         engine.init_params(&init_full_params(&cfg.params, self.seed))?;
         let qblock = runtime.manifest.qblock;
         let m = engine.num_devices();
@@ -475,6 +509,7 @@ impl SessionBuilder {
             exec,
             last_report: None,
             tracer,
+            obs,
             step: 0,
             log: Vec::new(),
         })
@@ -607,6 +642,7 @@ impl TrainSession {
     pub fn train_step(&mut self) -> Result<f32> {
         let t0 = std::time::Instant::now();
         self.tracer.set_step(self.step + 1);
+        self.obs.set_step(self.step + 1);
         let (batch, seq) = {
             let cfg = &self.runtime.manifest.configs[&self.config];
             (cfg.batch, cfg.seq)
@@ -644,6 +680,28 @@ impl TrainSession {
             self.tracer.counter("wire.payload", wire_after.0 as f64);
             self.tracer.counter("wire.scale", wire_after.1 as f64);
             self.tracer.counter("wire.pad", wire_after.2 as f64);
+        }
+        if self.obs.armed() {
+            let r = &outcome.report;
+            // overlap efficiency: the fraction of this step's (simulated)
+            // comm the schedule hid under compute
+            let overlap = if r.sim_comm_s > 0.0 {
+                (r.sim_comm_s - r.exposed_comm_s).max(0.0) / r.sim_comm_s
+            } else {
+                0.0
+            };
+            let wire_delta = (wire_after.0 - wire_before.0)
+                + (wire_after.1 - wire_before.1)
+                + (wire_after.2 - wire_before.2);
+            self.obs.observe_step(
+                self.step,
+                r.wall_s,
+                r.exposed_comm_s,
+                overlap,
+                wire_delta,
+                r.peak_reserved,
+                r.peak_allocated,
+            );
         }
         self.log.push(StepLog {
             step: self.step,
@@ -685,10 +743,16 @@ impl TrainSession {
         self.tracer.export(&self.engine.comm.stats())
     }
 
-    /// Write the Chrome trace JSON to `path`.
+    /// Write the Chrome trace JSON to `path`. IO failures surface as
+    /// typed [`codes::EXPORT_IO`] diagnostics (not bare panics), so the
+    /// postmortem hook still runs on export errors.
     pub fn write_trace(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.trace_json().to_string())
-            .with_context(|| format!("writing trace to {}", path.display()))?;
+        std::fs::write(path, self.trace_json().to_string()).map_err(|e| {
+            anyhow!(
+                "{}",
+                rt(codes::EXPORT_IO, format_args!("writing trace to {}: {e}", path.display()))
+            )
+        })?;
         Ok(())
     }
 }
@@ -870,10 +934,14 @@ fn topology_column(fabric: &Fabric) -> String {
     }
 }
 
-/// Write a loss log as CSV under `runs/`.
+/// Write a loss log as CSV under `runs/`. IO failures surface as typed
+/// [`codes::EXPORT_IO`] diagnostics instead of bare `?`-bubbled OS
+/// errors, so callers (and postmortem dumps) see a stable code.
 pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
     let dir = std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/runs"));
-    std::fs::create_dir_all(dir)?;
+    std::fs::create_dir_all(dir).map_err(|e| {
+        anyhow!("{}", rt(codes::EXPORT_IO, format_args!("creating {}: {e}", dir.display())))
+    })?;
     let path = dir.join(format!("{name}.csv"));
     let mut out = String::from(
         "step,loss,comm_time,exposed_s,wall_s,fabric,topology,wire_payload,wire_scale,\
@@ -896,7 +964,9 @@ pub fn save_log(name: &str, log: &[StepLog]) -> Result<std::path::PathBuf> {
             l.peak_allocated
         ));
     }
-    std::fs::write(&path, out)?;
+    std::fs::write(&path, out).map_err(|e| {
+        anyhow!("{}", rt(codes::EXPORT_IO, format_args!("writing {}: {e}", path.display())))
+    })?;
     Ok(path)
 }
 

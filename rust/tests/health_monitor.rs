@@ -1,0 +1,187 @@
+//! Health-monitor validity: monitoring must be *pure* — loss
+//! trajectories with the monitor armed are bit-identical to monitor-off
+//! runs on every backend/executor combination — while an armed monitor
+//! actually observes the run: per-step metric series fill, the
+//! collective watchdog names a deterministically injected straggler
+//! ([FS204] with rank, collective, and bucket), and the postmortem
+//! document round-trips as valid `fsdp-postmortem-v1` JSON.
+
+use vescale_fsdp::analysis::diag::codes;
+use vescale_fsdp::cluster::{set_arrival_stagger, CommBackend, Communicator, ThreadedComm};
+use vescale_fsdp::comm::Topology;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::obs::{ObsConfig, Observer};
+use vescale_fsdp::trace::Tracer;
+use vescale_fsdp::train::TrainSession;
+use vescale_fsdp::util::json::Json;
+
+fn session(backend: CommBackend, exec: ExecMode, monitor: bool) -> TrainSession {
+    let mut b = TrainSession::builder("tiny")
+        .devices(2)
+        .seed(11)
+        .backend(backend)
+        .exec(exec);
+    if monitor {
+        // large deadline: the watchdog is armed but must stay quiet
+        b = b.watchdog_ms(60_000);
+    }
+    b.build().unwrap()
+}
+
+fn losses(s: &TrainSession) -> Vec<u32> {
+    s.log.iter().map(|l| l.loss.to_bits()).collect()
+}
+
+#[test]
+fn monitoring_is_bitwise_invisible() {
+    for (backend, exec) in [
+        (CommBackend::Serial, ExecMode::Sequential),
+        (CommBackend::Serial, ExecMode::Pipelined { prefetch: 2 }),
+        (CommBackend::Threaded, ExecMode::Sequential),
+        (CommBackend::Threaded, ExecMode::Pipelined { prefetch: 2 }),
+    ] {
+        let mut off = session(backend, exec, false);
+        off.run(2).unwrap();
+        let mut on = session(backend, exec, true);
+        on.run(2).unwrap();
+        assert!(!off.obs.armed(), "unmonitored session must stay disarmed");
+        assert!(on.obs.armed());
+        assert_eq!(
+            losses(&off),
+            losses(&on),
+            "{} {}: monitoring perturbed the losses",
+            backend.name(),
+            exec.name()
+        );
+        // the armed monitor really observed the run
+        let m = on.obs.metrics().unwrap();
+        let series_names =
+            ["step_time_s", "exposed_comm_s", "overlap_efficiency", "wire_bytes", "rank_skew_s"];
+        for series in series_names {
+            assert_eq!(
+                m.series(series).len(),
+                2,
+                "{} {}: series {series} incomplete",
+                backend.name(),
+                exec.name()
+            );
+        }
+        assert!(
+            !on.obs.watchdog_fired(),
+            "{} {}: spurious watchdog fire on a healthy run",
+            backend.name(),
+            exec.name()
+        );
+        on.obs.shutdown();
+    }
+}
+
+#[test]
+fn armed_session_exports_metrics_snapshots() {
+    let mut s = session(CommBackend::Threaded, ExecMode::Pipelined { prefetch: 2 }, true);
+    s.run(2).unwrap();
+    let m = s.obs.metrics().unwrap();
+    let prom = m.prometheus();
+    for want in ["fsdp_step_time_s", "fsdp_wire_bytes_total", "fsdp_mem_peak_reserved"] {
+        assert!(prom.contains(want), "prometheus snapshot missing {want}:\n{prom}");
+    }
+    let j = m.json();
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some("fsdp-metrics-v1"));
+    // snapshot survives a text round-trip (what fsdp-report reads)
+    let parsed = Json::parse(&j.to_string()).unwrap();
+    let steps = parsed
+        .get("series")
+        .and_then(|s| s.get("step_time_s"))
+        .and_then(|s| s.get("values"))
+        .and_then(Json::as_arr)
+        .unwrap();
+    assert_eq!(steps.len(), 2);
+    s.obs.shutdown();
+}
+
+#[test]
+fn staggered_stall_trips_watchdog_and_postmortem() {
+    let obs = Observer::new(
+        ObsConfig { watchdog_ms: 30, ring_capacity: 32, ..ObsConfig::default() },
+        4,
+    );
+    let comm = ThreadedComm::with_obs(Tracer::off(), Topology::flat(), obs.clone());
+    obs.set_step(1);
+    obs.set_phase("gather");
+    obs.set_bucket("embed");
+
+    // big enough for the rendezvous path (m*m*s >= the serial-fallback
+    // threshold), so rank threads really meet at a barrier
+    let (m, s) = (4usize, 16 * 1024usize);
+    let mut bufs: Vec<Vec<f32>> = (0..m)
+        .map(|r| {
+            let mut b = vec![0.0f32; m * s];
+            for (i, x) in b[r * s..(r + 1) * s].iter_mut().enumerate() {
+                *x = (r * s + i) as f32;
+            }
+            b
+        })
+        .collect();
+    let mut expected = bufs.clone();
+    vescale_fsdp::comm::all_gather(&mut expected, s).unwrap();
+
+    // rank 0 (the caller's thread) arrives 120 ms late: ranks 1..3 dwell
+    // in the rendezvous past the 30 ms deadline, and the exit-path
+    // deadline check reports them no matter how the threads schedule
+    set_arrival_stagger(&[120_000]);
+    let result = comm.all_gather(&mut bufs, s);
+    set_arrival_stagger(&[]);
+    result.unwrap();
+
+    assert_eq!(bufs, expected, "injected stagger changed the collective's result");
+    assert!(obs.watchdog_fired(), "no stall reported despite 120 ms dwell at 30 ms deadline");
+    let diags = obs.diagnostics();
+    let stall = diags.iter().find(|d| d.code == codes::WATCHDOG_STALL).unwrap();
+    assert!(stall.message.contains("all_gather"), "{}", stall.message);
+    assert!(stall.message.contains("embed"), "{}", stall.message);
+
+    // the postmortem names the incident and round-trips as JSON
+    let pm = obs.postmortem();
+    assert_eq!(pm.get("schema").and_then(Json::as_str), Some("fsdp-postmortem-v1"));
+    assert_eq!(pm.get("ranks").and_then(Json::as_f64), Some(4.0));
+    let rings = pm.get("events").and_then(Json::as_arr).unwrap();
+    assert_eq!(rings.len(), 4);
+    let health = pm.get("health").unwrap().get("ranks").and_then(Json::as_arr).unwrap();
+    assert_eq!(health.len(), 4);
+    let dumped = pm.to_string();
+    let parsed = Json::parse(&dumped).unwrap();
+    let codes_in_pm: Vec<&str> = parsed
+        .get("diagnostics")
+        .and_then(Json::as_arr)
+        .unwrap()
+        .iter()
+        .filter_map(|d| d.get("code").and_then(Json::as_str))
+        .collect();
+    assert!(codes_in_pm.contains(&codes::WATCHDOG_STALL), "{codes_in_pm:?}");
+
+    // and writes to disk through the typed-error path
+    let path = std::env::temp_dir().join(format!("fsdp_health_pm_{}.json", std::process::id()));
+    let path = path.to_str().unwrap().to_string();
+    obs.write_postmortem(&path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert!(Json::parse(&text).is_ok());
+    let _ = std::fs::remove_file(&path);
+    obs.shutdown();
+}
+
+#[test]
+fn stagger_without_watchdog_stays_quiet() {
+    // same injected straggler, but watchdog_ms = 0: the board records,
+    // nothing fires
+    let obs = Observer::new(ObsConfig::default(), 4);
+    let comm = ThreadedComm::with_obs(Tracer::off(), Topology::flat(), obs.clone());
+    let (m, s) = (4usize, 16 * 1024usize);
+    let mut bufs: Vec<Vec<f32>> = (0..m).map(|_| vec![1.0f32; m * s]).collect();
+    set_arrival_stagger(&[50_000]);
+    let result = comm.all_gather(&mut bufs, s);
+    set_arrival_stagger(&[]);
+    result.unwrap();
+    assert!(!obs.watchdog_fired());
+    assert!(obs.diagnostics().is_empty());
+    obs.shutdown();
+}
