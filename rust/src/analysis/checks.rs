@@ -630,6 +630,24 @@ fn check_topology(pm: &PlanModel, diags: &mut Vec<Diagnostic>) {
                 pm.devices
             ),
         ));
+        return;
+    }
+    // The dispatch threshold gates two-level routing per launch: a shard
+    // group whose descriptor elects the serial fallback never reaches
+    // the hierarchical algorithms, so a topology where *every* group
+    // falls under the threshold is configured for nothing.
+    let all_serial = !pm.groups.is_empty()
+        && (0..pm.groups.len()).all(|b| pm.launch_for(CollOp::AllGather, b).serial_fallback());
+    if all_serial {
+        diags.push(Diagnostic::warning(
+            codes::BAD_TOPOLOGY,
+            t.label(),
+            format!(
+                "every shard group falls under the dispatch threshold \
+                 (hier_threshold = {}) — hierarchical dispatch will never engage",
+                pm.hier_threshold
+            ),
+        ));
     }
 }
 

@@ -53,6 +53,11 @@ pub mod codes {
     /// The planner produced (or was asked to verify) an invalid layout:
     /// overlap, out-of-buffer extent, or a granularity-block split.
     pub const LAYOUT_INVALID: &str = "FS011";
+    /// Comm-stack encapsulation breach: source outside `cluster/`
+    /// constructs a backend directly (`SerialComm::` / `ThreadedComm::`)
+    /// or calls the quant codec primitives instead of going through the
+    /// `CollectiveLaunch` pipeline stages (`encode_wire` / `rs_encode`).
+    pub const COMM_ENCAPSULATION: &str = "FS012";
     /// Trace document malformed: missing/empty `traceEvents`, an event
     /// without `ph`, or an unknown event kind.
     pub const TRACE_MALFORMED: &str = "FS201";
@@ -89,6 +94,7 @@ pub fn catalog() -> &'static [(&'static str, &'static str)] {
         (codes::PEAK_OVER_LIMIT, "static peak-memory bound exceeds the device limit"),
         (codes::WRAPPING_ABI, "pipelined executor wrapping ABI mismatch"),
         (codes::LAYOUT_INVALID, "planner layout invalid"),
+        (codes::COMM_ENCAPSULATION, "backend/codec use bypasses the launch pipeline"),
         (codes::TRACE_MALFORMED, "trace document malformed"),
         (codes::TRACE_SPAN_ARGS, "trace span missing required args"),
         (codes::TRACE_OVERLAP, "trace spans partially overlap without nesting"),

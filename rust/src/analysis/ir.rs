@@ -24,7 +24,7 @@
 
 use std::collections::VecDeque;
 
-use crate::cluster::{CommBackend, DEFAULT_MIN_PARALLEL_ELEMS};
+use crate::cluster::{CollectiveLaunch, CommBackend};
 use crate::comm::Topology;
 use crate::fsdp::spec::ModelSpec;
 use crate::fsdp::ExecMode;
@@ -34,82 +34,14 @@ use crate::util::lcm;
 
 use super::diag::{codes, Diagnostic};
 
-/// A real backend collective (record-only ops such as the HSDP replica
-/// AllReduce are excluded: they rendezvous nothing).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-pub enum CollOp {
-    /// Parameter gather (dense or encoded wire).
-    AllGather,
-    /// Dense f32 gradient ReduceScatter.
-    ReduceScatter,
-    /// Encoded (`Bf16`/`Q8`) gradient exchange.
-    AllToAll,
-}
-
-impl CollOp {
-    pub fn name(&self) -> &'static str {
-        match self {
-            CollOp::AllGather => "all_gather",
-            CollOp::ReduceScatter => "reduce_scatter",
-            CollOp::AllToAll => "all_to_all",
-        }
-    }
-
-    /// Logical span name the executor's tracer records for this op.
-    pub fn span_name(&self) -> &'static str {
-        match self {
-            CollOp::AllGather => "ag",
-            _ => "rs",
-        }
-    }
-}
-
-/// Blocking shape of one collective event.
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Phase {
-    /// Blocking call (the sequential schedule).
-    Sync,
-    /// Nonblocking issue returning a handle.
-    Issue,
-    /// Wait on a previously issued handle.
-    Wait,
-}
-
-impl Phase {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Phase::Sync => "sync",
-            Phase::Issue => "issue",
-            Phase::Wait => "wait",
-        }
-    }
-}
-
-/// Which rendezvous tier the threaded backend would dispatch this
-/// collective on (the same decision `ThreadedComm::hier_eligible` /
-/// `tier_label` make at run time).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
-pub enum Tier {
-    /// Flat topology: the plain single-tier rendezvous.
-    Flat,
-    /// Hierarchical topology, group fits inside one host.
-    Intra,
-    /// Hierarchical topology, flat algorithm across hosts.
-    Inter,
-    /// Two-level dispatch: intra-host ring + rail-aligned inter-host.
-    TwoLevel,
-}
-
-impl Tier {
-    pub fn name(&self) -> &'static str {
-        match self {
-            Tier::Flat => "flat",
-            Tier::Intra => "intra",
-            Tier::Inter => "inter",
-            Tier::TwoLevel => "two-level",
-        }
-    }
-}
+/// The collective vocabulary of the IR *is* the runtime's launch
+/// vocabulary: the analyzer elaborates the same [`CollectiveLaunch`]
+/// descriptor the backends execute, so op kinds, phases, and tier
+/// routing are shared types that cannot drift. The `CollOp` / `Phase` /
+/// `Tier` names are kept as aliases for the analysis-side dialect
+/// (record-only ops such as the HSDP replica AllReduce never rendezvous
+/// and so never appear in an elaborated stream).
+pub use crate::cluster::launch::{LaunchOp as CollOp, LaunchPhase as Phase, LaunchTier as Tier};
 
 /// Identity of one allocator claim, stable across ranks and steps so the
 /// ledger can pair claims with frees and name leaks.
@@ -263,16 +195,25 @@ impl GroupPlan {
         self.comm_precision.wire_words(self.layout.shard_size as usize)
     }
 
-    /// Transient wire-buffer bytes a gather or encoded reduce claims.
-    pub fn wire_claim_bytes(&self) -> u64 {
-        ((self.layout.num_devices * self.wire_words() * 4) as u64).max(1)
+    /// The bytes-only launch descriptor for one collective on this group
+    /// (topology and threshold are stamped by [`PlanModel::launch_for`],
+    /// which routes tiers; byte accounting needs neither).
+    fn describe(&self, op: CollOp) -> CollectiveLaunch {
+        CollectiveLaunch::new(op, self.layout.num_devices, self.layout.shard_size as usize)
+            .with_precision(self.comm_precision)
     }
 
-    /// Logical wire bytes of one collective on this bucket — identical
-    /// to the executor's `bucket_wire_bytes` span accounting.
+    /// Transient wire-buffer bytes a gather or encoded reduce claims —
+    /// the descriptor's allocator-claim accounting.
+    pub fn wire_claim_bytes(&self) -> u64 {
+        self.describe(CollOp::AllGather).wire_claim_bytes()
+    }
+
+    /// Logical wire bytes of one collective on this bucket — the
+    /// descriptor's span-byte accounting, identical to the executor's
+    /// `bucket_wire_bytes`.
     pub fn coll_bytes(&self) -> u64 {
-        self.comm_precision.wire_volume(self.layout.shard_size).total()
-            * self.layout.num_devices as u64
+        self.describe(CollOp::AllGather).collective_bytes()
     }
 }
 
@@ -290,6 +231,11 @@ pub struct LintRequest<'a> {
     pub backend: CommBackend,
     pub exec: ExecMode,
     pub topology: Topology,
+    /// Serial-fallback / two-level eligibility threshold the runtime
+    /// will dispatch with ([`crate::cluster::DEFAULT_HIER_THRESHOLD`]
+    /// unless overridden via `[comm] hier_threshold` or
+    /// `--hier-threshold`).
+    pub hier_threshold: usize,
     /// `Some(n_layers)` when the plan will drive the native runtime's
     /// embed|layer|head ABI (enables the wrapping check); `None` for raw
     /// preset plans with no runtime binding.
@@ -309,6 +255,8 @@ pub struct PlanModel {
     pub backend: CommBackend,
     pub exec: ExecMode,
     pub topology: Topology,
+    /// Threshold runtime dispatch (and therefore tier modeling) uses.
+    pub hier_threshold: usize,
     pub groups: Vec<GroupPlan>,
     /// Parameter index -> group index (the spec's wrap assignment).
     pub group_of: Vec<usize>,
@@ -386,6 +334,7 @@ impl PlanModel {
             backend: req.backend,
             exec: req.exec,
             topology: req.topology,
+            hier_threshold: req.hier_threshold,
             groups,
             group_of,
             n_params: req.params.len(),
@@ -394,44 +343,30 @@ impl PlanModel {
         })
     }
 
-    /// Tier the threaded backend would dispatch one collective on
-    /// (mirrors `ThreadedComm::{hier_eligible, tier_label}`; the serial
-    /// backend is tierless but modelled identically — tier only has to
-    /// be rank-consistent, and fixtures perturb it to model divergence).
-    fn tier_for(&self, op: CollOp, comm_elems: usize) -> Tier {
-        if !self.topology.is_hierarchical() {
-            return Tier::Flat;
-        }
-        let m = self.devices;
-        let two_level = self.backend == CommBackend::Threaded
-            && matches!(op, CollOp::AllGather | CollOp::ReduceScatter)
-            && m == self.topology.total()
-            && !(m <= 1 || comm_elems == 0 || m * m * comm_elems < DEFAULT_MIN_PARALLEL_ELEMS);
-        if two_level {
-            Tier::TwoLevel
-        } else if m <= self.topology.gpus_per_host {
-            Tier::Intra
-        } else {
-            Tier::Inter
-        }
+    /// The full launch descriptor one collective on bucket `b`
+    /// elaborates to — the identical [`CollectiveLaunch`] the runtime
+    /// builds via `Communicator::describe`, with the session topology
+    /// and dispatch threshold stamped. Every derived quantity the IR
+    /// records (span bytes, tier, wire claims) is read off this value.
+    pub fn launch_for(&self, op: CollOp, b: usize) -> CollectiveLaunch {
+        self.groups[b]
+            .describe(op)
+            .on_topology(self.topology)
+            .with_hier_threshold(self.hier_threshold)
     }
 
     fn coll(&self, op: CollOp, phase: Phase, b: usize) -> Event {
-        let g = &self.groups[b];
-        // tier eligibility sees the element count the backend call sees:
-        // shard elems for dense f32, wire words for encoded precisions
-        let comm_elems = if g.comm_precision.is_f32() {
-            g.shard_elems() as usize
-        } else {
-            g.wire_words()
-        };
+        let l = self.launch_for(op, b);
+        // the serial backend is tierless but modelled identically — tier
+        // only has to be rank-consistent, and fixtures perturb it to
+        // model divergence
         Event::Coll(CollEvent {
             op,
             phase,
             bucket: b,
-            bytes: g.coll_bytes(),
-            mesh: g.mesh.clone(),
-            tier: self.tier_for(op, comm_elems),
+            bytes: l.collective_bytes(),
+            mesh: self.groups[b].mesh.clone(),
+            tier: l.tier(self.backend == CommBackend::Threaded),
         })
     }
 

@@ -10,19 +10,26 @@
 //!     fsdp-lint --matrix [--json out.json]
 //!               (every shipped preset x backend x exec x precision x
 //!                topology combo; the CI `plan-lint` job runs this)
+//!     fsdp-lint --scan DIR     (FS012 comm-encapsulation source scan:
+//!                               flags backend construction or codec
+//!                               calls outside the `cluster/` pipeline)
 //!     fsdp-lint --codes        (print the diagnostic-code catalog)
 //!
 //! Elaborates the full per-rank FSDP schedule — gathers, computes,
 //! reductions, reshards, allocator claims — into the `analysis` IR
 //! without running any compute, then checks SPMD conformance, async
 //! handle discipline, allocator lifetime balance, quant-block layout,
-//! and hierarchical-dispatch preconditions. Exit code: 0 clean,
+//! and hierarchical-dispatch preconditions. Plan flags accept
+//! `--hier-threshold ELEMS` so the lint models the same dispatch
+//! threshold an overridden runtime would use. Exit code: 0 clean,
 //! 1 diagnostics found, 2 usage error.
 
+use std::path::Path;
 use std::process::ExitCode;
 
+use vescale_fsdp::analysis::diag::{self, codes, Diagnostic};
 use vescale_fsdp::analysis::{catalog, lint, AnalysisReport, LintRequest};
-use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::cluster::{CommBackend, DEFAULT_HIER_THRESHOLD};
 use vescale_fsdp::comm::Topology;
 use vescale_fsdp::config::presets;
 use vescale_fsdp::fsdp::{ExecMode, DEVICE_MEM_LIMIT};
@@ -33,11 +40,11 @@ use vescale_fsdp::util::json::Json;
 
 fn usage() -> ExitCode {
     eprintln!(
-        "usage: fsdp-lint (--preset NAME | --model NAME | --matrix | --codes)\n\
+        "usage: fsdp-lint (--preset NAME | --model NAME | --matrix | --scan DIR | --codes)\n\
          \x20      [--devices M] [--replicas R] [--prefetch N]\n\
          \x20      [--backend serial|threaded] [--topology HxG[:S]]\n\
          \x20      [--comm-precision f32|bf16|q8[:block]] [--mem-limit BYTES]\n\
-         \x20      [--json out.json]"
+         \x20      [--hier-threshold ELEMS] [--json out.json]"
     );
     ExitCode::from(2)
 }
@@ -77,6 +84,7 @@ fn lint_preset(
     topology: Topology,
     prec: CommPrecision,
     mem_limit: u64,
+    hier_threshold: usize,
 ) -> Option<AnalysisReport> {
     let preset = presets::by_name(name)?;
     let params = preset.param_table();
@@ -93,9 +101,117 @@ fn lint_preset(
         backend,
         exec,
         topology,
+        hier_threshold,
         native_layers: None,
         mem_limit,
     }))
+}
+
+// ---- FS012: comm-encapsulation source scan ------------------------------
+
+/// Tokens whose appearance outside `cluster/` means a call site bypasses
+/// the launch pipeline. Assembled with `concat!` so this scanner's own
+/// source never matches itself. The codec primitives are additionally
+/// legal inside `quant/`, where they are defined.
+const BACKEND_TOKENS: [&str; 2] =
+    [concat!("Serial", "Comm::"), concat!("Threaded", "Comm::")];
+const CODEC_TOKENS: [&str; 4] = [
+    concat!("encode_", "slot("),
+    concat!("decode_", "slot("),
+    concat!("rs_inject_", "and_encode("),
+    concat!("rs_decode_", "reduce("),
+];
+
+/// Is this path inside a directory named `dir` (e.g. `cluster`, `quant`)?
+fn under_dir(path: &Path, dir: &str) -> bool {
+    path.components().any(|c| c.as_os_str() == dir)
+}
+
+/// Scan one source file for FS012 violations. Lines from the first
+/// `#[cfg(test)]` marker on are exempt (tests may drive backends
+/// directly), as are comment lines (docs may *name* the internals).
+fn scan_file(path: &Path, diags: &mut Vec<Diagnostic>) {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return;
+    };
+    let in_cluster = under_dir(path, "cluster");
+    let in_quant = under_dir(path, "quant");
+    if in_cluster {
+        return;
+    }
+    for (i, line) in text.lines().enumerate() {
+        let t = line.trim_start();
+        if t.starts_with("#[cfg(test)]") {
+            break;
+        }
+        if t.starts_with("//") {
+            continue;
+        }
+        let mut flag = |token: &str, what: &str| {
+            diags.push(Diagnostic::error(
+                codes::COMM_ENCAPSULATION,
+                format!("{}:{}", path.display(), i + 1),
+                format!(
+                    "{what} `{token}` outside cluster/ — route through \
+                     CommBuilder / the CollectiveLaunch pipeline stages"
+                ),
+            ));
+        };
+        for token in BACKEND_TOKENS {
+            if t.contains(token) {
+                flag(token, "direct backend construction");
+            }
+        }
+        if !in_quant {
+            for token in CODEC_TOKENS {
+                if t.contains(token) {
+                    flag(token, "raw codec call");
+                }
+            }
+        }
+    }
+}
+
+/// Recursively scan `dir` for `.rs` sources violating the comm-stack
+/// encapsulation boundary (FS012).
+fn scan_tree(dir: &Path, diags: &mut Vec<Diagnostic>) {
+    let Ok(entries) = std::fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<_> = entries.filter_map(Result::ok).map(|e| e.path()).collect();
+    paths.sort();
+    for path in paths {
+        if path.is_dir() {
+            scan_tree(&path, diags);
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            scan_file(&path, diags);
+        }
+    }
+}
+
+fn run_scan(root: &str, json_out: Option<&str>) -> ExitCode {
+    let root = Path::new(root);
+    if !root.exists() {
+        eprintln!("error: scan root '{}' does not exist", root.display());
+        return ExitCode::from(2);
+    }
+    let mut diags = Vec::new();
+    scan_tree(root, &mut diags);
+    for d in &diags {
+        println!("{d}");
+    }
+    println!("scan: {} — {} encapsulation finding(s)", root.display(), diags.len());
+    if let Some(out) = json_out {
+        if let Err(e) = std::fs::write(out, diag::to_json(&diags).to_string()) {
+            eprintln!("error: failed to write {out}: {e}");
+            return ExitCode::from(2);
+        }
+    }
+    if diags.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
 }
 
 /// Mesh size for one matrix entry: the smallest power-of-two device
@@ -173,6 +289,7 @@ fn run_matrix(json_out: Option<&str>) -> ExitCode {
                             *topo,
                             prec,
                             DEVICE_MEM_LIMIT,
+                            DEFAULT_HIER_THRESHOLD,
                         ) else {
                             return ExitCode::from(2);
                         };
@@ -229,6 +346,9 @@ fn main() -> ExitCode {
         return ExitCode::SUCCESS;
     }
     let json_out = args.get("json").map(str::to_string);
+    if let Some(root) = args.get("scan") {
+        return run_scan(root, json_out.as_deref());
+    }
     if args.bool("matrix") {
         return run_matrix(json_out.as_deref());
     }
@@ -262,10 +382,20 @@ fn main() -> ExitCode {
         return usage();
     };
     let mem_limit = args.u64_or("mem-limit", DEVICE_MEM_LIMIT);
+    let hier_threshold = args.usize_or("hier-threshold", DEFAULT_HIER_THRESHOLD);
 
     let report = if let Some(name) = args.get("preset") {
-        match lint_preset(name, devices, replicas, backend, exec, topology, prec, mem_limit)
-        {
+        match lint_preset(
+            name,
+            devices,
+            replicas,
+            backend,
+            exec,
+            topology,
+            prec,
+            mem_limit,
+            hier_threshold,
+        ) {
             Some(r) => r,
             None => {
                 eprintln!("error: unknown preset '{name}'");
@@ -282,6 +412,7 @@ fn main() -> ExitCode {
             .exec(exec)
             .fabric(fabric)
             .comm_precision(prec)
+            .hier_threshold(hier_threshold)
             .analyze()
         {
             Ok(r) => r,

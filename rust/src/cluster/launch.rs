@@ -1,0 +1,562 @@
+//! The unified collective launch pipeline: one typed descriptor —
+//! [`CollectiveLaunch`] — describes every collective the runtime
+//! executes *and* the static analyzer elaborates, so the two can never
+//! drift.
+//!
+//! A launch flows through fixed, composable stages:
+//!
+//! ```text
+//!   CollectiveLaunch (op, group, elems, precision, topology, mode)
+//!        │
+//!        ├─ precision codec      encode_wire / rs_encode   (Bf16/Q8 only)
+//!        ├─ tier routing         serial_fallback / two_level / tier
+//!        ├─ transport            Communicator::launch{,_async}
+//!        │    ├─ serial loop collectives (reference bit order)
+//!        │    └─ threaded rendezvous ring / two-level hierarchy
+//!        ├─ trace span           fabric-timeline transport span(s)
+//!        ├─ obs heartbeat        rank enter/exit around the body
+//!        └─ wire accounting      comm_record → CommStats (payload/scale/pad)
+//! ```
+//!
+//! The descriptor owns every decision input: the op kind, the logical
+//! element count per slot, the wire [`CommPrecision`], the cluster
+//! [`Topology`] (with its pipeline segment count), the serial-fallback
+//! threshold, and the bucket/step/phase identity used by tracing and
+//! observability. Backends read the descriptor; callers build it via
+//! [`crate::cluster::Communicator::describe`] so backend-attached
+//! topology and thresholds are stamped automatically.
+
+use anyhow::Result;
+
+use crate::comm::{CommRecord, Fabric, Topology};
+use crate::quant::{self, CommPrecision, WireVolume};
+
+use super::Communicator;
+
+/// Below this many total elements a collective is cheaper single-threaded
+/// than the ~tens-of-microseconds per OS thread spawn, and two-level
+/// hierarchical dispatch is not worth its extra barriers. The serial path
+/// is bit-identical, so falling back never changes results. This is the
+/// single source of truth consulted by runtime dispatch
+/// (`ThreadedComm`), the static verifier (`analysis` FS005), and the
+/// `--hier-threshold` / `[comm] hier_threshold` overrides.
+pub const DEFAULT_HIER_THRESHOLD: usize = 16 * 1024;
+
+/// The collective operation a launch performs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LaunchOp {
+    /// Parameter gather (dense or encoded wire).
+    AllGather,
+    /// Dense f32 gradient ReduceScatter.
+    ReduceScatter,
+    /// Slot transpose (EP token exchange; the encoded `Bf16`/`Q8`
+    /// gradient wire move).
+    AllToAll,
+    /// AllReduce over whole equal-length buffers (HSDP replica sync).
+    AllReduce,
+    /// Broadcast from one root rank.
+    Broadcast,
+}
+
+impl LaunchOp {
+    /// Wire-protocol name: the key used by `CommStats`, the health
+    /// board's heartbeats, and the transport span names.
+    pub fn name(&self) -> &'static str {
+        match self {
+            LaunchOp::AllGather => "all_gather",
+            LaunchOp::ReduceScatter => "reduce_scatter",
+            LaunchOp::AllToAll => "all_to_all",
+            LaunchOp::AllReduce => "all_reduce",
+            LaunchOp::Broadcast => "broadcast",
+        }
+    }
+
+    /// Logical span name the executor's tracer records for this op
+    /// (`ag` for gathers, `rs` for either flavor of gradient reduction).
+    pub fn span_name(&self) -> &'static str {
+        match self {
+            LaunchOp::AllGather => "ag",
+            LaunchOp::ReduceScatter | LaunchOp::AllToAll => "rs",
+            LaunchOp::AllReduce => "ar",
+            LaunchOp::Broadcast => "bc",
+        }
+    }
+}
+
+/// Blocking shape of one launch (the executor's schedule position).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LaunchPhase {
+    /// Blocking call (the sequential schedule).
+    Sync,
+    /// Nonblocking issue returning a handle.
+    Issue,
+    /// Wait on a previously issued handle.
+    Wait,
+}
+
+impl LaunchPhase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LaunchPhase::Sync => "sync",
+            LaunchPhase::Issue => "issue",
+            LaunchPhase::Wait => "wait",
+        }
+    }
+}
+
+/// Which rendezvous tier a launch dispatches on (the same decision the
+/// threaded backend makes at run time; the static verifier elaborates
+/// the identical predicate from the shared descriptor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LaunchTier {
+    /// Flat topology: the plain single-tier rendezvous.
+    Flat,
+    /// Hierarchical topology, group fits inside one host.
+    Intra,
+    /// Hierarchical topology, flat algorithm across hosts.
+    Inter,
+    /// Two-level dispatch: intra-host ring + rail-aligned inter-host.
+    TwoLevel,
+}
+
+impl LaunchTier {
+    pub fn name(&self) -> &'static str {
+        match self {
+            LaunchTier::Flat => "flat",
+            LaunchTier::Intra => "intra",
+            LaunchTier::Inter => "inter",
+            LaunchTier::TwoLevel => "two-level",
+        }
+    }
+}
+
+/// Whether the launch blocks the caller or returns a waitable handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchMode {
+    Sync,
+    Async,
+}
+
+/// One fully-described collective: the single descriptor type flowing
+/// through the launch pipeline (and elaborated, unchanged, by
+/// `analysis::ir`). Construct with [`CollectiveLaunch::new`] or —
+/// preferably — [`crate::cluster::Communicator::describe`], then refine
+/// with the builder setters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CollectiveLaunch {
+    /// The collective operation.
+    pub op: LaunchOp,
+    /// Group size `m` (ranks participating).
+    pub group: usize,
+    /// Logical f32 elements per slot (per-rank shard size for AG/RS,
+    /// per-destination slot for A2A, whole-buffer length for AR/BC).
+    pub elems: usize,
+    /// Post-reduction scale (ReduceScatter / AllReduce; 1.0 otherwise).
+    pub scale: f32,
+    /// Source rank (Broadcast only; 0 otherwise).
+    pub root: usize,
+    /// Wire precision of the payload. Encoded precisions shrink the
+    /// transport slot to [`CommPrecision::wire_words`] words; see
+    /// [`CollectiveLaunch::transport`].
+    pub precision: CommPrecision,
+    /// Cluster shape for tier routing and chunk pipelining.
+    pub topology: Topology,
+    /// Total-element threshold under which the launch runs serially
+    /// (and two-level dispatch is skipped).
+    pub hier_threshold: usize,
+    /// Blocking shape the caller requested.
+    pub mode: LaunchMode,
+    /// Schedule position (stamped by the executor; `Sync` by default).
+    pub phase: LaunchPhase,
+    /// Bucket (shard-group) label, when the launch belongs to one.
+    pub bucket: Option<String>,
+    /// Training step the launch belongs to (0 outside a step).
+    pub step: u64,
+}
+
+impl CollectiveLaunch {
+    /// A flat, full-precision, synchronous descriptor. Backends stamp
+    /// their topology/threshold via `Communicator::describe`.
+    pub fn new(op: LaunchOp, group: usize, elems: usize) -> CollectiveLaunch {
+        CollectiveLaunch {
+            op,
+            group,
+            elems,
+            scale: 1.0,
+            root: 0,
+            precision: CommPrecision::F32,
+            topology: Topology::flat(),
+            hier_threshold: DEFAULT_HIER_THRESHOLD,
+            mode: LaunchMode::Sync,
+            phase: LaunchPhase::Sync,
+            bucket: None,
+            step: 0,
+        }
+    }
+
+    /// Post-reduction scale (1/m for gradient averaging).
+    pub fn scaled(mut self, scale: f32) -> CollectiveLaunch {
+        self.scale = scale;
+        self
+    }
+
+    /// Broadcast source rank.
+    pub fn rooted(mut self, root: usize) -> CollectiveLaunch {
+        self.root = root;
+        self
+    }
+
+    /// Wire precision of the payload.
+    pub fn with_precision(mut self, precision: CommPrecision) -> CollectiveLaunch {
+        self.precision = precision;
+        self
+    }
+
+    /// Cluster topology for tier routing.
+    pub fn on_topology(mut self, topology: Topology) -> CollectiveLaunch {
+        self.topology = topology;
+        self
+    }
+
+    /// Serial-fallback / two-level eligibility threshold.
+    pub fn with_hier_threshold(mut self, hier_threshold: usize) -> CollectiveLaunch {
+        self.hier_threshold = hier_threshold;
+        self
+    }
+
+    /// Mark the launch nonblocking.
+    pub fn asynchronous(mut self) -> CollectiveLaunch {
+        self.mode = LaunchMode::Async;
+        self
+    }
+
+    /// Schedule position (issue/wait for pipelined executors).
+    pub fn in_phase(mut self, phase: LaunchPhase) -> CollectiveLaunch {
+        self.phase = phase;
+        self
+    }
+
+    /// Attach the owning bucket's label.
+    pub fn for_bucket(mut self, bucket: &str) -> CollectiveLaunch {
+        self.bucket = Some(bucket.to_string());
+        self
+    }
+
+    /// Attach the training step.
+    pub fn at_step(mut self, step: u64) -> CollectiveLaunch {
+        self.step = step;
+        self
+    }
+
+    /// f32 words one slot occupies on the transport: the logical element
+    /// count for dense f32, the packed word count for encoded wires.
+    /// This is the slot size every backend algorithm sees — exactly what
+    /// the legacy `_prec` paths passed to `all_gather(wire, w)`.
+    pub fn comm_elems(&self) -> usize {
+        if self.precision.is_f32() {
+            self.elems
+        } else {
+            self.precision.wire_words(self.elems)
+        }
+    }
+
+    /// Measured wire bytes of one slot (payload / scale / pad split) —
+    /// the one accounting stage every record flows through.
+    pub fn wire_volume(&self) -> WireVolume {
+        self.precision.wire_volume(self.elems as u64)
+    }
+
+    /// Transient wire-buffer bytes an encoded gather or reduce claims
+    /// from the caching allocator (1-byte floor so empty groups still
+    /// exercise the claim/free discipline).
+    pub fn wire_claim_bytes(&self) -> u64 {
+        ((self.group * self.precision.wire_words(self.elems) * 4) as u64).max(1)
+    }
+
+    /// Logical wire bytes of the whole collective (per-slot volume
+    /// summed across the group) — the executor's span-byte accounting.
+    pub fn collective_bytes(&self) -> u64 {
+        self.wire_volume().total() * self.group as u64
+    }
+
+    /// Would this launch take the bit-identical single-thread path
+    /// instead of a rendezvous? Ring collectives compare the full
+    /// exchanged volume (`m * m * slot`); whole-buffer collectives
+    /// compare their total footprint (`m * len`).
+    pub fn serial_fallback(&self) -> bool {
+        let (m, e) = (self.group, self.comm_elems());
+        match self.op {
+            LaunchOp::AllGather | LaunchOp::ReduceScatter | LaunchOp::AllToAll => {
+                m <= 1 || e == 0 || m * m * e < self.hier_threshold
+            }
+            LaunchOp::AllReduce | LaunchOp::Broadcast => m <= 1 || m * e < self.hier_threshold,
+        }
+    }
+
+    /// Should the launch dispatch to the two-level hierarchical
+    /// algorithms? Only AllGather/ReduceScatter on groups that exactly
+    /// fill a multi-host topology and are big enough for the rendezvous
+    /// path at all.
+    pub fn two_level(&self) -> bool {
+        matches!(self.op, LaunchOp::AllGather | LaunchOp::ReduceScatter)
+            && self.topology.is_hierarchical()
+            && self.group == self.topology.total()
+            && !self.serial_fallback()
+    }
+
+    /// The tier this launch dispatches on. `two_level_capable` is
+    /// whether the executing transport implements the two-level
+    /// algorithms (the threaded backend does; the serial reference
+    /// backend runs flat algorithms under any topology).
+    pub fn tier(&self, two_level_capable: bool) -> LaunchTier {
+        if !self.topology.is_hierarchical() {
+            return LaunchTier::Flat;
+        }
+        if two_level_capable && self.two_level() {
+            LaunchTier::TwoLevel
+        } else if self.group <= self.topology.gpus_per_host {
+            LaunchTier::Intra
+        } else {
+            LaunchTier::Inter
+        }
+    }
+
+    /// Lower the logical launch to the descriptor the transport actually
+    /// moves: dense launches pass through unchanged; encoded launches
+    /// ship packed f32 words (an encoded ReduceScatter becomes the
+    /// all-to-all of per-destination wire slots the error-feedback
+    /// decode stage reduces at each owner).
+    pub fn transport(&self) -> CollectiveLaunch {
+        if self.precision.is_f32() {
+            return self.clone();
+        }
+        let mut t = self.clone();
+        t.elems = self.precision.wire_words(self.elems);
+        t.precision = CommPrecision::F32;
+        if self.op == LaunchOp::ReduceScatter {
+            t.op = LaunchOp::AllToAll;
+            t.scale = 1.0;
+        }
+        t
+    }
+
+    /// The accounting record this launch contributes to `CommStats`:
+    /// measured wire volume split into payload/scale/pad, the modeled
+    /// fabric time, and the per-tier attribution. This is the single
+    /// wire-accounting stage — `DBuffer` and the engines record what the
+    /// descriptor says, never a hand-computed copy.
+    pub fn comm_record(&self, fabric: &Fabric) -> CommRecord {
+        let vol = self.wire_volume();
+        let bytes = vol.total();
+        let m = self.group;
+        let name = self.op.name();
+        let aligned = fabric.is_aligned(0, (self.elems * 4) as u64);
+        let sim_time = match self.op {
+            LaunchOp::AllGather => fabric.all_gather_time(m, bytes, aligned),
+            LaunchOp::ReduceScatter => fabric.reduce_scatter_time(m, bytes, aligned),
+            LaunchOp::AllReduce => fabric.all_reduce_time(m, bytes, aligned),
+            LaunchOp::AllToAll => fabric.all_to_all_time(m, bytes),
+            LaunchOp::Broadcast => fabric.all_gather_time(m, bytes, aligned),
+        };
+        CommRecord {
+            op: name,
+            bytes_per_rank: bytes,
+            payload_bytes: vol.payload,
+            scale_bytes: vol.scale,
+            group_size: m,
+            sim_time,
+            intra_bytes: 0,
+            inter_bytes: 0,
+            intra_s: 0.0,
+            inter_s: 0.0,
+        }
+        .with_tiers(fabric.tier_bytes(name, m, bytes), fabric.tier_times(name, m, bytes, aligned))
+    }
+}
+
+// ---- precision-codec pipeline stages ------------------------------------
+//
+// The codec itself lives in `crate::quant`; these are the launch
+// pipeline's only entry points to it. Callers outside `cluster/` go
+// through these stages (fsdp-lint FS012 enforces the boundary), so wire
+// encode/decode composes with tier routing and accounting in one place.
+
+/// Encode one logical slot into its wire slot
+/// (`wire.len() == precision.wire_words(src.len())`).
+pub fn encode_wire(prec: CommPrecision, src: &[f32], wire: &mut [f32]) {
+    quant::encode_slot(prec, src, wire);
+}
+
+/// Decode one wire slot back into `dst` (the exact inverse layout of
+/// [`encode_wire`]).
+pub fn decode_wire(prec: CommPrecision, wire: &[f32], dst: &mut [f32]) {
+    quant::decode_slot(prec, wire, dst);
+}
+
+/// ReduceScatter codec, phase 1: inject per-rank error-feedback
+/// residuals (Q8) and encode every chunk into all-to-all wire buffers.
+pub fn rs_encode(
+    prec: CommPrecision,
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<Vec<Vec<f32>>> {
+    quant::rs_inject_and_encode(prec, bufs, s, ef)
+}
+
+/// ReduceScatter codec, phase 2: after the wire move, decode and sum in
+/// rank order at each destination, updating the residuals.
+pub fn rs_decode(
+    prec: CommPrecision,
+    wire: &[Vec<f32>],
+    bufs: &mut [Vec<f32>],
+    s: usize,
+    scale: f32,
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    quant::rs_decode_reduce(prec, wire, bufs, s, scale, ef)
+}
+
+/// Run a (possibly encoded) gradient ReduceScatter through the full
+/// pipeline synchronously: dense f32 launches go straight to the
+/// transport; encoded launches run codec phase 1, move the wire slots
+/// via [`CollectiveLaunch::transport`], and reduce at each owner in
+/// codec phase 2 — bit-identical to the legacy
+/// `quant::reduce_scatter_prec` path by construction.
+pub fn reduce_scatter_launch(
+    comm: &dyn Communicator,
+    l: &CollectiveLaunch,
+    bufs: &mut [Vec<f32>],
+    ef: &mut Vec<Vec<f32>>,
+) -> Result<()> {
+    if l.precision.is_f32() {
+        return comm.launch(l, bufs);
+    }
+    let mut wire = rs_encode(l.precision, bufs, l.elems, ef)?;
+    comm.launch(&l.transport(), &mut wire)?;
+    rs_decode(l.precision, &wire, bufs, l.elems, l.scale, ef)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::SerialComm;
+
+    #[test]
+    fn descriptor_slot_math_matches_precision() {
+        let q8 = CommPrecision::Q8 { block: 32 };
+        let l = CollectiveLaunch::new(LaunchOp::AllGather, 4, 96).with_precision(q8);
+        assert_eq!(l.comm_elems(), q8.wire_words(96));
+        assert_eq!(l.wire_claim_bytes(), (4 * q8.wire_words(96) * 4) as u64);
+        assert_eq!(l.collective_bytes(), q8.wire_volume(96).total() * 4);
+        let dense = CollectiveLaunch::new(LaunchOp::AllGather, 4, 96);
+        assert_eq!(dense.comm_elems(), 96);
+        assert_eq!(dense.collective_bytes(), 96 * 4 * 4);
+    }
+
+    #[test]
+    fn serial_fallback_replicates_legacy_predicates() {
+        // ring ops: m*m*s against the threshold
+        let l = CollectiveLaunch::new(LaunchOp::AllGather, 4, 1024);
+        assert!(!l.serial_fallback(), "4*4*1024 = 16Ki meets the threshold");
+        let l = CollectiveLaunch::new(LaunchOp::AllGather, 4, 1023);
+        assert!(l.serial_fallback());
+        assert!(CollectiveLaunch::new(LaunchOp::AllToAll, 1, 1 << 20).serial_fallback());
+        assert!(CollectiveLaunch::new(LaunchOp::ReduceScatter, 4, 0).serial_fallback());
+        // whole-buffer ops: m*len against the threshold
+        let l = CollectiveLaunch::new(LaunchOp::AllReduce, 4, 4096);
+        assert!(!l.serial_fallback());
+        let l = CollectiveLaunch::new(LaunchOp::AllReduce, 4, 4095);
+        assert!(l.serial_fallback());
+        // a zero threshold forces the rendezvous path
+        let l = CollectiveLaunch::new(LaunchOp::AllGather, 4, 3).with_hier_threshold(0);
+        assert!(!l.serial_fallback());
+    }
+
+    #[test]
+    fn tier_routing_matches_runtime_dispatch() {
+        let topo = Topology::parse("2x4:2").unwrap();
+        let big = CollectiveLaunch::new(LaunchOp::AllGather, 8, 4096).on_topology(topo);
+        assert!(big.two_level());
+        assert_eq!(big.tier(true), LaunchTier::TwoLevel);
+        // the serial backend runs flat algorithms under any topology
+        assert_eq!(big.tier(false), LaunchTier::Inter);
+        // groups that do not fill the topology keep the flat algorithms
+        let ep = CollectiveLaunch::new(LaunchOp::AllGather, 4, 4096).on_topology(topo);
+        assert!(!ep.two_level());
+        assert_eq!(ep.tier(true), LaunchTier::Intra);
+        // tiny launches fall back serially even when hierarchical
+        let tiny = CollectiveLaunch::new(LaunchOp::AllGather, 8, 3).on_topology(topo);
+        assert!(!tiny.two_level());
+        // all-to-all never dispatches two-level
+        let a2a = CollectiveLaunch::new(LaunchOp::AllToAll, 8, 4096).on_topology(topo);
+        assert!(!a2a.two_level());
+        let flat = CollectiveLaunch::new(LaunchOp::AllGather, 8, 4096);
+        assert_eq!(flat.tier(true), LaunchTier::Flat);
+    }
+
+    #[test]
+    fn transport_lowers_encoded_launches() {
+        let q8 = CommPrecision::Q8 { block: 16 };
+        let rs = CollectiveLaunch::new(LaunchOp::ReduceScatter, 4, 64)
+            .with_precision(q8)
+            .scaled(0.25);
+        let t = rs.transport();
+        assert_eq!(t.op, LaunchOp::AllToAll);
+        assert_eq!(t.elems, q8.wire_words(64));
+        assert!(t.precision.is_f32());
+        assert_eq!(t.scale, 1.0);
+        let ag = CollectiveLaunch::new(LaunchOp::AllGather, 4, 64).with_precision(q8);
+        let t = ag.transport();
+        assert_eq!(t.op, LaunchOp::AllGather);
+        assert_eq!(t.elems, q8.wire_words(64));
+        // dense launches pass through unchanged
+        let dense = CollectiveLaunch::new(LaunchOp::ReduceScatter, 4, 64).scaled(0.25);
+        assert_eq!(dense.transport(), dense);
+    }
+
+    #[test]
+    fn comm_record_accounts_measured_wire_volume() {
+        let fabric = Fabric::h800();
+        let q8 = CommPrecision::Q8 { block: 32 };
+        let l = CollectiveLaunch::new(LaunchOp::AllGather, 4, 96).with_precision(q8);
+        let r = l.comm_record(&fabric);
+        let vol = q8.wire_volume(96);
+        assert_eq!(r.op, "all_gather");
+        assert_eq!(r.bytes_per_rank, vol.total());
+        assert_eq!(r.payload_bytes, vol.payload);
+        assert_eq!(r.scale_bytes, vol.scale);
+        assert_eq!(r.group_size, 4);
+        assert!(r.sim_time > 0.0);
+        let dense = CollectiveLaunch::new(LaunchOp::ReduceScatter, 4, 96).comm_record(&fabric);
+        assert_eq!(dense.bytes_per_rank, 96 * 4);
+        assert_eq!(dense.pad_bytes(), 0);
+    }
+
+    #[test]
+    fn reduce_scatter_launch_matches_legacy_prec_path() {
+        let (m, s) = (4usize, 32usize);
+        let prec = CommPrecision::Q8 { block: 8 };
+        let mk = || -> Vec<Vec<f32>> {
+            let mut rng = crate::util::Rng::new(7);
+            (0..m).map(|_| (0..m * s).map(|_| rng.normal_f32()).collect()).collect()
+        };
+        let comm = SerialComm::new();
+        let mut legacy = mk();
+        let mut ef_a = Vec::new();
+        quant::reduce_scatter_prec(&comm, prec, &mut legacy, s, 0.25, &mut ef_a).unwrap();
+        let mut unified = mk();
+        let mut ef_b = Vec::new();
+        let l = comm
+            .describe(LaunchOp::ReduceScatter, m, s)
+            .scaled(0.25)
+            .with_precision(prec);
+        reduce_scatter_launch(&comm, &l, &mut unified, &mut ef_b).unwrap();
+        for (a, b) in legacy.iter().flatten().zip(unified.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in ef_a.iter().flatten().zip(ef_b.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

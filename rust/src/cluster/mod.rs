@@ -6,11 +6,19 @@
 //! and wall-clock grew linearly with mesh size. This module turns the
 //! simulated cluster into a real one:
 //!
-//! * [`Communicator`] — the backend-neutral collective interface
-//!   (AllGather / ReduceScatter / AllReduce / Broadcast / All2All) plus
-//!   thread-safe [`CommStats`](crate::comm::CommStats) recording. The
-//!   FSDP engine, DBuffer, DTensor redistribution, and both trainers all
-//!   go through this trait.
+//! * [`CollectiveLaunch`] — the one typed descriptor every collective is
+//!   expressed as (op kind, group, element count, wire precision,
+//!   topology, hierarchy threshold, sync/async mode, bucket/step/phase
+//!   identity). The whole launch pipeline — precision codec → tier
+//!   routing → transport → trace span → obs heartbeat → wire
+//!   accounting — is driven by this type; see [`launch`].
+//! * [`Communicator`] — the backend-neutral collective interface: a core
+//!   [`Communicator::launch`] / [`Communicator::launch_async`] pair over
+//!   descriptors, codec-free legacy shims (`all_gather`,
+//!   `reduce_scatter`, …) built on that pair, and thread-safe
+//!   [`CommStats`](crate::comm::CommStats) recording. The FSDP engine,
+//!   DBuffer, DTensor redistribution, and both trainers all go through
+//!   this trait.
 //! * [`SerialComm`] — wraps the original loop-based collectives (the
 //!   reference semantics; also the fastest choice for tiny buffers).
 //! * [`ThreadedComm`] — each rank participates from its own OS thread;
@@ -18,6 +26,9 @@
 //!   `std::sync::Barrier` so disjoint regions are exchanged without locks.
 //!   Every algorithm preserves the serial backend's exact floating-point
 //!   reduction order, so results are **bit-identical** across backends.
+//! * [`CommBuilder`] — the one constructor for either backend, with
+//!   topology, tracer, observer, and hierarchy threshold as optional
+//!   setters (replaces the deprecated `make_comm*` family).
 //! * [`Cluster::run_spmd`] — run a per-rank closure on every rank
 //!   concurrently (the compute fan-out the trainers use), with per-rank
 //!   local stats merged in rank order at the join barrier.
@@ -25,6 +36,7 @@
 //! Built on `std::thread` + `Barrier` only — no new dependencies.
 
 mod hierarchy;
+pub mod launch;
 mod serial;
 mod threaded;
 
@@ -33,10 +45,21 @@ use std::sync::{Arc, Barrier};
 
 use anyhow::Result;
 
-use crate::comm::{CommRecord, CommStats};
+use crate::comm::{CommRecord, CommStats, Topology};
+use crate::obs::Observer;
+use crate::trace::Tracer;
 
+pub use launch::{
+    CollectiveLaunch, LaunchMode, LaunchOp, LaunchPhase, LaunchTier, DEFAULT_HIER_THRESHOLD,
+};
 pub use serial::SerialComm;
-pub use threaded::{set_arrival_stagger, ThreadedComm, DEFAULT_MIN_PARALLEL_ELEMS};
+pub use threaded::{set_arrival_stagger, ThreadedComm};
+
+/// Deprecated name of the serial-fallback / two-level eligibility
+/// threshold, which now lives in [`launch`] as the single source of
+/// truth for runtime dispatch, static analysis, and config overrides.
+#[deprecated(note = "renamed to DEFAULT_HIER_THRESHOLD (cluster::launch)")]
+pub const DEFAULT_MIN_PARALLEL_ELEMS: usize = DEFAULT_HIER_THRESHOLD;
 
 /// A waitable in-flight collective. Returned by the nonblocking
 /// `*_async` methods of [`Communicator`]: the operation owns its buffers
@@ -130,55 +153,98 @@ impl CommBackend {
 ///
 /// Calls are "god-view": the caller hands every rank's buffer at once
 /// (matching the engine's data layout, where a DBuffer owns all ranks'
-/// shards). The backend decides how the exchange actually executes —
-/// serially in place, or concurrently with one thread per rank. All
-/// implementations must be bit-identical to [`SerialComm`]: reductions
-/// sum contributions in rank order 0..m before scaling.
+/// shards). The core surface is descriptor-driven: build a
+/// [`CollectiveLaunch`] with [`Communicator::describe`], refine it with
+/// the builder setters, and hand it to [`Communicator::launch`]
+/// (blocking) or [`Communicator::launch_async`] (waitable). The familiar
+/// per-op methods remain as thin codec-free shims over that pair. The
+/// backend decides how the exchange actually executes — serially in
+/// place, or concurrently with one thread per rank. All implementations
+/// must be bit-identical to [`SerialComm`]: reductions sum contributions
+/// in rank order 0..m before scaling.
 pub trait Communicator: Send + Sync {
     fn backend(&self) -> CommBackend;
 
+    /// Start a descriptor for one collective on this backend, stamped
+    /// with the backend's attached topology and hierarchy threshold so
+    /// tier routing decisions match the live configuration. `elems` is
+    /// the logical f32 element count per slot (shard size for
+    /// AllGather/ReduceScatter, per-destination slot for AllToAll,
+    /// whole-buffer length for AllReduce/Broadcast).
+    fn describe(&self, op: LaunchOp, group: usize, elems: usize) -> CollectiveLaunch {
+        CollectiveLaunch::new(op, group, elems)
+    }
+
+    /// Execute one collective, blocking: the single transport entry
+    /// point every launch funnels through. The descriptor's
+    /// [`CollectiveLaunch::comm_elems`] is the slot width actually
+    /// moved; the implementation derives its serial-fallback and
+    /// two-level routing, transport span, and obs heartbeats from the
+    /// descriptor alone.
+    fn launch(&self, l: &CollectiveLaunch, bufs: &mut [Vec<f32>]) -> Result<()>;
+
+    /// Nonblocking launch: takes ownership of the buffers and returns a
+    /// waitable handle that hands them back exchanged. The default
+    /// implementation completes eagerly (correct for any backend; the
+    /// threaded backend overrides it to run on a background comm
+    /// thread). Must be bit-identical to [`Communicator::launch`].
+    fn launch_async(&self, l: &CollectiveLaunch, mut bufs: Vec<Vec<f32>>) -> PendingOp {
+        let r = self.launch(l, &mut bufs).map(|()| bufs);
+        PendingOp::done(r)
+    }
+
+    // ---- codec-free legacy shims over the launch pair -----------------
+
     /// AllGather over equal shards: rank k owns `bufs[k][k*s..(k+1)*s]`;
     /// afterwards every rank holds every shard.
-    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()>;
+    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        self.launch(&self.describe(LaunchOp::AllGather, bufs.len(), s), bufs)
+    }
 
     /// ReduceScatter (sum then `scale`): rank k's shard region ends up
     /// holding the rank-ordered sum of everyone's shard-k region.
-    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()>;
+    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+        self.launch(&self.describe(LaunchOp::ReduceScatter, bufs.len(), s).scaled(scale), bufs)
+    }
 
     /// AllReduce (sum then `scale`) over whole equal-length buffers.
-    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()>;
+    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
+        let elems = bufs.first().map_or(0, Vec::len);
+        self.launch(&self.describe(LaunchOp::AllReduce, bufs.len(), elems).scaled(scale), bufs)
+    }
 
     /// Broadcast rank `root`'s buffer to all.
-    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()>;
+    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
+        let elems = bufs.get(root).map_or(0, Vec::len);
+        self.launch(&self.describe(LaunchOp::Broadcast, bufs.len(), elems).rooted(root), bufs)
+    }
 
     /// All-to-all over equal splits: rank k's slot j goes to rank j's
     /// slot k.
-    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()>;
+    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
+        self.launch(&self.describe(LaunchOp::AllToAll, bufs.len(), s), bufs)
+    }
 
-    /// Nonblocking AllGather: takes ownership of the buffers, returns a
-    /// waitable handle that hands them back gathered. The default
-    /// implementation completes eagerly (correct for any backend; the
-    /// threaded backend overrides it to run on a background comm thread).
-    /// Must be bit-identical to [`Communicator::all_gather`].
-    fn all_gather_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
-        let r = self.all_gather(&mut bufs, s).map(|()| bufs);
-        PendingOp::done(r)
+    /// Nonblocking AllGather; must be bit-identical to
+    /// [`Communicator::all_gather`].
+    fn all_gather_async(&self, bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
+        self.launch_async(&self.describe(LaunchOp::AllGather, bufs.len(), s).asynchronous(), bufs)
     }
 
     /// Nonblocking ReduceScatter (sum then `scale`); same contract as
     /// [`Communicator::all_gather_async`].
-    fn reduce_scatter_async(&self, mut bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
-        let r = self.reduce_scatter(&mut bufs, s, scale).map(|()| bufs);
-        PendingOp::done(r)
+    fn reduce_scatter_async(&self, bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
+        let l = self.describe(LaunchOp::ReduceScatter, bufs.len(), s).scaled(scale).asynchronous();
+        self.launch_async(&l, bufs)
     }
 
     /// Nonblocking All-to-all; same contract as
     /// [`Communicator::all_gather_async`]. The quantized ReduceScatter
-    /// (`quant::reduce_scatter_prec`) rides on this: encoded chunk slots
-    /// are exchanged here and dequant-reduced at each destination.
-    fn all_to_all_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
-        let r = self.all_to_all(&mut bufs, s).map(|()| bufs);
-        PendingOp::done(r)
+    /// transport (see [`launch::reduce_scatter_launch`]) rides on this:
+    /// encoded chunk slots are exchanged here and dequant-reduced at
+    /// each destination.
+    fn all_to_all_async(&self, bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
+        self.launch_async(&self.describe(LaunchOp::AllToAll, bufs.len(), s).asynchronous(), bufs)
     }
 
     /// Record one collective in the backend's thread-safe stats.
@@ -198,54 +264,133 @@ pub trait Communicator: Send + Sync {
     fn reset_stats(&self);
 }
 
-/// Construct the communicator for a backend selection.
-pub fn make_comm(backend: CommBackend) -> Arc<dyn Communicator> {
-    make_comm_traced(backend, crate::trace::Tracer::off())
-}
-
-/// Construct the communicator with a trace sink: both backends emit a
-/// transport span on the `fabric` timeline for every collective they
-/// execute (in every code path — blocking, eager-async, and background
-/// comm thread — so serial and threaded runs record the same span set).
-pub fn make_comm_traced(
+/// The one constructor for collective backends: pick a [`CommBackend`],
+/// optionally attach a cluster topology, a trace sink, a health
+/// observer, and a hierarchy threshold, then [`CommBuilder::build`].
+///
+/// * A **tracer** makes both backends emit a transport span on the
+///   `fabric` timeline for every collective in every code path —
+///   blocking, eager-async, and background comm thread — so serial and
+///   threaded runs record the same span set.
+/// * A hierarchical **topology** (`hosts > 1`) makes the threaded
+///   backend dispatch AllGather/ReduceScatter on groups that exactly
+///   fill it to the two-level pipelined algorithms — still bit-identical
+///   to the flat path — and makes both backends tag their transport
+///   spans with the `tier` the bytes predominantly crossed.
+/// * An **observer** publishes per-rank heartbeats into the health
+///   board and flight rings; a disarmed observer adds exactly one branch
+///   per collective.
+/// * The **hier_threshold** overrides [`DEFAULT_HIER_THRESHOLD`] for the
+///   threaded backend's serial-fallback / two-level eligibility checks
+///   (the serial backend executes every launch serially regardless).
+///
+/// ```
+/// use vescale_fsdp::cluster::{CommBackend, CommBuilder};
+/// use vescale_fsdp::comm::Topology;
+///
+/// let comm = CommBuilder::new(CommBackend::Threaded)
+///     .topology(Topology::parse("2x4:2").unwrap())
+///     .build();
+/// assert_eq!(comm.backend(), CommBackend::Threaded);
+/// ```
+#[derive(Clone)]
+pub struct CommBuilder {
     backend: CommBackend,
-    tracer: crate::trace::Tracer,
-) -> Arc<dyn Communicator> {
-    make_comm_topo(backend, tracer, crate::comm::Topology::flat())
+    topology: Topology,
+    tracer: Tracer,
+    obs: Observer,
+    hier_threshold: usize,
 }
 
-/// Construct the communicator with a trace sink *and* a cluster
-/// topology. A hierarchical topology (`hosts > 1`) makes the threaded
-/// backend dispatch AllGather/ReduceScatter on groups that exactly fill
-/// it to the two-level pipelined algorithms of [`hierarchy`] — still
-/// bit-identical to the flat path — and makes both backends tag their
-/// transport spans with the `tier` the bytes predominantly crossed.
-/// `Topology::flat()` is byte-for-byte the legacy behavior.
+impl CommBuilder {
+    /// A builder with flat topology, no tracing, no monitoring, and the
+    /// default hierarchy threshold — `build` on this is byte-for-byte
+    /// the legacy untraced communicator.
+    pub fn new(backend: CommBackend) -> CommBuilder {
+        CommBuilder {
+            backend,
+            topology: Topology::flat(),
+            tracer: Tracer::off(),
+            obs: Observer::off(),
+            hier_threshold: DEFAULT_HIER_THRESHOLD,
+        }
+    }
+
+    /// Attach a cluster topology for tier routing and span tier tags.
+    pub fn topology(mut self, topology: Topology) -> CommBuilder {
+        self.topology = topology;
+        self
+    }
+
+    /// Attach a trace sink for transport spans.
+    pub fn tracer(mut self, tracer: Tracer) -> CommBuilder {
+        self.tracer = tracer;
+        self
+    }
+
+    /// Attach a health-monitor handle for heartbeats and flight rings.
+    pub fn observer(mut self, obs: Observer) -> CommBuilder {
+        self.obs = obs;
+        self
+    }
+
+    /// Override the serial-fallback / two-level eligibility threshold
+    /// (total f32 elements; see [`DEFAULT_HIER_THRESHOLD`]).
+    pub fn hier_threshold(mut self, elems: usize) -> CommBuilder {
+        self.hier_threshold = elems;
+        self
+    }
+
+    /// Construct the communicator.
+    pub fn build(self) -> Arc<dyn Communicator> {
+        match self.backend {
+            CommBackend::Serial => {
+                Arc::new(SerialComm::with_obs(self.tracer, self.topology, self.obs))
+            }
+            CommBackend::Threaded => Arc::new(ThreadedComm::configured(
+                self.tracer,
+                self.topology,
+                self.obs,
+                self.hier_threshold,
+            )),
+        }
+    }
+}
+
+/// Construct the communicator for a backend selection.
+#[deprecated(note = "use CommBuilder::new(backend).build()")]
+pub fn make_comm(backend: CommBackend) -> Arc<dyn Communicator> {
+    CommBuilder::new(backend).build()
+}
+
+/// Construct the communicator with a trace sink.
+#[deprecated(note = "use CommBuilder::new(backend).tracer(tracer).build()")]
+pub fn make_comm_traced(backend: CommBackend, tracer: Tracer) -> Arc<dyn Communicator> {
+    CommBuilder::new(backend).tracer(tracer).build()
+}
+
+/// Construct the communicator with a trace sink and a cluster topology.
+#[deprecated(note = "use CommBuilder::new(backend).tracer(tracer).topology(topology).build()")]
 pub fn make_comm_topo(
     backend: CommBackend,
-    tracer: crate::trace::Tracer,
-    topology: crate::comm::Topology,
+    tracer: Tracer,
+    topology: Topology,
 ) -> Arc<dyn Communicator> {
-    make_comm_obs(backend, tracer, topology, crate::obs::Observer::off())
+    CommBuilder::new(backend).tracer(tracer).topology(topology).build()
 }
 
-/// [`make_comm_topo`] plus a health-monitor handle: every collective on
-/// either backend — blocking, eager-async, or background comm thread —
-/// publishes per-rank heartbeats into the observer's
-/// [`crate::obs::HealthBoard`] and records into its flight rings. A
-/// disarmed observer ([`crate::obs::Observer::off`]) adds exactly one
-/// branch per collective, so this is byte-for-byte the
-/// [`make_comm_topo`] behavior when monitoring is off.
+/// Construct the communicator with a trace sink, a cluster topology,
+/// and a health-monitor handle.
+#[deprecated(
+    note = "use CommBuilder::new(backend).tracer(tracer).topology(topology).observer(obs).build()"
+)]
 pub fn make_comm_obs(
     backend: CommBackend,
-    tracer: crate::trace::Tracer,
-    topology: crate::comm::Topology,
-    obs: crate::obs::Observer,
+    tracer: Tracer,
+    topology: Topology,
+    obs: Observer,
 ) -> Arc<dyn Communicator> {
-    match backend {
-        CommBackend::Serial => Arc::new(SerialComm::with_obs(tracer, topology, obs)),
-        CommBackend::Threaded => Arc::new(ThreadedComm::with_obs(tracer, topology, obs)),
-    }
+    CommBuilder::new(backend).tracer(tracer).topology(topology).observer(obs).build()
 }
 
 /// Per-rank context handed to [`Cluster::run_spmd`] closures: rank id,
@@ -342,6 +487,23 @@ mod tests {
         }
         assert_eq!(CommBackend::parse("spmd"), Some(CommBackend::Threaded));
         assert_eq!(CommBackend::parse("nope"), None);
+    }
+
+    #[test]
+    fn comm_builder_selects_backend_and_threshold() {
+        for b in CommBackend::all() {
+            assert_eq!(CommBuilder::new(b).build().backend(), b);
+        }
+        // a zero threshold forces even tiny exchanges onto the
+        // rendezvous path; the result must be unchanged
+        let comm = CommBuilder::new(CommBackend::Threaded)
+            .topology(Topology::parse("2x4:2").unwrap())
+            .hier_threshold(0)
+            .build();
+        let mut bufs: Vec<Vec<f32>> = (0..2).map(|k| vec![(k + 1) as f32; 4]).collect();
+        comm.all_gather(&mut bufs, 2).unwrap();
+        assert_eq!(bufs[0], vec![1.0, 1.0, 2.0, 2.0]);
+        assert_eq!(bufs[1], vec![1.0, 1.0, 2.0, 2.0]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ use crate::comm::{self, CommRecord, CommStats, SharedStats, Topology};
 use crate::obs::Observer;
 use crate::trace::{Cat, Span, Tracer};
 
+use super::launch::{CollectiveLaunch, LaunchOp};
 use super::{CommBackend, Communicator};
 
 #[derive(Debug, Default)]
@@ -102,34 +103,33 @@ impl Communicator for SerialComm {
         CommBackend::Serial
     }
 
-    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let m = bufs.len();
-        let bytes = (m * s * 4) as u64;
-        self.traced("all_gather", m, bytes, || comm::all_gather(bufs, s))
+    fn describe(&self, op: LaunchOp, group: usize, elems: usize) -> CollectiveLaunch {
+        CollectiveLaunch::new(op, group, elems).on_topology(self.topology)
     }
 
-    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+    /// The blocking transport stage: every launch runs the flat loop
+    /// algorithm (the serial backend ignores tier routing — it *is* the
+    /// bit-identity oracle), bracketed by one tier-tagged transport span
+    /// and, when armed, per-rank heartbeats. Ring-style ops account
+    /// `m·slot` wire bytes; whole-buffer ops account `m·len`.
+    fn launch(&self, l: &CollectiveLaunch, bufs: &mut [Vec<f32>]) -> Result<()> {
         let m = bufs.len();
-        let bytes = (m * s * 4) as u64;
-        self.traced("reduce_scatter", m, bytes, || comm::reduce_scatter(bufs, s, scale))
-    }
-
-    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
-        let m = bufs.len();
-        let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
-        self.traced("all_reduce", m, bytes, || comm::all_reduce(bufs, scale))
-    }
-
-    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
-        let m = bufs.len();
-        let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
-        self.traced("broadcast", m, bytes, || comm::broadcast(bufs, root))
-    }
-
-    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let m = bufs.len();
-        let bytes = (m * s * 4) as u64;
-        self.traced("all_to_all", m, bytes, || comm::all_to_all(bufs, s))
+        let s = l.comm_elems();
+        let bytes = match l.op {
+            LaunchOp::AllGather | LaunchOp::ReduceScatter | LaunchOp::AllToAll => {
+                (m * s * 4) as u64
+            }
+            LaunchOp::AllReduce | LaunchOp::Broadcast => {
+                (bufs.first().map_or(0, Vec::len) * m * 4) as u64
+            }
+        };
+        self.traced(l.op.name(), m, bytes, || match l.op {
+            LaunchOp::AllGather => comm::all_gather(bufs, s),
+            LaunchOp::ReduceScatter => comm::reduce_scatter(bufs, s, l.scale),
+            LaunchOp::AllReduce => comm::all_reduce(bufs, l.scale),
+            LaunchOp::Broadcast => comm::broadcast(bufs, l.root),
+            LaunchOp::AllToAll => comm::all_to_all(bufs, s),
+        })
     }
 
     fn record(&self, rec: CommRecord) {

@@ -36,18 +36,15 @@ use crate::obs::Observer;
 use crate::trace::{Cat, Span, Tracer};
 
 use super::hierarchy::{hier_all_gather, hier_reduce_scatter};
+use super::launch::{CollectiveLaunch, LaunchOp, DEFAULT_HIER_THRESHOLD};
 use super::{CommBackend, Communicator, PendingOp};
-
-/// Below this many total elements a collective is cheaper single-threaded
-/// than the ~tens-of-microseconds per OS thread spawn; the serial path is
-/// bit-identical, so falling back never changes results.
-pub const DEFAULT_MIN_PARALLEL_ELEMS: usize = 16 * 1024;
 
 #[derive(Debug)]
 pub struct ThreadedComm {
     stats: SharedStats,
-    /// Total-element threshold under which collectives run serially.
-    min_parallel_elems: usize,
+    /// Total-element threshold under which collectives run serially
+    /// (see [`DEFAULT_HIER_THRESHOLD`]).
+    hier_threshold: usize,
     tracer: Tracer,
     /// Cluster shape: groups that exactly fill a multi-host topology
     /// dispatch to the two-level algorithms in [`super::hierarchy`].
@@ -67,13 +64,12 @@ impl Default for ThreadedComm {
 
 impl ThreadedComm {
     pub fn new() -> ThreadedComm {
-        ThreadedComm {
-            stats: SharedStats::default(),
-            min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
-            tracer: Tracer::off(),
-            topology: Topology::flat(),
-            obs: Observer::off(),
-        }
+        ThreadedComm::configured(
+            Tracer::off(),
+            Topology::flat(),
+            Observer::off(),
+            DEFAULT_HIER_THRESHOLD,
+        )
     }
 
     /// Construct with a trace sink: every collective — blocking, eager
@@ -102,29 +98,34 @@ impl ThreadedComm {
     /// path and the background comm threads — so the collective watchdog
     /// can name exactly which rank is stuck where.
     pub fn with_obs(tracer: Tracer, topology: Topology, obs: Observer) -> ThreadedComm {
-        ThreadedComm {
-            stats: SharedStats::default(),
-            min_parallel_elems: DEFAULT_MIN_PARALLEL_ELEMS,
-            tracer,
-            topology,
-            obs,
-        }
+        ThreadedComm::configured(tracer, topology, obs, DEFAULT_HIER_THRESHOLD)
+    }
+
+    /// The fully-specified constructor — what
+    /// [`CommBuilder`](super::CommBuilder) builds: trace sink, cluster
+    /// topology, health-monitor handle, and serial-fallback threshold.
+    pub fn configured(
+        tracer: Tracer,
+        topology: Topology,
+        obs: Observer,
+        hier_threshold: usize,
+    ) -> ThreadedComm {
+        ThreadedComm { stats: SharedStats::default(), hier_threshold, tracer, topology, obs }
     }
 
     /// Override the serial-fallback threshold (0 forces the rendezvous
     /// algorithms even for tiny buffers — used by the equivalence tests).
     pub fn with_min_parallel_elems(min_parallel_elems: usize) -> ThreadedComm {
-        ThreadedComm {
-            stats: SharedStats::default(),
+        ThreadedComm::configured(
+            Tracer::off(),
+            Topology::flat(),
+            Observer::off(),
             min_parallel_elems,
-            tracer: Tracer::off(),
-            topology: Topology::flat(),
-            obs: Observer::off(),
-        }
+        )
     }
 
     fn serial_faster(&self, total_elems: usize) -> bool {
-        total_elems < self.min_parallel_elems
+        total_elems < self.hier_threshold
     }
 
     /// Should this AllGather/ReduceScatter take the two-level path? Only
@@ -134,7 +135,7 @@ impl ThreadedComm {
     fn hier_eligible(&self, m: usize, s: usize) -> bool {
         self.topology.is_hierarchical()
             && m == self.topology.total()
-            && !(m <= 1 || s == 0 || m * m * s < self.min_parallel_elems)
+            && !(m <= 1 || s == 0 || m * m * s < self.hier_threshold)
     }
 
     /// Wire-tier label for a flat-algorithm collective under a
@@ -557,129 +558,155 @@ impl Communicator for ThreadedComm {
         CommBackend::Threaded
     }
 
-    fn all_gather(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let m = bufs.len();
-        if self.hier_eligible(m, s) {
-            let topo = self.topology;
-            return obs_scoped(&self.obs, "all_gather", || {
-                hier_traced(
-                    &self.tracer,
-                    "all_gather",
-                    hier_span_bytes(true, topo, s),
-                    |tm_intra, tm_inter| hier_all_gather(bufs, s, topo, tm_intra, tm_inter),
-                )
-            });
-        }
-        let bytes = (m * s * 4) as u64;
-        self.traced("all_gather", self.tier_label(m), bytes, |tm| {
-            ring_all_gather(bufs, s, self.min_parallel_elems, tm)
-        })
+    fn describe(&self, op: LaunchOp, group: usize, elems: usize) -> CollectiveLaunch {
+        CollectiveLaunch::new(op, group, elems)
+            .on_topology(self.topology)
+            .with_hier_threshold(self.hier_threshold)
     }
 
-    fn reduce_scatter(&self, bufs: &mut [Vec<f32>], s: usize, scale: f32) -> Result<()> {
+    /// The blocking transport stage. Tier routing comes first —
+    /// AllGather/ReduceScatter over groups that exactly fill a
+    /// multi-host topology dispatch to the two-level algorithms (one
+    /// span per wire tier); everything else takes the flat rendezvous
+    /// with the descriptor-driven serial fallback inside, bracketed by
+    /// one transport span and the obs heartbeat scope.
+    fn launch(&self, l: &CollectiveLaunch, bufs: &mut [Vec<f32>]) -> Result<()> {
         let m = bufs.len();
-        if self.hier_eligible(m, s) {
-            let topo = self.topology;
-            return obs_scoped(&self.obs, "reduce_scatter", || {
-                hier_traced(
-                    &self.tracer,
-                    "reduce_scatter",
-                    hier_span_bytes(false, topo, s),
-                    |tm_intra, tm_inter| {
-                        hier_reduce_scatter(bufs, s, scale, topo, tm_intra, tm_inter)
-                    },
-                )
-            });
+        let s = l.comm_elems();
+        match l.op {
+            LaunchOp::AllGather | LaunchOp::ReduceScatter if self.hier_eligible(m, s) => {
+                let topo = self.topology;
+                let name = l.op.name();
+                let is_gather = l.op == LaunchOp::AllGather;
+                let scale = l.scale;
+                obs_scoped(&self.obs, name, || {
+                    hier_traced(
+                        &self.tracer,
+                        name,
+                        hier_span_bytes(is_gather, topo, s),
+                        |tm_intra, tm_inter| {
+                            if is_gather {
+                                hier_all_gather(bufs, s, topo, tm_intra, tm_inter)
+                            } else {
+                                hier_reduce_scatter(bufs, s, scale, topo, tm_intra, tm_inter)
+                            }
+                        },
+                    )
+                })
+            }
+            LaunchOp::AllGather => {
+                let bytes = (m * s * 4) as u64;
+                self.traced("all_gather", self.tier_label(m), bytes, |tm| {
+                    ring_all_gather(bufs, s, self.hier_threshold, tm)
+                })
+            }
+            LaunchOp::ReduceScatter => {
+                let bytes = (m * s * 4) as u64;
+                self.traced("reduce_scatter", self.tier_label(m), bytes, |tm| {
+                    rendezvous_reduce_scatter(bufs, s, l.scale, self.hier_threshold, tm)
+                })
+            }
+            LaunchOp::AllToAll => {
+                let bytes = (m * s * 4) as u64;
+                self.traced("all_to_all", self.tier_label(m), bytes, |tm| {
+                    rendezvous_all_to_all(bufs, s, self.hier_threshold, tm)
+                })
+            }
+            LaunchOp::AllReduce => self.launch_all_reduce(bufs, l.scale),
+            LaunchOp::Broadcast => self.launch_broadcast(bufs, l.root),
         }
-        let bytes = (m * s * 4) as u64;
-        self.traced("reduce_scatter", self.tier_label(m), bytes, |tm| {
-            rendezvous_reduce_scatter(bufs, s, scale, self.min_parallel_elems, tm)
-        })
     }
 
-    fn all_gather_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
-        // below the threading threshold a comm-thread spawn costs more
-        // than the exchange itself — complete eagerly, same as the sync
-        // path's serial fallback (bit-identical either way; the sync
-        // method emits the transport span)
+    /// The nonblocking transport stage. Below the threading threshold a
+    /// comm-thread spawn costs more than the exchange itself — complete
+    /// eagerly, same as the blocking path's serial fallback
+    /// (bit-identical either way; the blocking launch emits the
+    /// transport span). Whole-buffer ops (AllReduce/Broadcast) always
+    /// complete eagerly. Everything else runs on a background comm
+    /// thread — two-level when the tier routing says so, flat otherwise.
+    fn launch_async(&self, l: &CollectiveLaunch, mut bufs: Vec<Vec<f32>>) -> PendingOp {
         let m = bufs.len();
-        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = self.all_gather(&mut bufs, s).map(|()| bufs);
+        let s = l.comm_elems();
+        let ring_op =
+            matches!(l.op, LaunchOp::AllGather | LaunchOp::ReduceScatter | LaunchOp::AllToAll);
+        if !ring_op || m <= 1 || s == 0 || m * m * s < self.hier_threshold {
+            let r = self.launch(l, &mut bufs).map(|()| bufs);
             return PendingOp::done(r);
         }
-        if self.hier_eligible(m, s) {
+        if matches!(l.op, LaunchOp::AllGather | LaunchOp::ReduceScatter)
+            && self.hier_eligible(m, s)
+        {
             let topo = self.topology;
             let tracer = self.tracer.clone();
             let obs = self.obs.clone();
+            let name = l.op.name();
+            let is_gather = l.op == LaunchOp::AllGather;
+            let scale = l.scale;
             return PendingOp::spawn(move || {
-                obs_scoped(&obs, "all_gather", || {
+                obs_scoped(&obs, name, || {
                     hier_traced(
                         &tracer,
-                        "all_gather",
-                        hier_span_bytes(true, topo, s),
+                        name,
+                        hier_span_bytes(is_gather, topo, s),
                         |tm_intra, tm_inter| {
-                            hier_all_gather(&mut bufs, s, topo, tm_intra, tm_inter)
+                            if is_gather {
+                                hier_all_gather(&mut bufs, s, topo, tm_intra, tm_inter)
+                            } else {
+                                hier_reduce_scatter(&mut bufs, s, scale, topo, tm_intra, tm_inter)
+                            }
                         },
                     )
                 })?;
                 Ok(bufs)
             });
         }
-        let min = self.min_parallel_elems;
+        let min = self.hier_threshold;
         let tier = self.tier_label(m);
         let tracer = self.tracer.clone();
         let obs = self.obs.clone();
         let bytes = (m * s * 4) as u64;
+        let op = l.op;
+        let name = op.name();
+        let scale = l.scale;
         PendingOp::spawn(move || {
-            obs_scoped(&obs, "all_gather", || {
-                spawned_traced(&tracer, "all_gather", tier, bytes, |tm| {
-                    ring_all_gather(&mut bufs, s, min, tm)
+            obs_scoped(&obs, name, || {
+                spawned_traced(&tracer, name, tier, bytes, |tm| match op {
+                    LaunchOp::AllGather => ring_all_gather(&mut bufs, s, min, tm),
+                    LaunchOp::ReduceScatter => {
+                        rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
+                    }
+                    _ => rendezvous_all_to_all(&mut bufs, s, min, tm),
                 })
             })?;
             Ok(bufs)
         })
     }
 
-    fn reduce_scatter_async(&self, mut bufs: Vec<Vec<f32>>, s: usize, scale: f32) -> PendingOp {
-        let m = bufs.len();
-        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = self.reduce_scatter(&mut bufs, s, scale).map(|()| bufs);
-            return PendingOp::done(r);
-        }
-        if self.hier_eligible(m, s) {
-            let topo = self.topology;
-            let tracer = self.tracer.clone();
-            let obs = self.obs.clone();
-            return PendingOp::spawn(move || {
-                obs_scoped(&obs, "reduce_scatter", || {
-                    hier_traced(
-                        &tracer,
-                        "reduce_scatter",
-                        hier_span_bytes(false, topo, s),
-                        |tm_intra, tm_inter| {
-                            hier_reduce_scatter(&mut bufs, s, scale, topo, tm_intra, tm_inter)
-                        },
-                    )
-                })?;
-                Ok(bufs)
-            });
-        }
-        let min = self.min_parallel_elems;
-        let tier = self.tier_label(m);
-        let tracer = self.tracer.clone();
-        let obs = self.obs.clone();
-        let bytes = (m * s * 4) as u64;
-        PendingOp::spawn(move || {
-            obs_scoped(&obs, "reduce_scatter", || {
-                spawned_traced(&tracer, "reduce_scatter", tier, bytes, |tm| {
-                    rendezvous_reduce_scatter(&mut bufs, s, scale, min, tm)
-                })
-            })?;
-            Ok(bufs)
-        })
+    fn record(&self, rec: CommRecord) {
+        self.stats.record(rec);
     }
 
-    fn all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
+    fn stats(&self) -> CommStats {
+        self.stats.snapshot()
+    }
+
+    fn sim_time(&self) -> f64 {
+        self.stats.total_time()
+    }
+
+    fn wire_totals(&self) -> (u64, u64, u64) {
+        self.stats.wire_totals()
+    }
+
+    fn reset_stats(&self) {
+        self.stats.reset();
+    }
+}
+
+impl ThreadedComm {
+    /// The rendezvous AllReduce body (balanced ranges, rank-order
+    /// summation), kept private to the transport stage.
+    fn launch_all_reduce(&self, bufs: &mut [Vec<f32>], scale: f32) -> Result<()> {
         let m = bufs.len();
         let bytes = (bufs.first().map_or(0, Vec::len) * m * 4) as u64;
         self.traced("all_reduce", self.tier_label(m), bytes, |tm| {
@@ -736,7 +763,10 @@ impl Communicator for ThreadedComm {
         })
     }
 
-    fn broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
+    /// The rendezvous Broadcast body (root validation before any span is
+    /// emitted, exactly like the loop reference), kept private to the
+    /// transport stage.
+    fn launch_broadcast(&self, bufs: &mut [Vec<f32>], root: usize) -> Result<()> {
         let m = bufs.len();
         if root >= m {
             bail!("broadcast root {root} out of range");
@@ -765,54 +795,6 @@ impl Communicator for ThreadedComm {
             });
             Ok(())
         })
-    }
-
-    fn all_to_all(&self, bufs: &mut [Vec<f32>], s: usize) -> Result<()> {
-        let bytes = (bufs.len() * s * 4) as u64;
-        self.traced("all_to_all", self.tier_label(bufs.len()), bytes, |tm| {
-            rendezvous_all_to_all(bufs, s, self.min_parallel_elems, tm)
-        })
-    }
-
-    fn all_to_all_async(&self, mut bufs: Vec<Vec<f32>>, s: usize) -> PendingOp {
-        let m = bufs.len();
-        if m <= 1 || s == 0 || m * m * s < self.min_parallel_elems {
-            let r = self.all_to_all(&mut bufs, s).map(|()| bufs);
-            return PendingOp::done(r);
-        }
-        let min = self.min_parallel_elems;
-        let tier = self.tier_label(m);
-        let tracer = self.tracer.clone();
-        let obs = self.obs.clone();
-        let bytes = (m * s * 4) as u64;
-        PendingOp::spawn(move || {
-            obs_scoped(&obs, "all_to_all", || {
-                spawned_traced(&tracer, "all_to_all", tier, bytes, |tm| {
-                    rendezvous_all_to_all(&mut bufs, s, min, tm)
-                })
-            })?;
-            Ok(bufs)
-        })
-    }
-
-    fn record(&self, rec: CommRecord) {
-        self.stats.record(rec);
-    }
-
-    fn stats(&self) -> CommStats {
-        self.stats.snapshot()
-    }
-
-    fn sim_time(&self) -> f64 {
-        self.stats.total_time()
-    }
-
-    fn wire_totals(&self) -> (u64, u64, u64) {
-        self.stats.wire_totals()
-    }
-
-    fn reset_stats(&self) {
-        self.stats.reset();
     }
 }
 
@@ -944,7 +926,7 @@ mod tests {
         use crate::trace::{TraceLevel, Tracer};
         let tracer = Tracer::new(TraceLevel::Comm, 4);
         let mut c = ThreadedComm::with_tracer(tracer.clone());
-        c.min_parallel_elems = 0; // force the rendezvous algorithms
+        c.hier_threshold = 0; // force the rendezvous algorithms
         let (m, s) = (4usize, 3usize);
         let mk = || dev_bufs(m, s);
         // sync, eager-async (threshold), and background-async paths must
@@ -992,7 +974,7 @@ mod tests {
         comm::reduce_scatter(&mut want_rs, s, 0.125).unwrap();
 
         let mut c = ThreadedComm::with_topology(Tracer::off(), topo);
-        c.min_parallel_elems = 0;
+        c.hier_threshold = 0;
         let mut got_ag = wild_bufs(m, s, 11);
         c.all_gather(&mut got_ag, s).unwrap();
         for (a, b) in want_ag.iter().flatten().zip(got_ag.iter().flatten()) {
@@ -1022,7 +1004,7 @@ mod tests {
         let tracer = Tracer::new(TraceLevel::Comm, m);
         let mut c =
             ThreadedComm::with_topology(tracer.clone(), Topology::parse("2x4:2").unwrap());
-        c.min_parallel_elems = 0;
+        c.hier_threshold = 0;
         let mut bufs = dev_bufs(m, s);
         c.all_gather(&mut bufs, s).unwrap();
         assert_eq!(tracer.span_count(), 2, "hier AG = intra span + inter span");

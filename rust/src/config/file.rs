@@ -268,6 +268,7 @@ impl ConfigFile {
             fabric,
             topology,
             comm_precision,
+            hier_threshold: self.usize_or("comm.hier_threshold", d.hier_threshold),
             trace,
             trace_level,
             watchdog_ms,
@@ -307,6 +308,14 @@ prefetch = 2
         assert_eq!(c.get("model.preset"), Some("small"));
         assert_eq!(c.usize_or("parallel.fsdp", 0), 8);
         assert_eq!(c.f64_or("run.lr", 0.0), 0.0003);
+    }
+
+    #[test]
+    fn comm_section_overrides_hier_threshold() {
+        let c = ConfigFile::parse("[comm]\nhier_threshold = 4096\n").unwrap();
+        assert_eq!(c.train_config().unwrap().hier_threshold, 4096);
+        let d = ConfigFile::parse("").unwrap().train_config().unwrap();
+        assert_eq!(d.hier_threshold, crate::cluster::DEFAULT_HIER_THRESHOLD);
     }
 
     #[test]

@@ -188,6 +188,11 @@ pub struct TrainConfig {
     /// Session-default wire precision (`run.comm_precision` /
     /// `--comm-precision`): f32 | bf16 | q8[:block].
     pub comm_precision: String,
+    /// Serial-fallback / two-level dispatch threshold in total elements
+    /// (`[comm] hier_threshold` / `--hier-threshold`), consulted by both
+    /// runtime dispatch and the static analyzer's tier modeling.
+    /// Defaults to [`crate::cluster::DEFAULT_HIER_THRESHOLD`].
+    pub hier_threshold: usize,
     /// Chrome-trace output path (`run.trace` / `[trace] out` / `--trace`).
     /// `None` = tracing off.
     pub trace: Option<String>,
@@ -226,6 +231,7 @@ impl Default for TrainConfig {
             fabric: "h800".into(),
             topology: String::new(),
             comm_precision: "f32".into(),
+            hier_threshold: crate::cluster::DEFAULT_HIER_THRESHOLD,
             trace: None,
             trace_level: "comm".into(),
             watchdog_ms: 0,

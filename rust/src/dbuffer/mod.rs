@@ -34,12 +34,13 @@
 use anyhow::{bail, Result};
 
 use crate::analysis::diag::{codes, rt};
-use crate::cluster::{Communicator, PendingOp};
+use crate::cluster::launch::{decode_wire, encode_wire, reduce_scatter_launch};
+use crate::cluster::{Communicator, LaunchOp, PendingOp};
 use crate::comm::{CommRecord, Fabric};
 use crate::memory::{BlockId, SharedAllocator};
 use crate::mesh::DeviceMesh;
 use crate::planner::Layout;
-use crate::quant::{self, CommPrecision};
+use crate::quant::CommPrecision;
 use crate::trace::{Cat, Span, Tracer};
 
 /// Per-bucket distributed buffer over an FSDP group of `m` devices.
@@ -66,7 +67,7 @@ pub struct DBuffer {
     /// gather is in flight).
     wire_block: Option<BlockId>,
     /// A quantized (wire-encoded) gather is in flight: `full` stays home
-    /// but must not be read until `finish_gather_prec` decodes into it.
+    /// but must not be read until `finish_gather` decodes into it.
     wire_inflight: bool,
     /// Trace sink for quant-codec and allocator-wait spans (off by
     /// default — every site then costs one untaken branch).
@@ -226,26 +227,50 @@ impl DBuffer {
         &mut self.full[rank][off..off + n]
     }
 
-    /// In-place parameter AllGather: each rank's shard is published into
-    /// every rank's persistent full buffer. Zero-copy on both ends: the
-    /// shard region of `full` is first filled from `shards` (simulating
-    /// that they alias; one memcpy models the aliased write) and the
-    /// collective runs on `full` directly, through whichever cluster
-    /// backend `comm` selects.
-    pub fn all_gather_params(&mut self, comm: &dyn Communicator, fabric: &Fabric) -> Result<()> {
-        if self.full.len() != self.num_devices() {
-            bail!("all_gather_params: an async gather is in flight");
-        }
-        self.acquire_full()?;
+    /// In-place precision-aware parameter AllGather, one descriptor end
+    /// to end: each rank's shard is published into every rank's
+    /// persistent full buffer. `F32` runs the collective on `full`
+    /// directly (zero-copy on both ends: the shard region of `full` is
+    /// first filled from `shards`, simulating that they alias; one
+    /// memcpy models the aliased write). `Bf16`/`Q8` encode each shard,
+    /// ship the packed wire buffers through the descriptor's transport
+    /// lowering, and dequantize on arrival. Wire-byte accounting (true
+    /// payload + scale + pad) comes from the descriptor's measured wire
+    /// volume in both cases.
+    pub fn all_gather_params(
+        &mut self,
+        comm: &dyn Communicator,
+        fabric: &Fabric,
+        prec: CommPrecision,
+    ) -> Result<()> {
+        let m = self.num_devices();
         let s = self.shard_elems();
-        // split borrow: full (mut) and shards (shared) are disjoint
-        // fields, so no defensive copy is needed
-        for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
-            full[rank * s..(rank + 1) * s].copy_from_slice(shard);
+        let l = comm.describe(LaunchOp::AllGather, m, s).with_precision(prec);
+        if prec.is_f32() {
+            if self.full.len() != m {
+                bail!("all_gather_params: an async gather is in flight");
+            }
+            self.acquire_full()?;
+            // split borrow: full (mut) and shards (shared) are disjoint
+            // fields, so no defensive copy is needed
+            for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
+                full[rank * s..(rank + 1) * s].copy_from_slice(shard);
+            }
+            comm.launch(&l, &mut self.full)?;
+        } else {
+            if self.wire_inflight {
+                bail!("all_gather_params: an encoded gather is in flight");
+            }
+            self.acquire_full()?;
+            let t = l.transport();
+            self.acquire_wire(m * t.elems)?;
+            let mut wire = self.encode_shard_wire(prec);
+            comm.launch(&t, &mut wire)?;
+            self.decode_full_from_wire(prec, &wire);
+            self.release_wire();
         }
-        comm.all_gather(&mut self.full, s)?;
         self.gathered = true;
-        self.record_gather(comm, fabric);
+        comm.record(l.comm_record(fabric));
         Ok(())
     }
 
@@ -279,7 +304,7 @@ impl DBuffer {
         let t = self.tracer.timer();
         let mut wire: Vec<Vec<f32>> = vec![vec![0.0; m * w]; m];
         for (rank, (wb, shard)) in wire.iter_mut().zip(&self.shards).enumerate() {
-            quant::encode_slot(prec, shard, &mut wb[rank * w..(rank + 1) * w]);
+            encode_wire(prec, shard, &mut wb[rank * w..(rank + 1) * w]);
         }
         self.tracer.finish_with(t, Cat::Comm, || {
             Span::new("quant_encode")
@@ -301,7 +326,7 @@ impl DBuffer {
         let t = self.tracer.timer();
         for (rank, full) in self.full.iter_mut().enumerate() {
             for k in 0..m {
-                quant::decode_slot(
+                decode_wire(
                     prec,
                     &wire[rank][k * w..(k + 1) * w],
                     &mut full[k * s..(k + 1) * s],
@@ -316,80 +341,91 @@ impl DBuffer {
         });
     }
 
-    /// Precision-aware in-place parameter AllGather: `F32` is exactly
-    /// [`DBuffer::all_gather_params`] (bit-identical legacy path); `Bf16`
-    /// / `Q8` encode each shard, ship the packed wire buffers through the
-    /// collective, and dequantize on arrival. Wire-byte accounting (true
-    /// payload + scale + pad) comes from the encoded buffer sizes.
-    pub fn all_gather_params_prec(
-        &mut self,
-        comm: &dyn Communicator,
-        fabric: &Fabric,
-        prec: CommPrecision,
-    ) -> Result<()> {
-        if prec.is_f32() {
-            return self.all_gather_params(comm, fabric);
-        }
-        if self.wire_inflight {
-            bail!("all_gather_params_prec: an encoded gather is in flight");
-        }
-        self.acquire_full()?;
-        let w = prec.wire_words(self.shard_elems());
-        let m = self.num_devices();
-        self.acquire_wire(m * w)?;
-        let mut wire = self.encode_shard_wire(prec);
-        comm.all_gather(&mut wire, w)?;
-        self.decode_full_from_wire(prec, &wire);
-        self.release_wire();
-        self.gathered = true;
-        self.record_gather_prec(comm, fabric, prec);
-        Ok(())
-    }
-
-    /// Begin a nonblocking precision-aware gather: `F32` delegates to
-    /// [`DBuffer::begin_gather`]; otherwise the *encoded wire buffers*
-    /// travel in the returned op while `full` stays home, and
-    /// [`DBuffer::finish_gather_prec`] decodes on completion — which is
-    /// how the pipelined executor overlaps bucket *l*'s dequant with
-    /// bucket *l+1*'s in-flight quantized AllGather.
-    pub fn begin_gather_prec(
+    /// Begin a nonblocking precision-aware gather. For `F32` the full
+    /// buffers move into the returned [`PendingOp`] (their shard regions
+    /// pre-filled from the local shards) and come back via
+    /// [`DBuffer::finish_gather`]; until then `full` is empty. For
+    /// `Bf16`/`Q8` the *encoded wire buffers* travel in the returned op
+    /// while `full` stays home, and [`DBuffer::finish_gather`] decodes
+    /// on completion — which is how the pipelined executor overlaps
+    /// bucket *l*'s dequant with bucket *l+1*'s in-flight quantized
+    /// AllGather. Either way `gathered` stays false until completion.
+    pub fn begin_gather(
         &mut self,
         comm: &dyn Communicator,
         prec: CommPrecision,
     ) -> Result<PendingOp> {
-        if prec.is_f32() {
-            return self.begin_gather(comm);
-        }
         if self.gathered {
-            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather_prec: buffer already gathered"));
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather: buffer already gathered"));
+        }
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        let l = comm
+            .describe(LaunchOp::AllGather, m, s)
+            .with_precision(prec)
+            .asynchronous();
+        if prec.is_f32() {
+            if self.full.len() != m {
+                bail!(
+                    "{}",
+                    rt(codes::HANDLE_DISCIPLINE, "begin_gather: a gather is already in flight")
+                );
+            }
+            self.acquire_full()?;
+            for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
+                full[rank * s..(rank + 1) * s].copy_from_slice(shard);
+            }
+            let bufs = std::mem::take(&mut self.full);
+            return Ok(comm.launch_async(&l, bufs));
         }
         if self.wire_inflight {
-            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather_prec: a gather is already in flight"));
+            bail!(
+                "{}",
+                rt(codes::HANDLE_DISCIPLINE, "begin_gather: a gather is already in flight")
+            );
         }
         self.acquire_full()?;
-        let w = prec.wire_words(self.shard_elems());
-        let m = self.num_devices();
-        self.acquire_wire(m * w)?;
+        let t = l.transport();
+        self.acquire_wire(m * t.elems)?;
         let wire = self.encode_shard_wire(prec);
         self.wire_inflight = true;
-        Ok(comm.all_gather_async(wire, w))
+        Ok(comm.launch_async(&t, wire))
     }
 
-    /// Complete a gather started with [`DBuffer::begin_gather_prec`]:
-    /// blocks until the wire exchange finishes, decodes every slot into
-    /// the full buffers, and records the op with its true wire bytes.
-    pub fn finish_gather_prec(
+    /// Complete a gather started with [`DBuffer::begin_gather`]: blocks
+    /// until the exchange finishes, decodes encoded wire slots into the
+    /// full buffers (quantized precisions), takes dense buffers back
+    /// (`F32`), and records the op with the descriptor's measured wire
+    /// bytes on the fabric model.
+    pub fn finish_gather(
         &mut self,
         op: PendingOp,
         comm: &dyn Communicator,
         fabric: &Fabric,
         prec: CommPrecision,
     ) -> Result<()> {
+        let m = self.num_devices();
+        let s = self.shard_elems();
+        let l = comm.describe(LaunchOp::AllGather, m, s).with_precision(prec);
         if prec.is_f32() {
-            return self.finish_gather(op, comm, fabric);
+            return match op.wait() {
+                Ok(bufs) => {
+                    self.full = bufs;
+                    self.gathered = true;
+                    comm.record(l.comm_record(fabric));
+                    Ok(())
+                }
+                Err(e) => {
+                    // restore a usable (ungathered) state: fresh full
+                    // storage and the transient allocator claim released
+                    self.full = vec![vec![0.0; m * s]; m];
+                    self.release_full();
+                    Err(e)
+                }
+            };
         }
         if !self.wire_inflight {
-            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "finish_gather_prec: no encoded gather in flight"));
+            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "finish_gather: no encoded gather in flight"));
         }
         self.wire_inflight = false;
         match op.wait() {
@@ -397,7 +433,7 @@ impl DBuffer {
                 self.decode_full_from_wire(prec, &wire);
                 self.release_wire();
                 self.gathered = true;
-                self.record_gather_prec(comm, fabric, prec);
+                comm.record(l.comm_record(fabric));
                 Ok(())
             }
             Err(e) => {
@@ -410,82 +446,6 @@ impl DBuffer {
         }
     }
 
-    /// Begin a nonblocking parameter AllGather: the full buffers move
-    /// into the returned [`PendingOp`] (their shard regions pre-filled
-    /// from the local shards) and come back via
-    /// [`DBuffer::finish_gather`]. Until then `full` is empty and
-    /// `gathered` is false.
-    pub fn begin_gather(&mut self, comm: &dyn Communicator) -> Result<PendingOp> {
-        if self.gathered {
-            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather: buffer already gathered"));
-        }
-        if self.full.len() != self.num_devices() {
-            bail!("{}", rt(codes::HANDLE_DISCIPLINE, "begin_gather: a gather is already in flight"));
-        }
-        self.acquire_full()?;
-        let s = self.shard_elems();
-        for (rank, (full, shard)) in self.full.iter_mut().zip(&self.shards).enumerate() {
-            full[rank * s..(rank + 1) * s].copy_from_slice(shard);
-        }
-        let bufs = std::mem::take(&mut self.full);
-        Ok(comm.all_gather_async(bufs, s))
-    }
-
-    /// Complete a gather started with [`DBuffer::begin_gather`]: blocks
-    /// until the collective finishes, takes the buffers back, and records
-    /// the op on the fabric model.
-    pub fn finish_gather(
-        &mut self,
-        op: PendingOp,
-        comm: &dyn Communicator,
-        fabric: &Fabric,
-    ) -> Result<()> {
-        match op.wait() {
-            Ok(bufs) => {
-                self.full = bufs;
-                self.gathered = true;
-                self.record_gather(comm, fabric);
-                Ok(())
-            }
-            Err(e) => {
-                // restore a usable (ungathered) state: fresh full storage
-                // and the transient allocator claim released
-                let m = self.num_devices();
-                let s = self.shard_elems();
-                self.full = vec![vec![0.0; m * s]; m];
-                self.release_full();
-                Err(e)
-            }
-        }
-    }
-
-    fn record_gather(&self, comm: &dyn Communicator, fabric: &Fabric) {
-        self.record_gather_prec(comm, fabric, CommPrecision::F32);
-    }
-
-    /// Record an AllGather with the wire bytes the chosen precision
-    /// actually shipped (for `F32` this is exactly the legacy record).
-    fn record_gather_prec(&self, comm: &dyn Communicator, fabric: &Fabric, prec: CommPrecision) {
-        let vol = prec.wire_volume(self.layout.shard_size);
-        let bytes = vol.total();
-        let m = self.num_devices();
-        let aligned = fabric.is_aligned(0, self.shard_bytes());
-        let (ib, eb) = fabric.tier_bytes("all_gather", m, bytes);
-        let (is_, es) = fabric.tier_times("all_gather", m, bytes, aligned);
-        comm.record(CommRecord {
-            op: "all_gather",
-            bytes_per_rank: bytes,
-            payload_bytes: vol.payload,
-            scale_bytes: vol.scale,
-            group_size: m,
-            sim_time: fabric.all_gather_time(m, bytes, aligned),
-            intra_bytes: ib,
-            inter_bytes: eb,
-            intra_s: is_,
-            inter_s: es,
-        });
-    }
-
     /// Release the gathered full buffers (FSDP reshard-after-forward).
     /// The host storage persists (in-place reuse), but the allocator —
     /// when attached — sees a deterministic free, so the next bucket's
@@ -494,7 +454,7 @@ impl DBuffer {
         self.gathered = false;
         if self.wire_inflight {
             // an encoded gather still owns the wire storage — keep the
-            // claims; finish_gather_prec (or its error path) releases them
+            // claims; finish_gather (or its error path) releases them
             debug_assert!(
                 false,
                 "{}",
@@ -542,37 +502,30 @@ impl DBuffer {
         fabric: &Fabric,
     ) -> Result<()> {
         let mut dst = std::mem::take(&mut self.shards);
-        let r = self.reduce_gradients_core(grads, &mut dst, mesh, comm, fabric);
+        let mut ef = Vec::new();
+        let r = self.reduce_gradients_core(
+            grads,
+            &mut dst,
+            mesh,
+            comm,
+            fabric,
+            CommPrecision::F32,
+            &mut ef,
+        );
         self.shards = dst;
         r
     }
 
-    /// The full reduction path into caller-owned shard buffers `dst`
-    /// (m x S) — the FSDP engine's gradient shards live outside the
-    /// DBuffer, but must go through the identical HSDP-aware reduction.
-    pub fn reduce_gradients_core(
-        &self,
-        grads: &mut [Vec<f32>],
-        dst: &mut [Vec<f32>],
-        mesh: &DeviceMesh,
-        comm: &dyn Communicator,
-        fabric: &Fabric,
-    ) -> Result<()> {
-        let m = self.num_devices();
-        if grads.len() != m {
-            bail!("reduce_gradients: {} grad buffers != {m}", grads.len());
-        }
-        comm.reduce_scatter(grads, self.shard_elems(), self.reduce_scale(mesh))?;
-        self.reduce_gradients_finish(grads, dst, mesh, comm, fabric)
-    }
-
-    /// Precision-aware gradient reduction into caller-owned shards: `F32`
-    /// is exactly [`DBuffer::reduce_gradients_core`]; `Bf16`/`Q8` run the
-    /// quantized ReduceScatter (`quant::reduce_scatter_prec` — encoded
-    /// all-to-all + rank-ordered dequant-sum), with `Q8` maintaining the
-    /// shard-held error-feedback residuals in `ef`.
+    /// The full precision-aware reduction path into caller-owned shard
+    /// buffers `dst` (m x S) — the FSDP engine's gradient shards live
+    /// outside the DBuffer, but must go through the identical HSDP-aware
+    /// reduction. `F32` launches the dense descriptor directly;
+    /// `Bf16`/`Q8` run the codec pipeline
+    /// ([`reduce_scatter_launch`] — encoded all-to-all + rank-ordered
+    /// dequant-sum), with `Q8` maintaining the shard-held error-feedback
+    /// residuals in `ef`.
     #[allow(clippy::too_many_arguments)]
-    pub fn reduce_gradients_core_prec(
+    pub fn reduce_gradients_core(
         &self,
         grads: &mut [Vec<f32>],
         dst: &mut [Vec<f32>],
@@ -582,58 +535,41 @@ impl DBuffer {
         prec: CommPrecision,
         ef: &mut Vec<Vec<f32>>,
     ) -> Result<()> {
-        if prec.is_f32() {
-            return self.reduce_gradients_core(grads, dst, mesh, comm, fabric);
-        }
         let m = self.num_devices();
         if grads.len() != m {
             bail!("reduce_gradients: {} grad buffers != {m}", grads.len());
         }
-        // transient wire claim: one device's encoded buffers, charged for
-        // the duration of the exchange — the same accounting the
-        // pipelined executor applies to its async wire buffers
-        let wire_bytes = (m * prec.wire_words(self.shard_elems()) * 4) as u64;
-        let wire_claim = match &self.alloc {
-            Some(a) => Some(a.lock().unwrap().alloc(wire_bytes.max(1))?),
-            None => None,
-        };
-        let result = quant::reduce_scatter_prec(
-            comm,
-            prec,
-            grads,
-            self.shard_elems(),
-            self.reduce_scale(mesh),
-            ef,
-        );
-        if let (Some(a), Some(id)) = (&self.alloc, wire_claim) {
-            a.lock().unwrap().free(id)?;
+        let l = comm
+            .describe(LaunchOp::ReduceScatter, m, self.shard_elems())
+            .scaled(self.reduce_scale(mesh))
+            .with_precision(prec);
+        if prec.is_f32() {
+            comm.launch(&l, grads)?;
+        } else {
+            // transient wire claim: one device's encoded buffers, charged
+            // for the duration of the exchange — the same accounting the
+            // pipelined executor applies to its async wire buffers
+            let wire_claim = match &self.alloc {
+                Some(a) => Some(a.lock().unwrap().alloc(l.wire_claim_bytes())?),
+                None => None,
+            };
+            let result = reduce_scatter_launch(comm, &l, grads, ef);
+            if let (Some(a), Some(id)) = (&self.alloc, wire_claim) {
+                a.lock().unwrap().free(id)?;
+            }
+            result?;
         }
-        result?;
-        self.reduce_gradients_finish_prec(grads, dst, mesh, comm, fabric, prec)
+        self.reduce_gradients_finish(grads, dst, mesh, comm, fabric, prec)
     }
 
-    /// Completion half of a gradient reduction whose ReduceScatter
-    /// already ran (synchronously, or via `reduce_scatter_async` — the
-    /// pipelined executor's overlap path): copies the reduced shard
-    /// regions into `dst`, performs the cross-replica AllReduce under
-    /// HSDP, and records both collectives on the fabric model.
+    /// Completion half of a precision-aware gradient reduction whose
+    /// ReduceScatter already ran (synchronously, or via the async launch
+    /// path — the pipelined executor's overlap): copies the reduced
+    /// shard regions into `dst`, performs the cross-replica AllReduce
+    /// under HSDP (always dense f32 — replicas exchange already-reduced
+    /// shards), and records the ReduceScatter with the wire bytes the
+    /// descriptor's precision actually shipped.
     pub fn reduce_gradients_finish(
-        &self,
-        reduced: &[Vec<f32>],
-        dst: &mut [Vec<f32>],
-        mesh: &DeviceMesh,
-        comm: &dyn Communicator,
-        fabric: &Fabric,
-    ) -> Result<()> {
-        self.reduce_gradients_finish_prec(reduced, dst, mesh, comm, fabric, CommPrecision::F32)
-    }
-
-    /// Completion half of a precision-aware gradient reduction: copies
-    /// the reduced shard regions into `dst`, performs the cross-replica
-    /// AllReduce under HSDP (always dense f32 — replicas exchange
-    /// already-reduced shards), and records the ReduceScatter with the
-    /// wire bytes its precision actually shipped.
-    pub fn reduce_gradients_finish_prec(
         &self,
         reduced: &[Vec<f32>],
         dst: &mut [Vec<f32>],
@@ -650,23 +586,8 @@ impl DBuffer {
         for (rank, (dst_shard, buf)) in dst.iter_mut().zip(reduced).enumerate() {
             dst_shard.copy_from_slice(&buf[rank * s..(rank + 1) * s]);
         }
-        let vol = prec.wire_volume(self.layout.shard_size);
-        let bytes = vol.total();
-        let aligned = fabric.is_aligned(0, self.shard_bytes());
-        let (ib, eb) = fabric.tier_bytes("reduce_scatter", m, bytes);
-        let (is_, es) = fabric.tier_times("reduce_scatter", m, bytes, aligned);
-        comm.record(CommRecord {
-            op: "reduce_scatter",
-            bytes_per_rank: bytes,
-            payload_bytes: vol.payload,
-            scale_bytes: vol.scale,
-            group_size: m,
-            sim_time: fabric.reduce_scatter_time(m, bytes, aligned),
-            intra_bytes: ib,
-            inter_bytes: eb,
-            intra_s: is_,
-            inter_s: es,
-        });
+        let l = comm.describe(LaunchOp::ReduceScatter, m, s).with_precision(prec);
+        comm.record(l.comm_record(fabric));
         let replicas = mesh.dim_size("replica").unwrap_or(1);
         if replicas > 1 {
             // cross-replica AllReduce of the already-scaled shard. In the
@@ -678,6 +599,7 @@ impl DBuffer {
                     *x *= replicas as f32;
                 }
             }
+            let aligned = fabric.is_aligned(0, self.shard_bytes());
             comm.record(CommRecord::dense(
                 "all_reduce",
                 self.shard_bytes(),
@@ -747,7 +669,7 @@ mod tests {
         let (mut db, datas) = demo_buffer(4);
         let fabric = Fabric::h800();
         let comm = SerialComm::new();
-        db.all_gather_params(&comm, &fabric).unwrap();
+        db.all_gather_params(&comm, &fabric, CommPrecision::F32).unwrap();
         for rank in 0..4 {
             for (i, d) in datas.iter().enumerate() {
                 assert_eq!(db.full_view(rank, i), &d[..], "rank {rank} tensor {i}");
@@ -763,10 +685,16 @@ mod tests {
         let (mut serial_db, _) = demo_buffer(4);
         let (mut thr_db, _) = demo_buffer(4);
         let fabric = Fabric::h800();
-        serial_db.all_gather_params(&SerialComm::new(), &fabric).unwrap();
+        serial_db
+            .all_gather_params(&SerialComm::new(), &fabric, CommPrecision::F32)
+            .unwrap();
         // threshold 0 forces the rendezvous ring even on this small buffer
         thr_db
-            .all_gather_params(&ThreadedComm::with_min_parallel_elems(0), &fabric)
+            .all_gather_params(
+                &ThreadedComm::with_min_parallel_elems(0),
+                &fabric,
+                CommPrecision::F32,
+            )
             .unwrap();
         for rank in 0..4 {
             for (a, b) in serial_db.full[rank].iter().zip(&thr_db.full[rank]) {
@@ -846,10 +774,10 @@ mod tests {
         let (mut db, datas) = demo_buffer(2);
         let fabric = Fabric::h800();
         let comm = SerialComm::new();
-        db.all_gather_params(&comm, &fabric).unwrap();
+        db.all_gather_params(&comm, &fabric, CommPrecision::F32).unwrap();
         db.release_full();
         assert!(!db.gathered);
-        db.all_gather_params(&comm, &fabric).unwrap();
+        db.all_gather_params(&comm, &fabric, CommPrecision::F32).unwrap();
         assert_eq!(db.full_view(0, 0), &datas[0][..]);
     }
 
@@ -866,10 +794,12 @@ mod tests {
             };
             let (mut sync_db, _) = demo_buffer(4);
             let (mut async_db, _) = demo_buffer(4);
-            sync_db.all_gather_params(comm.as_ref(), &fabric).unwrap();
-            let op = async_db.begin_gather(comm.as_ref()).unwrap();
+            sync_db.all_gather_params(comm.as_ref(), &fabric, CommPrecision::F32).unwrap();
+            let op = async_db.begin_gather(comm.as_ref(), CommPrecision::F32).unwrap();
             assert!(!async_db.gathered);
-            async_db.finish_gather(op, comm.as_ref(), &fabric).unwrap();
+            async_db
+                .finish_gather(op, comm.as_ref(), &fabric, CommPrecision::F32)
+                .unwrap();
             assert!(async_db.gathered);
             for rank in 0..4 {
                 for (a, b) in sync_db.full[rank].iter().zip(&async_db.full[rank]) {
@@ -877,7 +807,7 @@ mod tests {
                 }
             }
             // double-begin is rejected
-            assert!(async_db.begin_gather(comm.as_ref()).is_err());
+            assert!(async_db.begin_gather(comm.as_ref(), CommPrecision::F32).is_err());
         }
     }
 
@@ -892,15 +822,15 @@ mod tests {
         assert!(base > 0, "persistent shard claim missing");
         let comm = SerialComm::new();
         let fabric = Fabric::h800();
-        db.all_gather_params(&comm, &fabric).unwrap();
+        db.all_gather_params(&comm, &fabric, CommPrecision::F32).unwrap();
         let gathered = alloc.lock().unwrap().allocated;
         assert!(gathered > base, "gather must claim the full buffer");
         db.release_full();
         assert_eq!(alloc.lock().unwrap().allocated, base, "reshard must free");
         // regather reuses the freed segment: reserved stays flat
         let reserved = alloc.lock().unwrap().reserved;
-        let op = db.begin_gather(&comm).unwrap();
-        db.finish_gather(op, &comm, &fabric).unwrap();
+        let op = db.begin_gather(&comm, CommPrecision::F32).unwrap();
+        db.finish_gather(op, &comm, &fabric, CommPrecision::F32).unwrap();
         assert_eq!(alloc.lock().unwrap().reserved, reserved, "no segment growth");
         db.release_full();
     }
@@ -911,15 +841,15 @@ mod tests {
         let fabric = Fabric::h800();
         let comm = SerialComm::new();
         let (mut serial_db, _) = demo_buffer(4);
-        serial_db.all_gather_params_prec(&comm, &fabric, prec).unwrap();
+        serial_db.all_gather_params(&comm, &fabric, prec).unwrap();
         let (mut thr_db, _) = demo_buffer(4);
         thr_db
-            .all_gather_params_prec(&ThreadedComm::with_min_parallel_elems(0), &fabric, prec)
+            .all_gather_params(&ThreadedComm::with_min_parallel_elems(0), &fabric, prec)
             .unwrap();
         let (mut split_db, _) = demo_buffer(4);
-        let op = split_db.begin_gather_prec(&comm, prec).unwrap();
+        let op = split_db.begin_gather(&comm, prec).unwrap();
         assert!(!split_db.gathered);
-        split_db.finish_gather_prec(op, &comm, &fabric, prec).unwrap();
+        split_db.finish_gather(op, &comm, &fabric, prec).unwrap();
         assert!(split_db.gathered);
         for rank in 0..4 {
             for ((a, b), c) in serial_db.full[rank]
@@ -934,7 +864,8 @@ mod tests {
         // every rank — the owner included — sees the *dequantized* shard
         let s = serial_db.shard_elems();
         for k in 0..4 {
-            let expect = quant::QBlockTensor::quantize(&serial_db.shards[k], 16).dequantize();
+            let expect =
+                crate::quant::QBlockTensor::quantize(&serial_db.shards[k], 16).dequantize();
             for (a, b) in serial_db.full[0][k * s..(k + 1) * s].iter().zip(&expect) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
@@ -962,16 +893,16 @@ mod tests {
         let comm = SerialComm::new();
         let fabric = Fabric::h800();
         // sync path frees the wire claim before returning
-        db.all_gather_params_prec(&comm, &fabric, prec).unwrap();
+        db.all_gather_params(&comm, &fabric, prec).unwrap();
         let gathered = alloc.lock().unwrap().allocated;
         assert_eq!(gathered, base + db.full_bytes(), "wire claim must be transient");
         db.release_full();
         assert_eq!(alloc.lock().unwrap().allocated, base);
         // split path holds the wire claim only while the op is in flight
-        let op = db.begin_gather_prec(&comm, prec).unwrap();
+        let op = db.begin_gather(&comm, prec).unwrap();
         let inflight = alloc.lock().unwrap().allocated;
         assert!(inflight > base + db.full_bytes(), "wire claim missing in flight");
-        db.finish_gather_prec(op, &comm, &fabric, prec).unwrap();
+        db.finish_gather(op, &comm, &fabric, prec).unwrap();
         assert_eq!(alloc.lock().unwrap().allocated, base + db.full_bytes());
         db.release_full();
         assert_eq!(alloc.lock().unwrap().allocated, base);
@@ -993,14 +924,23 @@ mod tests {
         let comm = SerialComm::new();
         let mut dense = mk();
         let mut dst_dense = vec![vec![0.0f32; db.shard_elems()]; m];
-        db.reduce_gradients_core(&mut dense, &mut dst_dense, &mesh, &comm, &fabric)
-            .unwrap();
+        let f32p = CommPrecision::F32;
+        db.reduce_gradients_core(
+            &mut dense,
+            &mut dst_dense,
+            &mesh,
+            &comm,
+            &fabric,
+            f32p,
+            &mut Vec::new(),
+        )
+        .unwrap();
         let prec = CommPrecision::Q8 { block: 8 };
         let mut q = mk();
         let mut dst_q = vec![vec![0.0f32; db.shard_elems()]; m];
         let mut ef = Vec::new();
-        db.reduce_gradients_core_prec(&mut q, &mut dst_q, &mesh, &comm, &fabric, prec, &mut ef)
-            .unwrap();
+        db.reduce_gradients_core(&mut q, &mut dst_q, &mesh, &comm, &fabric, prec, &mut ef)
+            .expect("quantized reduce");
         assert_eq!(ef.len(), m);
         for (a, b) in dst_dense.iter().flatten().zip(dst_q.iter().flatten()) {
             // 4 contributions x half a quant step each, replica-rescaled
@@ -1030,7 +970,8 @@ mod tests {
         db_a.reduce_gradients(&mut g1, &mesh, &comm, &fabric).unwrap();
         let mut g2 = mk();
         let mut dst = vec![vec![0.0f32; db_b.shard_elems()]; m];
-        db_b.reduce_gradients_core(&mut g2, &mut dst, &mesh, &comm, &fabric)
+        let f32p = CommPrecision::F32;
+        db_b.reduce_gradients_core(&mut g2, &mut dst, &mesh, &comm, &fabric, f32p, &mut Vec::new())
             .unwrap();
         for (a, b) in db_a.shards.iter().flatten().zip(dst.iter().flatten()) {
             assert_eq!(a.to_bits(), b.to_bits());

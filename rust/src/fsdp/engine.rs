@@ -21,7 +21,7 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use crate::analysis::diag::{codes, rt};
-use crate::cluster::{Communicator, SerialComm};
+use crate::cluster::{CommBackend, CommBuilder, Communicator};
 use crate::comm::{CommStats, Fabric};
 use crate::dbuffer::DBuffer;
 use crate::memory::{shared_allocator, BlockId, FreePolicy, SharedAllocator};
@@ -196,7 +196,8 @@ impl FsdpEngine {
         policy: &ShardingPolicy,
         fabric: Fabric,
     ) -> Result<FsdpEngine> {
-        FsdpEngine::new_with_comm(params, group_of, mesh, policy, fabric, Arc::new(SerialComm::new()))
+        let comm = CommBuilder::new(CommBackend::Serial).build();
+        FsdpEngine::new_with_comm(params, group_of, mesh, policy, fabric, comm)
     }
 
     /// Legacy flat-array constructor: a thin shim that lifts `group_of`
@@ -344,8 +345,10 @@ impl FsdpEngine {
 
     /// Attach a health monitor: the executor publishes step phases,
     /// bucket context, and flight-recorder events through it. The comm
-    /// backend carries its own clone (see `cluster::make_comm_obs`), so
-    /// call this with the same observer the communicator was built with.
+    /// backend carries its own clone (see
+    /// [`CommBuilder::observer`](crate::cluster::CommBuilder::observer)),
+    /// so call this with the same observer the communicator was built
+    /// with.
     pub fn set_observer(&mut self, obs: crate::obs::Observer) {
         self.obs = obs;
     }
@@ -413,7 +416,7 @@ impl FsdpEngine {
     pub fn gather_params(&mut self) -> Result<()> {
         for b in &mut self.buckets {
             b.dbuffer
-                .all_gather_params_prec(self.comm.as_ref(), &b.fabric, b.comm_precision)?;
+                .all_gather_params(self.comm.as_ref(), &b.fabric, b.comm_precision)?;
         }
         Ok(())
     }
@@ -458,7 +461,7 @@ impl FsdpEngine {
                     &grads[rank][bucket.param_ids[pos]][..]
                 })?;
             let Bucket { dbuffer, grad_shards, mesh, fabric, comm_precision, ef, .. } = bucket;
-            dbuffer.reduce_gradients_core_prec(
+            dbuffer.reduce_gradients_core(
                 &mut bufs,
                 grad_shards,
                 mesh,
@@ -582,6 +585,7 @@ impl FsdpEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::SerialComm;
     use crate::optim::{AdamHyper, AdamW};
     use crate::util::Rng;
 

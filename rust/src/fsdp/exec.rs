@@ -41,11 +41,11 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::analysis::diag::{codes, rt};
-use crate::cluster::{Cluster, CommBackend, PendingOp};
+use crate::cluster::launch::{rs_decode, rs_encode};
+use crate::cluster::{Cluster, CommBackend, LaunchOp, PendingOp};
 use crate::fsdp::engine::Bucket;
 use crate::fsdp::FsdpEngine;
 use crate::memory::BlockId;
-use crate::quant;
 use crate::runtime::native::{self, LayerCache, LayerParams};
 use crate::runtime::{Engine as ComputeEngine, ModelCfg};
 use crate::trace::{Cat, Span};
@@ -333,7 +333,7 @@ fn validate_batches(cfg: &ModelCfg, batches: &[(Vec<i32>, Vec<i32>)]) -> Result<
 /// Below this many activation elements per rank (tokens x d_model) a
 /// per-bucket thread fan-out costs more than the compute it
 /// parallelizes — run ranks serially instead (identical math; mirrors
-/// `ThreadedComm`'s `min_parallel_elems` fallback for collectives).
+/// `ThreadedComm`'s `hier_threshold` serial fallback for collectives).
 const MIN_PARALLEL_ACT_ELEMS: usize = 1 << 15;
 
 /// Run `f(rank, state)` for every rank — on its own OS thread under the
@@ -397,7 +397,7 @@ fn issue_gathers(
         let t0 = tracer.timer();
         // cast-before-comm: the encode (quant kernel) runs at issue time,
         // so it is charged as exposed alongside the issue cost
-        let op = engine.buckets[b].dbuffer.begin_gather_prec(comm.as_ref(), prec)?;
+        let op = engine.buckets[b].dbuffer.begin_gather(comm.as_ref(), prec)?;
         *exposed += tracer.finish_with(t0, Cat::Comm, || {
             Span::new("ag")
                 .exposed()
@@ -436,7 +436,7 @@ fn wait_gather(
         let prec = engine.buckets[bucket].comm_precision;
         engine.buckets[bucket]
             .dbuffer
-            .finish_gather_prec(op, comm.as_ref(), &fabric, prec)?;
+            .finish_gather(op, comm.as_ref(), &fabric, prec)?;
         *exposed += tracer.finish_with(t0, Cat::Comm, || {
             Span::new("ag")
                 .exposed()
@@ -471,10 +471,14 @@ struct PendingReduce {
 /// Stage bucket `b`'s per-rank gradients at layout offsets (via the same
 /// `stage_bucket_grads` the sequential reduction uses) and issue its
 /// ReduceScatter on the comm backend (overlaps the next bucket's
-/// backward): the dense nonblocking collective for `F32`, or the encoded
-/// all-to-all of `quant::rs_inject_and_encode` for `Bf16`/`Q8`. The
-/// staged full-size gradient buffer is transient device memory — claimed
-/// from the allocator until `finish_reduce` frees it.
+/// backward). One [`CollectiveLaunch`] descriptor drives both shapes:
+/// the dense nonblocking launch for `F32`, or the codec stage
+/// ([`rs_encode`]) followed by the descriptor's transport lowering (an
+/// encoded all-to-all) for `Bf16`/`Q8`. The staged full-size gradient
+/// buffer is transient device memory — claimed from the allocator until
+/// `finish_reduce` frees it.
+///
+/// [`CollectiveLaunch`]: crate::cluster::CollectiveLaunch
 fn begin_reduce(
     engine: &mut FsdpEngine,
     states: &mut [RankState],
@@ -499,10 +503,16 @@ fn begin_reduce(
     let scale = engine.buckets[b].dbuffer.reduce_scale(&engine.buckets[b].mesh);
     let prec = engine.buckets[b].comm_precision;
     let tracer = engine.tracer.clone();
+    let l = engine
+        .comm
+        .describe(LaunchOp::ReduceScatter, m, s)
+        .scaled(scale)
+        .with_precision(prec)
+        .asynchronous();
     if prec.is_f32() {
         let t0 = tracer.timer();
         obs.flight_all("sched", "rs_issue", b as u64, 0);
-        let op = engine.comm.reduce_scatter_async(bufs, s, scale);
+        let op = engine.comm.launch_async(&l, bufs);
         *exposed += tracer.finish_with(t0, Cat::Comm, || {
             Span::new("rs")
                 .exposed()
@@ -521,9 +531,9 @@ fn begin_reduce(
     // cast-before-comm: the encode (quant kernel) and wire claim happen
     // at issue time and count as exposed, mirroring the gather path
     let t0 = tracer.timer();
-    let wire = quant::rs_inject_and_encode(prec, &mut bufs, s, &mut engine.buckets[b].ef)?;
-    let w = prec.wire_words(s);
-    let wire_bytes = ((m * w * 4) as u64).max(1);
+    let wire = rs_encode(prec, &mut bufs, s, &mut engine.buckets[b].ef)?;
+    let transport = l.transport();
+    let wire_bytes = l.wire_claim_bytes();
     let ta = tracer.timer();
     let wire_block = engine.alloc.lock().unwrap().alloc(wire_bytes)?;
     tracer.finish_with(ta, Cat::Compute, || {
@@ -531,7 +541,7 @@ fn begin_reduce(
     });
     obs.flight_all("alloc", "wire", b as u64, wire_bytes);
     obs.flight_all("sched", "rs_issue", b as u64, 0);
-    let op = engine.comm.all_to_all_async(wire, w);
+    let op = engine.comm.launch_async(&transport, wire);
     *exposed += tracer.finish_with(t0, Cat::Comm, || {
         Span::new("rs")
             .exposed()
@@ -551,10 +561,11 @@ fn begin_reduce(
 
 /// Complete an in-flight ReduceScatter: (for quantized precisions,
 /// dequantize-and-sum the exchanged chunks in rank order and update the
-/// error-feedback residuals first — the same `quant` functions the
-/// sequential path composes, so the bits match), then copy the reduced
-/// shard regions into the bucket's grad shards (plus the HSDP replica
-/// AllReduce) and release the staged gradient / wire buffers.
+/// error-feedback residuals first — the same codec stage ([`rs_decode`])
+/// the sequential launch pipeline composes, so the bits match), then
+/// copy the reduced shard regions into the bucket's grad shards (plus
+/// the HSDP replica AllReduce) and release the staged gradient / wire
+/// buffers.
 fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut f64) -> Result<()> {
     let PendingReduce { bucket: b, op, staged, staged_block, wire_block } = pending;
     let tracer = engine.tracer.clone();
@@ -573,16 +584,23 @@ fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut 
         &mut engine.buckets[b];
     match staged {
         None => {
-            dbuffer.reduce_gradients_finish(&returned, grad_shards, mesh, comm.as_ref(), fabric)?;
+            dbuffer.reduce_gradients_finish(
+                &returned,
+                grad_shards,
+                mesh,
+                comm.as_ref(),
+                fabric,
+                *comm_precision,
+            )?;
         }
         Some(mut bufs) => {
             let s = dbuffer.shard_elems();
             let scale = dbuffer.reduce_scale(mesh);
             let prec = *comm_precision;
             // the dequant-reduce is wall time the step cannot hide —
-            // exposed, like finish_gather_prec's decode
+            // exposed, like finish_gather's decode
             let t1 = tracer.timer();
-            quant::rs_decode_reduce(prec, &returned, &mut bufs, s, scale, ef)?;
+            rs_decode(prec, &returned, &mut bufs, s, scale, ef)?;
             *exposed += tracer.finish_with(t1, Cat::Comm, || {
                 Span::new("quant_decode")
                     .exposed()
@@ -590,7 +608,7 @@ fn finish_reduce(engine: &mut FsdpEngine, pending: PendingReduce, exposed: &mut 
                     .bytes(bytes)
                     .attr("prec", prec.name())
             });
-            dbuffer.reduce_gradients_finish_prec(
+            dbuffer.reduce_gradients_finish(
                 &bufs,
                 grad_shards,
                 mesh,

@@ -38,7 +38,15 @@
 //! The `cluster` module is the SPMD execution layer: a [`cluster::Communicator`]
 //! trait with two backends — `SerialComm` (single-thread loop collectives,
 //! the reference semantics) and `ThreadedComm` (one OS thread per rank,
-//! barrier-phased rendezvous collectives over shared buffers). Collectives
+//! barrier-phased rendezvous collectives over shared buffers), assembled
+//! through one [`cluster::CommBuilder`] (backend + topology + tracer +
+//! observer + dispatch threshold). Every collective is described by a
+//! typed [`cluster::CollectiveLaunch`] descriptor — op, group, element
+//! count, wire precision, topology routing, sync/async mode, bucket/step
+//! identity — that flows through a single pipeline: precision codec →
+//! tier routing (flat / intra / inter / two-level, gated by
+//! [`cluster::DEFAULT_HIER_THRESHOLD`] or `--hier-threshold`) → transport
+//! → trace spans → obs heartbeats → wire-byte accounting. Collectives
 //! come in blocking and nonblocking forms: `all_gather_async` /
 //! `reduce_scatter_async` return a waitable [`cluster::PendingOp`] that the
 //! threaded backend services on background comm threads (the serial
@@ -48,7 +56,10 @@
 //! time and the two produce bit-identical results (reductions preserve the
 //! serial rank-order summation). Under the threaded backend, per-rank
 //! fwd/bwd compute also fans out across threads via
-//! `cluster::Cluster::run_spmd`.
+//! `cluster::Cluster::run_spmd`. The static analyzer elaborates schedules
+//! from the *same* descriptor type the runtime executes
+//! (`analysis::ir::PlanModel::launch_for`), so lint verdicts and runtime
+//! dispatch can never disagree on tiers or bytes.
 //!
 //! ## Step schedule
 //!

@@ -6,6 +6,9 @@
 //!                         [--fabric h800|h100|a100[:HxG[:S]]]
 //!                         [--topology HxG[:S]]
 //!                         [--comm-precision f32|bf16|q8[:block]]
+//!                         [--hier-threshold ELEMS]  (serial-fallback /
+//!                          two-level dispatch threshold in total elements;
+//!                          also `[comm] hier_threshold` in the config file)
 //!                         [--trace out.json] [--trace-level off|comm|full]
 //!                         [--watchdog-ms N] [--metrics out.prom|out.json]
 //!                         [--postmortem-on-exit [path]]
@@ -104,6 +107,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     let comm_precision = CommPrecision::parse(&prec_name).ok_or_else(|| {
         anyhow!("unknown --comm-precision '{prec_name}' (expected f32, bf16, or q8[:block])")
     })?;
+    let hier_threshold = args.usize_or("hier-threshold", base.hier_threshold);
     // A bare trailing `--trace` parses as the value "true"; treat that as
     // "trace to the default filename".
     let trace_path: Option<String> = args
@@ -164,6 +168,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         .exec(exec)
         .fabric(fabric)
         .comm_precision(comm_precision)
+        .hier_threshold(hier_threshold)
         .trace(level)
         .overrides(base.groups.clone());
     if monitor_on {

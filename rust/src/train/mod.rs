@@ -19,7 +19,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::analysis::diag::{codes, rt};
-use crate::cluster::{make_comm, make_comm_obs, Cluster, CommBackend};
+use crate::cluster::{Cluster, CommBackend, CommBuilder};
 use crate::comm::{CommRecord, Fabric};
 use crate::config::{GroupOverride, OptimKind};
 use crate::obs::{ObsConfig, Observer};
@@ -225,6 +225,7 @@ pub struct SessionBuilder {
     exec: ExecMode,
     fabric: Fabric,
     comm_precision: CommPrecision,
+    hier_threshold: usize,
     trace: TraceLevel,
     obs: Option<ObsConfig>,
     groups: Vec<ShardGroupSpec>,
@@ -246,6 +247,7 @@ impl SessionBuilder {
             exec: ExecMode::Sequential,
             fabric: Fabric::h800(),
             comm_precision: CommPrecision::F32,
+            hier_threshold: crate::cluster::DEFAULT_HIER_THRESHOLD,
             trace: TraceLevel::Off,
             obs: None,
             groups: Vec::new(),
@@ -317,6 +319,15 @@ impl SessionBuilder {
     /// are declared — each [`ShardGroupSpec`] carries its own precision.
     pub fn comm_precision(mut self, prec: CommPrecision) -> Self {
         self.comm_precision = prec;
+        self
+    }
+
+    /// Serial-fallback / two-level dispatch threshold in total elements
+    /// (`[comm] hier_threshold` / `--hier-threshold`). Consulted by the
+    /// runtime's collective dispatch and by [`SessionBuilder::analyze`]'s
+    /// tier modeling, so the lint verdict always matches what would run.
+    pub fn hier_threshold(mut self, elems: usize) -> Self {
+        self.hier_threshold = elems;
         self
     }
 
@@ -427,6 +438,7 @@ impl SessionBuilder {
             backend: self.backend,
             exec,
             topology: self.fabric.topology,
+            hier_threshold: self.hier_threshold,
             native_layers: Some(cfg.n_layers),
             mem_limit: crate::fsdp::DEVICE_MEM_LIMIT,
         }))
@@ -466,12 +478,18 @@ impl SessionBuilder {
             None => Observer::off(),
         };
         crate::obs::install_panic_hook(&obs);
+        let comm = CommBuilder::new(self.backend)
+            .tracer(tracer.clone())
+            .topology(topology)
+            .observer(obs.clone())
+            .hier_threshold(self.hier_threshold)
+            .build();
         let mut engine = FsdpEngine::from_spec(
             cfg.params.clone(),
             &spec,
             mesh,
             self.fabric.clone(),
-            make_comm_obs(self.backend, tracer.clone(), topology, obs.clone()),
+            comm,
         )?;
         engine.set_tracer(tracer.clone());
         engine.set_observer(obs.clone());
@@ -816,7 +834,7 @@ impl DdpTrainer {
         Ok(DdpTrainer {
             runtime,
             config: config.to_string(),
-            comm: make_comm(backend),
+            comm: CommBuilder::new(backend).build(),
             fabric: Fabric::h800(),
             params,
             corpus: Corpus::new(cfg.vocab, seed + 1),

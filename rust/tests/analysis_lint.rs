@@ -12,7 +12,7 @@ use vescale_fsdp::analysis::ir::{ClaimId, CollOp, Phase};
 use vescale_fsdp::analysis::{
     elaborate, lint, run_checks, AnalysisReport, Event, LintRequest, PlanModel,
 };
-use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::cluster::{CommBackend, DEFAULT_HIER_THRESHOLD};
 use vescale_fsdp::comm::Topology;
 use vescale_fsdp::config::presets;
 use vescale_fsdp::fsdp::{ExecMode, DEVICE_MEM_LIMIT};
@@ -36,6 +36,7 @@ fn tiny_plan(exec: ExecMode, prec: CommPrecision, mem_limit: u64) -> PlanModel {
         backend: CommBackend::Serial,
         exec,
         topology: Topology::flat(),
+        hier_threshold: DEFAULT_HIER_THRESHOLD,
         native_layers: None,
         mem_limit,
     })
@@ -225,6 +226,7 @@ fn fixture_over_budget_plan_is_fs009() {
         backend: CommBackend::Serial,
         exec: ExecMode::Sequential,
         topology: Topology::flat(),
+        hier_threshold: DEFAULT_HIER_THRESHOLD,
         native_layers: None,
         mem_limit: 1, // one byte of device memory
     });
@@ -283,6 +285,7 @@ fn shipped_matrix_lints_clean() {
                             backend,
                             exec: ExecMode::from_prefetch(prefetch),
                             topology,
+                            hier_threshold: DEFAULT_HIER_THRESHOLD,
                             native_layers: None,
                             mem_limit: DEVICE_MEM_LIMIT,
                         });

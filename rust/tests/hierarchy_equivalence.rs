@@ -6,13 +6,12 @@
 //! (losses and final parameters to the bit) across cluster backends,
 //! executor schedules, and wire precisions with a hierarchical fabric.
 
-use vescale_fsdp::cluster::{make_comm_topo, CommBackend, Communicator, SerialComm};
+use vescale_fsdp::cluster::{CommBackend, CommBuilder, Communicator, SerialComm};
 use vescale_fsdp::comm::{Fabric, Topology};
 use vescale_fsdp::fsdp::spec::OptimBinding;
 use vescale_fsdp::fsdp::ExecMode;
 use vescale_fsdp::optim::AdamHyper;
 use vescale_fsdp::quant::CommPrecision;
-use vescale_fsdp::trace::Tracer;
 use vescale_fsdp::train::TrainSession;
 use vescale_fsdp::util::prop::check;
 use vescale_fsdp::util::Rng;
@@ -73,7 +72,7 @@ fn hierarchical_all_gather_bit_identical_to_flat() {
         for &segs in &SEGMENTS {
             for topo in topologies(m, segs) {
                 let what = format!("ag m={m} s={s} topo={}:{segs}", topo.label());
-                let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+                let c = CommBuilder::new(CommBackend::Threaded).topology(topo).build();
                 let mut got = wild_bufs(&mut Rng::new(seed), m, m * s);
                 c.all_gather(&mut got, s).map_err(|e| e.to_string())?;
                 assert_bits_equal(&want, &got, &format!("{what} sync"))?;
@@ -102,7 +101,7 @@ fn hierarchical_reduce_scatter_bit_identical_to_flat() {
         for &segs in &SEGMENTS {
             for topo in topologies(m, segs) {
                 let what = format!("rs m={m} s={s} topo={}:{segs}", topo.label());
-                let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+                let c = CommBuilder::new(CommBackend::Threaded).topology(topo).build();
                 let mut got = wild_bufs(&mut Rng::new(seed), m, m * s);
                 c.reduce_scatter(&mut got, s, scale).map_err(|e| e.to_string())?;
                 assert_bits_equal(&want, &got, &format!("{what} sync"))?;
@@ -127,7 +126,7 @@ fn segment_count_never_changes_bits() {
     let data = wild_bufs(&mut rng, m, m * s);
     let run = |segments: usize, op_is_ag: bool| -> Vec<Vec<f32>> {
         let topo = Topology { hosts: 2, gpus_per_host: 4, segments };
-        let c = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+        let c = CommBuilder::new(CommBackend::Threaded).topology(topo).build();
         let mut bufs = data.clone();
         if op_is_ag {
             c.all_gather(&mut bufs, s).unwrap();

@@ -1,0 +1,116 @@
+//! Differential property test for the unified launch pipeline: the same
+//! `CollectiveLaunch` descriptors must produce bit-identical training
+//! trajectories and identical collective span identities across
+//! {serial, threaded} backends × {f32, bf16, q8:32} wire precisions ×
+//! {flat, 2x4:2} topologies × {sequential (sync launches), pipelined
+//! (async issue/wait)} schedules. Losses are additionally pinned to one
+//! per-precision reference, so no (backend, topology, schedule) cell can
+//! drift on its own.
+
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::comm::{Fabric, Topology};
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::optim::AdamHyper;
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::trace::TraceLevel;
+use vescale_fsdp::train::TrainSession;
+
+/// Every (name, phase) lane a logical collective span can occupy.
+const LANES: [(&str, &str); 6] = [
+    ("ag", "sync"),
+    ("rs", "sync"),
+    ("ag", "issue"),
+    ("ag", "wait"),
+    ("rs", "issue"),
+    ("rs", "wait"),
+];
+
+type Spans = Vec<(u64, String, String, String, u64)>;
+
+fn run(
+    backend: CommBackend,
+    exec: ExecMode,
+    prec: CommPrecision,
+    topo: Option<Topology>,
+) -> (Vec<f32>, Spans) {
+    let mut b = TrainSession::builder("tiny")
+        .devices(8)
+        .optimizer(OptimBinding::AdamW)
+        .hyper(AdamHyper { lr: 1e-3, ..AdamHyper::default() })
+        .seed(11)
+        .backend(backend)
+        .exec(exec)
+        .comm_precision(prec)
+        .trace(TraceLevel::Comm);
+    if let Some(t) = topo {
+        b = b.fabric(Fabric::h800().with_topology(t));
+    }
+    let mut s = b.build().unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..2 {
+        losses.push(s.train_step().unwrap());
+    }
+    (losses, s.tracer.collective_sequence())
+}
+
+fn lane(spans: &Spans, step: u64, name: &str, phase: &str) -> Vec<(String, u64)> {
+    spans
+        .iter()
+        .filter(|s| s.0 == step && s.1 == name && s.3 == phase)
+        .map(|s| (s.2.clone(), s.4))
+        .collect()
+}
+
+/// Span identity = the per-(name, phase) sequence of (bucket, bytes) of
+/// each step — invariant across thread interleavings, unlike the merged
+/// global order.
+fn assert_span_identities_equal(a: &Spans, b: &Spans, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: collective span count");
+    let mut steps: Vec<u64> = a.iter().map(|s| s.0).collect();
+    steps.dedup();
+    for &step in &steps {
+        for (name, phase) in LANES {
+            assert_eq!(
+                lane(a, step, name, phase),
+                lane(b, step, name, phase),
+                "{what}: step {step} {name}/{phase} span identities diverge"
+            );
+        }
+    }
+}
+
+fn assert_losses_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: loss count");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: loss {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn unified_launch_bit_identical_across_backend_precision_topology_mode() {
+    let hier = Topology { hosts: 2, gpus_per_host: 4, segments: 2 };
+    for prec in [
+        CommPrecision::F32,
+        CommPrecision::Bf16,
+        CommPrecision::Q8 { block: 32 },
+    ] {
+        // one reference trajectory per precision: serial, sync, flat
+        let reference = run(CommBackend::Serial, ExecMode::Sequential, prec, None);
+        for topo in [None, Some(hier)] {
+            for exec in [ExecMode::Sequential, ExecMode::Pipelined { prefetch: 2 }] {
+                let what = format!(
+                    "{} topo={} exec={}",
+                    prec.name(),
+                    topo.map_or("flat".to_string(), |t| t.label()),
+                    exec.name()
+                );
+                let serial = run(CommBackend::Serial, exec, prec, topo);
+                let threaded = run(CommBackend::Threaded, exec, prec, topo);
+                assert_losses_equal(&reference.0, &serial.0, &format!("{what} serial"));
+                assert_losses_equal(&reference.0, &threaded.0, &format!("{what} threaded"));
+                assert_span_identities_equal(&serial.1, &threaded.1, &what);
+            }
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //! optimizers {AdamW, Muon, Adam8bit} — plus the HSDP reduction path and
 //! the prefetch-bounded memory claim.
 
-use vescale_fsdp::cluster::{make_comm, CommBackend};
+use vescale_fsdp::cluster::{CommBackend, CommBuilder};
 use vescale_fsdp::comm::Fabric;
 use vescale_fsdp::config::OptimKind;
 use vescale_fsdp::fsdp::{exec, ExecMode, FsdpEngine, ShardingPolicy};
@@ -58,7 +58,7 @@ fn run_micro(mesh: DeviceMesh, backend: CommBackend, mode: ExecMode, steps: usiz
         mesh,
         &ShardingPolicy::element_wise(),
         Fabric::h800(),
-        make_comm(backend),
+        CommBuilder::new(backend).build(),
     )
     .unwrap();
     engine.init_params(&init_full_params(&cfg.params, 5)).unwrap();

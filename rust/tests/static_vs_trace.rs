@@ -13,6 +13,11 @@ use vescale_fsdp::fsdp::ExecMode;
 use vescale_fsdp::trace::TraceLevel;
 use vescale_fsdp::train::TrainSession;
 
+// Compile-time proof that the analyzer's collective vocabulary IS the
+// runtime's launch vocabulary (not a parallel copy that could drift):
+// `analysis::ir::CollOp` must unify with `cluster::LaunchOp` as a type.
+const _: fn(vescale_fsdp::analysis::ir::CollOp) -> vescale_fsdp::cluster::LaunchOp = |op| op;
+
 /// Every (name, phase) lane a logical collective span can occupy.
 const LANES: [(&str, &str); 6] = [
     ("ag", "sync"),

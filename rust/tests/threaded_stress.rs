@@ -10,10 +10,9 @@
 //! interleaving).
 
 use vescale_fsdp::cluster::{
-    make_comm, make_comm_topo, set_arrival_stagger, CommBackend, Communicator, ThreadedComm,
+    set_arrival_stagger, CommBackend, CommBuilder, Communicator, ThreadedComm,
 };
 use vescale_fsdp::comm::Topology;
-use vescale_fsdp::trace::Tracer;
 use vescale_fsdp::util::Rng;
 
 /// Seeded per-rank buffers, identical for every backend under test.
@@ -40,7 +39,7 @@ fn stagger_for(m: usize, rng: &mut Rng) -> Vec<u64> {
 /// demand bit-identical outputs. `s` is the shard size; AllGather inputs
 /// only populate each rank's own shard (the gather contract).
 fn assert_collectives_match(threaded: &dyn Communicator, m: usize, s: usize, seed: u64) {
-    let serial = make_comm(CommBackend::Serial);
+    let serial = CommBuilder::new(CommBackend::Serial).build();
 
     // AllGather: rank k owns bufs[k][k*s..(k+1)*s]
     let mut a = seeded_bufs(m, m * s, seed);
@@ -117,10 +116,10 @@ fn hierarchical_rendezvous_survives_stagger() {
     // two-level path (s large enough to clear the serial-fallback
     // threshold), still bit-identical to serial under staggered arrival.
     let topo = Topology { hosts: 2, gpus_per_host: 4, segments: 2 };
-    let threaded = make_comm_topo(CommBackend::Threaded, Tracer::off(), topo);
+    let threaded = CommBuilder::new(CommBackend::Threaded).topology(topo).build();
     let m = topo.total();
     let s = 512;
-    let serial = make_comm(CommBackend::Serial);
+    let serial = CommBuilder::new(CommBackend::Serial).build();
     let mut rng = Rng::new(0xD15C0);
     for trial in 0..8u64 {
         let delays = stagger_for(m, &mut rng);

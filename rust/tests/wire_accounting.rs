@@ -1,0 +1,149 @@
+//! Wire-byte accounting regression: the StepLog CSV's wire columns
+//! (payload / scale / pad) are produced by exactly one pipeline stage —
+//! `CollectiveLaunch::comm_record` — and must stay bit-for-bit what the
+//! seed produced. In the sequential tiny schedule every bucket ships one
+//! parameter AllGather and one gradient ReduceScatter of `shard_size`
+//! elements per rank per step, each accounted as
+//! `CommPrecision::wire_volume(shard_size)` times the group size (plus
+//! the dense cross-replica AllReduce under HSDP). The goldens below are
+//! computed from the quant math alone, independent of the comm path.
+
+use vescale_fsdp::cluster::CommBackend;
+use vescale_fsdp::fsdp::spec::OptimBinding;
+use vescale_fsdp::fsdp::ExecMode;
+use vescale_fsdp::quant::CommPrecision;
+use vescale_fsdp::train::{save_log, TrainSession};
+
+const PRECISIONS: [CommPrecision; 3] = [
+    CommPrecision::F32,
+    CommPrecision::Bf16,
+    CommPrecision::Q8 { block: 64 },
+];
+
+fn run(
+    prec: CommPrecision,
+    backend: CommBackend,
+    exec: ExecMode,
+    replicas: usize,
+    steps: usize,
+) -> TrainSession {
+    let mut t = TrainSession::builder("tiny")
+        .devices(2)
+        .replicas(replicas)
+        .optimizer(OptimBinding::AdamW)
+        .seed(42)
+        .backend(backend)
+        .exec(exec)
+        .comm_precision(prec)
+        .build()
+        .unwrap();
+    for _ in 0..steps {
+        t.train_step().unwrap();
+    }
+    t
+}
+
+/// Analytic per-step wire columns of the sequential schedule: one
+/// AllGather plus one ReduceScatter per bucket, each of `shard_size`
+/// elems per rank across the fsdp group, plus the dense f32
+/// cross-replica AllReduce of the reduced shard when `replicas > 1`.
+fn golden_step_wire(t: &TrainSession, prec: CommPrecision, replicas: u64) -> (u64, u64, u64) {
+    let (mut payload, mut scale, mut pad) = (0u64, 0u64, 0u64);
+    for b in &t.engine.buckets {
+        let m = b.dbuffer.layout.num_devices as u64;
+        let vol = prec.wire_volume(b.dbuffer.layout.shard_size);
+        payload += 2 * m * vol.payload;
+        scale += 2 * m * vol.scale;
+        pad += 2 * m * vol.pad;
+        if replicas > 1 {
+            payload += replicas * b.dbuffer.layout.shard_size * 4;
+        }
+    }
+    (payload, scale, pad)
+}
+
+fn step_wire(t: &TrainSession) -> Vec<(u64, u64, u64)> {
+    t.log.iter().map(|l| (l.wire_payload, l.wire_scale, l.wire_pad)).collect()
+}
+
+#[test]
+fn steplog_wire_columns_match_quant_math_for_every_precision() {
+    for prec in PRECISIONS {
+        let t = run(prec, CommBackend::Serial, ExecMode::Sequential, 1, 3);
+        let want = golden_step_wire(&t, prec, 1);
+        let stats = t.engine.stats();
+        let buckets = t.engine.buckets.len();
+        assert_eq!(buckets, 4, "tiny = embed|layer0|layer1|head");
+        assert_eq!(stats.count("all_gather"), buckets * 3, "{} AG count", prec.name());
+        assert_eq!(stats.count("reduce_scatter"), buckets * 3, "{} RS count", prec.name());
+        assert_eq!(stats.count("all_reduce"), 0, "{}: flat run must not AR", prec.name());
+        assert_eq!(t.log.len(), 3);
+        for l in &t.log {
+            assert_eq!(
+                (l.wire_payload, l.wire_scale, l.wire_pad),
+                want,
+                "{} step {}",
+                prec.name(),
+                l.step
+            );
+        }
+    }
+}
+
+#[test]
+fn hsdp_replica_allreduce_accounted_dense() {
+    let t = run(CommPrecision::F32, CommBackend::Serial, ExecMode::Sequential, 2, 2);
+    let buckets = t.engine.buckets.len();
+    assert_eq!(t.engine.stats().count("all_reduce"), buckets * 2);
+    let want = golden_step_wire(&t, CommPrecision::F32, 2);
+    for l in &t.log {
+        assert_eq!((l.wire_payload, l.wire_scale, l.wire_pad), want, "hsdp step {}", l.step);
+    }
+}
+
+#[test]
+fn wire_columns_invariant_across_backends_and_schedules() {
+    // the columns are descriptor-derived, so neither the backend nor the
+    // overlap schedule may move them; pipelined steps re-gather in
+    // backward, so both modes must at least ship the sequential volume
+    // and stay steady step over step
+    for prec in PRECISIONS {
+        let seq = step_wire(&run(prec, CommBackend::Serial, ExecMode::Sequential, 1, 2));
+        let thr = step_wire(&run(prec, CommBackend::Threaded, ExecMode::Sequential, 1, 2));
+        assert_eq!(seq, thr, "{}: threaded sequential diverges", prec.name());
+        for (backend, what) in
+            [(CommBackend::Serial, "serial"), (CommBackend::Threaded, "threaded")]
+        {
+            let pip = step_wire(&run(prec, backend, ExecMode::Pipelined { prefetch: 2 }, 1, 2));
+            assert_eq!(pip[0], pip[1], "{} {} pipelined not steady", prec.name(), what);
+            assert!(
+                pip[0].0 >= seq[0].0,
+                "{} {} pipelined ships less payload than sequential",
+                prec.name(),
+                what
+            );
+        }
+    }
+}
+
+#[test]
+fn csv_wire_columns_regress_to_golden() {
+    let prec = CommPrecision::Q8 { block: 64 };
+    let t = run(prec, CommBackend::Serial, ExecMode::Sequential, 1, 2);
+    let want = golden_step_wire(&t, prec, 1);
+    let path = save_log("test_wire_accounting", &t.log).unwrap();
+    let csv = std::fs::read_to_string(&path).unwrap();
+    let header = csv.lines().next().unwrap();
+    assert!(header.contains("wire_payload,wire_scale,wire_pad"), "{header}");
+    for row in csv.lines().skip(1) {
+        let cols: Vec<&str> = row.split(',').collect();
+        let n = cols.len();
+        let got: (u64, u64, u64) = (
+            cols[n - 5].parse().unwrap(),
+            cols[n - 4].parse().unwrap(),
+            cols[n - 3].parse().unwrap(),
+        );
+        assert_eq!(got, want, "CSV row {row}");
+    }
+    let _ = std::fs::remove_file(path);
+}
